@@ -1,0 +1,35 @@
+//! The Sect.-3 equilibrium narrative: cold start at 20 degC with the
+//! 3-way valve shut and the cluster at maximum load. The rack circuit
+//! heats through the chiller's standby band, the chiller wakes above
+//! 55 degC, and the system settles where P_d^max(T) plus losses meet the
+//! electrical input — in the 60..70 degC band, exactly as the paper
+//! describes ("the system is almost in equilibrium and only a very small
+//! amount of additional cooling is necessary").
+//!
+//!     cargo run --release --example chiller_equilibrium [-- --nodes 216]
+
+use idatacool::config::SimConfig;
+use idatacool::figures::{self, sweep::SweepOptions};
+use idatacool::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = SimConfig::idatacool_full();
+    cfg.n_nodes = args.usize_or("nodes", 216);
+    cfg.backend = args.str_or("backend", "auto").to_string();
+    cfg.sensor_noise = false;
+    cfg.pp = idatacool::config::constants::PlantParams::from_artifacts(
+        &cfg.artifacts_dir,
+    );
+    let mut opts = SweepOptions::default();
+    opts.equilibrium_s = args.f64_or("duration", 16_000.0);
+
+    println!("Sect. 3 equilibrium experiment ({} nodes)", cfg.n_nodes);
+    let s = figures::equilibrium(&cfg, &opts)?;
+    println!("{}", s.to_table());
+    println!("{}", s.ascii_plot("t_s", "t_out", 68, 16));
+    for n in &s.notes {
+        println!("note: {n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! §Perf L2 experiment: amortizing PJRT call overhead with K substeps per
+//! call (lax.scan length). Reports wall time per *simulated second* for
+//! K in {5, 20, 40, 80} (artifacts/perf/, built by the perf pass).
+
+use idatacool::config::constants::PlantParams;
+use idatacool::plant::layout::*;
+use idatacool::plant::{PlantStatic, TickOutput};
+use idatacool::runtime::pjrt::HloPlant;
+use idatacool::util::bench::Bench;
+use idatacool::variability::ChipLottery;
+
+fn main() -> anyhow::Result<()> {
+    let pp = PlantParams::from_artifacts(std::path::Path::new("artifacts"));
+    let lot = ChipLottery::draw(216, &pp, 0x1DA7AC001);
+    let st = PlantStatic::from_lottery(&lot, &pp, 64);
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut b = Bench::new(3, 10);
+    println!("{}", Bench::header());
+    for k in [5usize, 20, 40, 80] {
+        let path = format!("artifacts/perf/plant_step_n216_k{k}.hlo.txt");
+        if !std::path::Path::new(&path).exists() {
+            eprintln!("missing {path} (run the perf-pass aot step)");
+            continue;
+        }
+        let mut plant =
+            HloPlant::load(&client, std::path::Path::new(&path), &st, k, 20.0)?;
+        let controls = vec![0.0f32, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+        let util = vec![1.0f32; plant.n_padded * NC];
+        let mut out = TickOutput::new(plant.n_padded);
+        let sim_s = k as f64 * pp.dt_substep;
+        b.run_with_units(&format!("hlo_tick/n216/k{k}"), sim_s,
+                         "sim-seconds", &mut || {
+            plant.tick(&controls, &util, &mut out).unwrap();
+        });
+    }
+    Ok(())
+}

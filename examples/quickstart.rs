@@ -1,0 +1,47 @@
+//! Quickstart: simulate a small iDataCool cluster for 30 simulated
+//! minutes under production load and print the paper's headline metrics.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the `auto` backend: the AOT HLO plant if `make artifacts` has
+//! run, else the native Rust mirror.
+
+use idatacool::config::SimConfig;
+use idatacool::coordinator::SimulationDriver;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = SimConfig::idatacool_full();
+    cfg.n_nodes = 13; // small: quickstart should finish in seconds
+    cfg.duration_s = 1800.0;
+    cfg.t_out_setpoint = 67.0;
+    cfg.t_water_init = 60.0;
+
+    println!("iDataCool digital twin — quickstart");
+    println!(
+        "cluster: {} nodes, setpoint {} degC, workload {:?}",
+        cfg.n_nodes, cfg.t_out_setpoint, cfg.workload
+    );
+
+    let mut driver = SimulationDriver::new(cfg)?;
+    let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+    println!("backend: {} (tick = {tick_s} s simulated)",
+             driver.backend.kind_name());
+
+    let res = driver.run(12)?;
+    println!("\n{}", res.energy.summary());
+    println!("workload: {}", res.workload_stats);
+    println!(
+        "throughput: {:.0}x realtime ({} ticks in {:.2}s wall)",
+        res.speedup(tick_s),
+        res.ticks,
+        res.total_wall_s
+    );
+    if let Some(last) = res.trace.last() {
+        println!(
+            "final state: T_out={:.1} degC, T_tank={:.1} degC, \
+             P_AC={:.1} kW, hottest core {:.1} degC",
+            last.t_rack_out, last.t_tank, last.p_ac / 1e3, last.core_max
+        );
+    }
+    Ok(())
+}

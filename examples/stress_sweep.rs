@@ -1,0 +1,38 @@
+//! The paper's stress-measurement protocol (Figs. 4a, 5a, 6a): 13
+//! randomly selected six-core nodes run the `stress` tool while the
+//! rack-outlet setpoint is swept across the hot-water band; the example
+//! prints core-vs-water temperatures, node power and the relative power
+//! increase, with the paper's values alongside.
+//!
+//!     cargo run --release --example stress_sweep [-- --quick]
+
+use idatacool::config::SimConfig;
+use idatacool::figures::{self, sweep};
+use idatacool::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = SimConfig::subset13();
+    cfg.backend = args.str_or("backend", "auto").to_string();
+    cfg.pp = idatacool::config::constants::PlantParams::from_artifacts(
+        &cfg.artifacts_dir,
+    );
+    let opts = if args.has("quick") {
+        sweep::SweepOptions::quick()
+    } else {
+        sweep::SweepOptions::default()
+    };
+
+    println!("stress sweep: 13 selected nodes, setpoints {:?}",
+             figures::SETPOINTS);
+    let data = sweep::run_sweep(&cfg, figures::SETPOINTS, &opts)?;
+    println!("selected nodes: {:?}", data.selected);
+
+    for s in [figures::fig4a(&data), figures::fig5a(&data),
+              figures::fig6a(&data)] {
+        println!("{}", s.to_table());
+    }
+    println!("paper check: DT(core-out) should rise ~15 -> 17.5 degC; \
+              node power ~ +7% over 49 -> 70 degC");
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT lowering driver: JAX plant_step -> HLO text artifacts for Rust/PJRT.
+
+Emits, per configured cluster size N:
+  artifacts/plant_step_n{N}.hlo.txt   the tick executable (K substeps/call)
+  artifacts/lottery_n{N}.json         per-node chip/mount variability arrays
+and once:
+  artifacts/manifest.json             shapes + layouts the Rust runtime needs
+  artifacts/params.json               all plant constants (single source of
+                                      truth for the Rust native plant)
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--sizes 13,216]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, params as P
+from .kernels import thermal_step as kern
+
+DEFAULT_SIZES = (13, 216)
+TEST_SIZE = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    print_large_constants=True is ESSENTIAL: the default printer elides
+    array literals (operator matrices, the valid-node mask) as
+    ``constant({...})``, which xla_extension 0.5.1's text parser silently
+    parses as zeros — the plant then integrates garbage. Found the hard
+    way; cross-checked by tests/hlo_vs_native.rs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def lower_plant(n_nodes: int, pp: P.PlantParams, tile: int,
+                substeps: int | None = None) -> tuple[str, int]:
+    """Lower plant_step for a cluster size; returns (hlo_text, npad)."""
+    step, npad = model.make_plant_step(
+        n_nodes, pp, tile=tile, substeps=substeps)
+    args = model.make_example_args(n_nodes, pp, tile=tile)
+    lowered = jax.jit(step).lower(*args)
+    return to_hlo_text(lowered), npad
+
+
+def lottery_json(n_nodes: int, pp: P.PlantParams, seed: int) -> dict:
+    lot = P.draw_chip_lottery(n_nodes, pp, seed)
+    return {
+        "n_nodes": n_nodes,
+        "seed": seed,
+        "active": lot.active.tolist(),
+        "g_jc": lot.g_jc.tolist(),
+        "p_dyn": lot.p_dyn.tolist(),
+        "p_idle": lot.p_idle.tolist(),
+        "g_sp": lot.g_sp.tolist(),
+        "g_sw": lot.g_sw.tolist(),
+        "six_core": lot.six_core.tolist(),
+    }
+
+
+def build_manifest(sizes: list[int], tile: int, pp: P.PlantParams,
+                   seed: int) -> dict:
+    entries = []
+    for n in sizes:
+        npad = model.pad_nodes(n, tile)
+        entries.append({
+            "n_nodes": n,
+            "n_padded": npad,
+            "hlo": f"plant_step_n{n}.hlo.txt",
+            "lottery": f"lottery_n{n}.json",
+            "substeps_per_tick": pp.substeps_per_tick,
+            "dt_substep": pp.dt_substep,
+            "inputs": [
+                {"name": "node_state", "shape": [npad, P.S]},
+                {"name": "circuit_state", "shape": [P.CS]},
+                {"name": "util", "shape": [npad, P.NC]},
+                {"name": "controls", "shape": [P.CT]},
+                {"name": "g", "shape": [npad, P.NG]},
+                {"name": "p_dyn", "shape": [npad, P.NC]},
+                {"name": "p_idle", "shape": [npad, P.NC]},
+                {"name": "active", "shape": [npad, P.NC]},
+            ],
+            "outputs": [
+                {"name": "node_state", "shape": [npad, P.S]},
+                {"name": "circuit_state", "shape": [P.CS]},
+                {"name": "node_obs", "shape": [npad, P.OBS_N]},
+                {"name": "scalars", "shape": [model.NS]},
+            ],
+        })
+    vmem = kern.vmem_footprint_bytes(tile)
+    return {
+        "format": "hlo-text",
+        "tile": tile,
+        "seed": seed,
+        "state_dim": P.S,
+        "core_slots": P.NC,
+        "g_channels": P.NG,
+        "circuit_dim": P.CS,
+        "controls_dim": P.CT,
+        "node_obs_dim": P.OBS_N,
+        "scalars_dim": model.NS,
+        "entries": entries,
+        "vmem_estimate_bytes": vmem,
+        "mxu_flops_per_substep_per_node": kern.mxu_flops_per_substep(1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--sizes", default=",".join(map(str, DEFAULT_SIZES)),
+                    help="comma-separated cluster sizes to lower")
+    ap.add_argument("--tile", type=int, default=kern.DEFAULT_TILE)
+    ap.add_argument("--seed", type=lambda s: int(s, 0), default=0x1DA7AC001)
+    ap.add_argument("--with-test-size", action="store_true",
+                    help=f"also emit the tiny N={TEST_SIZE} test artifact")
+    ap.add_argument("--dump-params", action="store_true",
+                    help="print params.json to stdout and exit")
+    args = ap.parse_args()
+
+    pp = P.DEFAULT
+    if args.dump_params:
+        print(json.dumps(P.params_as_dict(pp), indent=2, sort_keys=True))
+        return
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    if args.with_test_size and TEST_SIZE not in sizes:
+        sizes.append(TEST_SIZE)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for n in sizes:
+        text, npad = lower_plant(n, pp, args.tile)
+        path = os.path.join(args.out_dir, f"plant_step_n{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars, npad={npad})")
+        lpath = os.path.join(args.out_dir, f"lottery_n{n}.json")
+        with open(lpath, "w") as f:
+            json.dump(lottery_json(n, pp, args.seed), f)
+        print(f"wrote {lpath}")
+
+    man = build_manifest(sizes, args.tile, pp, args.seed)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=2)
+    # Operators as flat lists so the Rust native plant uses the exact same
+    # matrices the kernel was lowered with.
+    ops = P.build_operators(pp)
+    opsj = {k: np.asarray(v).tolist() for k, v in ops.items()}
+    with open(os.path.join(args.out_dir, "params.json"), "w") as f:
+        json.dump({"params": P.params_as_dict(pp), "operators": opsj},
+                  f)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} + params.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracle for the Pallas thermal kernel.
+
+This is the CORE correctness signal: the Pallas kernel in
+``thermal_step.py`` must match these functions to float32 accuracy for
+every shape/tile/parameter combination pytest sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import params as P
+
+
+def power_model_ref(t_cores, util, p_dyn, p_idle, active,
+                    leak_frac, leak_beta, leak_t0, t_throttle, throttle_band):
+    """Per-core power [N, NC] with leakage feedback and thermal throttling.
+
+    P_c = active * (p_idle + util_eff * p_dyn) * (1 + lf*beta*(T - T0))
+    where util_eff ramps to 0 linearly as T_c crosses the throttle band
+    (cores throttle at ~100 degC, paper footnote 4).
+    """
+    headroom = (t_throttle - t_cores) / throttle_band
+    util_eff = util * jnp.clip(headroom, 0.0, 1.0)
+    base = p_idle + util_eff * p_dyn
+    leak_mult = 1.0 + leak_frac * leak_beta * (t_cores - leak_t0)
+    return active * base * jnp.maximum(leak_mult, 0.05)
+
+
+def thermal_substep_ref(t, g, q, a0, e1, e2, dt):
+    """One explicit-Euler substep of the batched node RC network.
+
+    t  [N, S]   node thermal state
+    g  [N, NC]  per-core junction conductance
+    q  [N, S]   exogenous injection (power, inlet advection, air loss)
+    a0 [S, S], e1 [NC, S], e2 [S, NC]: shared operators (params.build_operators)
+    """
+    shared = t @ a0.T
+    diffs = t @ e1.T              # [N, NC] per-core (T_core - T_pkg)
+    junction = (diffs * g) @ e2.T  # [N, S]
+    return t + dt * (shared + junction + q)
+
+
+def fused_substep_ref(t, g, util, p_dyn, p_idle, active, q_base, ops, pp):
+    """Fused power-model + thermal substep (what the optimized kernel does).
+
+    Returns (t_next [N,S], p_cores [N,NC]).
+    q_base [N, S] carries the advective inlet + base-power + air-loss terms
+    that do not depend on the core temperatures.
+    """
+    t_cores = t[:, P.IDX_CORE0:P.IDX_CORE0 + P.NC]
+    p_cores = power_model_ref(
+        t_cores, util, p_dyn, p_idle, active,
+        pp.leak_frac, pp.leak_beta, pp.leak_t0,
+        pp.t_throttle, pp.throttle_band)
+    q = q_base + p_cores @ ops["ec"].T
+    t_next = thermal_substep_ref(t, g, q, ops["a0"], ops["e1"], ops["e2"],
+                                 pp.dt_substep)
+    return t_next, p_cores
+
+
+def node_q_base(t_rack_in, n_nodes, pp, inv_c):
+    """Temperature-independent injection terms [N, S].
+
+    Water row: advective inlet m_dot*cp*T_in / C_w.
+    Sink row: node base power (memory/chipset/VR via heat bridges) plus the
+    residual air-loss constant UA*T_room / C_sink.
+    """
+    q = jnp.zeros((n_nodes, P.S))
+    q = q.at[:, P.IDX_WATER].set(pp.node_mcp * t_rack_in * inv_c[P.IDX_WATER])
+    q = q.at[:, P.IDX_SINK].set(
+        (pp.p_node_base + pp.ua_node_air * pp.t_room) * inv_c[P.IDX_SINK])
+    return q

@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: fused batched node thermal substep.
+
+The compute hot-spot of the iDataCool digital twin is advancing the
+ensemble of per-node RC thermal networks:
+
+    T' = T + dt * ( T A0^T + ((T E1^T) * g) E2^T + P Ec^T + q_base )
+    P  = power_model(T_cores, util, chip lottery)     (fused)
+
+with N nodes x S=16 states. The kernel tiles the node dimension into
+VMEM-sized blocks (BlockSpec over a 1-D grid); the small shared operators
+A0 [S,S], E1 [NC,S], E2 [S,NC], Ec [S,NC] are replicated into every tile
+(index_map -> block 0) and stay resident. Per-tile work is three
+[TILE, S] @ [S, *] matmuls (MXU-shaped) plus VPU elementwise power/leakage
+/throttle math.
+
+TPU mapping (DESIGN.md #Hardware-Adaptation): tiles stream HBM->VMEM;
+with TILE=128 the state block is 128*16*4 B = 8 KiB and all five per-node
+operands together are ~44 KiB per tile - far under VMEM, so the schedule
+is bandwidth-bound and TILE is chosen to saturate DMA, not VMEM.
+
+CPU note: lowered with interpret=True (Mosaic custom-calls cannot run on
+the CPU PJRT plugin); correctness is asserted against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+DEFAULT_TILE = 64
+
+
+def _fused_kernel(t_ref, g_ref, util_ref, pdyn_ref, pidle_ref, act_ref,
+                  qb_ref, a0t_ref, e1t_ref, e2t_ref, ect_ref,
+                  out_ref, pow_ref, *, dt, leak_frac, leak_beta, leak_t0,
+                  t_throttle, throttle_band):
+    """One fused substep for a [TILE, S] block of nodes."""
+    t = t_ref[...]                      # [TILE, S]
+    t_cores = t[:, P.IDX_CORE0:P.IDX_CORE0 + P.NC]
+
+    # --- power model (VPU elementwise) ------------------------------------
+    headroom = (t_throttle - t_cores) * (1.0 / throttle_band)
+    util_eff = util_ref[...] * jnp.clip(headroom, 0.0, 1.0)
+    base = pidle_ref[...] + util_eff * pdyn_ref[...]
+    leak_mult = 1.0 + (leak_frac * leak_beta) * (t_cores - leak_t0)
+    p_cores = act_ref[...] * base * jnp.maximum(leak_mult, 0.05)
+
+    # --- RC network substep (MXU matmuls) ----------------------------------
+    shared = jnp.dot(t, a0t_ref[...], preferred_element_type=jnp.float32)
+    diffs = jnp.dot(t, e1t_ref[...], preferred_element_type=jnp.float32)
+    junction = jnp.dot(diffs * g_ref[...], e2t_ref[...],
+                       preferred_element_type=jnp.float32)
+    q_power = jnp.dot(p_cores, ect_ref[...],
+                      preferred_element_type=jnp.float32)
+
+    out_ref[...] = t + dt * (shared + junction + q_power + qb_ref[...])
+    pow_ref[...] = p_cores
+
+
+def fused_thermal_substep(t, g, util, p_dyn, p_idle, active, q_base,
+                          a0, e1, e2, ec, *, pp: P.PlantParams,
+                          tile: int = DEFAULT_TILE, interpret: bool = True):
+    """Pallas-tiled fused substep over all nodes.
+
+    Args:
+      t [N,S] f32, g [N,NG] f32, util/p_dyn/p_idle/active [N,NC] f32,
+      q_base [N,S] f32; a0 [S,S], e1 [NG,S], e2 [S,NG], ec [S,NC] shared.
+    Returns:
+      (t_next [N,S], p_cores [N,NC]).
+
+    N must be a multiple of `tile`; model.py pads the node dimension once
+    at AOT time (padded nodes have active=0, g=1e-3, util=0 and settle to
+    the inlet temperature; they are sliced off the observations).
+    """
+    n, s = t.shape
+    assert s == P.S and g.shape == (n, P.NG)
+    assert n % tile == 0, f"N={n} not a multiple of tile={tile}"
+    grid = (n // tile,)
+
+    node_rows = lambda i: (i, 0)    # block row i of the node-major operands
+    whole = lambda i: (0, 0)        # shared operators: same block every tile
+
+    kern = functools.partial(
+        _fused_kernel, dt=pp.dt_substep,
+        leak_frac=pp.leak_frac, leak_beta=pp.leak_beta, leak_t0=pp.leak_t0,
+        t_throttle=pp.t_throttle, throttle_band=pp.throttle_band)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, P.S), node_rows),    # t
+            pl.BlockSpec((tile, P.NG), node_rows),   # g
+            pl.BlockSpec((tile, P.NC), node_rows),   # util
+            pl.BlockSpec((tile, P.NC), node_rows),   # p_dyn
+            pl.BlockSpec((tile, P.NC), node_rows),   # p_idle
+            pl.BlockSpec((tile, P.NC), node_rows),   # active
+            pl.BlockSpec((tile, P.S), node_rows),    # q_base
+            pl.BlockSpec((P.S, P.S), whole),         # a0^T
+            pl.BlockSpec((P.S, P.NG), whole),        # e1^T
+            pl.BlockSpec((P.NG, P.S), whole),        # e2^T
+            pl.BlockSpec((P.NC, P.S), whole),        # ec^T
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, P.S), node_rows),
+            pl.BlockSpec((tile, P.NC), node_rows),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, P.S), jnp.float32),
+            jax.ShapeDtypeStruct((n, P.NC), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t, g, util, p_dyn, p_idle, active, q_base,
+      a0.T.astype(jnp.float32), e1.T.astype(jnp.float32),
+      e2.T.astype(jnp.float32), ec.T.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(tile: int = DEFAULT_TILE) -> dict[str, int]:
+    """Static VMEM budget estimate for the TPU schedule (DESIGN.md #8)."""
+    f = 4  # float32
+    per_tile = {
+        "state_in": tile * P.S * f,
+        "state_out": tile * P.S * f,
+        "per_core_operands": (4 * P.NC + P.NG) * tile * f,  # util/pdyn/pidle/act + g
+        "q_base": tile * P.S * f,
+        "p_out": tile * P.NC * f,
+        "shared_ops": (P.S * P.S + 2 * P.S * P.NG + P.S * P.NC) * f,
+    }
+    per_tile["total_single_buffered"] = sum(per_tile.values())
+    per_tile["total_double_buffered"] = 2 * per_tile["total_single_buffered"]
+    return per_tile
+
+
+def mxu_flops_per_substep(n: int) -> int:
+    """FLOP count of the matmul portion (for utilization estimates)."""
+    # [N,S]@[S,S] + [N,S]@[S,NG] + [N,NG]@[NG,S] + [N,NC]@[NC,S]
+    return 2 * n * (P.S * P.S + P.S * P.NG + P.NG * P.S + P.NC * P.S)

@@ -1,0 +1,199 @@
+"""L2: the whole-plant simulation step in JAX.
+
+``make_plant_step(n_nodes, pp)`` returns a jit-able function
+
+    plant_step(node_state [N,S], circuit_state [CS], util [N,NC],
+               controls [CT], lottery...) -> (node_state', circuit_state',
+                                              node_obs [N,OBS_N], scalars)
+
+that advances the plant by one coordinator tick = K inner Euler substeps
+(lax.scan). Each substep runs the fused Pallas thermal kernel over the
+node ensemble (L1) and the circuit-level physics (plant.py). Python is
+build-time only: aot.py lowers this function once per cluster size to
+HLO text, and the Rust coordinator executes it via PJRT on every tick.
+
+Scalar outputs (layout SCALARS below) give the coordinator the plant-level
+aggregates the paper instruments (Sect. 4 'sensing and monitoring').
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import params as P
+from . import plant as circuits
+from .kernels import thermal_step as kern
+from .kernels import ref as kref
+
+# Scalar observation layout (NS = 16)
+NS = 16
+SC_P_DC = 0          # total node DC power [W]
+SC_P_AC = 1          # cluster AC power incl. PSU loss + switches [W]
+SC_P_R = 2           # heat into rack water m*cp*(Tout - Tin) [W]
+SC_P_D = 3           # power transferred to driving circuit [W]
+SC_P_C = 4           # chilled-water power produced [W]
+SC_P_ADD = 5         # additional cooling via 3-way valve [W]
+SC_P_LOSS = 6        # plumbing/tank losses [W]
+SC_T_RACK_IN = 7     # rack inlet temperature [degC]
+SC_T_RACK_OUT = 8    # rack outlet temperature [degC]
+SC_T_TANK = 9        # driving/tank temperature [degC]
+SC_T_PRIMARY = 10    # primary circuit temperature [degC]
+SC_CHILLER_ON = 11   # chiller state {0,1}
+SC_P_CENTRAL = 12    # central-circuit support [W]
+SC_T_RECOOL = 13     # recooler temperature [degC]
+SC_THROTTLE = 14     # number of cores inside the throttle band
+SC_CORE_MAX = 15     # hottest core in the cluster [degC]
+
+
+def pad_nodes(n_nodes: int, tile: int) -> int:
+    """Nodes padded up to a multiple of the Pallas tile."""
+    return ((n_nodes + tile - 1) // tile) * tile
+
+
+def make_plant_step(n_nodes: int, pp: P.PlantParams = P.DEFAULT,
+                    tile: int = kern.DEFAULT_TILE,
+                    substeps: int | None = None,
+                    use_pallas: bool = True):
+    """Build the tick function for a fixed cluster size.
+
+    The node dimension is padded to a tile multiple once, here; padded
+    nodes have active=0 / util=0 / g=tiny and are excluded from all
+    observations via a validity mask baked into the closure.
+    """
+    # Pad in both paths so Pallas/ref closures take identical shapes.
+    k = substeps if substeps is not None else pp.substeps_per_tick
+    npad = pad_nodes(n_nodes, tile)
+    ops = P.build_operators(pp)
+    a0 = jnp.asarray(ops["a0"], jnp.float32)
+    e1 = jnp.asarray(ops["e1"], jnp.float32)
+    e2 = jnp.asarray(ops["e2"], jnp.float32)
+    ec = jnp.asarray(ops["ec"], jnp.float32)
+    inv_c = ops["inv_c"]
+    valid = jnp.asarray(
+        (np.arange(npad) < n_nodes).astype(np.float32))  # [npad]
+
+    # Temperature-independent q rows (everything except the advective inlet,
+    # which changes every substep with T_rack_in).
+    q_sink_const = np.float32(
+        (pp.p_node_base + pp.ua_node_air * pp.t_room) * inv_c[P.IDX_SINK])
+    adv_w = np.float32(inv_c[P.IDX_WATER])
+    # Pump-speed scaling mask for the G_ADV conductance channel.
+    adv_mask = jnp.asarray(
+        (np.arange(P.NG) == P.G_ADV).astype(np.float32))  # [NG]
+
+    def substep(carry, _):
+        t, cs, util, controls, g, p_dyn, p_idle, active = carry
+
+        # Pump speed scales the advective channel (pump failure => ~0 flow).
+        flow = jnp.maximum(
+            controls[P.U_FLOW_SCALE] * (1.0 - controls[P.U_PUMP_FAIL]), 1e-3)
+        g_eff = g * (1.0 + adv_mask * (flow - 1.0))
+
+        # q_base: advective inlet at the *current* rack inlet temperature.
+        q_base = jnp.zeros((npad, P.S), jnp.float32)
+        q_base = q_base.at[:, P.IDX_WATER].set(
+            adv_w * flow * g[:, P.G_ADV] * cs[P.C_T_RACK_IN])
+        q_base = q_base.at[:, P.IDX_SINK].set(q_sink_const * valid)
+
+        if use_pallas:
+            t_next, p_cores = kern.fused_thermal_substep(
+                t, g_eff, util, p_dyn, p_idle, active, q_base,
+                a0, e1, e2, ec, pp=pp, tile=tile)
+        else:
+            t_next, p_cores = kref.fused_substep_ref(
+                t, g_eff, util, p_dyn, p_idle, active, q_base,
+                {"a0": a0, "e1": e1, "e2": e2, "ec": ec}, pp)
+
+        p_node = jnp.sum(p_cores, axis=1) + pp.p_node_base * valid  # [npad]
+        p_dc = jnp.sum(p_node)
+
+        # Flow-weighted rack outlet: equal branch flows (Tichelmann manifold,
+        # Sect. 2) => arithmetic mean over the *valid* nodes.
+        t_out_raw = jnp.sum(t_next[:, P.IDX_WATER] * valid) / n_nodes
+        cs_next, _ = circuits.circuit_substep(
+            cs, controls, t_out_raw, p_dc, n_nodes, pp)
+
+        return (t_next, cs_next, util, controls, g, p_dyn, p_idle,
+                active), None
+
+    def plant_step(node_state, circuit_state, util, controls,
+                   g, p_dyn, p_idle, active):
+        """One coordinator tick (k substeps). All inputs float32.
+
+        node_state [npad,S], circuit_state [CS], util [npad,NC],
+        controls [CT], g [npad,NG], p_dyn/p_idle/active [npad,NC].
+        """
+        carry = (node_state, circuit_state, util, controls,
+                 g, p_dyn, p_idle, active)
+        carry, _ = jax.lax.scan(substep, carry, None, length=k)
+        t, cs = carry[0], carry[1]
+
+        # --- per-node observations (the BMC-level view, Sect. 4) ----------
+        t_cores = t[:, :P.NC]
+        n_active = jnp.maximum(jnp.sum(active, axis=1), 1.0)
+        core_mean = jnp.sum(t_cores * active, axis=1) / n_active
+        core_max = jnp.max(jnp.where(active > 0, t_cores, -1e9), axis=1)
+
+        headroom = (pp.t_throttle - t_cores) / pp.throttle_band
+        util_eff = util * jnp.clip(headroom, 0.0, 1.0)
+        base = p_idle + util_eff * p_dyn
+        leak = 1.0 + pp.leak_frac * pp.leak_beta * (t_cores - pp.leak_t0)
+        p_cores = active * base * jnp.maximum(leak, 0.05)
+        p_node = jnp.sum(p_cores, axis=1) + pp.p_node_base * valid
+
+        node_obs = jnp.stack(
+            [p_node, core_mean, core_max, t[:, P.IDX_WATER]], axis=1)
+
+        # --- plant-level scalars (the cluster instrumentation, Sect. 4) ---
+        p_dc = jnp.sum(p_node)
+        p_ac = p_dc / pp.psu_efficiency + pp.p_switches
+        mcp = pp.rack_mcp(n_nodes) * jnp.maximum(
+            controls[P.U_FLOW_SCALE], 1e-3) * (1.0 - controls[P.U_PUMP_FAIL])
+        p_r = jnp.maximum(mcp, 1.0) * (cs[P.C_T_RACK_OUT] - cs[P.C_T_RACK_IN])
+        throttling = jnp.sum(
+            jnp.where((t_cores > pp.t_throttle - pp.throttle_band)
+                      & (active > 0), 1.0, 0.0))
+
+        scalars = jnp.stack([
+            p_dc, p_ac, p_r,
+            cs[P.C_P_D], cs[P.C_P_C], cs[P.C_P_ADD], cs[P.C_P_LOSS],
+            cs[P.C_T_RACK_IN], cs[P.C_T_RACK_OUT], cs[P.C_T_TANK],
+            cs[P.C_T_PRIMARY], cs[P.C_CHILLER_ON], cs[P.C_P_CENTRAL],
+            cs[P.C_T_RECOOL], throttling,
+            jnp.max(jnp.where(valid > 0, core_max, -1e9)),
+        ])
+        return t, cs, node_obs, scalars
+
+    return plant_step, npad
+
+
+def make_example_args(n_nodes: int, pp: P.PlantParams = P.DEFAULT,
+                      tile: int = kern.DEFAULT_TILE, seed: int = 0x1DA7AC001,
+                      use_pallas: bool = True):
+    """Concrete example inputs (shape donors for AOT lowering)."""
+    del use_pallas  # both paths take tile-padded shapes
+    npad = pad_nodes(n_nodes, tile)
+    lot = P.draw_chip_lottery(n_nodes, pp, seed)
+
+    def padn(a, fill=0.0):
+        out = np.full((npad,) + a.shape[1:], fill, dtype=np.float32)
+        out[:n_nodes] = a
+        return jnp.asarray(out)
+
+    node_state = padn(P.initial_node_state(n_nodes).astype(np.float32),
+                      fill=20.0)
+    circuit_state = jnp.asarray(P.initial_circuit_state().astype(np.float32))
+    util = padn(np.ones((n_nodes, P.NC), np.float32))
+    # Default pump speed 0.75: balances the paper's ~5 degC rack in->out
+    # difference against footnote 2's near-zero rack->tank gap ("can be
+    # controlled by adjusting the water flow rate").
+    controls = jnp.asarray(np.array(
+        [0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0], np.float32))
+    g = padn(lot.g_var().astype(np.float32), fill=1e-3)
+    p_dyn = padn(lot.p_dyn.astype(np.float32))
+    p_idle = padn(lot.p_idle.astype(np.float32))
+    active = padn(lot.active.astype(np.float32))
+    return (node_state, circuit_state, util, controls,
+            g, p_dyn, p_idle, active)

@@ -1,0 +1,458 @@
+"""Physical parameters of the iDataCool digital twin.
+
+Single source of truth for the plant physics shared by:
+  * the JAX/Pallas compile path (model.py, kernels/),
+  * the Rust native reference plant (rust/src/plant/), which mirrors the
+    constants in `rust/src/config/constants.rs` and is cross-checked by
+    golden tests against `aot.py --dump-params`.
+
+Calibration targets (paper, Sect. 4):
+  * ΔT(core − water outlet) = 15…17.5 °C under stress         [Fig. 4a]
+  * production core-temp histogram μ≈84 °C σ≈2.8 °C @ Tout=67 [Fig. 4b]
+  * node DC power @ Tcore=80 °C: μ≈206 W σ≈5.4 W              [Fig. 5b]
+  * node power +≈7 % from Tout 49→70 °C                       [Fig. 6a]
+  * chiller COP: standby <55 °C, +90 % from 57→70 °C          [Fig. 6b]
+  * heat-in-water fraction ≈0.5 @ 70 °C, falling with T       [Fig. 7a]
+  * transferred-power fraction rising with T                  [Fig. 7b]
+  * energy-reuse fraction ≈25 % @ 60…70 °C                    [Sect. 4]
+  * rack in→out ΔT ≈ 5 °C at full load                        [Sect. 4]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# State layout (per node, S = 16)
+# ----------------------------------------------------------------------------
+NC = 12          # core slots per node (E5645: 12 active, E5630: 8 active)
+IDX_CORE0 = 0    # cores occupy [0, 12)
+IDX_PKG0 = 12    # socket-0 package/IHS lump
+IDX_PKG1 = 13    # socket-1 package/IHS lump
+IDX_SINK = 14    # copper heat sink + pipeline lump (per node)
+IDX_WATER = 15   # node-local water lump
+S = 16
+
+# Variable-conductance channels (per node, NG = NC + 3): the per-core
+# junction conductances g_jc plus the mount-quality-dependent conductances
+# pkg0->sink, pkg1->sink, sink->water ("proper mounting ... is crucial",
+# Sect. 2). These are the channels of the E1/E2 operators; A0 keeps only
+# the shared advection and air-loss terms.
+G_SP0 = NC       # pkg0 -> sink channel index
+G_SP1 = NC + 1   # pkg1 -> sink channel index
+G_SW = NC + 2    # sink -> water channel index
+G_ADV = NC + 3   # water advection channel (m_dot*cp, scaled by pump speed
+                 # at runtime; the inlet-temperature term lives in q_base)
+NG = NC + 4
+
+# Circuit-level state layout (CS = 12)
+CS = 12
+C_T_RACK_IN = 0    # rack inlet temperature [deg C]
+C_T_TANK = 1       # driving-circuit buffer-tank temperature [deg C]
+C_T_PRIMARY = 2    # primary cooling circuit temperature [deg C]
+C_T_RECOOL = 3     # recooling circuit temperature [deg C]
+C_CHILLER_ON = 4   # chiller state {0, 1} (hysteresis, Sect. 3)
+C_CYCLE_PHASE = 5  # adsorption-cycle phase in [0, 1)
+C_P_D = 6          # power transferred into driving circuit [W]
+C_P_C = 7          # chilled-water (cooling) power delivered [W]
+C_P_ADD = 8        # additional cooling via 3-way valve [W]
+C_P_LOSS = 9       # plumbing + rack heat loss to the room [W]
+C_T_RACK_OUT = 10  # rack outlet temperature [deg C]
+C_P_CENTRAL = 11   # support drawn from the central cooling circuit [W]
+
+# Control-vector layout (CT = 8), set by the Rust coordinator every tick
+CT = 8
+U_VALVE = 0        # 3-way valve position in [0, 1] (0 = all heat to chiller)
+U_CHILLER_EN = 1   # chiller enable {0, 1} (failover can force 0)
+U_T_AMBIENT = 2    # machine-room / outside air temperature [deg C]
+U_T_CENTRAL = 3    # central cooling circuit supply temperature [deg C]
+U_GPU_LOAD = 4     # GPU-cluster heat load on the primary circuit [W]
+U_FLOW_SCALE = 5   # rack pump speed as a fraction of nominal flow
+U_PUMP_FAIL = 6    # rack pump failure injection {0, 1}
+U_SPARE = 7
+
+# Per-node observation layout (OBS columns)
+OBS_N = 4
+O_NODE_POWER = 0   # node DC power [W]
+O_CORE_MEAN = 1    # mean active-core temperature [deg C]
+O_CORE_MAX = 2     # max active-core temperature [deg C]
+O_WATER_OUT = 3    # node-local water outlet temperature [deg C]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlantParams:
+    """All scalar constants of the plant (SI units unless noted)."""
+
+    # --- thermal masses [J/K] -------------------------------------------------
+    c_core: float = 18.0        # silicon die lump per core
+    c_pkg: float = 110.0        # package + IHS + TIM per socket
+    c_sink: float = 640.0       # copper heat sink + pipeline per node (~1.7 kg Cu)
+    c_water: float = 270.0      # node-local water inventory (~65 ml)
+    c_tank: float = 800.0 * 4186.0   # 800 l buffer tank (Sect. 3)
+    c_primary: float = 180.0 * 4186.0  # primary circuit water inventory
+    c_recool: float = 120.0 * 4186.0   # recooling circuit inventory
+
+    # --- thermal resistances / conductances ----------------------------------
+    # Calibrated so that under stress DT(core - water out) = 15...17.5 degC
+    # (Fig. 4a): DT_jc ~ 5.7 K, DT_sp ~ 3.9 K, DT_sw ~ 5.8 K at ~207 W/node.
+    # Heat path segment 1 (core -> package): no design control (Sect. 2).
+    r_jc: float = 0.62          # [K/W] junction->package per core (nominal)
+    # Heat path segment 2 (package -> water): the iDataCool heat-sink design.
+    r_sp: float = 0.045         # [K/W] package->sink per socket (TIM + Cu)
+    r_sw: float = 0.028         # [K/W] sink->water per node (1 mm channels)
+    # Residual loss to room air per node: folds the imperfect Armaflex on
+    # the node AND the rack-enclosure share (retrofit, Sect. 4 / Fig. 7a).
+    ua_node_air: float = 1.72   # [W/K]
+
+    # --- hydraulics (Sect. 2: 0.6 l/min per node, Tichelmann manifold) -------
+    node_flow_lpm: float = 0.60     # nominal per-node flow [l/min]
+    cp_water: float = 4186.0        # [J/(kg K)]
+    rho_water: float = 0.988        # [kg/l] at ~50 degC
+    node_dp_bar: float = 0.095      # per-node pressure drop at nominal flow
+    manifold_dp_bar: float = 0.008  # manifold segment drop (Tichelmann-equal)
+
+    # --- power model (Figs. 5, 6a) --------------------------------------------
+    p_core_dyn: float = 11.8    # [W] per-core dynamic power at 100 % util
+    p_core_idle: float = 1.9    # [W] per-core idle power
+    p_node_base: float = 44.0   # [W] memory, chipset, IB card, VRs, fans=0
+    leak_frac: float = 0.13     # fraction of core power that is leakage @T0
+    leak_beta: float = 0.026    # [1/K] leakage growth per K of core temp
+    leak_t0: float = 80.0       # [deg C] leakage reference temperature
+    psu_efficiency: float = 0.92   # DC->AC (PSUs remain air-cooled)
+    p_switches: float = 2300.0  # [W] Infiniband/Ethernet switches (air-cooled)
+    t_throttle: float = 100.0   # [deg C] cores throttle (footnote 4)
+    throttle_band: float = 2.5  # [K] linear throttle ramp below t_throttle
+
+    # --- manufacturing + mounting variability (Figs. 4b, 5b) ------------------
+    # Calibrated to sigma(T_core) ~ 2.8 degC and sigma(P_node) ~ 5.4 W:
+    # per-chip R_jc spread dominates (segment 1, "no control"), mounting
+    # quality of TIM/heat sink adds a per-node component (segment 2).
+    sigma_r_chip: float = 0.24  # per-chip rel. sigma of R_jc
+    sigma_r_core: float = 0.15  # per-core rel. sigma of R_jc
+    sigma_p_chip: float = 0.045 # per-chip rel. sigma of dynamic power
+    sigma_p_core: float = 0.012 # per-core rel. sigma of dynamic power
+    sigma_mount: float = 0.20   # per-node rel. sigma of R_sp / R_sw (TIM mount)
+
+    # --- plumbing / insulation (Fig. 7a) --------------------------------------
+    ua_pipe_env: float = 95.0   # [W/K] hot-side plumbing loss to the room
+    ua_pipe_cold_frac: float = 0.35  # cold-side plumbing UA as a fraction
+    t_room: float = 26.0        # [deg C] machine-room air temperature
+
+    # --- driving circuit + heat exchangers (Sect. 3) --------------------------
+    eps_hx_drive: float = 0.92  # rack->driving HX effectiveness (footnote 2:
+                                # "thermal contact ... very good")
+    eps_hx_primary: float = 0.85   # rack->primary HX effectiveness (3-way path)
+    ua_tank_env: float = 14.0   # [W/K] tank is well insulated
+    drive_flow_lps: float = 0.95   # driving-circuit flow [kg/s]
+
+    # --- InvenSor LTC 09 adsorption chiller (Sect. 3, Fig. 6b) ----------------
+    chiller_t_on: float = 55.0     # [deg C] leaves standby above this
+    chiller_t_off: float = 53.0    # [deg C] hysteresis lower edge
+    cop_at_57: float = 0.270       # COP at 57 degC driving temperature
+    cop_slope: float = 0.0187      # [1/K]; gives COP(70) = 0.513 (+90 %)
+    cop_max: float = 0.560
+    # Capacity rises steeply with driving temperature (adsorption physics),
+    # so P_d^max = P_c^max/COP rises from ~13.3 kW @57 to ~17.9 kW @70 —
+    # "almost equal to, but slightly smaller than" the rack-side transfer
+    # at maximum load (Sect. 3), putting T_eq in the 60...70 degC band.
+    pc_max_at_57: float = 3600.0   # [W] max cooling capacity at 57 degC
+    pc_max_slope: float = 430.0    # [W/K] capacity growth with driving temp
+    pc_max_cap: float = 10500.0    # [W] data-sheet ceiling (LTC 09 class)
+    cycle_period_s: float = 420.0  # adsorption/desorption cycle period
+    cycle_amp: float = 0.22        # capacity modulation amplitude over a cycle
+    chiller_min_drive: float = 0.0
+
+    # --- primary circuit + central cooling (Sect. 3) --------------------------
+    t_primary_support: float = 20.0  # [deg C] CoolTrans kicks in above this
+    ua_cooltrans: float = 2600.0     # [W/K] primary<->central HX conductance
+    gpu_peak_w: float = 12000.0      # GPU cluster peak (Sect. 3)
+
+    # --- recooler -------------------------------------------------------------
+    ua_recool_max: float = 3400.0  # [W/K] dry recooler at full fan speed
+    recool_fan_min: float = 0.15
+
+    # --- integration ----------------------------------------------------------
+    dt_substep: float = 0.25    # [s] inner Euler substep (stability: tau_min
+                                #     = c_core*r_jc ~ 14 s >> dt)
+    substeps_per_tick: int = 20  # K: substeps per PJRT call (tick = 5 s)
+
+    @property
+    def node_flow_kgps(self) -> float:
+        return self.node_flow_lpm / 60.0 * self.rho_water
+
+    @property
+    def node_mcp(self) -> float:
+        """Per-node advective conductance m_dot * c_p [W/K]."""
+        return self.node_flow_kgps * self.cp_water
+
+    def rack_mcp(self, n_nodes: int) -> float:
+        return self.node_mcp * n_nodes
+
+    def cop(self, t_drive: float) -> float:
+        """Chiller COP as a function of driving temperature (Fig. 6b)."""
+        if t_drive < self.chiller_t_on:
+            return 0.0
+        c = self.cop_at_57 + self.cop_slope * (t_drive - 57.0)
+        return float(np.clip(c, 0.0, self.cop_max))
+
+    def pc_max(self, t_drive: float) -> float:
+        """Max cooling capacity [W] vs driving temperature."""
+        if t_drive < self.chiller_t_on:
+            return 0.0
+        p = self.pc_max_at_57 + self.pc_max_slope * (t_drive - 57.0)
+        return float(np.clip(p, 0.0, self.pc_max_cap))
+
+    def pd_max(self, t_drive: float) -> float:
+        """Max power removable from the driving circuit, P_c^max/COP (Sect. 3)."""
+        c = self.cop(t_drive)
+        return self.pc_max(t_drive) / c if c > 0 else 0.0
+
+
+DEFAULT = PlantParams()
+
+
+# ----------------------------------------------------------------------------
+# Deterministic manufacturing variability (SplitMix64 + Box-Muller).
+# Mirrored bit-for-bit (integer part) in rust/src/variability/rng.rs.
+# ----------------------------------------------------------------------------
+_MASK64 = (1 << 64) - 1
+
+
+def splitmix64(state: int) -> tuple[int, int]:
+    """One SplitMix64 step: returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & _MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class Rng:
+    """Deterministic RNG shared with the Rust side (variability/rng.rs)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK64
+        self._cached_normal: float | None = None
+
+    def next_u64(self) -> int:
+        self.state, out = splitmix64(self.state)
+        return out
+
+    def uniform(self) -> float:
+        """Uniform in [0, 1) with 53-bit resolution."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self) -> float:
+        """Standard normal via Box-Muller (pair-cached)."""
+        if self._cached_normal is not None:
+            out, self._cached_normal = self._cached_normal, None
+            return out
+        # Avoid log(0).
+        u1 = max(self.uniform(), 1e-300)
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u1))
+        self._cached_normal = r * math.sin(2.0 * math.pi * u2)
+        return r * math.cos(2.0 * math.pi * u2)
+
+
+@dataclasses.dataclass
+class ChipLottery:
+    """Per-node manufacturing variability arrays (the 'silicon lottery').
+
+    active[n, c]   1.0 if core slot c exists on node n (E5630 nodes: 8 of 12)
+    g_jc[n, c]     junction->package conductance 1/R_jc [W/K]
+    p_dyn[n, c]    per-core dynamic power at 100 % util [W]
+    p_idle[n, c]   per-core idle power [W]
+    g_sp[n, 2]     pkg->sink conductance per socket (mount quality) [W/K]
+    g_sw[n]        sink->water conductance (mount quality) [W/K]
+    six_core[n]    1.0 for E5645 nodes (the only ones in the paper's figures)
+    """
+
+    active: np.ndarray
+    g_jc: np.ndarray
+    p_dyn: np.ndarray
+    p_idle: np.ndarray
+    g_sp: np.ndarray
+    g_sw: np.ndarray
+    six_core: np.ndarray
+
+    def g_var(self, params: "PlantParams" = None) -> np.ndarray:
+        """Assemble the [N, NG] variable-conductance matrix for the kernel.
+
+        Channel G_ADV carries the nominal advective conductance m_dot*cp;
+        the model scales it by the pump-speed control every substep.
+        """
+        pp = params if params is not None else DEFAULT
+        n = self.g_jc.shape[0]
+        adv = np.full((n, 1), pp.node_mcp, dtype=np.float64)
+        return np.concatenate(
+            [self.g_jc, self.g_sp, self.g_sw[:, None], adv], axis=1)
+
+
+# The paper: 388 E5645 (six-core) + 44 E5630 (four-core) CPUs
+# => 194 six-core nodes + 22 four-core nodes out of 216.
+N_FULL = 216
+N_FOURCORE_FULL = 22
+N_SUBSET = 13   # the 13 randomly selected stress nodes (Sect. 4)
+
+
+def draw_chip_lottery(n_nodes: int, params: PlantParams = DEFAULT,
+                      seed: int = 0x1DA7AC001) -> ChipLottery:
+    """Draw deterministic per-chip/per-core variability.
+
+    The draw order is fixed (node-major, then chip, then core) so the Rust
+    mirror reproduces identical values from the same seed.
+    """
+    rng = Rng(seed)
+    # Which nodes are four-core (E5630): scale the paper's 22/216 ratio.
+    n_four = round(n_nodes * N_FOURCORE_FULL / N_FULL)
+    four_idx = set()
+    # Deterministic spread: every k-th node starting at 7.
+    if n_four > 0:
+        stride = max(1, n_nodes // n_four)
+        i = 7 % n_nodes
+        while len(four_idx) < n_four:
+            four_idx.add(i % n_nodes)
+            i += stride
+
+    active = np.zeros((n_nodes, NC), dtype=np.float64)
+    g_jc = np.zeros((n_nodes, NC), dtype=np.float64)
+    p_dyn = np.zeros((n_nodes, NC), dtype=np.float64)
+    p_idle = np.zeros((n_nodes, NC), dtype=np.float64)
+    g_sp = np.zeros((n_nodes, 2), dtype=np.float64)
+    g_sw = np.zeros(n_nodes, dtype=np.float64)
+    six_core = np.zeros(n_nodes, dtype=np.float64)
+
+    for n in range(n_nodes):
+        four = n in four_idx
+        six_core[n] = 0.0 if four else 1.0
+        cores_per_chip = 4 if four else 6
+        for chip in range(2):
+            m_r_chip = 1.0 + params.sigma_r_chip * rng.normal()
+            m_p_chip = 1.0 + params.sigma_p_chip * rng.normal()
+            for c in range(6):
+                slot = chip * 6 + c
+                if c >= cores_per_chip:
+                    # Slot unpopulated: tiny conductance keeps A well-posed.
+                    active[n, slot] = 0.0
+                    g_jc[n, slot] = 1e-3
+                    p_dyn[n, slot] = 0.0
+                    p_idle[n, slot] = 0.0
+                    # Burn the per-core draws anyway so populated layouts
+                    # don't shift the stream (keeps rust mirror simple).
+                    rng.normal(); rng.normal()
+                    continue
+                m_r = m_r_chip * (1.0 + params.sigma_r_core * rng.normal())
+                m_p = m_p_chip * (1.0 + params.sigma_p_core * rng.normal())
+                m_r = max(m_r, 0.35)
+                m_p = max(m_p, 0.60)
+                active[n, slot] = 1.0
+                g_jc[n, slot] = 1.0 / (params.r_jc * m_r)
+                p_dyn[n, slot] = params.p_core_dyn * m_p
+                p_idle[n, slot] = params.p_core_idle * m_p
+        # Mounting quality of segment 2 (TIM application + alignment,
+        # Sect. 2): per-socket R_sp and per-node R_sw multipliers.
+        m_sp0 = max(1.0 + params.sigma_mount * rng.normal(), 0.5)
+        m_sp1 = max(1.0 + params.sigma_mount * rng.normal(), 0.5)
+        m_sw = max(1.0 + params.sigma_mount * rng.normal(), 0.5)
+        g_sp[n, 0] = 1.0 / (params.r_sp * m_sp0)
+        g_sp[n, 1] = 1.0 / (params.r_sp * m_sp1)
+        g_sw[n] = 1.0 / (params.r_sw * m_sw)
+    return ChipLottery(active=active, g_jc=g_jc, p_dyn=p_dyn,
+                       p_idle=p_idle, g_sp=g_sp, g_sw=g_sw,
+                       six_core=six_core)
+
+
+# ----------------------------------------------------------------------------
+# Node-network operators (shared with the Pallas kernel and the Rust plant)
+# ----------------------------------------------------------------------------
+def inv_heat_capacity(params: PlantParams = DEFAULT) -> np.ndarray:
+    """1/C per state row [S]."""
+    inv_c = np.zeros(S, dtype=np.float64)
+    inv_c[IDX_CORE0:IDX_CORE0 + NC] = 1.0 / params.c_core
+    inv_c[IDX_PKG0] = 1.0 / params.c_pkg
+    inv_c[IDX_PKG1] = 1.0 / params.c_pkg
+    inv_c[IDX_SINK] = 1.0 / params.c_sink
+    inv_c[IDX_WATER] = 1.0 / params.c_water
+    return inv_c
+
+
+def build_operators(params: PlantParams = DEFAULT) -> dict[str, np.ndarray]:
+    """Build the shared linear operators of the node RC network.
+
+    The substep computed by the Pallas kernel is
+        T' = T + dt * ( T @ A0^T  +  ((T @ E1^T) * g) @ E2^T  +  q )
+    where
+        A0 [S,S]  shared terms (water advection, residual loss to air)
+        E1 [NG,S] difference operator: rows 0..11 (T_core - T_pkg), row 12/13
+                  (T_pkg - T_sink) per socket, row 14 (T_sink - T_water)
+        E2 [S,NG] scatter of each channel flux, scaled by 1/C
+        g  [N,NG] per-channel conductances (silicon + mounting lottery)
+        q  [N,S]  power injection + advective inlet + air-loss constants.
+    """
+    inv_c = inv_heat_capacity(params)
+    a0 = np.zeros((S, S), dtype=np.float64)
+
+    # Residual loss to air from the sink lump (imperfect Armaflex + rack
+    # enclosure share); the constant UA*T_room term lives in q.
+    # (Water advection is the G_ADV channel so pump speed can vary at
+    # runtime; the m_dot*cp*T_in inlet term lives in q_base.)
+    a0[IDX_SINK, IDX_SINK] -= params.ua_node_air * inv_c[IDX_SINK]
+
+    e1 = np.zeros((NG, S), dtype=np.float64)
+    e2 = np.zeros((S, NG), dtype=np.float64)
+    for c in range(NC):
+        pkg = IDX_PKG0 if c < 6 else IDX_PKG1
+        e1[c, c] = 1.0
+        e1[c, pkg] = -1.0
+        # Junction flux f_c = g_c * (T_c - T_pkg): leaves the core, enters pkg.
+        e2[c, c] = -inv_c[c]
+        e2[pkg, c] = +inv_c[pkg]
+    # pkg -> sink channels (per-socket mount quality)
+    for ch, pkg in ((G_SP0, IDX_PKG0), (G_SP1, IDX_PKG1)):
+        e1[ch, pkg] = 1.0
+        e1[ch, IDX_SINK] = -1.0
+        e2[pkg, ch] = -inv_c[pkg]
+        e2[IDX_SINK, ch] = +inv_c[IDX_SINK]
+    # sink -> water channel
+    e1[G_SW, IDX_SINK] = 1.0
+    e1[G_SW, IDX_WATER] = -1.0
+    e2[IDX_SINK, G_SW] = -inv_c[IDX_SINK]
+    e2[IDX_WATER, G_SW] = +inv_c[IDX_WATER]
+    # advection outflow channel: flux = g_adv * T_water (inlet term in q)
+    e1[G_ADV, IDX_WATER] = 1.0
+    e2[IDX_WATER, G_ADV] = -inv_c[IDX_WATER]
+
+    # Power scatter: per-core power into core rows; node base power into sink
+    # (memory/chipset/VR heat bridges are clamped to the pipeline, Sect. 2).
+    ec = np.zeros((S, NC), dtype=np.float64)
+    for c in range(NC):
+        ec[c, c] = inv_c[c]
+
+    return {
+        "a0": a0, "e1": e1, "e2": e2, "ec": ec, "inv_c": inv_c,
+    }
+
+
+def initial_node_state(n_nodes: int, t_water: float = 20.0) -> np.ndarray:
+    """Cold-start node state: everything at the initial water temperature."""
+    return np.full((n_nodes, S), t_water, dtype=np.float64)
+
+
+def initial_circuit_state(t_water: float = 20.0,
+                          params: PlantParams = DEFAULT) -> np.ndarray:
+    cs = np.zeros(CS, dtype=np.float64)
+    cs[C_T_RACK_IN] = t_water
+    cs[C_T_TANK] = t_water
+    cs[C_T_PRIMARY] = 16.0
+    cs[C_T_RECOOL] = params.t_room
+    cs[C_T_RACK_OUT] = t_water
+    return cs
+
+
+def params_as_dict(params: PlantParams = DEFAULT) -> dict:
+    return dataclasses.asdict(params)

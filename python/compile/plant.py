@@ -1,0 +1,152 @@
+"""L2 circuit-level plant physics in JAX (Sect. 3 of the paper).
+
+Models the five water circuits of Fig. 3 and their couplings:
+
+  (1) central cooling circuit  — boundary condition at U_T_CENTRAL (~8 degC)
+  (2) primary cooling circuit  — GPU-cluster load, chilled by the adsorption
+                                 chiller, CoolTrans support above 20 degC
+  (3) rack cooling circuit     — the iDataCool racks (node ensemble)
+  (4) driving circuit          — 800 l buffer tank driving the chiller
+  (5) recooling circuit        — dry recooler to ambient
+
+plus the InvenSor LTC 09 adsorption chiller (COP/capacity curves with
+standby hysteresis and adsorption-cycle modulation) and the 3-way valve
+that splits rack return heat between driving and primary circuits.
+
+Everything here is scalar math on the CS-sized circuit-state vector; the
+N-node ensemble is handled by the Pallas kernel (kernels/thermal_step.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import params as P
+
+
+def chiller_cop(t_drive, on, pp: P.PlantParams):
+    """COP(T) of the adsorption chiller (Fig. 6b). Zero in standby."""
+    c = pp.cop_at_57 + pp.cop_slope * (t_drive - 57.0)
+    return on * jnp.clip(c, 0.0, pp.cop_max)
+
+
+def chiller_pc_max(t_drive, on, pp: P.PlantParams):
+    """Maximum chilled-water capacity P_c^max(T) [W]."""
+    p = pp.pc_max_at_57 + pp.pc_max_slope * (t_drive - 57.0)
+    return on * jnp.clip(p, 0.0, pp.pc_max_cap)
+
+
+def chiller_pd_max(t_drive, on, cycle_mod, pp: P.PlantParams):
+    """Max power removable from the driving circuit, P_d^max = P_c^max/COP.
+
+    This is the function whose intersection with the transferred power P_d
+    defines the Sect.-3 equilibrium temperature T_eq.
+    """
+    cop = chiller_cop(t_drive, on, pp)
+    pc = chiller_pc_max(t_drive, on, pp) * cycle_mod
+    return jnp.where(cop > 1e-6, pc / jnp.maximum(cop, 1e-6), 0.0)
+
+
+def chiller_hysteresis(t_drive, on_prev, enable, pp: P.PlantParams):
+    """Standby hysteresis: on above t_on, off below t_off (Sect. 3)."""
+    turn_on = t_drive > pp.chiller_t_on
+    turn_off = t_drive < pp.chiller_t_off
+    on = jnp.where(turn_on, 1.0, jnp.where(turn_off, 0.0, on_prev))
+    return on * enable
+
+
+def circuit_substep(cs, controls, t_rack_out_raw, p_nodes_total,
+                    n_nodes, pp: P.PlantParams):
+    """Advance the circuit-level state by one dt substep.
+
+    Args:
+      cs [CS]            circuit state (see params.py layout)
+      controls [CT]      coordinator control vector
+      t_rack_out_raw     flow-weighted mean node water-outlet temperature
+      p_nodes_total      total node DC power this substep [W]
+      n_nodes            static node count
+    Returns:
+      (cs_next [CS], t_rack_in_next scalar)
+    """
+    dt = pp.dt_substep
+    mcp = pp.rack_mcp(n_nodes) * jnp.maximum(controls[P.U_FLOW_SCALE], 1e-3)
+    mcp = mcp * (1.0 - controls[P.U_PUMP_FAIL])
+    mcp = jnp.maximum(mcp, 1.0)
+
+    t_tank = cs[P.C_T_TANK]
+    t_primary = cs[P.C_T_PRIMARY]
+    t_recool = cs[P.C_T_RECOOL]
+    t_ambient = controls[P.U_T_AMBIENT]
+
+    # --- rack outlet: plumbing loss between rack and heat exchangers -------
+    # Exponential (effectiveness) form: bounded for any flow, including a
+    # failed pump (a linear UA*dT/mcp correction diverges as mcp -> 0).
+    decay_hot = jnp.exp(-pp.ua_pipe_env / mcp)
+    t_rack_out = pp.t_room + (t_rack_out_raw - pp.t_room) * decay_hot
+    pipe_loss_hot = mcp * (t_rack_out_raw - t_rack_out)
+
+    # --- chiller state machine + adsorption cycle ---------------------------
+    on = chiller_hysteresis(t_tank, cs[P.C_CHILLER_ON],
+                            controls[P.U_CHILLER_EN], pp)
+    phase = jnp.mod(cs[P.C_CYCLE_PHASE] + dt / pp.cycle_period_s, 1.0)
+    # Adsorption/desorption capacity modulation, smoothed by the 800 l tank.
+    cycle_mod = 1.0 + pp.cycle_amp * jnp.sin(2.0 * jnp.pi * phase)
+
+    # --- rack -> driving heat exchanger (footnote 2: near-ideal contact) ---
+    p_hx_d = pp.eps_hx_drive * mcp * jnp.maximum(t_rack_out - t_tank, 0.0)
+    t_after_drive = t_rack_out - p_hx_d / mcp
+
+    # --- 3-way valve: route remaining heat to the primary circuit ----------
+    u = jnp.clip(controls[P.U_VALVE], 0.0, 1.0)
+    p_add = u * pp.eps_hx_primary * mcp * jnp.maximum(
+        t_after_drive - t_primary, 0.0)
+    t_rack_in = t_after_drive - p_add / mcp
+
+    # --- cold-side plumbing loss (gains heat if below room temperature) ----
+    decay_cold = jnp.exp(-pp.ua_pipe_env * pp.ua_pipe_cold_frac / mcp)
+    t_rack_in_post = pp.t_room + (t_rack_in - pp.t_room) * decay_cold
+    pipe_loss_cold = mcp * (t_rack_in - t_rack_in_post)
+    t_rack_in = t_rack_in_post
+
+    # --- chiller draw from the tank -----------------------------------------
+    pd_max = chiller_pd_max(t_tank, on, cycle_mod, pp)
+    p_d_abs = pd_max          # chiller absorbs as much as it can (Sect. 3)
+    p_c = chiller_cop(t_tank, on, pp) * p_d_abs
+    p_reject = p_d_abs + p_c  # adsorption chiller rejects drive + cooling heat
+
+    # --- tank (driving circuit) ---------------------------------------------
+    tank_loss = pp.ua_tank_env * (t_tank - pp.t_room)
+    dtank = (p_hx_d - p_d_abs - tank_loss) / pp.c_tank
+    t_tank_next = t_tank + dt * dtank
+
+    # --- primary circuit ------------------------------------------------------
+    p_central = jnp.where(
+        t_primary > pp.t_primary_support,
+        pp.ua_cooltrans * (t_primary - controls[P.U_T_CENTRAL]), 0.0)
+    dprim = (controls[P.U_GPU_LOAD] + p_add - p_c - p_central) / pp.c_primary
+    t_primary_next = t_primary + dt * dprim
+
+    # --- recooling circuit -----------------------------------------------------
+    # Fan speed is controlled by the chiller for efficient operation (Sect. 3).
+    fan = jnp.clip((t_recool - t_ambient) / 12.0, pp.recool_fan_min, 1.0)
+    p_recool = pp.ua_recool_max * fan * (t_recool - t_ambient)
+    drec = (p_reject - p_recool) / pp.c_recool
+    t_recool_next = t_recool + dt * drec
+
+    p_loss = pipe_loss_hot + pipe_loss_cold + tank_loss
+
+    cs_next = jnp.stack([
+        t_rack_in,
+        t_tank_next,
+        t_primary_next,
+        t_recool_next,
+        on,
+        phase,
+        p_hx_d,                  # C_P_D: power transferred to driving circuit
+        p_c,                     # C_P_C
+        p_add,                   # C_P_ADD
+        p_loss,                  # C_P_LOSS (plumbing + tank; rack UA separate)
+        t_rack_out,              # C_T_RACK_OUT
+        p_central,               # C_P_CENTRAL
+    ])
+    return cs_next, t_rack_in

@@ -1,0 +1,137 @@
+"""Model-level tests: plant_step shapes, physics trajectories, AOT text."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, params as P
+
+PP = P.DEFAULT
+
+
+@pytest.fixture(scope="module")
+def small_step():
+    step, npad = model.make_plant_step(13, PP, tile=32, substeps=4)
+    args = model.make_example_args(13, PP, tile=32)
+    return jax.jit(step), args, npad
+
+
+def test_shapes(small_step):
+    step, args, npad = small_step
+    t, cs, obs, sc = step(*args)
+    assert t.shape == (npad, P.S)
+    assert cs.shape == (P.CS,)
+    assert obs.shape == (npad, P.OBS_N)
+    assert sc.shape == (model.NS,)
+
+
+def test_pallas_and_ref_paths_agree():
+    """The lowered Pallas path and the pure-jnp path must agree closely
+    over a multi-tick trajectory (same padding for comparability)."""
+    n = 13
+    sp, npad = model.make_plant_step(n, PP, tile=32, substeps=4)
+    sr, _ = model.make_plant_step(n, PP, tile=32, substeps=4,
+                                  use_pallas=False)
+    # use_pallas=False skips padding; rebuild ref with padded inputs by
+    # comparing only via the pallas-padded args on both fns.
+    args = model.make_example_args(n, PP, tile=32)
+    jp, jr = jax.jit(sp), jax.jit(sr)
+    tp, cp = args[0], args[1]
+    tr, cr = args[0], args[1]
+    rest = args[2:]
+    for _ in range(10):
+        tp, cp, op_, scp = jp(tp, cp, *rest)
+        tr, cr, or_, scr = jr(tr, cr, *rest)
+    np.testing.assert_allclose(np.asarray(tp), np.asarray(tr),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(scp), np.asarray(scr),
+                               rtol=2e-3, atol=2.0)
+
+
+def test_stress_heats_cluster(small_step):
+    step, args, _ = small_step
+    t, cs = args[0], args[1]
+    rest = args[2:]
+    sc = None
+    for _ in range(60):  # 60 ticks x 4 substeps x 0.25 s = 1 min
+        t, cs, obs, sc = step(t, cs, *rest)
+    assert float(sc[model.SC_T_RACK_OUT]) > 20.5
+    assert float(sc[model.SC_P_DC]) > 13 * 150.0
+
+
+def test_idle_cluster_stays_cool():
+    step, npad = model.make_plant_step(13, PP, tile=32, substeps=4)
+    args = list(model.make_example_args(13, PP, tile=32))
+    args[2] = jnp.zeros_like(args[2])          # util = 0
+    jstep = jax.jit(step)
+    t, cs = args[0], args[1]
+    rest = args[2:]
+    for _ in range(120):
+        t, cs, obs, sc = jstep(t, cs, *rest)
+    # idle power ~ 2 W/core + 44 W base: cores stay well below stress temps
+    assert float(sc[model.SC_CORE_MAX]) < 45.0
+
+
+def test_energy_balance_closed():
+    """Global energy audit over one tick: electrical power in ~ heat
+    absorbed by masses + heat removed by chiller/valve/losses/advection.
+    We test the weaker, robust invariant: the total plant enthalpy rate of
+    change is bounded by the electrical input (nothing creates energy)."""
+    n = 13
+    step, npad = model.make_plant_step(n, PP, tile=32, substeps=20)
+    args = model.make_example_args(n, PP, tile=32)
+    jstep = jax.jit(step)
+    t, cs = args[0], args[1]
+    rest = args[2:]
+    inv_c = P.build_operators(PP)["inv_c"]
+    c_node = 1.0 / inv_c  # [S]
+    for _ in range(5):
+        t_prev = np.asarray(t)
+        t, cs, obs, sc = jstep(t, cs, *rest)
+        dt_tick = 20 * PP.dt_substep
+        de_nodes = ((np.asarray(t) - t_prev)[:n] @ c_node).sum() / dt_tick
+        p_in = float(sc[model.SC_P_DC])
+        # Nodes cannot store enthalpy faster than electrical input + the
+        # advective/ambient exchange bound.
+        assert de_nodes < p_in + 5_000.0
+
+
+def test_aot_emits_parseable_hlo(tmp_path):
+    text, npad = aot.lower_plant(4, PP, tile=32, substeps=2)
+    assert "HloModule" in text
+    assert npad == 32
+    # entry computation must list our 8 parameters
+    assert text.count("parameter(") >= 8
+
+
+def test_aot_deterministic():
+    a, _ = aot.lower_plant(4, PP, tile=32, substeps=2)
+    b, _ = aot.lower_plant(4, PP, tile=32, substeps=2)
+    assert a == b
+
+
+def test_manifest_layout():
+    man = aot.build_manifest([13], 64, PP, seed=1)
+    e = man["entries"][0]
+    assert e["n_padded"] == 64
+    assert [i["name"] for i in e["inputs"]] == [
+        "node_state", "circuit_state", "util", "controls",
+        "g", "p_dyn", "p_idle", "active"]
+    assert man["g_channels"] == P.NG
+
+
+def test_artifacts_on_disk_match_manifest():
+    """If `make artifacts` has run, the files referenced must exist."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    import json
+    with open(man_path) as f:
+        man = json.load(f)
+    for e in man["entries"]:
+        assert os.path.exists(os.path.join(art, e["hlo"]))
+        assert os.path.exists(os.path.join(art, e["lottery"]))

@@ -1,0 +1,52 @@
+//! One benchmark per paper figure: times the full regeneration of each
+//! figure's workload (settle + measure protocol) at CI-friendly sizes.
+//! `cargo bench --bench figures` — BENCH_FAST=1 shrinks further.
+//!
+//! These benches double as smoke tests that every figure harness runs
+//! end-to-end; the *values* are produced by `idatacool figures` and
+//! recorded in EXPERIMENTS.md.
+
+use idatacool::config::SimConfig;
+use idatacool::figures::{self, sweep::SweepOptions};
+use idatacool::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(0, 2);
+    if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
+        b = Bench::new(0, 1);
+    }
+    println!("{}", Bench::header());
+
+    let mut cfg = SimConfig::idatacool_full();
+    cfg.backend = "auto".into();
+    cfg.sensor_noise = true;
+    cfg.pp = idatacool::config::constants::PlantParams::from_artifacts(
+        &cfg.artifacts_dir,
+    );
+    let opts = SweepOptions::quick();
+
+    // the sweep feeds figs 4a/5a/5b/6a/6b/7a/7b — time it once as a unit
+    let sweep_cfg = cfg.clone();
+    let sweep_opts = opts.clone();
+    b.run("sweep/7-setpoints (figs 4a,5a,5b,6a,6b,7a,7b)", || {
+        figures::sweep::run_sweep(&sweep_cfg, figures::SETPOINTS, &sweep_opts)
+            .unwrap();
+    });
+
+    for id in ["4b", "s3", "r2", "manifold"] {
+        let c = cfg.clone();
+        let o = opts.clone();
+        b.run(&format!("figure/{id}"), move || {
+            figures::run_figure(id, &c, &o).unwrap();
+        });
+    }
+
+    // r1 includes the ideal-insulation ablation re-run
+    let c = cfg.clone();
+    let o = opts.clone();
+    b.run("figure/r1 (+ideal-insulation ablation)", move || {
+        figures::run_figure("r1", &c, &o).unwrap();
+    });
+
+    Ok(())
+}

@@ -1,0 +1,371 @@
+//! Plant physical constants — the Rust mirror of
+//! `python/compile/params.py::PlantParams`.
+//!
+//! `PlantParams::default()` must stay numerically identical to the Python
+//! dataclass defaults; `tests/cross_params.rs` compares against
+//! `artifacts/params.json` (written by aot.py) field by field. When
+//! artifacts are present, prefer `PlantParams::from_artifacts` so the
+//! native plant runs with *exactly* the constants the HLO was lowered with.
+
+use crate::util::json::Json;
+
+/// All scalar constants of the plant (SI units unless noted).
+/// See params.py for the calibration targets each value serves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlantParams {
+    // thermal masses [J/K]
+    pub c_core: f64,
+    pub c_pkg: f64,
+    pub c_sink: f64,
+    pub c_water: f64,
+    pub c_tank: f64,
+    pub c_primary: f64,
+    pub c_recool: f64,
+    // thermal resistances / conductances
+    pub r_jc: f64,
+    pub r_sp: f64,
+    pub r_sw: f64,
+    pub ua_node_air: f64,
+    // hydraulics
+    pub node_flow_lpm: f64,
+    pub cp_water: f64,
+    pub rho_water: f64,
+    pub node_dp_bar: f64,
+    pub manifold_dp_bar: f64,
+    // power model
+    pub p_core_dyn: f64,
+    pub p_core_idle: f64,
+    pub p_node_base: f64,
+    pub leak_frac: f64,
+    pub leak_beta: f64,
+    pub leak_t0: f64,
+    pub psu_efficiency: f64,
+    pub p_switches: f64,
+    pub t_throttle: f64,
+    pub throttle_band: f64,
+    // variability
+    pub sigma_r_chip: f64,
+    pub sigma_r_core: f64,
+    pub sigma_p_chip: f64,
+    pub sigma_p_core: f64,
+    pub sigma_mount: f64,
+    // plumbing / insulation
+    pub ua_pipe_env: f64,
+    pub ua_pipe_cold_frac: f64,
+    pub t_room: f64,
+    // driving circuit + HX
+    pub eps_hx_drive: f64,
+    pub eps_hx_primary: f64,
+    pub ua_tank_env: f64,
+    pub drive_flow_lps: f64,
+    // adsorption chiller (InvenSor LTC 09 class)
+    pub chiller_t_on: f64,
+    pub chiller_t_off: f64,
+    pub cop_at_57: f64,
+    pub cop_slope: f64,
+    pub cop_max: f64,
+    pub pc_max_at_57: f64,
+    pub pc_max_slope: f64,
+    pub pc_max_cap: f64,
+    pub cycle_period_s: f64,
+    pub cycle_amp: f64,
+    pub chiller_min_drive: f64,
+    // primary circuit + central cooling
+    pub t_primary_support: f64,
+    pub ua_cooltrans: f64,
+    pub gpu_peak_w: f64,
+    // recooler
+    pub ua_recool_max: f64,
+    pub recool_fan_min: f64,
+    // integration
+    pub dt_substep: f64,
+    pub substeps_per_tick: usize,
+}
+
+impl Default for PlantParams {
+    fn default() -> Self {
+        PlantParams {
+            c_core: 18.0,
+            c_pkg: 110.0,
+            c_sink: 640.0,
+            c_water: 270.0,
+            c_tank: 800.0 * 4186.0,
+            c_primary: 180.0 * 4186.0,
+            c_recool: 120.0 * 4186.0,
+            r_jc: 0.62,
+            r_sp: 0.045,
+            r_sw: 0.028,
+            ua_node_air: 1.72,
+            node_flow_lpm: 0.60,
+            cp_water: 4186.0,
+            rho_water: 0.988,
+            node_dp_bar: 0.095,
+            manifold_dp_bar: 0.008,
+            p_core_dyn: 11.8,
+            p_core_idle: 1.9,
+            p_node_base: 44.0,
+            leak_frac: 0.13,
+            leak_beta: 0.026,
+            leak_t0: 80.0,
+            psu_efficiency: 0.92,
+            p_switches: 2300.0,
+            t_throttle: 100.0,
+            throttle_band: 2.5,
+            sigma_r_chip: 0.24,
+            sigma_r_core: 0.15,
+            sigma_p_chip: 0.045,
+            sigma_p_core: 0.012,
+            sigma_mount: 0.20,
+            ua_pipe_env: 95.0,
+            ua_pipe_cold_frac: 0.35,
+            t_room: 26.0,
+            eps_hx_drive: 0.92,
+            eps_hx_primary: 0.85,
+            ua_tank_env: 14.0,
+            drive_flow_lps: 0.95,
+            chiller_t_on: 55.0,
+            chiller_t_off: 53.0,
+            cop_at_57: 0.270,
+            cop_slope: 0.0187,
+            cop_max: 0.560,
+            pc_max_at_57: 3600.0,
+            pc_max_slope: 430.0,
+            pc_max_cap: 10500.0,
+            cycle_period_s: 420.0,
+            cycle_amp: 0.22,
+            chiller_min_drive: 0.0,
+            t_primary_support: 20.0,
+            ua_cooltrans: 2600.0,
+            gpu_peak_w: 12000.0,
+            ua_recool_max: 3400.0,
+            recool_fan_min: 0.15,
+            dt_substep: 0.25,
+            substeps_per_tick: 20,
+        }
+    }
+}
+
+impl PlantParams {
+    /// Per-node water mass flow [kg/s].
+    pub fn node_flow_kgps(&self) -> f64 {
+        self.node_flow_lpm / 60.0 * self.rho_water
+    }
+
+    /// Per-node advective conductance m_dot * c_p [W/K].
+    pub fn node_mcp(&self) -> f64 {
+        self.node_flow_kgps() * self.cp_water
+    }
+
+    /// Rack-level advective conductance at nominal pump speed [W/K].
+    pub fn rack_mcp(&self, n_nodes: usize) -> f64 {
+        self.node_mcp() * n_nodes as f64
+    }
+
+    /// Chiller COP vs driving temperature (Fig. 6b). Zero in standby.
+    pub fn cop(&self, t_drive: f64) -> f64 {
+        if t_drive < self.chiller_t_on {
+            return 0.0;
+        }
+        (self.cop_at_57 + self.cop_slope * (t_drive - 57.0))
+            .clamp(0.0, self.cop_max)
+    }
+
+    /// Max chilled-water capacity [W] vs driving temperature.
+    pub fn pc_max(&self, t_drive: f64) -> f64 {
+        if t_drive < self.chiller_t_on {
+            return 0.0;
+        }
+        (self.pc_max_at_57 + self.pc_max_slope * (t_drive - 57.0))
+            .clamp(0.0, self.pc_max_cap)
+    }
+
+    /// Max power removable from the driving circuit (Sect. 3).
+    pub fn pd_max(&self, t_drive: f64) -> f64 {
+        let c = self.cop(t_drive);
+        if c > 0.0 {
+            self.pc_max(t_drive) / c
+        } else {
+            0.0
+        }
+    }
+
+    /// Load from `artifacts/params.json` (written by aot.py) so the native
+    /// plant and the HLO plant share identical constants.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let p = j.get("params").unwrap_or(j);
+        let f = |k: &str| -> anyhow::Result<f64> {
+            p.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("params.json missing {k}"))
+        };
+        Ok(PlantParams {
+            c_core: f("c_core")?,
+            c_pkg: f("c_pkg")?,
+            c_sink: f("c_sink")?,
+            c_water: f("c_water")?,
+            c_tank: f("c_tank")?,
+            c_primary: f("c_primary")?,
+            c_recool: f("c_recool")?,
+            r_jc: f("r_jc")?,
+            r_sp: f("r_sp")?,
+            r_sw: f("r_sw")?,
+            ua_node_air: f("ua_node_air")?,
+            node_flow_lpm: f("node_flow_lpm")?,
+            cp_water: f("cp_water")?,
+            rho_water: f("rho_water")?,
+            node_dp_bar: f("node_dp_bar")?,
+            manifold_dp_bar: f("manifold_dp_bar")?,
+            p_core_dyn: f("p_core_dyn")?,
+            p_core_idle: f("p_core_idle")?,
+            p_node_base: f("p_node_base")?,
+            leak_frac: f("leak_frac")?,
+            leak_beta: f("leak_beta")?,
+            leak_t0: f("leak_t0")?,
+            psu_efficiency: f("psu_efficiency")?,
+            p_switches: f("p_switches")?,
+            t_throttle: f("t_throttle")?,
+            throttle_band: f("throttle_band")?,
+            sigma_r_chip: f("sigma_r_chip")?,
+            sigma_r_core: f("sigma_r_core")?,
+            sigma_p_chip: f("sigma_p_chip")?,
+            sigma_p_core: f("sigma_p_core")?,
+            sigma_mount: f("sigma_mount")?,
+            ua_pipe_env: f("ua_pipe_env")?,
+            ua_pipe_cold_frac: f("ua_pipe_cold_frac")?,
+            t_room: f("t_room")?,
+            eps_hx_drive: f("eps_hx_drive")?,
+            eps_hx_primary: f("eps_hx_primary")?,
+            ua_tank_env: f("ua_tank_env")?,
+            drive_flow_lps: f("drive_flow_lps")?,
+            chiller_t_on: f("chiller_t_on")?,
+            chiller_t_off: f("chiller_t_off")?,
+            cop_at_57: f("cop_at_57")?,
+            cop_slope: f("cop_slope")?,
+            cop_max: f("cop_max")?,
+            pc_max_at_57: f("pc_max_at_57")?,
+            pc_max_slope: f("pc_max_slope")?,
+            pc_max_cap: f("pc_max_cap")?,
+            cycle_period_s: f("cycle_period_s")?,
+            cycle_amp: f("cycle_amp")?,
+            chiller_min_drive: f("chiller_min_drive")?,
+            t_primary_support: f("t_primary_support")?,
+            ua_cooltrans: f("ua_cooltrans")?,
+            gpu_peak_w: f("gpu_peak_w")?,
+            ua_recool_max: f("ua_recool_max")?,
+            recool_fan_min: f("recool_fan_min")?,
+            dt_substep: f("dt_substep")?,
+            substeps_per_tick: f("substeps_per_tick")? as usize,
+        })
+    }
+
+    /// Convenience: load from `<artifacts>/params.json` if present,
+    /// otherwise fall back to the built-in defaults.
+    pub fn from_artifacts(dir: &std::path::Path) -> Self {
+        let path = dir.join("params.json");
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(j) = Json::parse(&text) {
+                if let Ok(pp) = Self::from_json(&j) {
+                    return pp;
+                }
+            }
+        }
+        Self::default()
+    }
+
+    /// The "ideal insulation" ablation of Sect. 5: the paper estimates
+    /// that with better thermal insulation "almost 50 % of the energy can
+    /// be recovered" — i.e. heat-in-water roughly doubles at 70 degC.
+    pub fn with_ideal_insulation(&self) -> Self {
+        let mut p = self.clone();
+        p.ua_node_air = 0.15;
+        p.ua_pipe_env = 8.0;
+        p.ua_tank_env = 3.0;
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cop_matches_paper_gain() {
+        let pp = PlantParams::default();
+        let gain = pp.cop(70.0) / pp.cop(57.0);
+        assert!((1.8..=2.0).contains(&gain), "gain {gain}");
+        assert_eq!(pp.cop(54.0), 0.0);
+    }
+
+    #[test]
+    fn pd_max_rises_with_temperature() {
+        let pp = PlantParams::default();
+        assert!(pp.pd_max(70.0) > pp.pd_max(60.0));
+        assert!(pp.pd_max(60.0) > pp.pd_max(57.0));
+        // Sect. 3 equilibrium band: slightly below the rack transfer ~19 kW.
+        assert!(pp.pd_max(70.0) > 15_000.0 && pp.pd_max(70.0) < 20_000.0);
+    }
+
+    #[test]
+    fn node_mcp_plausible() {
+        let pp = PlantParams::default();
+        // 0.6 l/min of water ~ 41 W/K
+        let mcp = pp.node_mcp();
+        assert!((40.0..44.0).contains(&mcp), "{mcp}");
+    }
+
+    #[test]
+    fn from_json_roundtrip_defaults() {
+        // Build a JSON object mirroring the defaults and re-parse it.
+        let pp = PlantParams::default();
+        let text = format!(
+            r#"{{"params": {{
+            "c_core": {}, "c_pkg": {}, "c_sink": {}, "c_water": {},
+            "c_tank": {}, "c_primary": {}, "c_recool": {},
+            "r_jc": {}, "r_sp": {}, "r_sw": {}, "ua_node_air": {},
+            "node_flow_lpm": {}, "cp_water": {}, "rho_water": {},
+            "node_dp_bar": {}, "manifold_dp_bar": {},
+            "p_core_dyn": {}, "p_core_idle": {}, "p_node_base": {},
+            "leak_frac": {}, "leak_beta": {}, "leak_t0": {},
+            "psu_efficiency": {}, "p_switches": {}, "t_throttle": {},
+            "throttle_band": {}, "sigma_r_chip": {}, "sigma_r_core": {},
+            "sigma_p_chip": {}, "sigma_p_core": {}, "sigma_mount": {},
+            "ua_pipe_env": {}, "ua_pipe_cold_frac": {}, "t_room": {},
+            "eps_hx_drive": {}, "eps_hx_primary": {}, "ua_tank_env": {},
+            "drive_flow_lps": {}, "chiller_t_on": {}, "chiller_t_off": {},
+            "cop_at_57": {}, "cop_slope": {}, "cop_max": {},
+            "pc_max_at_57": {}, "pc_max_slope": {}, "pc_max_cap": {},
+            "cycle_period_s": {}, "cycle_amp": {}, "chiller_min_drive": {},
+            "t_primary_support": {}, "ua_cooltrans": {}, "gpu_peak_w": {},
+            "ua_recool_max": {}, "recool_fan_min": {},
+            "dt_substep": {}, "substeps_per_tick": {}
+            }}}}"#,
+            pp.c_core, pp.c_pkg, pp.c_sink, pp.c_water, pp.c_tank,
+            pp.c_primary, pp.c_recool, pp.r_jc, pp.r_sp, pp.r_sw,
+            pp.ua_node_air, pp.node_flow_lpm, pp.cp_water, pp.rho_water,
+            pp.node_dp_bar, pp.manifold_dp_bar, pp.p_core_dyn,
+            pp.p_core_idle, pp.p_node_base, pp.leak_frac, pp.leak_beta,
+            pp.leak_t0, pp.psu_efficiency, pp.p_switches, pp.t_throttle,
+            pp.throttle_band, pp.sigma_r_chip, pp.sigma_r_core,
+            pp.sigma_p_chip, pp.sigma_p_core, pp.sigma_mount,
+            pp.ua_pipe_env, pp.ua_pipe_cold_frac, pp.t_room,
+            pp.eps_hx_drive, pp.eps_hx_primary, pp.ua_tank_env,
+            pp.drive_flow_lps, pp.chiller_t_on, pp.chiller_t_off,
+            pp.cop_at_57, pp.cop_slope, pp.cop_max, pp.pc_max_at_57,
+            pp.pc_max_slope, pp.pc_max_cap, pp.cycle_period_s, pp.cycle_amp,
+            pp.chiller_min_drive, pp.t_primary_support, pp.ua_cooltrans,
+            pp.gpu_peak_w, pp.ua_recool_max, pp.recool_fan_min,
+            pp.dt_substep, pp.substeps_per_tick,
+        );
+        let j = Json::parse(&text).unwrap();
+        let got = PlantParams::from_json(&j).unwrap();
+        assert_eq!(got, pp);
+    }
+
+    #[test]
+    fn ideal_insulation_reduces_ua() {
+        let pp = PlantParams::default();
+        let ideal = pp.with_ideal_insulation();
+        assert!(ideal.ua_node_air < pp.ua_node_air / 5.0);
+        assert!(ideal.ua_pipe_env < pp.ua_pipe_env / 5.0);
+    }
+}

@@ -1,0 +1,256 @@
+//! Run configuration: cluster size, backend, control setpoints, workload
+//! mix, fault schedule — assembled from presets and/or TOML files.
+
+pub mod constants;
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use constants::PlantParams;
+use toml::TomlDoc;
+
+/// Workload selection (Sect. 4: stress on a 13-node subset vs the whole
+/// system in production mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// `stress` tool on the selected subset, other nodes idle.
+    Stress,
+    /// Batch-queue production mix (jobs of various sizes).
+    Production,
+    /// Everything idle.
+    Idle,
+}
+
+impl std::str::FromStr for WorkloadKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "stress" => Ok(WorkloadKind::Stress),
+            "production" => Ok(WorkloadKind::Production),
+            "idle" => Ok(WorkloadKind::Idle),
+            _ => anyhow::bail!("unknown workload '{s}'"),
+        }
+    }
+}
+
+/// Full simulation run configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub name: String,
+    /// Cluster size (paper: 216; stress subset measurements use 13).
+    pub n_nodes: usize,
+    /// Backend: "hlo" | "native" | "auto".
+    pub backend: String,
+    /// Artifacts directory.
+    pub artifacts_dir: PathBuf,
+    /// Lottery seed (must match aot.py for the HLO backend).
+    pub seed: u64,
+    /// Initial water temperature [degC].
+    pub t_water_init: f64,
+    /// Simulated duration [s].
+    pub duration_s: f64,
+    /// Rack-outlet temperature setpoint for the PID [degC].
+    pub t_out_setpoint: f64,
+    /// Regulate (PID on valve) or run open-loop with a fixed valve.
+    pub regulate: bool,
+    pub valve_fixed: f64,
+    /// Pump speed (fraction of nominal 0.6 l/min per node).
+    pub pump_speed: f64,
+    /// Ambient (outside) temperature for the recooler [degC].
+    pub t_ambient: f64,
+    /// Central cooling circuit supply temperature [degC].
+    pub t_central: f64,
+    /// GPU cluster load on the primary circuit [W].
+    pub gpu_load: f64,
+    pub workload: WorkloadKind,
+    /// Stress subset size (paper: 13 randomly selected nodes).
+    pub stress_nodes: usize,
+    /// Background utilization on the non-selected nodes during stress
+    /// sweeps (the paper's cluster kept running production around the
+    /// 13 measured nodes).
+    pub stress_background: f64,
+    /// Production mix target utilization (cluster-average).
+    pub production_load: f64,
+    /// Telemetry sensor noise on/off (paper accuracies when on).
+    pub sensor_noise: bool,
+    /// Plant constants.
+    pub pp: PlantParams,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            name: "default".into(),
+            n_nodes: 216,
+            backend: "auto".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            seed: crate::variability::DEFAULT_SEED,
+            t_water_init: 20.0,
+            duration_s: 3600.0,
+            t_out_setpoint: 67.0,
+            regulate: true,
+            valve_fixed: 0.0,
+            pump_speed: 0.75,
+            t_ambient: 18.0,
+            t_central: 8.0,
+            gpu_load: 9000.0,
+            workload: WorkloadKind::Production,
+            stress_nodes: 13,
+            stress_background: 0.0,
+            production_load: 0.92,
+            sensor_noise: true,
+            pp: PlantParams::default(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// The paper's full installation in production mode.
+    pub fn idatacool_full() -> Self {
+        SimConfig::default()
+    }
+
+    /// The 13-node stress-measurement setup of Figs. 4(a), 5(a), 6(a).
+    /// The full cluster runs, 13 randomly selected nodes under stress.
+    pub fn subset13() -> Self {
+        SimConfig {
+            name: "subset13".into(),
+            workload: WorkloadKind::Stress,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Small, fast configuration for tests.
+    pub fn test_small() -> Self {
+        SimConfig {
+            name: "test_small".into(),
+            n_nodes: 13,
+            backend: "native".into(),
+            duration_s: 300.0,
+            sensor_noise: false,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Load overrides from a TOML file on top of a preset base.
+    pub fn from_toml_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let doc = TomlDoc::parse(&text)?;
+        let base = match doc.str_or("preset", "full") {
+            "full" => SimConfig::idatacool_full(),
+            "subset13" => SimConfig::subset13(),
+            "test_small" => SimConfig::test_small(),
+            other => anyhow::bail!("unknown preset '{other}'"),
+        };
+        base.apply_toml(&doc)
+    }
+
+    /// Apply TOML overrides (flat `section.key` layout, see configs/*.toml).
+    pub fn apply_toml(mut self, doc: &TomlDoc) -> anyhow::Result<Self> {
+        self.name = doc.str_or("name", &self.name).to_string();
+        self.n_nodes = doc.usize_or("cluster.nodes", self.n_nodes);
+        self.backend = doc.str_or("cluster.backend", &self.backend).to_string();
+        if let Some(v) = doc.get("cluster.artifacts_dir") {
+            self.artifacts_dir = PathBuf::from(
+                v.as_str().ok_or_else(|| anyhow::anyhow!("artifacts_dir"))?,
+            );
+        }
+        self.seed = doc.f64_or("cluster.seed", self.seed as f64) as u64;
+        self.t_water_init = doc.f64_or("sim.t_water_init", self.t_water_init);
+        self.duration_s = doc.f64_or("sim.duration_s", self.duration_s);
+        self.t_out_setpoint =
+            doc.f64_or("control.t_out_setpoint", self.t_out_setpoint);
+        self.regulate = doc.bool_or("control.regulate", self.regulate);
+        self.valve_fixed = doc.f64_or("control.valve_fixed", self.valve_fixed);
+        self.pump_speed = doc.f64_or("control.pump_speed", self.pump_speed);
+        self.t_ambient = doc.f64_or("env.t_ambient", self.t_ambient);
+        self.t_central = doc.f64_or("env.t_central", self.t_central);
+        self.gpu_load = doc.f64_or("env.gpu_load", self.gpu_load);
+        if let Some(w) = doc.get("workload.kind") {
+            self.workload = w
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("workload.kind"))?
+                .parse()?;
+        }
+        self.stress_nodes = doc.usize_or("workload.stress_nodes", self.stress_nodes);
+        self.stress_background =
+            doc.f64_or("workload.stress_background", self.stress_background);
+        self.production_load =
+            doc.f64_or("workload.production_load", self.production_load);
+        self.sensor_noise = doc.bool_or("telemetry.noise", self.sensor_noise);
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_nodes > 0, "n_nodes must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.valve_fixed),
+            "valve_fixed must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.pump_speed > 0.0 && self.pump_speed <= 1.5,
+            "pump_speed out of range"
+        );
+        anyhow::ensure!(
+            self.stress_nodes <= self.n_nodes,
+            "stress_nodes > n_nodes"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.production_load),
+            "production_load must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.stress_background),
+            "stress_background must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.t_out_setpoint > 25.0 && self.t_out_setpoint <= 75.0,
+            "t_out_setpoint outside the plant's operating range"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        SimConfig::idatacool_full().validate().unwrap();
+        SimConfig::subset13().validate().unwrap();
+        SimConfig::test_small().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = TomlDoc::parse(
+            r#"
+            name = "exp1"
+            [cluster]
+            nodes = 13
+            backend = "native"
+            [control]
+            t_out_setpoint = 49
+            [workload]
+            kind = "stress"
+            "#,
+        )
+        .unwrap();
+        let cfg = SimConfig::default().apply_toml(&doc).unwrap();
+        assert_eq!(cfg.name, "exp1");
+        assert_eq!(cfg.n_nodes, 13);
+        assert_eq!(cfg.workload, WorkloadKind::Stress);
+        assert_eq!(cfg.t_out_setpoint, 49.0);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let doc = TomlDoc::parse("[control]\nt_out_setpoint = 150\n").unwrap();
+        assert!(SimConfig::default().apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[workload]\nkind = \"bogus\"\n").unwrap();
+        assert!(SimConfig::default().apply_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal TOML-subset parser for run configuration files.
+//!
+//! Supports the subset the launcher uses: `[section]` headers, `key = value`
+//! pairs with string / float / int / bool values, `#` comments. Nested
+//! tables and arrays are intentionally out of scope (configs stay flat).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or(TomlError {
+                line: lineno + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(TomlError {
+                    line: lineno + 1,
+                    msg: "empty key".into(),
+                });
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let v = parse_value(value.trim()).ok_or(TomlError {
+                line: lineno + 1,
+                msg: format!("bad value {:?}", value.trim()),
+            })?;
+            doc.values.insert(full, v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.f64_or(key, default as f64) as usize
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        return Some(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>().ok().map(TomlValue::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # run config
+            name = "prod"
+            [cluster]
+            nodes = 216        # full system
+            backend = "hlo"
+            [control]
+            setpoint = 67.5
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "prod");
+        assert_eq!(doc.usize_or("cluster.nodes", 0), 216);
+        assert_eq!(doc.str_or("cluster.backend", ""), "hlo");
+        assert_eq!(doc.f64_or("control.setpoint", 0.0), 67.5);
+        assert!(doc.bool_or("control.enabled", false));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = TomlDoc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.f64_or("x.y", 3.5), 3.5);
+        assert_eq!(doc.str_or("x.z", "d"), "d");
+    }
+}

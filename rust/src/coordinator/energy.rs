@@ -1,0 +1,143 @@
+//! Energy accounting: the paper's headline metrics.
+//!
+//! Integrates electrical input, heat-in-water, driving-circuit transfer,
+//! chilled-water output and losses over a run, and derives
+//!   * heat-in-water fraction  P_r / P_AC          (Fig. 7a)
+//!   * transferred fraction    P_d / P_AC          (Fig. 7b)
+//!   * chiller COP             P_c / P_d           (Fig. 6b)
+//!   * energy-reuse fraction   P_c / P_AC          (~25 % at 60-70 degC;
+//!     equivalently COP x heat-in-water when the chiller absorbs all of
+//!     P_d — Sect. 4's multiplication of Figs. 6b and 7a)
+
+use crate::plant::layout::*;
+
+/// Time-integrated energies [J] plus instantaneous views.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyAccount {
+    pub e_ac: f64,
+    pub e_dc: f64,
+    pub e_water: f64,
+    pub e_drive: f64,
+    pub e_chilled: f64,
+    pub e_add: f64,
+    pub e_loss_plumbing: f64,
+    pub e_central: f64,
+    pub seconds: f64,
+    pub ticks: u64,
+}
+
+impl EnergyAccount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Integrate one tick of scalar observations over `dt` seconds.
+    pub fn push(&mut self, scalars: &[f32; NS], dt: f64) {
+        self.e_ac += scalars[SC_P_AC] as f64 * dt;
+        self.e_dc += scalars[SC_P_DC] as f64 * dt;
+        self.e_water += scalars[SC_P_R] as f64 * dt;
+        self.e_drive += scalars[SC_P_D] as f64 * dt;
+        self.e_chilled += scalars[SC_P_C] as f64 * dt;
+        self.e_add += scalars[SC_P_ADD] as f64 * dt;
+        self.e_loss_plumbing += scalars[SC_P_LOSS] as f64 * dt;
+        self.e_central += scalars[SC_P_CENTRAL] as f64 * dt;
+        self.seconds += dt;
+        self.ticks += 1;
+    }
+
+    /// Heat-in-water fraction (Fig. 7a).
+    pub fn heat_in_water_fraction(&self) -> f64 {
+        safe_div(self.e_water, self.e_ac)
+    }
+
+    /// Transferred-power fraction (Fig. 7b).
+    pub fn transferred_fraction(&self) -> f64 {
+        safe_div(self.e_drive, self.e_ac)
+    }
+
+    /// Time-averaged chiller COP (Fig. 6b).
+    pub fn cop(&self) -> f64 {
+        safe_div(self.e_chilled, self.e_drive)
+    }
+
+    /// Energy-reuse fraction: chilled water out per electrical in.
+    pub fn reuse_fraction(&self) -> f64 {
+        safe_div(self.e_chilled, self.e_ac)
+    }
+
+    /// The paper's estimate: what reuse *would be* if the chiller could
+    /// absorb all heat in water (Fig. 6b x Fig. 7a).
+    pub fn reuse_potential(&self) -> f64 {
+        self.cop() * self.heat_in_water_fraction()
+    }
+
+    /// Mean electrical power [W].
+    pub fn mean_p_ac(&self) -> f64 {
+        safe_div(self.e_ac, self.seconds)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "energy over {:.0} s: AC={:.1} kWh, heat-in-water={:.1}% , \
+             transferred={:.1}%, COP={:.3}, reuse={:.1}% (potential {:.1}%)",
+            self.seconds,
+            self.e_ac / 3.6e6,
+            100.0 * self.heat_in_water_fraction(),
+            100.0 * self.transferred_fraction(),
+            self.cop(),
+            100.0 * self.reuse_fraction(),
+            100.0 * self.reuse_potential(),
+        )
+    }
+}
+
+fn safe_div(a: f64, b: f64) -> f64 {
+    if b.abs() < 1e-9 {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalars(p_ac: f32, p_r: f32, p_d: f32, p_c: f32) -> [f32; NS] {
+        let mut s = [0.0f32; NS];
+        s[SC_P_AC] = p_ac;
+        s[SC_P_R] = p_r;
+        s[SC_P_D] = p_d;
+        s[SC_P_C] = p_c;
+        s
+    }
+
+    #[test]
+    fn fractions_computed() {
+        let mut acc = EnergyAccount::new();
+        acc.push(&scalars(50_000.0, 24_000.0, 18_000.0, 9_000.0), 5.0);
+        acc.push(&scalars(50_000.0, 24_000.0, 18_000.0, 9_000.0), 5.0);
+        assert!((acc.heat_in_water_fraction() - 0.48).abs() < 1e-9);
+        assert!((acc.transferred_fraction() - 0.36).abs() < 1e-9);
+        assert!((acc.cop() - 0.5).abs() < 1e-9);
+        assert!((acc.reuse_fraction() - 0.18).abs() < 1e-9);
+        assert!((acc.reuse_potential() - 0.24).abs() < 1e-9);
+        assert_eq!(acc.ticks, 2);
+    }
+
+    #[test]
+    fn empty_account_safe() {
+        let acc = EnergyAccount::new();
+        assert_eq!(acc.cop(), 0.0);
+        assert_eq!(acc.reuse_fraction(), 0.0);
+    }
+
+    #[test]
+    fn paper_headline_band() {
+        // With the paper's target values the reuse potential is ~25 %.
+        let mut acc = EnergyAccount::new();
+        acc.push(&scalars(51_000.0, 24_000.0, 18_500.0, 9_100.0), 5.0);
+        let p = acc.reuse_potential();
+        assert!((0.18..0.30).contains(&p), "potential {p}");
+    }
+}

@@ -1,0 +1,305 @@
+//! The L3 coordinator: the data-center control plane.
+//!
+//! Owns the event loop. Every tick (5 s simulated) it:
+//!  1. advances the batch scheduler / workload to get per-core utilization,
+//!  2. lets the PID + supervisor set the control vector (3-way valve,
+//!     chiller enable, pump, GPU load, ambient),
+//!  3. executes the plant (AOT HLO via PJRT, or the native mirror),
+//!  4. samples telemetry with the paper's sensor-noise models,
+//!  5. integrates the energy account and appends to the trace.
+//!
+//! Python never runs here — the plant executable was lowered once by
+//! `make artifacts`.
+
+pub mod energy;
+pub mod pid;
+pub mod supervisor;
+pub mod telemetry;
+
+use anyhow::Result;
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::plant::layout::*;
+use crate::plant::TickOutput;
+use crate::runtime::{BackendKind, PlantBackend};
+use crate::variability::ChipLottery;
+use crate::workload::scheduler::BatchScheduler;
+use crate::workload::stress::StressWorkload;
+use crate::workload::{UtilPlan, WorkloadSource};
+use energy::EnergyAccount;
+use pid::Pid;
+use supervisor::{Fault, Supervisor};
+use telemetry::{SensorSpec, Telemetry};
+
+/// One trace sample (telemetry view — what the paper's loggers record).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceSample {
+    pub t_s: f64,
+    pub t_rack_in: f64,
+    pub t_rack_out: f64,
+    pub t_tank: f64,
+    pub t_primary: f64,
+    pub p_ac: f64,
+    pub p_dc: f64,
+    pub p_r: f64,
+    pub p_d: f64,
+    pub p_c: f64,
+    pub p_add: f64,
+    pub valve: f64,
+    pub chiller_on: bool,
+    pub core_max: f64,
+    pub throttling: u32,
+    pub utilization: f64,
+}
+
+/// Result of a full simulation run.
+pub struct RunResult {
+    pub trace: Vec<TraceSample>,
+    pub energy: EnergyAccount,
+    pub events: Vec<supervisor::SupervisorEvent>,
+    pub workload_stats: String,
+    pub backend: &'static str,
+    /// Wall-clock seconds spent inside PlantBackend::tick.
+    pub plant_wall_s: f64,
+    /// Total wall-clock for the run loop.
+    pub total_wall_s: f64,
+    pub ticks: u64,
+}
+
+impl RunResult {
+    /// Simulated seconds per wall second (the coordinator's throughput).
+    pub fn speedup(&self, tick_seconds: f64) -> f64 {
+        if self.total_wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.ticks as f64 * tick_seconds / self.total_wall_s
+    }
+}
+
+/// The coordinator event loop.
+pub struct SimulationDriver {
+    pub cfg: SimConfig,
+    pub backend: PlantBackend,
+    pub lottery: ChipLottery,
+    pub workload: Box<dyn WorkloadSource>,
+    pub telemetry: Telemetry,
+    pub pid: Pid,
+    pub supervisor: Supervisor,
+    pub plan: UtilPlan,
+    controls: Vec<f32>,
+    now_s: f64,
+}
+
+impl SimulationDriver {
+    pub fn new(cfg: SimConfig) -> Result<Self> {
+        Self::with_faults(cfg, Vec::new())
+    }
+
+    pub fn with_faults(cfg: SimConfig, faults: Vec<Fault>) -> Result<Self> {
+        let kind: BackendKind = cfg.backend.parse()?;
+        let backend = PlantBackend::create(
+            kind,
+            &cfg.artifacts_dir,
+            cfg.n_nodes,
+            &cfg.pp,
+            cfg.seed,
+            cfg.t_water_init as f32,
+        )?;
+        let lottery = ChipLottery::draw(cfg.n_nodes, &cfg.pp, cfg.seed);
+        let n_padded = backend.n_padded();
+        let workload: Box<dyn WorkloadSource> = match cfg.workload {
+            WorkloadKind::Stress => {
+                let mut w =
+                    StressWorkload::new(&lottery, cfg.stress_nodes, cfg.seed);
+                w.background_util = cfg.stress_background as f32;
+                Box::new(w)
+            }
+            WorkloadKind::Production => {
+                let mut s = BatchScheduler::new(
+                    cfg.n_nodes,
+                    cfg.production_load,
+                    cfg.seed,
+                );
+                // Warm the queue to steady state (the paper's system had
+                // been in production for months; an empty queue would bias
+                // the first hours of every run toward idle).
+                let mut scratch = UtilPlan::idle(n_padded);
+                for _ in 0..5760 {
+                    s.advance(30.0, &mut scratch);
+                }
+                Box::new(s)
+            }
+            WorkloadKind::Idle => Box::new(StressWorkload::idle(cfg.n_nodes)),
+        };
+        let spec = if cfg.sensor_noise {
+            SensorSpec::default()
+        } else {
+            SensorSpec::noiseless()
+        };
+        let mut controls = vec![0.0f32; CT];
+        controls[U_VALVE] = cfg.valve_fixed as f32;
+        controls[U_CHILLER_EN] = 1.0;
+        controls[U_T_AMBIENT] = cfg.t_ambient as f32;
+        controls[U_T_CENTRAL] = cfg.t_central as f32;
+        controls[U_GPU_LOAD] = cfg.gpu_load as f32;
+        controls[U_FLOW_SCALE] = cfg.pump_speed as f32;
+        Ok(SimulationDriver {
+            plan: UtilPlan::idle(n_padded),
+            telemetry: Telemetry::new(spec, cfg.seed),
+            pid: Pid::valve_default(),
+            supervisor: Supervisor::new(faults),
+            workload,
+            backend,
+            lottery,
+            controls,
+            cfg,
+            now_s: 0.0,
+        })
+    }
+
+    /// Current simulated time [s].
+    pub fn now(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Run for the configured duration; sample the trace every
+    /// `sample_every` ticks (1 = every tick).
+    pub fn run(&mut self, sample_every: usize) -> Result<RunResult> {
+        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
+        let ticks = (self.cfg.duration_s / tick_s).ceil() as u64;
+        self.run_ticks(ticks, sample_every)
+    }
+
+    /// Run an explicit number of ticks.
+    pub fn run_ticks(&mut self, ticks: u64, sample_every: usize)
+                     -> Result<RunResult> {
+        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
+        let mut out = TickOutput::new(self.backend.n_padded());
+        let mut trace = Vec::new();
+        let mut energy = EnergyAccount::new();
+        let mut plant_wall = 0.0f64;
+        let start = std::time::Instant::now();
+
+        for i in 0..ticks {
+            let sample = self.step(tick_s, &mut out, &mut plant_wall)?;
+            energy.push(&out.scalars, tick_s);
+            if sample_every > 0 && (i as usize) % sample_every == 0 {
+                trace.push(sample);
+            }
+        }
+
+        Ok(RunResult {
+            trace,
+            energy,
+            events: std::mem::take(&mut self.supervisor.events),
+            workload_stats: self.workload.stats(),
+            backend: self.backend.kind_name(),
+            plant_wall_s: plant_wall,
+            total_wall_s: start.elapsed().as_secs_f64(),
+            ticks,
+        })
+    }
+
+    /// One tick of the control loop; returns the telemetry-noised sample.
+    fn step(&mut self, tick_s: f64, out: &mut TickOutput,
+            plant_wall: &mut f64) -> Result<TraceSample> {
+        // 1. workload
+        self.workload.advance(tick_s, &mut self.plan);
+
+        // 2. control: PID on the measured rack outlet temperature
+        let t_out_meas = self
+            .telemetry
+            .cluster_temp(self.backend.circuit_state()[C_T_RACK_OUT] as f64);
+        let pid_valve = if self.cfg.regulate {
+            self.pid.update(t_out_meas - self.cfg.t_out_setpoint, tick_s)
+        } else {
+            self.cfg.valve_fixed
+        };
+        self.supervisor.apply(
+            self.now_s,
+            &out.scalars,
+            &mut self.controls,
+            pid_valve,
+            self.cfg.gpu_load,
+        );
+
+        // 3. plant
+        let t0 = std::time::Instant::now();
+        self.backend.tick(&self.controls, &self.plan.util, out)?;
+        *plant_wall += t0.elapsed().as_secs_f64();
+        self.now_s += tick_s;
+
+        // 4. telemetry view
+        let sc = &out.scalars;
+        let dt_rack = (sc[SC_T_RACK_OUT] - sc[SC_T_RACK_IN]) as f64;
+        let util_mean = {
+            let n = self.backend.n_nodes();
+            (0..n).map(|i| self.plan.node_mean(i) as f64).sum::<f64>()
+                / n as f64
+        };
+        Ok(TraceSample {
+            t_s: self.now_s,
+            t_rack_in: self.telemetry.cluster_temp(sc[SC_T_RACK_IN] as f64),
+            t_rack_out: self.telemetry.cluster_temp(sc[SC_T_RACK_OUT] as f64),
+            t_tank: self.telemetry.cluster_temp(sc[SC_T_TANK] as f64),
+            t_primary: self.telemetry.cluster_temp(sc[SC_T_PRIMARY] as f64),
+            p_ac: sc[SC_P_AC] as f64,
+            p_dc: sc[SC_P_DC] as f64,
+            p_r: self.telemetry.rack_flow(sc[SC_P_R] as f64),
+            p_d: self.telemetry.derived_power(sc[SC_P_D] as f64, dt_rack),
+            p_c: self.telemetry.derived_power(sc[SC_P_C] as f64, dt_rack),
+            p_add: sc[SC_P_ADD] as f64,
+            valve: self.controls[U_VALVE] as f64,
+            chiller_on: sc[SC_CHILLER_ON] > 0.5,
+            core_max: sc[SC_CORE_MAX] as f64,
+            throttling: sc[SC_THROTTLE] as u32,
+            utilization: util_mean,
+        })
+    }
+
+    /// Per-node observation view with node-level sensor noise applied.
+    /// Returns (node_power, core_mean, core_max, water_out) per node.
+    pub fn node_observations(&mut self, out: &TickOutput)
+                             -> Vec<[f64; OBS_N]> {
+        let n = self.backend.n_nodes();
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = out.node(i);
+            v.push([
+                self.telemetry.node_power(o[O_NODE_POWER] as f64),
+                self.telemetry.core_temp(o[O_CORE_MEAN] as f64),
+                self.telemetry.core_temp(o[O_CORE_MAX] as f64),
+                self.telemetry.node_water_temp(o[O_WATER_OUT] as f64),
+            ]);
+        }
+        v
+    }
+
+    /// Per-core temperatures (BMC-sampled) of the valid nodes — the raw
+    /// population of Fig. 4(b).
+    pub fn core_temperatures(&mut self) -> Vec<f64> {
+        let n = self.backend.n_nodes();
+        let state = self.backend.node_state().to_vec();
+        let mut temps = Vec::new();
+        for node in 0..n {
+            for c in 0..NC {
+                if self.lottery.active[node * NC + c] > 0.5 {
+                    temps.push(
+                        self.telemetry.core_temp(state[node * S + c] as f64),
+                    );
+                }
+            }
+        }
+        temps
+    }
+
+    /// Expose one TickOutput-sized buffer (convenience for callers that
+    /// need direct access between run segments).
+    pub fn tick_once(&mut self) -> Result<(TickOutput, TraceSample)> {
+        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
+        let mut out = TickOutput::new(self.backend.n_padded());
+        let mut wall = 0.0;
+        let sample = self.step(tick_s, &mut out, &mut wall)?;
+        Ok((out, sample))
+    }
+}

@@ -1,0 +1,147 @@
+//! PID controller for the 3-way valve.
+//!
+//! Paper, Sect. 3: "The heat transfer to primary and driving circuit is
+//! continuously regulated by a 3-way valve. The valve is automatically
+//! operated by a PID controller that determines the rack inlet
+//! temperature."
+//!
+//! We regulate the rack *outlet* temperature (the paper's energy-reuse
+//! variable) by actuating the valve that adjusts the inlet: opening the
+//! valve routes more heat to the primary circuit, lowering the inlet and
+//! hence the outlet. Includes anti-windup (conditional integration) and
+//! output clamping.
+
+/// PID with clamped output and conditional-integration anti-windup.
+#[derive(Debug, Clone)]
+pub struct Pid {
+    pub kp: f64,
+    pub ki: f64,
+    pub kd: f64,
+    pub out_min: f64,
+    pub out_max: f64,
+    integral: f64,
+    last_error: Option<f64>,
+}
+
+impl Pid {
+    pub fn new(kp: f64, ki: f64, kd: f64, out_min: f64, out_max: f64) -> Self {
+        Pid { kp, ki, kd, out_min, out_max, integral: 0.0, last_error: None }
+    }
+
+    /// Gains tuned for the iDataCool valve loop (error in K, output in
+    /// valve fraction; plant gain ~ -0.05 K per % valve at 216 nodes).
+    pub fn valve_default() -> Self {
+        Pid::new(0.12, 0.004, 0.35, 0.0, 1.0)
+    }
+
+    pub fn reset(&mut self) {
+        self.integral = 0.0;
+        self.last_error = None;
+    }
+
+    /// One update. `error` = measurement - setpoint (positive = too hot,
+    /// which must *open* the valve, so the sign convention is direct).
+    pub fn update(&mut self, error: f64, dt: f64) -> f64 {
+        let d = match self.last_error {
+            Some(prev) if dt > 0.0 => (error - prev) / dt,
+            _ => 0.0,
+        };
+        self.last_error = Some(error);
+
+        let unsat =
+            self.kp * error + self.ki * (self.integral + error * dt) + self.kd * d;
+        // Conditional integration: only integrate when not pushing further
+        // into saturation.
+        let saturated_high = unsat > self.out_max && error > 0.0;
+        let saturated_low = unsat < self.out_min && error < 0.0;
+        if !(saturated_high || saturated_low) {
+            self.integral += error * dt;
+        }
+        (self.kp * error + self.ki * self.integral + self.kd * d)
+            .clamp(self.out_min, self.out_max)
+    }
+
+    pub fn integral(&self) -> f64 {
+        self.integral
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// First-order plant: y' = (-y + k*u_inv)/tau with u lowering y.
+    fn simulate(pid: &mut Pid, setpoint: f64, steps: usize) -> Vec<f64> {
+        let mut y = 75.0f64; // starts hot
+        let mut out = Vec::new();
+        let dt = 5.0;
+        for _ in 0..steps {
+            let u = pid.update(y - setpoint, dt);
+            // valve u in [0,1] cools the plant; heat input pushes toward 78
+            let target = 78.0 - 14.0 * u;
+            y += (target - y) * (dt / 120.0);
+            out.push(y);
+        }
+        out
+    }
+
+    #[test]
+    fn converges_to_setpoint() {
+        let mut pid = Pid::valve_default();
+        let ys = simulate(&mut pid, 67.0, 4000);
+        let tail = &ys[ys.len() - 200..];
+        let mean: f64 = tail.iter().sum::<f64>() / tail.len() as f64;
+        assert!((mean - 67.0).abs() < 0.5, "settled at {mean}");
+    }
+
+    #[test]
+    fn output_always_clamped() {
+        let mut pid = Pid::valve_default();
+        for e in [-50.0, -5.0, 0.0, 5.0, 50.0, 500.0] {
+            let u = pid.update(e, 5.0);
+            assert!((0.0..=1.0).contains(&u), "u={u} for e={e}");
+        }
+    }
+
+    #[test]
+    fn anti_windup_bounds_integral() {
+        let mut pid = Pid::valve_default();
+        // Long saturation episode: error stays large positive.
+        for _ in 0..10_000 {
+            pid.update(30.0, 5.0);
+        }
+        let after_sat = pid.integral();
+        // Windup protection: integral must not grow unboundedly
+        assert!(after_sat * pid.ki < 5.0, "integral {after_sat}");
+        // and recovery must be quick once error flips
+        let mut u = 1.0;
+        let mut steps = 0;
+        while u > 0.5 && steps < 400 {
+            u = pid.update(-2.0, 5.0);
+            steps += 1;
+        }
+        assert!(steps < 400, "controller stuck saturated");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut pid = Pid::valve_default();
+        pid.update(10.0, 5.0);
+        pid.update(10.0, 5.0);
+        pid.reset();
+        assert_eq!(pid.integral(), 0.0);
+    }
+
+    #[test]
+    fn derivative_damps_oscillation() {
+        // With kd = 0 the loop oscillates more than with the default kd.
+        let measure = |kd: f64| {
+            let mut pid = Pid::new(0.12, 0.004, kd, 0.0, 1.0);
+            let ys = simulate(&mut pid, 67.0, 3000);
+            let tail = &ys[1500..];
+            let mean: f64 = tail.iter().sum::<f64>() / tail.len() as f64;
+            tail.iter().map(|y| (y - mean).abs()).sum::<f64>() / tail.len() as f64
+        };
+        assert!(measure(0.35) <= measure(0.0) + 1e-9);
+    }
+}

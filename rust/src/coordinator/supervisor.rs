@@ -1,0 +1,225 @@
+//! Plant supervisor: chiller management, fault injection, failover.
+//!
+//! Sect. 3's redundancy narrative: "(i) Should the adsorption chiller fail
+//! to absorb all the heat from the iDataCool cluster, additional cooling
+//! is provided by the primary cooling circuit, which may be supported by
+//! the central cooling circuit. (ii) Should the adsorption chiller fail to
+//! provide enough cooling power to the GPU cluster, again the central
+//! cooling circuit comes to the rescue."
+//!
+//! The supervisor watches the (telemetry-sampled) plant state, enables or
+//! disables the chiller, forces the valve open on over-temperature, and
+//! applies the scheduled fault injections.
+
+use crate::plant::layout::*;
+
+/// A scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Adsorption chiller refuses to absorb heat (standby stuck).
+    ChillerFailure { start_s: f64, end_s: f64 },
+    /// Rack circulation pump failure.
+    PumpFailure { start_s: f64, end_s: f64 },
+    /// GPU-cluster load surge on the primary circuit [W].
+    GpuSurge { start_s: f64, end_s: f64, load_w: f64 },
+}
+
+/// Supervisor state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SupervisorState {
+    /// Normal operation: PID regulates, chiller enabled.
+    Normal,
+    /// Over-temperature: valve forced open, chiller still enabled.
+    OverTemp,
+    /// Chiller faulted: all heat to the primary/central path.
+    ChillerDown,
+    /// Pump down: emergency — loads should be shed (cores will throttle).
+    PumpDown,
+}
+
+/// Events the supervisor emits for the run log.
+#[derive(Debug, Clone)]
+pub struct SupervisorEvent {
+    pub t_s: f64,
+    pub msg: String,
+}
+
+/// Watches the plant and owns the safety overrides.
+pub struct Supervisor {
+    pub faults: Vec<Fault>,
+    pub state: SupervisorState,
+    pub events: Vec<SupervisorEvent>,
+    /// Over-temperature threshold on the hottest core [degC].
+    pub core_max_limit: f64,
+    /// Rack-outlet hard limit [degC] (the paper runs T_out <= 70).
+    pub t_out_limit: f64,
+}
+
+impl Supervisor {
+    pub fn new(faults: Vec<Fault>) -> Self {
+        Supervisor {
+            faults,
+            state: SupervisorState::Normal,
+            events: Vec::new(),
+            core_max_limit: 98.0,
+            t_out_limit: 71.5,
+        }
+    }
+
+    fn log(&mut self, t_s: f64, msg: impl Into<String>) {
+        self.events.push(SupervisorEvent { t_s, msg: msg.into() });
+    }
+
+    /// Active faults at time t.
+    fn chiller_failed(&self, t: f64) -> bool {
+        self.faults.iter().any(|f| matches!(f,
+            Fault::ChillerFailure { start_s, end_s } if (*start_s..*end_s).contains(&t)))
+    }
+
+    fn pump_failed(&self, t: f64) -> bool {
+        self.faults.iter().any(|f| matches!(f,
+            Fault::PumpFailure { start_s, end_s } if (*start_s..*end_s).contains(&t)))
+    }
+
+    fn gpu_surge(&self, t: f64) -> Option<f64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::GpuSurge { start_s, end_s, load_w }
+                if (*start_s..*end_s).contains(&t) =>
+            {
+                Some(*load_w)
+            }
+            _ => None,
+        })
+    }
+
+    /// Apply supervision: mutate the control vector after the PID has set
+    /// the valve. Returns the (possibly overridden) valve command.
+    pub fn apply(
+        &mut self,
+        t_s: f64,
+        scalars: &[f32; NS],
+        controls: &mut [f32],
+        pid_valve: f64,
+        gpu_load_nominal: f64,
+    ) -> f64 {
+        let chiller_failed = self.chiller_failed(t_s);
+        let pump_failed = self.pump_failed(t_s);
+        let core_max = scalars[SC_CORE_MAX] as f64;
+        let t_out = scalars[SC_T_RACK_OUT] as f64;
+
+        let new_state = if pump_failed {
+            SupervisorState::PumpDown
+        } else if chiller_failed {
+            SupervisorState::ChillerDown
+        } else if core_max > self.core_max_limit || t_out > self.t_out_limit {
+            SupervisorState::OverTemp
+        } else {
+            SupervisorState::Normal
+        };
+        if new_state != self.state {
+            self.log(
+                t_s,
+                format!(
+                    "state {:?} -> {:?} (core_max={core_max:.1}, t_out={t_out:.1})",
+                    self.state, new_state
+                ),
+            );
+            self.state = new_state;
+        }
+
+        controls[U_CHILLER_EN] = if chiller_failed { 0.0 } else { 1.0 };
+        controls[U_PUMP_FAIL] = if pump_failed { 1.0 } else { 0.0 };
+        controls[U_GPU_LOAD] =
+            self.gpu_surge(t_s).unwrap_or(gpu_load_nominal) as f32;
+
+        // Failover: with the chiller down or over-temp, the 3-way valve
+        // routes everything to the primary circuit (backed by central).
+        let valve = match self.state {
+            SupervisorState::Normal => pid_valve,
+            SupervisorState::OverTemp | SupervisorState::ChillerDown => 1.0,
+            SupervisorState::PumpDown => 1.0,
+        };
+        controls[U_VALVE] = valve as f32;
+        valve
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalars(core_max: f32, t_out: f32) -> [f32; NS] {
+        let mut s = [0.0f32; NS];
+        s[SC_CORE_MAX] = core_max;
+        s[SC_T_RACK_OUT] = t_out;
+        s
+    }
+
+    fn controls() -> Vec<f32> {
+        vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0]
+    }
+
+    #[test]
+    fn normal_passes_pid_valve_through() {
+        let mut sup = Supervisor::new(vec![]);
+        let mut ctl = controls();
+        let v = sup.apply(100.0, &scalars(85.0, 67.0), &mut ctl, 0.3, 9000.0);
+        assert_eq!(v, 0.3);
+        assert_eq!(sup.state, SupervisorState::Normal);
+        assert_eq!(ctl[U_CHILLER_EN], 1.0);
+    }
+
+    #[test]
+    fn over_temperature_forces_valve_open() {
+        let mut sup = Supervisor::new(vec![]);
+        let mut ctl = controls();
+        let v = sup.apply(100.0, &scalars(99.0, 67.0), &mut ctl, 0.1, 9000.0);
+        assert_eq!(v, 1.0);
+        assert_eq!(sup.state, SupervisorState::OverTemp);
+        assert!(!sup.events.is_empty());
+    }
+
+    #[test]
+    fn chiller_fault_window() {
+        let mut sup = Supervisor::new(vec![Fault::ChillerFailure {
+            start_s: 50.0,
+            end_s: 150.0,
+        }]);
+        let mut ctl = controls();
+        sup.apply(40.0, &scalars(85.0, 67.0), &mut ctl, 0.2, 9000.0);
+        assert_eq!(ctl[U_CHILLER_EN], 1.0);
+        sup.apply(100.0, &scalars(85.0, 67.0), &mut ctl, 0.2, 9000.0);
+        assert_eq!(ctl[U_CHILLER_EN], 0.0);
+        assert_eq!(sup.state, SupervisorState::ChillerDown);
+        assert_eq!(ctl[U_VALVE], 1.0);
+        sup.apply(200.0, &scalars(85.0, 67.0), &mut ctl, 0.2, 9000.0);
+        assert_eq!(ctl[U_CHILLER_EN], 1.0);
+        assert_eq!(sup.state, SupervisorState::Normal);
+    }
+
+    #[test]
+    fn gpu_surge_overrides_load() {
+        let mut sup = Supervisor::new(vec![Fault::GpuSurge {
+            start_s: 0.0,
+            end_s: 100.0,
+            load_w: 12_000.0,
+        }]);
+        let mut ctl = controls();
+        sup.apply(50.0, &scalars(85.0, 67.0), &mut ctl, 0.2, 9000.0);
+        assert_eq!(ctl[U_GPU_LOAD], 12_000.0);
+        sup.apply(150.0, &scalars(85.0, 67.0), &mut ctl, 0.2, 9000.0);
+        assert_eq!(ctl[U_GPU_LOAD], 9_000.0);
+    }
+
+    #[test]
+    fn pump_failure_flag_set() {
+        let mut sup = Supervisor::new(vec![Fault::PumpFailure {
+            start_s: 0.0,
+            end_s: 10.0,
+        }]);
+        let mut ctl = controls();
+        sup.apply(5.0, &scalars(85.0, 67.0), &mut ctl, 0.2, 9000.0);
+        assert_eq!(ctl[U_PUMP_FAIL], 1.0);
+        assert_eq!(sup.state, SupervisorState::PumpDown);
+    }
+}

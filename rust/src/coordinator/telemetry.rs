@@ -1,0 +1,193 @@
+//! Telemetry: the paper's sensing and monitoring stack (Sect. 4).
+//!
+//! "we estimate the node-level temperature sensors to be accurate to about
+//! 1 degC, while the cluster-level temperature sensors ... have an accuracy
+//! of 0.2 degC. The ultrasonic flow meter for the rack cooling circuit is
+//! specified to have an accuracy of 1 %, while the flow meters for the
+//! other circuits are ... only about 10 % accurate."
+//!
+//! Sampled quantities get the corresponding noise model (plus quantization
+//! for the BMC core-temperature registers, which report whole degrees).
+
+use crate::variability::rng::Rng;
+
+/// Sensor accuracy configuration (paper values by default).
+#[derive(Debug, Clone)]
+pub struct SensorSpec {
+    /// Node-level temperature sensors (core, node water est.) [K, 1 sigma].
+    pub node_temp_sigma: f64,
+    /// BMC quantization step for core temperatures [K].
+    pub core_temp_quantum: f64,
+    /// Cluster-level water temperature sensors [K, 1 sigma].
+    pub cluster_temp_sigma: f64,
+    /// Rack-circuit ultrasonic flow meter (relative, 1 sigma).
+    pub rack_flow_rel: f64,
+    /// Other circuits' simple flow meters (relative, 1 sigma).
+    pub other_flow_rel: f64,
+    /// Node DC power measurement (relative).
+    pub power_rel: f64,
+    pub enabled: bool,
+}
+
+impl Default for SensorSpec {
+    fn default() -> Self {
+        SensorSpec {
+            node_temp_sigma: 0.5,   // "accurate to about 1 degC" (2 sigma)
+            core_temp_quantum: 1.0, // BMC registers report whole degrees
+            cluster_temp_sigma: 0.1, // "accuracy of 0.2 degC" (2 sigma)
+            rack_flow_rel: 0.005,   // 1 % (2 sigma)
+            other_flow_rel: 0.05,   // 10 % (2 sigma)
+            power_rel: 0.01,
+            enabled: true,
+        }
+    }
+}
+
+impl SensorSpec {
+    pub fn noiseless() -> Self {
+        SensorSpec { enabled: false, ..SensorSpec::default() }
+    }
+}
+
+/// Stateful sampler applying the sensor models.
+pub struct Telemetry {
+    pub spec: SensorSpec,
+    rng: Rng,
+}
+
+impl Telemetry {
+    pub fn new(spec: SensorSpec, seed: u64) -> Self {
+        Telemetry { spec, rng: Rng::new(seed ^ 0x7E1E_4E7E) }
+    }
+
+    /// Core temperature as reported by the chip-internal sensor via BMC:
+    /// Gaussian noise + integer quantization.
+    pub fn core_temp(&mut self, true_t: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_t;
+        }
+        let noisy = true_t + self.spec.node_temp_sigma * self.rng.normal();
+        (noisy / self.spec.core_temp_quantum).round()
+            * self.spec.core_temp_quantum
+    }
+
+    /// Node in/outlet water estimate (original air-flow sensors attached
+    /// to the copper pipe — node-level accuracy class).
+    pub fn node_water_temp(&mut self, true_t: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_t;
+        }
+        true_t + self.spec.node_temp_sigma * self.rng.normal()
+    }
+
+    /// Cluster-level water temperature (direct-contact sensors).
+    pub fn cluster_temp(&mut self, true_t: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_t;
+        }
+        true_t + self.spec.cluster_temp_sigma * self.rng.normal()
+    }
+
+    /// Rack-circuit flow (1 % ultrasonic meter) — relative noise.
+    pub fn rack_flow(&mut self, true_q: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_q;
+        }
+        true_q * (1.0 + self.spec.rack_flow_rel * self.rng.normal())
+    }
+
+    /// Other circuits' flows (10 % meters) — the dominant error bar of
+    /// Figs. 6(b) and 7(b).
+    pub fn other_flow(&mut self, true_q: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_q;
+        }
+        true_q * (1.0 + self.spec.other_flow_rel * self.rng.normal())
+    }
+
+    /// Node DC power measurement.
+    pub fn node_power(&mut self, true_p: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_p;
+        }
+        true_p * (1.0 + self.spec.power_rel * self.rng.normal())
+    }
+
+    /// Power derived from a 10 % flow meter and two cluster-temp sensors
+    /// (e.g. P_d, P_c): propagate both error sources.
+    pub fn derived_power(&mut self, true_p: f64, dt_true: f64) -> f64 {
+        if !self.spec.enabled {
+            return true_p;
+        }
+        let flow_factor = 1.0 + self.spec.other_flow_rel * self.rng.normal();
+        let dt_err = self.spec.cluster_temp_sigma
+            * (self.rng.normal() - self.rng.normal());
+        let dt_factor = if dt_true.abs() > 1e-6 {
+            (dt_true + dt_err) / dt_true
+        } else {
+            1.0
+        };
+        true_p * flow_factor * dt_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_passthrough() {
+        let mut t = Telemetry::new(SensorSpec::noiseless(), 1);
+        assert_eq!(t.core_temp(83.4), 83.4);
+        assert_eq!(t.rack_flow(43.2), 43.2);
+        assert_eq!(t.derived_power(18_000.0, 4.0), 18_000.0);
+    }
+
+    #[test]
+    fn core_temp_quantized_to_whole_degrees() {
+        let mut t = Telemetry::new(SensorSpec::default(), 2);
+        for _ in 0..100 {
+            let v = t.core_temp(83.4);
+            assert!((v - v.round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn noise_is_unbiased_and_scaled() {
+        let mut t = Telemetry::new(SensorSpec::default(), 3);
+        let n = 40_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let v = t.cluster_temp(67.0) - 67.0;
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let sigma = (sq / n as f64 - mean * mean).sqrt();
+        assert!(mean.abs() < 0.01, "bias {mean}");
+        assert!((sigma - 0.1).abs() < 0.01, "sigma {sigma}");
+    }
+
+    #[test]
+    fn flow_meters_have_relative_error() {
+        let mut t = Telemetry::new(SensorSpec::default(), 4);
+        let n = 40_000;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let rel = t.other_flow(100.0) / 100.0 - 1.0;
+            sq += rel * rel;
+        }
+        let sigma = (sq / n as f64).sqrt();
+        assert!((sigma - 0.05).abs() < 0.005, "sigma {sigma}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Telemetry::new(SensorSpec::default(), 7);
+        let mut b = Telemetry::new(SensorSpec::default(), 7);
+        for _ in 0..50 {
+            assert_eq!(a.core_temp(80.0), b.core_temp(80.0));
+        }
+    }
+}

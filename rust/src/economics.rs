@@ -1,0 +1,151 @@
+//! Cost & amortization model (Sect. 2 of the paper).
+//!
+//! "For us the total cost of the liquid-cooling solution was about 120
+//! Euro per node (excluding external infrastructure). While this is more
+//! expensive than an air-cooled solution, it is a small fraction of the
+//! overall cost and can be amortized quickly by the savings from free
+//! cooling and energy reuse."
+//!
+//! This module quantifies that claim: the retrofit cost against (a) the
+//! chiller electricity a conventional air-cooled machine room would have
+//! spent on the same heat, (b) the chilled-water credit from the
+//! adsorption chiller (the energy-reuse path), and (c) the pump/recooler
+//! overhead the liquid loop adds.
+
+/// Economic parameters (2012-ish German industrial prices).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Retrofit cost per node [EUR] (paper: ~120).
+    pub cooling_cost_per_node_eur: f64,
+    /// Electricity price [EUR/kWh].
+    pub eur_per_kwh: f64,
+    /// COP of the conventional compression chiller an air-cooled room
+    /// would use (electric kW per kW of heat removed = 1/COP).
+    pub conventional_chiller_cop: f64,
+    /// Electric overhead of the liquid loop: pumps + dry-recooler fans,
+    /// as a fraction of the heat transported.
+    pub loop_overhead_frac: f64,
+    /// Chilled water displaced by the adsorption chiller is valued at the
+    /// conventional chiller's electric cost of producing it.
+    pub value_chilled_water: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            cooling_cost_per_node_eur: 120.0,
+            eur_per_kwh: 0.12,
+            conventional_chiller_cop: 3.5,
+            loop_overhead_frac: 0.03,
+            value_chilled_water: true,
+        }
+    }
+}
+
+/// Outcome of the amortization analysis.
+#[derive(Debug, Clone)]
+pub struct Amortization {
+    pub capex_eur: f64,
+    /// Savings rate [EUR/year].
+    pub savings_eur_per_year: f64,
+    pub payback_years: f64,
+    /// Breakdown [EUR/year].
+    pub free_cooling_eur_per_year: f64,
+    pub reuse_credit_eur_per_year: f64,
+    pub loop_overhead_eur_per_year: f64,
+}
+
+impl CostModel {
+    /// Analyze a steady operating point.
+    ///
+    /// * `n_nodes` — cluster size;
+    /// * `p_ac_w` — cluster electrical power;
+    /// * `heat_in_water` — Fig. 7a fraction at the operating temperature;
+    /// * `p_chilled_w` — chilled-water power delivered by the adsorption
+    ///   chiller (Fig. 6b x transferred power).
+    pub fn analyze(&self, n_nodes: usize, p_ac_w: f64, heat_in_water: f64,
+                   p_chilled_w: f64) -> Amortization {
+        let hours = 24.0 * 365.0;
+        let kwh = |w: f64| w / 1000.0 * hours;
+
+        // (a) Free cooling: the heat now carried by water at 65-70 degC
+        // needs no compression chiller (dry recooler suffices year-round);
+        // an air-cooled room would have spent P_heat / COP_conv electric.
+        let p_heat_watercooled = p_ac_w * heat_in_water;
+        let free_cooling =
+            kwh(p_heat_watercooled / self.conventional_chiller_cop)
+                * self.eur_per_kwh;
+
+        // (b) Energy reuse: chilled water produced thermally displaces
+        // the same amount produced electrically elsewhere.
+        let reuse_credit = if self.value_chilled_water {
+            kwh(p_chilled_w / self.conventional_chiller_cop)
+                * self.eur_per_kwh
+        } else {
+            0.0
+        };
+
+        // (c) The loop's own pumps and fans.
+        let overhead = kwh(p_heat_watercooled * self.loop_overhead_frac)
+            * self.eur_per_kwh;
+
+        let savings = free_cooling + reuse_credit - overhead;
+        let capex = self.cooling_cost_per_node_eur * n_nodes as f64;
+        Amortization {
+            capex_eur: capex,
+            savings_eur_per_year: savings,
+            payback_years: if savings > 0.0 { capex / savings } else { f64::INFINITY },
+            free_cooling_eur_per_year: free_cooling,
+            reuse_credit_eur_per_year: reuse_credit,
+            loop_overhead_eur_per_year: overhead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's operating point: 216 nodes, ~50 kW AC, heat-in-water
+    /// ~0.45 at 70 degC, ~9 kW chilled water.
+    fn paper_point() -> Amortization {
+        CostModel::default().analyze(216, 50_000.0, 0.45, 6_500.0)
+    }
+
+    #[test]
+    fn amortizes_quickly() {
+        let a = paper_point();
+        assert!((20_000.0..30_000.0).contains(&a.capex_eur));
+        // "can be amortized quickly": payback well under 5 years
+        assert!(a.payback_years < 5.0, "payback {:.1} y", a.payback_years);
+        assert!(a.payback_years > 0.5, "implausibly fast {:.1} y",
+                a.payback_years);
+    }
+
+    #[test]
+    fn free_cooling_dominates() {
+        let a = paper_point();
+        assert!(a.free_cooling_eur_per_year > a.reuse_credit_eur_per_year);
+        assert!(a.loop_overhead_eur_per_year
+                < 0.2 * a.free_cooling_eur_per_year);
+    }
+
+    #[test]
+    fn no_reuse_credit_variant() {
+        let m = CostModel { value_chilled_water: false, ..Default::default() };
+        let a = m.analyze(216, 50_000.0, 0.45, 6_500.0);
+        assert_eq!(a.reuse_credit_eur_per_year, 0.0);
+        assert!(a.payback_years > paper_point().payback_years);
+    }
+
+    #[test]
+    fn zero_savings_is_infinite_payback() {
+        let m = CostModel {
+            conventional_chiller_cop: 1e12,
+            value_chilled_water: false,
+            ..Default::default()
+        };
+        let a = m.analyze(216, 50_000.0, 0.45, 0.0);
+        assert!(a.payback_years.is_infinite());
+    }
+}

@@ -1,0 +1,491 @@
+//! Figure-reproduction harness: regenerates every figure of the paper's
+//! evaluation (Sect. 4) plus the Sect. 3 equilibrium narrative and the
+//! redundancy/fault experiment. See DESIGN.md §4 for the experiment index.
+//!
+//! Protocols follow the paper:
+//!  * Figs. 4a/5a/6a: 13 randomly selected six-core nodes under `stress`,
+//!    swept over rack-outlet setpoints (the rest of the cluster carries a
+//!    full background load so high outlet temperatures are reachable).
+//!  * Figs. 4b/5b: population histograms + Gaussian fits.
+//!  * Figs. 6b/7a/7b: plant-level fractions vs temperature with the
+//!    paper's 10 % flow-meter error bars.
+
+pub mod sweep;
+
+use anyhow::Result;
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::coordinator::supervisor::Fault;
+use crate::coordinator::SimulationDriver;
+use crate::plant::hydraulics::{Manifold, ManifoldKind};
+use crate::plant::layout::O_CORE_MAX;
+use crate::report::Series;
+use crate::stats::gauss;
+use crate::stats::histogram::Histogram;
+use crate::stats::interp;
+use sweep::{SweepData, SweepOptions};
+
+/// The paper's sweep band: Fig. 4a spans ~49..70 degC outlet.
+pub const SETPOINTS: &[f64] = &[49.0, 52.5, 56.0, 59.5, 63.0, 66.5, 70.0];
+
+/// All figure ids the harness can regenerate.
+pub const ALL_FIGURES: &[&str] =
+    &["4a", "4b", "5a", "5b", "6a", "6b", "7a", "7b", "r1", "s3", "r2",
+      "manifold", "binning", "econ"];
+
+/// Run one figure (or "all"); returns the resulting series.
+pub fn run_figure(id: &str, cfg: &SimConfig, opts: &SweepOptions)
+                  -> Result<Vec<Series>> {
+    match id {
+        "4a" | "5a" | "6a" | "6b" | "7a" | "7b" => {
+            let data = sweep::run_sweep(cfg, SETPOINTS, opts)?;
+            Ok(vec![match id {
+                "4a" => fig4a(&data),
+                "5a" => fig5a(&data),
+                "6a" => fig6a(&data),
+                "6b" => fig6b(&data),
+                "7a" => fig7a(&data),
+                _ => fig7b(&data),
+            }])
+        }
+        "sweep" => {
+            let data = sweep::run_sweep(cfg, SETPOINTS, opts)?;
+            Ok(all_sweep_figures(&data))
+        }
+        "4b" => Ok(vec![fig4b(cfg, opts)?]),
+        "5b" => {
+            let data = sweep::run_sweep(cfg, SETPOINTS, opts)?;
+            Ok(vec![fig5b(&data)])
+        }
+        "r1" => {
+            let data = sweep::run_sweep(cfg, SETPOINTS, opts)?;
+            Ok(vec![reuse_table(&data, cfg, opts)?])
+        }
+        "s3" => Ok(vec![equilibrium(cfg, opts)?]),
+        "r2" => Ok(vec![fault_injection(cfg, opts)?]),
+        "manifold" => Ok(vec![manifold_ablation(cfg)]),
+        "binning" => Ok(vec![binning(cfg, opts)?]),
+        "econ" => Ok(vec![economics(cfg, opts)?]),
+        _ => anyhow::bail!("unknown figure '{id}' (have {ALL_FIGURES:?})"),
+    }
+}
+
+/// All figures that share the stress sweep (4a, 5a, 5b, 6a, 6b, 7a, 7b).
+pub fn all_sweep_figures(data: &SweepData) -> Vec<Series> {
+    vec![fig4a(data), fig5a(data), fig5b(data), fig6a(data), fig6b(data),
+         fig7a(data), fig7b(data)]
+}
+
+/// Fig. 4(a): average core temperature of the 13 stressed nodes vs T_out.
+pub fn fig4a(data: &SweepData) -> Series {
+    let mut s = Series::new(
+        "fig4a",
+        "Core temperature vs outlet temperature (13 nodes under stress)",
+        &["t_out", "t_out_err", "core_mean", "core_std", "dt_core_out"],
+    );
+    s.note("paper: DT(core-out) grows ~15 -> 17.5 degC over the band");
+    for p in &data.points {
+        s.push(vec![
+            p.t_out.mean(),
+            p.t_out.std(),
+            p.sel_core.mean(),
+            p.sel_core.std(),
+            p.sel_core.mean() - p.t_out.mean(),
+        ]);
+    }
+    s
+}
+
+/// Fig. 4(b): core-temperature histogram of the whole cluster in
+/// production mode at T_out ~ 67 degC, with Gaussian fit.
+pub fn fig4b(cfg: &SimConfig, opts: &SweepOptions) -> Result<Series> {
+    let mut c = cfg.clone();
+    c.workload = WorkloadKind::Production;
+    c.t_out_setpoint = 67.0;
+    // Warm start close to the operating point: the 800 l tank heats at
+    // only ~1 K/h from the production-load surplus, so a cold-ish start
+    // would bias the sampled population low.
+    c.t_water_init = 66.5;
+    let mut driver = SimulationDriver::new(c)?;
+    let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+    // settle, then sample the core-temperature population periodically
+    let settle = (opts.settle_s / tick_s) as u64;
+    driver.run_ticks(settle, 0)?;
+    let mut temps = Vec::new();
+    for _ in 0..opts.histogram_samples {
+        driver.run_ticks((120.0 / tick_s) as u64, 0)?;
+        temps.extend(driver.core_temperatures());
+    }
+    let mut h = Histogram::new(40.0, 105.0, 65);
+    h.push_all(temps.iter().copied());
+    let fit = gauss::fit_sigma_clipped(&temps_above(&temps, 65.0), 2.5, 8);
+    let mut s = Series::new(
+        "fig4b",
+        "Core temperature distribution, production mode @ T_out=67",
+        &["t_core", "density"],
+    );
+    for (x, d) in h.centers().into_iter().zip(h.densities()) {
+        s.push(vec![x, d]);
+    }
+    s.note(format!(
+        "gaussian fit: mu={:.1} degC sigma={:.2} degC (paper: 84 / 2.8); \
+         idle bump below 65 degC excluded from fit",
+        fit.mu, fit.sigma
+    ));
+    s.note(format!("samples: {} core readings", temps.len()));
+    Ok(s)
+}
+
+fn temps_above(temps: &[f64], lo: f64) -> Vec<f64> {
+    let hot: Vec<f64> = temps.iter().copied().filter(|&t| t > lo).collect();
+    if hot.len() > 10 {
+        hot
+    } else {
+        temps.to_vec()
+    }
+}
+
+/// Fig. 5(a): node DC power vs average core temperature (13 nodes).
+pub fn fig5a(data: &SweepData) -> Series {
+    let mut s = Series::new(
+        "fig5a",
+        "Node power vs core temperature (13 nodes under stress)",
+        &["core_mean", "core_std", "p_node", "p_node_std"],
+    );
+    s.note("paper: rising with temperature (leakage), large node spread");
+    for p in &data.points {
+        s.push(vec![
+            p.sel_core.mean(),
+            p.sel_core.std(),
+            p.sel_power.mean(),
+            p.sel_power.std(),
+        ]);
+    }
+    s
+}
+
+/// Fig. 5(b): histogram of node power interpolated to core T = 80 degC.
+pub fn fig5b(data: &SweepData) -> Series {
+    // per-node (core_temp, power) across setpoints -> interpolate to 80
+    let mut interpolated = Vec::new();
+    for series in data.node_series.values() {
+        if series.len() < 2 {
+            continue;
+        }
+        let xs: Vec<f64> = series.iter().map(|&(t, _)| t).collect();
+        let ys: Vec<f64> = series.iter().map(|&(_, p)| p).collect();
+        if let Some(line) = interp::fit_line(&xs, &ys) {
+            interpolated.push(line.at(80.0));
+        }
+    }
+    let fit = gauss::fit_sigma_clipped(&interpolated, 3.0, 6);
+    let mut h = Histogram::new(170.0, 250.0, 40);
+    h.push_all(interpolated.iter().copied());
+    let mut s = Series::new(
+        "fig5b",
+        "Node power interpolated to T_core=80 degC (six-core nodes)",
+        &["p_node", "density"],
+    );
+    for (x, d) in h.centers().into_iter().zip(h.densities()) {
+        s.push(vec![x, d]);
+    }
+    s.note(format!(
+        "gaussian fit: mu={:.1} W sigma={:.2} W (paper: 206 / 5.4) over {} nodes",
+        fit.mu, fit.sigma, interpolated.len()
+    ));
+    s
+}
+
+/// Fig. 6(a): relative node-power increase vs T_out (normalized to the
+/// lowest setpoint, 49 degC).
+pub fn fig6a(data: &SweepData) -> Series {
+    let mut s = Series::new(
+        "fig6a",
+        "Relative node power increase vs outlet temperature",
+        &["t_out", "rel_power", "rel_power_err"],
+    );
+    s.note("paper: ~ +7 % from 49 to 70 degC");
+    let base = data.points.first().map(|p| p.sel_power.mean()).unwrap_or(1.0);
+    for p in &data.points {
+        let rel = p.sel_power.mean() / base;
+        let err = p.sel_power.std() / base / (13f64).sqrt();
+        s.push(vec![p.t_out.mean(), rel, err]);
+    }
+    s
+}
+
+/// Fig. 6(b): chiller COP vs driving temperature, 10 % flow-meter bars.
+pub fn fig6b(data: &SweepData) -> Series {
+    let mut s = Series::new(
+        "fig6b",
+        "Adsorption chiller COP vs temperature",
+        &["t", "cop", "cop_err", "t_tank"],
+    );
+    s.note("paper: standby below ~57, +90 % from 57 to 70 degC");
+    s.note("x-axis: rack outlet temperature (footnote 2: 'the driving \
+            temperature T equals the outlet temperature of the rack')");
+    for p in &data.points {
+        if p.cop > 0.01 {
+            // 10 % flow meters on both P_c and P_d: ~14 % combined (2 sigma/2)
+            s.push(vec![p.t_out.mean(), p.cop, p.cop * 0.071,
+                        p.t_tank.mean()]);
+        }
+    }
+    s
+}
+
+/// Fig. 7(a): heat-in-water fraction vs T_out.
+pub fn fig7a(data: &SweepData) -> Series {
+    let mut s = Series::new(
+        "fig7a",
+        "Heat-in-water fraction vs outlet temperature",
+        &["t_out", "heat_in_water", "err"],
+    );
+    s.note("paper: drastically decreasing with temperature (insulation)");
+    for p in &data.points {
+        s.push(vec![p.t_out.mean(), p.hiw, p.hiw_err]);
+    }
+    s
+}
+
+/// Fig. 7(b): P_d / P_electric vs temperature.
+pub fn fig7b(data: &SweepData) -> Series {
+    let mut s = Series::new(
+        "fig7b",
+        "Power transferred to the driving circuit / electric power",
+        &["t_out", "transferred_frac", "err"],
+    );
+    s.note("paper: increasing with temperature; well below Fig. 7a");
+    // Below the chiller's standby band the tank saturates and the
+    // transferred power is losses only; the paper's plot starts at ~57.
+    for p in &data.points {
+        if p.cop > 0.01 {
+            s.push(vec![p.t_out.mean(), p.pd_frac, p.pd_frac * 0.05]);
+        }
+    }
+    s
+}
+
+/// Headline table: energy-reuse fraction (Fig. 6b x Fig. 7a) ~ 25 % at
+/// 60..70 degC, nearly doubling with ideal insulation (Sect. 5).
+pub fn reuse_table(data: &SweepData, cfg: &SimConfig, opts: &SweepOptions)
+                   -> Result<Series> {
+    let mut s = Series::new(
+        "r1",
+        "Energy-reuse fraction (COP x heat-in-water)",
+        &["t_out", "reuse_potential", "reuse_actual", "reuse_paper_method"],
+    );
+    s.note("paper: 'on the order of 25 % for T = 60...70 degC'");
+    s.note("reuse_paper_method multiplies the chiller COP *curve* at the \
+            outlet temperature (footnote 2) by Fig. 7a, as the paper does");
+    for p in &data.points {
+        let cop_curve = cfg.pp.cop(p.t_out.mean());
+        s.push(vec![p.t_out.mean(), p.cop * p.hiw, p.reuse,
+                    cop_curve * p.hiw]);
+    }
+    // Ideal-insulation ablation (native backend: params differ from the
+    // AOT artifacts, which bake the production constants).
+    let mut c = cfg.clone();
+    c.pp = c.pp.with_ideal_insulation();
+    c.backend = "native".into();
+    let ideal = sweep::run_sweep(&c, &[70.0], opts)?;
+    if let Some(p) = ideal.points.first() {
+        s.note(format!(
+            "ideal insulation @70: heat-in-water {:.2} (vs {:.2}), reuse \
+             potential {:.1}% (paper: 'almost a factor of two' / 'almost 50%')",
+            p.hiw,
+            data.points.last().map(|q| q.hiw).unwrap_or(0.0),
+            100.0 * p.cop * p.hiw
+        ));
+    }
+    Ok(s)
+}
+
+/// Sect. 3 equilibrium: cold start, valve shut, full stress. The system
+/// must heat through the standby band, wake the chiller at 55 degC and
+/// settle where P_d^max(T) + losses meet the input power (60..70 band).
+pub fn equilibrium(cfg: &SimConfig, opts: &SweepOptions) -> Result<Series> {
+    let mut c = cfg.clone();
+    c.workload = WorkloadKind::Stress;
+    c.stress_nodes = c.n_nodes; // maximum load
+    c.stress_background = 0.0;
+    c.regulate = false;
+    c.valve_fixed = 0.0;
+    c.t_water_init = 20.0;
+    c.duration_s = opts.equilibrium_s;
+    let mut driver = SimulationDriver::new(c)?;
+    let res = driver.run(6)?;
+    let mut s = Series::new(
+        "s3",
+        "Cold-start equilibrium (valve shut, max load)",
+        &["t_s", "t_out", "t_tank", "p_d_kw", "p_c_kw", "chiller_on"],
+    );
+    for t in &res.trace {
+        s.push(vec![
+            t.t_s,
+            t.t_rack_out,
+            t.t_tank,
+            t.p_d / 1e3,
+            t.p_c / 1e3,
+            if t.chiller_on { 1.0 } else { 0.0 },
+        ]);
+    }
+    let t_final = res.trace.last().map(|t| t.t_rack_out).unwrap_or(0.0);
+    let pp = &driver.cfg.pp;
+    s.note(format!(
+        "settles at T_out ~ {:.1} degC (paper: equilibrium in the 60-70 \
+         band); P_d^max(70) = {:.1} kW vs rack transfer at max load",
+        t_final,
+        pp.pd_max(70.0) / 1e3
+    ));
+    let wake = res
+        .trace
+        .iter()
+        .find(|t| t.chiller_on)
+        .map(|t| t.t_tank)
+        .unwrap_or(0.0);
+    s.note(format!("chiller left standby at T_tank = {wake:.1} degC \
+                    (threshold {:.0})", pp.chiller_t_on));
+    Ok(s)
+}
+
+/// Redundancy experiment (Sect. 3): chiller failure mid-run; the primary
+/// + central circuits must keep the rack regulated.
+pub fn fault_injection(cfg: &SimConfig, opts: &SweepOptions) -> Result<Series> {
+    let mut c = cfg.clone();
+    c.workload = WorkloadKind::Production;
+    c.t_water_init = 64.0;
+    let fail_start = opts.settle_s;
+    let fail_end = fail_start + 3600.0;
+    c.duration_s = fail_end + 3600.0;
+    let mut driver = SimulationDriver::with_faults(
+        c,
+        vec![Fault::ChillerFailure { start_s: fail_start, end_s: fail_end }],
+    )?;
+    let res = driver.run(6)?;
+    let mut s = Series::new(
+        "r2",
+        "Chiller-failure failover (valve -> primary -> central)",
+        &["t_s", "t_out", "valve", "p_central_kw", "chiller_on"],
+    );
+    let mut max_during = 0.0f64;
+    for t in &res.trace {
+        if t.t_s >= fail_start && t.t_s <= fail_end {
+            max_during = max_during.max(t.t_rack_out);
+        }
+        s.push(vec![
+            t.t_s,
+            t.t_rack_out,
+            t.valve,
+            0.0, // p_central is in events/energy; keep the column for shape
+            if t.chiller_on { 1.0 } else { 0.0 },
+        ]);
+    }
+    s.note(format!(
+        "max T_out during chiller failure: {max_during:.1} degC \
+         (failover keeps the rack below the 71.5 limit)"
+    ));
+    s.note(format!("supervisor events: {}", res.events.len()));
+    Ok(s)
+}
+
+/// Manifold ablation (Sect. 2's Tichelmann claim).
+pub fn manifold_ablation(cfg: &SimConfig) -> Series {
+    let pp = &cfg.pp;
+    let mut s = Series::new(
+        "manifold",
+        "Tichelmann vs direct-return manifold (flow self-balancing)",
+        &["flow_lpm", "imb_tichelmann", "imb_direct", "dt_spread_tich",
+          "dt_spread_direct"],
+    );
+    s.note("paper: 'the water flow rates balance themselves automatically'");
+    let tich = Manifold::from_params(pp, 72, ManifoldKind::Tichelmann);
+    let dirr = Manifold::from_params(pp, 72, ManifoldKind::DirectReturn);
+    for scale in [0.5, 0.75, 1.0, 1.25] {
+        let q = 72.0 * pp.node_flow_lpm * scale;
+        s.push(vec![
+            q,
+            tich.imbalance(q),
+            dirr.imbalance(q),
+            tich.outlet_temp_spread(q, 180.0, pp),
+            dirr.outlet_temp_spread(q, 180.0, pp),
+        ]);
+    }
+    s
+}
+
+/// Chip-binning experiment (Sect. 4): "If we desired higher temperatures
+/// we could sort out the 'bad' chips and run them at lower temperature in
+/// a separate system. The high end of the histogram ... indicates that we
+/// could perhaps gain another 5 degC in this way."
+///
+/// Runs the cluster at full stress, measures each node's hottest-core
+/// margin to the throttle limit, and reports the achievable outlet
+/// temperature with 0/5/10/20 % of the worst nodes binned out.
+pub fn binning(cfg: &SimConfig, opts: &SweepOptions) -> Result<Series> {
+    let mut c = cfg.clone();
+    c.workload = WorkloadKind::Stress;
+    c.stress_nodes = c.n_nodes;
+    c.stress_background = 0.0;
+    c.t_out_setpoint = 67.0;
+    c.t_water_init = 64.0;
+    c.sensor_noise = false;
+    let mut driver = SimulationDriver::new(c)?;
+    let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+    driver.run_ticks((opts.settle_s / tick_s).ceil() as u64, 0)?;
+    let (out, sample) = driver.tick_once()?;
+    let n = driver.backend.n_nodes();
+    // per-node excess = hottest core above the rack outlet
+    let mut excess: Vec<f64> = (0..n)
+        .map(|i| out.node(i)[O_CORE_MAX] as f64 - sample.t_rack_out)
+        .collect();
+    excess.sort_by(|a, b| b.total_cmp(a)); // worst first
+    let t_throttle = driver.cfg.pp.t_throttle;
+    let margin = 1.0; // stay a degree under the throttle point
+    let mut s = Series::new(
+        "binning",
+        "Outlet-temperature headroom from binning out hot chips (Sect. 4)",
+        &["binned_frac", "binned_nodes", "worst_excess", "t_out_max",
+          "gain_vs_unbinned"],
+    );
+    s.note("paper: 'we could perhaps gain another 5 degC in this way'");
+    let base_tout = t_throttle - margin - excess[0];
+    for frac in [0.0, 0.05, 0.10, 0.20] {
+        let k = ((n as f64 * frac) as usize).min(n - 1);
+        let worst = excess[k];
+        let t_out_max = t_throttle - margin - worst;
+        s.push(vec![frac, k as f64, worst, t_out_max,
+                    t_out_max - base_tout]);
+    }
+    Ok(s)
+}
+
+/// Economics experiment (Sect. 2): retrofit cost vs free-cooling +
+/// energy-reuse savings at the measured operating point.
+pub fn economics(cfg: &SimConfig, opts: &SweepOptions) -> Result<Series> {
+    let data = sweep::run_sweep(cfg, &[66.5], opts)?;
+    let p = data
+        .points
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("sweep produced no points"))?;
+    let model = crate::economics::CostModel::default();
+    let p_chilled = p.cop * p.pd_frac * p.p_ac;
+    let a = model.analyze(cfg.n_nodes, p.p_ac, p.hiw, p_chilled);
+    let mut s = Series::new(
+        "econ",
+        "Cooling-retrofit amortization (Sect. 2: ~120 EUR/node)",
+        &["capex_eur", "savings_eur_y", "payback_years",
+          "free_cooling_eur_y", "reuse_credit_eur_y", "overhead_eur_y"],
+    );
+    s.note("paper: 'a small fraction of the overall cost and can be \
+            amortized quickly by the savings from free cooling and energy \
+            reuse'");
+    s.note(format!(
+        "operating point: P_AC={:.1} kW, heat-in-water={:.2}, \
+         P_chilled={:.1} kW @ T_out={:.1}",
+        p.p_ac / 1e3, p.hiw, p_chilled / 1e3, p.t_out.mean()));
+    s.push(vec![a.capex_eur, a.savings_eur_per_year, a.payback_years,
+                a.free_cooling_eur_per_year, a.reuse_credit_eur_per_year,
+                a.loop_overhead_eur_per_year]);
+    Ok(s)
+}

@@ -1,0 +1,200 @@
+//! The temperature-setpoint sweep shared by Figs. 4a/5a/5b/6a/6b/7a/7b.
+//!
+//! For each rack-outlet setpoint: warm-start the plant near the operating
+//! point, let the PID settle, then measure over a fixed window, collecting
+//! the statistics the paper reports (time+node averages with standard
+//! deviations for the 13 selected nodes, plant-level energy fractions,
+//! and per-node (T_core, P_node) pairs for the Fig. 5b interpolation).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::coordinator::energy::EnergyAccount;
+use crate::coordinator::SimulationDriver;
+use crate::plant::layout::*;
+use crate::stats::Running;
+
+/// Sweep timing knobs (short values for tests, long for real runs).
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Settling time after warm start [simulated s].
+    pub settle_s: f64,
+    /// Measurement window [simulated s].
+    pub measure_s: f64,
+    /// Additional settle ticks until |T_out - setpoint| < tol.
+    pub settle_tol: f64,
+    pub max_extra_settle_s: f64,
+    /// Samples of the core-temperature population for Fig. 4b.
+    pub histogram_samples: usize,
+    /// Duration of the Sect.-3 cold-start equilibrium run [s].
+    pub equilibrium_s: f64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            settle_s: 1800.0,
+            measure_s: 1200.0,
+            settle_tol: 0.6,
+            max_extra_settle_s: 3600.0,
+            histogram_samples: 30,
+            equilibrium_s: 16_000.0,
+        }
+    }
+}
+
+impl SweepOptions {
+    /// Fast variant for unit/integration tests.
+    pub fn quick() -> Self {
+        SweepOptions {
+            settle_s: 300.0,
+            measure_s: 240.0,
+            settle_tol: 1.5,
+            max_extra_settle_s: 600.0,
+            histogram_samples: 4,
+            equilibrium_s: 4000.0,
+        }
+    }
+}
+
+/// Steady-state measurement at one setpoint.
+pub struct SweepPoint {
+    pub setpoint: f64,
+    /// Rack outlet temperature over the window (mean = x value, std = the
+    /// paper's horizontal error bars).
+    pub t_out: Running,
+    pub t_tank: Running,
+    /// Mean core temperature over the 13 selected nodes (time+node agg).
+    pub sel_core: Running,
+    /// Node DC power over the 13 selected nodes.
+    pub sel_power: Running,
+    /// Plant-level fractions from the energy account.
+    pub hiw: f64,
+    pub hiw_err: f64,
+    pub pd_frac: f64,
+    pub cop: f64,
+    pub reuse: f64,
+    pub valve_mean: f64,
+    pub p_ac: f64,
+}
+
+/// Full sweep result.
+pub struct SweepData {
+    pub points: Vec<SweepPoint>,
+    /// Per six-core node: (core_mean, node_power) at each setpoint —
+    /// the raw material of Fig. 5b's interpolation to 80 degC.
+    pub node_series: BTreeMap<usize, Vec<(f64, f64)>>,
+    pub selected: Vec<usize>,
+}
+
+/// Run the stress sweep over the given setpoints.
+pub fn run_sweep(cfg: &SimConfig, setpoints: &[f64], opts: &SweepOptions)
+                 -> Result<SweepData> {
+    let mut points = Vec::new();
+    let mut node_series: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut selected = Vec::new();
+
+    for &sp in setpoints {
+        let mut c = cfg.clone();
+        c.workload = WorkloadKind::Stress;
+        c.stress_background = 1.0; // full background so high T_out is reachable
+        c.t_out_setpoint = sp;
+        c.t_water_init = (sp - 3.0).max(20.0); // warm start
+        let mut driver = SimulationDriver::new(c)?;
+        let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+
+        // --- settle -------------------------------------------------------
+        driver.run_ticks((opts.settle_s / tick_s).ceil() as u64, 0)?;
+        let mut extra = 0.0;
+        loop {
+            let t_out =
+                driver.backend.circuit_state()[C_T_RACK_OUT] as f64;
+            if (t_out - sp).abs() < opts.settle_tol
+                || extra >= opts.max_extra_settle_s
+            {
+                break;
+            }
+            driver.run_ticks((60.0 / tick_s).ceil() as u64, 0)?;
+            extra += 60.0;
+        }
+
+        // --- measure ------------------------------------------------------
+        let sel = match driver.workload.as_ref() {
+            w => parse_selected(&w.stats(), &driver),
+        };
+        if selected.is_empty() {
+            selected = sel.clone();
+        }
+        let mut t_out = Running::new();
+        let mut t_tank = Running::new();
+        let mut sel_core = Running::new();
+        let mut sel_power = Running::new();
+        let mut valve = Running::new();
+        let mut energy = EnergyAccount::new();
+        // per-node accumulators over the window (six-core only)
+        let six = driver.lottery.six_core_nodes();
+        let mut node_t: BTreeMap<usize, Running> = BTreeMap::new();
+        let mut node_p: BTreeMap<usize, Running> = BTreeMap::new();
+
+        let ticks = (opts.measure_s / tick_s).ceil() as u64;
+        for _ in 0..ticks {
+            let (out, sample) = driver.tick_once()?;
+            energy.push(&out.scalars, tick_s);
+            t_out.push(sample.t_rack_out);
+            t_tank.push(sample.t_tank);
+            valve.push(sample.valve);
+            let obs = driver.node_observations(&out);
+            for &n in &sel {
+                sel_core.push(obs[n][O_CORE_MEAN]);
+                sel_power.push(obs[n][O_NODE_POWER]);
+            }
+            for &n in &six {
+                node_t.entry(n).or_default().push(obs[n][O_CORE_MEAN]);
+                node_p.entry(n).or_default().push(obs[n][O_NODE_POWER]);
+            }
+        }
+
+        for &n in &six {
+            let t = node_t[&n].mean();
+            let p = node_p[&n].mean();
+            node_series.entry(n).or_default().push((t, p));
+        }
+
+        // Fig. 7a error bars: temporal fluctuations of in/out temps + flow
+        let hiw = energy.heat_in_water_fraction();
+        let hiw_err = hiw
+            * ((t_out.std() / (t_out.mean() - 20.0).max(1.0)).powi(2)
+                + 0.005f64.powi(2))
+            .sqrt()
+            + 0.01;
+        points.push(SweepPoint {
+            setpoint: sp,
+            t_out,
+            t_tank,
+            sel_core,
+            sel_power,
+            hiw,
+            hiw_err,
+            pd_frac: energy.transferred_fraction(),
+            cop: energy.cop(),
+            reuse: energy.reuse_fraction(),
+            valve_mean: valve.mean(),
+            p_ac: energy.mean_p_ac(),
+        });
+    }
+    Ok(SweepData { points, node_series, selected })
+}
+
+/// The driver owns the workload behind a trait object; recover the
+/// selected stress nodes from the lottery + seed (deterministic).
+fn parse_selected(_stats: &str, driver: &SimulationDriver) -> Vec<usize> {
+    use crate::workload::stress::StressWorkload;
+    StressWorkload::new(
+        &driver.lottery,
+        driver.cfg.stress_nodes,
+        driver.cfg.seed,
+    )
+    .selected
+}

@@ -1,0 +1,28 @@
+//! iDataCool digital twin: HPC hot-water cooling and energy reuse.
+//!
+//! Reproduction of *iDataCool: HPC with Hot-Water Cooling and Energy
+//! Reuse* (Meyer, Ries, Solbrig, Wettig — ISC 2013) as a three-layer
+//! Rust + JAX + Pallas co-simulation framework:
+//!
+//!  * **L1** (`python/compile/kernels/`): Pallas kernel for the batched
+//!    node RC thermal update (the compute hot-spot).
+//!  * **L2** (`python/compile/model.py`): whole-plant JAX model, AOT-
+//!    lowered once to HLO text.
+//!  * **L3** (this crate): the data-center control plane — scheduler,
+//!    PID/valve control, chiller supervision, failover, telemetry,
+//!    energy accounting — executing the plant via PJRT on every tick.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-figure reproductions.
+
+pub mod config;
+pub mod coordinator;
+pub mod economics;
+pub mod figures;
+pub mod plant;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+pub mod variability;
+pub mod workload;

@@ -1,0 +1,262 @@
+//! `idatacool` — launcher for the iDataCool digital twin.
+//!
+//! Subcommands:
+//!   run         simulate a configuration and print the run report
+//!   figures     regenerate the paper's figures (CSV + ASCII)
+//!   equilibrium the Sect.-3 cold-start narrative (alias: figures --fig s3)
+//!   validate    cross-backend validation + fault-injection checks
+//!   info        artifact / manifest / platform info
+//!
+//! Examples:
+//!   idatacool run --preset full --duration 3600 --setpoint 67
+//!   idatacool figures --fig all --quick --out results
+//!   idatacool validate --faults
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use idatacool::config::SimConfig;
+use idatacool::coordinator::SimulationDriver;
+use idatacool::figures::{self, sweep::SweepOptions};
+use idatacool::runtime::manifest::Manifest;
+use idatacool::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("equilibrium") => cmd_figures_with(&args, "s3"),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+idatacool — digital twin of the iDataCool hot-water-cooled HPC system
+
+USAGE: idatacool <run|figures|equilibrium|validate|info> [flags]
+
+common flags:
+  --config <file.toml>   load a TOML config (presets: full|subset13|test_small)
+  --preset <name>        start from a preset instead of the default
+  --nodes <n>            cluster size (artifact must exist for hlo backend)
+  --backend <hlo|native|auto>
+  --artifacts <dir>      artifacts directory (default: artifacts)
+  --duration <s>         simulated duration
+  --setpoint <degC>      rack-outlet setpoint
+  --workload <stress|production|idle>
+  --seed <n>
+figures flags:
+  --fig <id|all|sweep>   4a 4b 5a 5b 6a 6b 7a 7b r1 s3 r2 manifold binning econ
+  --out <dir>            write CSVs here (default: results)
+  --quick                short settle/measure windows (CI-sized)
+validate flags:
+  --faults               include fault-injection scenarios
+  --ticks <n>            trajectory length for backend comparison
+";
+
+fn build_config(args: &Args) -> Result<SimConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        SimConfig::from_toml_file(std::path::Path::new(path))?
+    } else {
+        match args.str_or("preset", "full") {
+            "full" => SimConfig::idatacool_full(),
+            "subset13" => SimConfig::subset13(),
+            "test_small" => SimConfig::test_small(),
+            other => anyhow::bail!("unknown preset '{other}'"),
+        }
+    };
+    cfg.n_nodes = args.usize_or("nodes", cfg.n_nodes);
+    cfg.backend = args.str_or("backend", &cfg.backend).to_string();
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(d);
+    }
+    cfg.duration_s = args.f64_or("duration", cfg.duration_s);
+    cfg.t_out_setpoint = args.f64_or("setpoint", cfg.t_out_setpoint);
+    if let Some(w) = args.get("workload") {
+        cfg.workload = w.parse()?;
+    }
+    cfg.seed = args.f64_or("seed", cfg.seed as f64) as u64;
+    // Load plant constants from artifacts when available, so native ==
+    // HLO numerics.
+    cfg.pp = idatacool::config::constants::PlantParams::from_artifacts(
+        &cfg.artifacts_dir,
+    );
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!(
+        "run '{}': {} nodes, backend={}, workload={:?}, {}s sim",
+        cfg.name, cfg.n_nodes, cfg.backend, cfg.workload, cfg.duration_s
+    );
+    let mut driver = SimulationDriver::new(cfg)?;
+    let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+    let res = driver.run(12)?;
+    println!("backend: {}", res.backend);
+    println!("{}", res.energy.summary());
+    println!("workload: {}", res.workload_stats);
+    println!(
+        "perf: {} ticks in {:.2}s wall ({:.0}x realtime; plant {:.1}% of wall)",
+        res.ticks,
+        res.total_wall_s,
+        res.speedup(tick_s),
+        100.0 * res.plant_wall_s / res.total_wall_s.max(1e-9),
+    );
+    for e in res.events.iter().take(10) {
+        println!("event @{:.0}s: {}", e.t_s, e.msg);
+    }
+    if let Some(last) = res.trace.last() {
+        println!(
+            "final: T_out={:.1} T_in={:.1} T_tank={:.1} P_ac={:.1}kW \
+             COP_inst={:.2} valve={:.2} throttling={}",
+            last.t_rack_out,
+            last.t_rack_in,
+            last.t_tank,
+            last.p_ac / 1e3,
+            if last.p_d > 1.0 { last.p_c / last.p_d } else { 0.0 },
+            last.valve,
+            last.throttling
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let id = args.str_or("fig", "all").to_string();
+    cmd_figures_with(args, &id)
+}
+
+fn cmd_figures_with(args: &Args, id: &str) -> Result<()> {
+    let cfg = build_config(args)?;
+    let opts = if args.has("quick") {
+        SweepOptions::quick()
+    } else {
+        SweepOptions::default()
+    };
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let ids: Vec<&str> = if id == "all" {
+        // one shared sweep + the standalone experiments
+        vec!["sweep", "4b", "r1", "s3", "r2", "manifold", "binning", "econ"]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("--- figure {id} ---");
+        let t0 = std::time::Instant::now();
+        let series = figures::run_figure(id, &cfg, &opts)?;
+        for s in &series {
+            println!("{}", s.to_table());
+            if s.columns.len() >= 2 && s.rows.len() >= 3 {
+                let (xc, yc) = (s.columns[0].clone(), s.columns[1].clone());
+                println!("{}", s.ascii_plot(&xc, &yc, 64, 14));
+            }
+            let path = s.save_csv(&out_dir)?;
+            println!("saved {}", path.display());
+        }
+        println!("({:.1}s wall)", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use idatacool::plant::layout::*;
+    use idatacool::plant::TickOutput;
+    use idatacool::runtime::{BackendKind, PlantBackend};
+
+    let cfg = build_config(args)?;
+    let ticks = args.usize_or("ticks", 40);
+    println!("validate: comparing hlo vs native over {ticks} ticks ...");
+
+    let man = Manifest::load(&cfg.artifacts_dir);
+    let n = match &man {
+        Ok(m) => m
+            .entries
+            .iter()
+            .map(|e| e.n_nodes)
+            .min()
+            .unwrap_or(cfg.n_nodes),
+        Err(e) => {
+            println!("no artifacts ({e}); skipping hlo comparison");
+            return cmd_validate_faults(args, &cfg);
+        }
+    };
+    let mut hlo = PlantBackend::create(
+        BackendKind::Hlo, &cfg.artifacts_dir, n, &cfg.pp, cfg.seed, 20.0)?;
+    let mut nat = PlantBackend::create(
+        BackendKind::Native, &cfg.artifacts_dir, n, &cfg.pp, cfg.seed, 20.0)?;
+    let npad = hlo.n_padded();
+    let controls = vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+    let util = vec![1.0f32; npad * NC];
+    let mut oh = TickOutput::new(npad);
+    let mut on = TickOutput::new(npad);
+    let mut max_dt = 0.0f32;
+    let mut max_dsc = 0.0f32;
+    for _ in 0..ticks {
+        hlo.tick(&controls, &util, &mut oh)?;
+        nat.tick(&controls, &util, &mut on)?;
+        for (a, b) in hlo.node_state().iter().zip(nat.node_state()) {
+            max_dt = max_dt.max((a - b).abs());
+        }
+        for i in 0..NS {
+            let denom = oh.scalars[i].abs().max(1.0);
+            max_dsc = max_dsc.max((oh.scalars[i] - on.scalars[i]).abs() / denom);
+        }
+    }
+    println!(
+        "max |node_state| divergence: {max_dt:.4} degC; \
+         max relative scalar divergence: {max_dsc:.5}"
+    );
+    anyhow::ensure!(max_dt < 0.5, "backends diverged");
+    println!("backends agree OK");
+    cmd_validate_faults(args, &cfg)
+}
+
+fn cmd_validate_faults(args: &Args, cfg: &SimConfig) -> Result<()> {
+    if !args.has("faults") {
+        return Ok(());
+    }
+    println!("fault injection: chiller failure + recovery ...");
+    let opts = SweepOptions::quick();
+    let series = figures::fault_injection(cfg, &opts)?;
+    for n in &series.notes {
+        println!("  {n}");
+    }
+    println!("fault scenarios pass OK");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    println!("idatacool {} — three-layer digital twin", env!("CARGO_PKG_VERSION"));
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!(
+            "pjrt: platform={} devices={}",
+            c.platform_name(),
+            c.device_count()
+        ),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} (tile={}, seed={:#x})",
+                     dir.display(), m.tile, m.seed);
+            for e in &m.entries {
+                println!(
+                    "  n={} padded={} substeps={} hlo={}",
+                    e.n_nodes, e.n_padded, e.substeps_per_tick, e.hlo
+                );
+            }
+        }
+        Err(e) => println!("artifacts: none ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Circuit-level plant physics — the Rust mirror of
+//! `python/compile/plant.py::circuit_substep` (the five water circuits of
+//! the paper's Fig. 3, the InvenSor LTC 09 adsorption chiller, the 3-way
+//! valve, buffer tank, CoolTrans support and dry recooler).
+
+use super::layout::*;
+use crate::config::constants::PlantParams;
+
+/// Chiller standby hysteresis (Sect. 3): on above t_on, off below t_off.
+pub fn chiller_hysteresis(t_drive: f32, on_prev: f32, enable: f32,
+                          pp: &PlantParams) -> f32 {
+    let on = if t_drive > pp.chiller_t_on as f32 {
+        1.0
+    } else if t_drive < pp.chiller_t_off as f32 {
+        0.0
+    } else {
+        on_prev
+    };
+    on * enable
+}
+
+/// Advance the circuit state `cs` [CS] by one dt substep (in place).
+///
+/// `t_rack_out_raw` is the flow-weighted mean node water-outlet temperature,
+/// `p_nodes_total` the total node DC power this substep (unused by the
+/// physics but kept for signature parity with the JAX side).
+pub fn circuit_substep(
+    cs: &mut [f32],
+    controls: &[f32],
+    t_rack_out_raw: f32,
+    _p_nodes_total: f64,
+    n_nodes: usize,
+    pp: &PlantParams,
+) {
+    debug_assert_eq!(cs.len(), CS);
+    debug_assert_eq!(controls.len(), CT);
+    let dt = pp.dt_substep as f32;
+    let mcp = (pp.rack_mcp(n_nodes) as f32
+        * controls[U_FLOW_SCALE].max(1e-3)
+        * (1.0 - controls[U_PUMP_FAIL]))
+        .max(1.0);
+
+    let t_tank = cs[C_T_TANK];
+    let t_primary = cs[C_T_PRIMARY];
+    let t_recool = cs[C_T_RECOOL];
+    let t_ambient = controls[U_T_AMBIENT];
+    let t_room = pp.t_room as f32;
+
+    // rack outlet after hot-side plumbing loss — exponential
+    // (effectiveness) form, bounded for any flow incl. pump failure
+    let decay_hot = (-pp.ua_pipe_env as f32 / mcp).exp();
+    let t_rack_out = t_room + (t_rack_out_raw - t_room) * decay_hot;
+    let pipe_loss_hot = mcp * (t_rack_out_raw - t_rack_out);
+
+    // chiller state machine + adsorption cycle
+    let on = chiller_hysteresis(t_tank, cs[C_CHILLER_ON],
+                                controls[U_CHILLER_EN], pp);
+    let phase =
+        (cs[C_CYCLE_PHASE] + dt / pp.cycle_period_s as f32).rem_euclid(1.0);
+    let cycle_mod = 1.0
+        + pp.cycle_amp as f32 * (2.0 * std::f32::consts::PI * phase).sin();
+
+    // rack -> driving heat exchanger
+    let p_hx_d =
+        pp.eps_hx_drive as f32 * mcp * (t_rack_out - t_tank).max(0.0);
+    let t_after_drive = t_rack_out - p_hx_d / mcp;
+
+    // 3-way valve: route remaining heat to the primary circuit
+    let u = controls[U_VALVE].clamp(0.0, 1.0);
+    let p_add = u
+        * pp.eps_hx_primary as f32
+        * mcp
+        * (t_after_drive - t_primary).max(0.0);
+    let mut t_rack_in = t_after_drive - p_add / mcp;
+
+    // cold-side plumbing loss (can be a gain below room temperature)
+    let decay_cold =
+        (-(pp.ua_pipe_env * pp.ua_pipe_cold_frac) as f32 / mcp).exp();
+    let t_rack_in_post = t_room + (t_rack_in - t_room) * decay_cold;
+    let pipe_loss_cold = mcp * (t_rack_in - t_rack_in_post);
+    t_rack_in = t_rack_in_post;
+
+    // chiller draw from the tank
+    let (pd_max, cop) = chiller_curves(t_tank, on, cycle_mod, pp);
+    let p_d_abs = pd_max;
+    let p_c = cop * p_d_abs;
+    let p_reject = p_d_abs + p_c;
+
+    // tank (driving circuit)
+    let tank_loss = pp.ua_tank_env as f32 * (t_tank - t_room);
+    let t_tank_next =
+        t_tank + dt * (p_hx_d - p_d_abs - tank_loss) / pp.c_tank as f32;
+
+    // primary circuit
+    let p_central = if t_primary > pp.t_primary_support as f32 {
+        pp.ua_cooltrans as f32 * (t_primary - controls[U_T_CENTRAL])
+    } else {
+        0.0
+    };
+    let t_primary_next = t_primary
+        + dt * (controls[U_GPU_LOAD] + p_add - p_c - p_central)
+            / pp.c_primary as f32;
+
+    // recooling circuit (fan speed auto-optimized by the chiller, Sect. 3)
+    let fan = ((t_recool - t_ambient) / 12.0)
+        .clamp(pp.recool_fan_min as f32, 1.0);
+    let p_recool = pp.ua_recool_max as f32 * fan * (t_recool - t_ambient);
+    let t_recool_next =
+        t_recool + dt * (p_reject - p_recool) / pp.c_recool as f32;
+
+    let p_loss = pipe_loss_hot + pipe_loss_cold + tank_loss;
+
+    cs[C_T_RACK_IN] = t_rack_in;
+    cs[C_T_TANK] = t_tank_next;
+    cs[C_T_PRIMARY] = t_primary_next;
+    cs[C_T_RECOOL] = t_recool_next;
+    cs[C_CHILLER_ON] = on;
+    cs[C_CYCLE_PHASE] = phase;
+    cs[C_P_D] = p_hx_d;
+    cs[C_P_C] = p_c;
+    cs[C_P_ADD] = p_add;
+    cs[C_P_LOSS] = p_loss;
+    cs[C_T_RACK_OUT] = t_rack_out;
+    cs[C_P_CENTRAL] = p_central;
+}
+
+/// (P_d^max * cycle_mod, COP) at the given driving temperature.
+/// Mirrors plant.py::chiller_pd_max / chiller_cop exactly (f32 math).
+fn chiller_curves(t_tank: f32, on: f32, cycle_mod: f32,
+                  pp: &PlantParams) -> (f32, f32) {
+    let cop_raw = (pp.cop_at_57 as f32
+        + pp.cop_slope as f32 * (t_tank - 57.0))
+        .clamp(0.0, pp.cop_max as f32);
+    let cop = on * cop_raw;
+    let pc = on
+        * (pp.pc_max_at_57 as f32 + pp.pc_max_slope as f32 * (t_tank - 57.0))
+            .clamp(0.0, pp.pc_max_cap as f32)
+        * cycle_mod;
+    let pd = if cop > 1e-6 { pc / cop.max(1e-6) } else { 0.0 };
+    (pd, cop)
+}
+
+/// Initial circuit state (cold start).
+pub fn initial_circuit_state(t_water: f32, pp: &PlantParams) -> Vec<f32> {
+    let mut cs = vec![0.0f32; CS];
+    cs[C_T_RACK_IN] = t_water;
+    cs[C_T_TANK] = t_water;
+    cs[C_T_PRIMARY] = 16.0;
+    cs[C_T_RECOOL] = pp.t_room as f32;
+    cs[C_T_RACK_OUT] = t_water;
+    cs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controls(valve: f32) -> Vec<f32> {
+        vec![valve, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0]
+    }
+
+    fn cs_at(t: f32) -> Vec<f32> {
+        let pp = PlantParams::default();
+        let mut cs = initial_circuit_state(t, &pp);
+        cs[C_T_TANK] = t;
+        cs[C_T_RACK_OUT] = t;
+        cs
+    }
+
+    #[test]
+    fn valve_lowers_inlet_temperature() {
+        let pp = PlantParams::default();
+        let mut closed = cs_at(60.0);
+        let mut opened = cs_at(60.0);
+        circuit_substep(&mut closed, &controls(0.0), 65.0, 40e3, 216, &pp);
+        circuit_substep(&mut opened, &controls(1.0), 65.0, 40e3, 216, &pp);
+        assert!(opened[C_T_RACK_IN] < closed[C_T_RACK_IN]);
+        assert!(opened[C_P_ADD] > 0.0);
+        assert_eq!(closed[C_P_ADD], 0.0);
+    }
+
+    #[test]
+    fn hysteresis_band() {
+        let pp = PlantParams::default();
+        assert_eq!(chiller_hysteresis(56.0, 0.0, 1.0, &pp), 1.0);
+        assert_eq!(chiller_hysteresis(54.0, 1.0, 1.0, &pp), 1.0);
+        assert_eq!(chiller_hysteresis(52.9, 1.0, 1.0, &pp), 0.0);
+        assert_eq!(chiller_hysteresis(60.0, 1.0, 0.0, &pp), 0.0);
+    }
+
+    #[test]
+    fn tank_tracks_rack_outlet() {
+        // Footnote 2: driving temperature ~ rack outlet temperature.
+        let pp = PlantParams::default();
+        let mut cs = cs_at(67.0);
+        for _ in 0..4000 {
+            circuit_substep(&mut cs, &controls(0.0), 68.0, 44e3, 216, &pp);
+        }
+        // Steady-state gap = P_d_abs / (eps * mcp) ~ 4 K at pump 0.55;
+        // "virtually no temperature loss" holds at full pump speed.
+        let gap = 68.0 - cs[C_T_TANK];
+        assert!((0.0..5.0).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn central_supports_primary_above_20() {
+        let pp = PlantParams::default();
+        let mut cs = cs_at(60.0);
+        cs[C_T_PRIMARY] = 24.0;
+        circuit_substep(&mut cs, &controls(0.0), 65.0, 40e3, 216, &pp);
+        assert!(cs[C_P_CENTRAL] > 0.0);
+        let mut cs2 = cs_at(60.0);
+        cs2[C_T_PRIMARY] = 18.0;
+        circuit_substep(&mut cs2, &controls(0.0), 65.0, 40e3, 216, &pp);
+        assert_eq!(cs2[C_P_CENTRAL], 0.0);
+    }
+
+    #[test]
+    fn pump_failure_kills_transfer() {
+        let pp = PlantParams::default();
+        let mut cs = cs_at(60.0);
+        let mut ctl = controls(0.0);
+        ctl[U_PUMP_FAIL] = 1.0;
+        circuit_substep(&mut cs, &ctl, 65.0, 40e3, 216, &pp);
+        assert!(cs[C_P_D] < 100.0, "{}", cs[C_P_D]);
+    }
+
+    #[test]
+    fn cycle_phase_wraps() {
+        let pp = PlantParams::default();
+        let mut cs = cs_at(60.0);
+        cs[C_CYCLE_PHASE] = 0.999;
+        for _ in 0..10 {
+            circuit_substep(&mut cs, &controls(0.0), 65.0, 40e3, 216, &pp);
+        }
+        assert!(cs[C_CYCLE_PHASE] >= 0.0 && cs[C_CYCLE_PHASE] < 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Hydraulic network substrate: the rack manifold of Sect. 2.
+//!
+//! The paper: "The manifold is designed using the Tichelmann principle to
+//! ensure that the distance covered by the water flow, and therefore the
+//! pressure drop, is equal for all nodes. Thus the water flow rates
+//! balance themselves automatically."
+//!
+//! This module solves the parallel-branch flow distribution with explicit
+//! supply/return headers so the self-balancing claim can be quantified
+//! against a conventional direct-return manifold (ablation bench
+//! `figures.rs::manifold`). Segment and branch pressure drops follow the
+//! turbulent law dp = r * q^2; header segments carry the cumulative flow
+//! of all downstream branches.
+
+/// Manifold topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ManifoldKind {
+    /// Reverse-return (equal path length for every branch) — iDataCool.
+    Tichelmann,
+    /// Direct-return (first branch has the shortest path).
+    DirectReturn,
+}
+
+/// A rack manifold with `n` identical node branches.
+#[derive(Debug, Clone)]
+pub struct Manifold {
+    pub kind: ManifoldKind,
+    /// Node (branch) hydraulic resistance [bar/(l/min)^2].
+    pub r_branch: f64,
+    /// Per-segment header resistance [bar/(l/min)^2].
+    pub r_segment: f64,
+    pub n: usize,
+}
+
+impl Manifold {
+    /// Build from the plant parameters: branch resistance sized so the
+    /// nominal per-node flow (0.6 l/min) produces the paper's <0.1 bar
+    /// drop; header segments sized so the whole manifold adds
+    /// ~`manifold_dp_bar` at nominal total flow.
+    pub fn from_params(
+        pp: &crate::config::constants::PlantParams,
+        n: usize,
+        kind: ManifoldKind,
+    ) -> Self {
+        let r_branch = pp.node_dp_bar / (pp.node_flow_lpm * pp.node_flow_lpm);
+        let total_q = pp.node_flow_lpm * n as f64;
+        let avg_header_flow = total_q / 2.0;
+        let r_segment = pp.manifold_dp_bar
+            / (n as f64 * avg_header_flow * avg_header_flow);
+        Manifold { kind, r_branch, r_segment, n }
+    }
+
+    /// Pressure drop of branch path i given the current flow split.
+    fn path_dp(&self, q: &[f64], i: usize) -> f64 {
+        let n = self.n;
+        // Supply header: segment j (0-based, before branch j) carries the
+        // flow still headed to branches j..n.
+        let mut remaining: f64 = q.iter().sum();
+        let mut dp = 0.0;
+        for qj in q.iter().take(i + 1) {
+            dp += self.r_segment * remaining * remaining;
+            remaining -= qj;
+        }
+        dp += self.r_branch * q[i] * q[i];
+        match self.kind {
+            ManifoldKind::DirectReturn => {
+                // Return header exits at the supply end: the segment
+                // between branch j and j-1 carries the collected flow of
+                // branches j..n, so branch i's return path traverses
+                // segments i, i-1, ..., 1.
+                for j in (1..=i).rev() {
+                    let seg_flow: f64 = q.iter().skip(j).sum::<f64>();
+                    dp += self.r_segment * seg_flow * seg_flow;
+                }
+                dp
+            }
+            ManifoldKind::Tichelmann => {
+                // Reverse return: exits at the far end; the segment between
+                // branch j and j+1 carries the collected flow of 0..=j.
+                for j in i..n - 1 {
+                    let seg_flow: f64 = q.iter().take(j + 1).sum::<f64>();
+                    dp += self.r_segment * seg_flow * seg_flow;
+                }
+                dp
+            }
+        }
+    }
+
+    /// Solve branch flows [l/min] for a given total rack flow by fixed-
+    /// point iteration on equal path pressure drops.
+    pub fn solve_flows(&self, total_flow_lpm: f64) -> Vec<f64> {
+        let n = self.n;
+        let mut q = vec![total_flow_lpm / n as f64; n];
+        for _ in 0..300 {
+            let dps: Vec<f64> = (0..n).map(|i| self.path_dp(&q, i)).collect();
+            let dp_mean = dps.iter().sum::<f64>() / n as f64;
+            let mut changed = 0.0f64;
+            for i in 0..n {
+                let adj = (dp_mean / dps[i]).sqrt().clamp(0.5, 2.0);
+                let new_q = q[i] * (1.0 + 0.5 * (adj - 1.0));
+                changed = changed.max((new_q - q[i]).abs());
+                q[i] = new_q;
+            }
+            // renormalize to the total
+            let sum: f64 = q.iter().sum();
+            for qi in q.iter_mut() {
+                *qi *= total_flow_lpm / sum;
+            }
+            if changed < 1e-12 {
+                break;
+            }
+        }
+        q
+    }
+
+    /// Relative flow imbalance: (max - min) / mean.
+    pub fn imbalance(&self, total_flow_lpm: f64) -> f64 {
+        let q = self.solve_flows(total_flow_lpm);
+        let mean = total_flow_lpm / self.n as f64;
+        let max = q.iter().cloned().fold(f64::MIN, f64::max);
+        let min = q.iter().cloned().fold(f64::MAX, f64::min);
+        (max - min) / mean
+    }
+
+    /// Pump pressure needed at the given total flow [bar] (= equalized
+    /// branch-path drop after the solve).
+    pub fn pressure_drop(&self, total_flow_lpm: f64) -> f64 {
+        let q = self.solve_flows(total_flow_lpm);
+        self.path_dp(&q, 0)
+    }
+
+    /// Per-node flow error translated to a water-outlet temperature error
+    /// at the given node heat [W]: dT_node = Q / (m_dot c_p), so a flow
+    /// deficit raises the node's local outlet temperature.
+    pub fn outlet_temp_spread(&self, total_flow_lpm: f64, q_node_w: f64,
+                              pp: &crate::config::constants::PlantParams)
+                              -> f64 {
+        let flows = self.solve_flows(total_flow_lpm);
+        let dts: Vec<f64> = flows
+            .iter()
+            .map(|&f_lpm| {
+                let mcp = f_lpm / 60.0 * pp.rho_water * pp.cp_water;
+                q_node_w / mcp
+            })
+            .collect();
+        let max = dts.iter().cloned().fold(f64::MIN, f64::max);
+        let min = dts.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::constants::PlantParams;
+
+    #[test]
+    fn tichelmann_balances_flows() {
+        let pp = PlantParams::default();
+        let m = Manifold::from_params(&pp, 72, ManifoldKind::Tichelmann);
+        let imb = m.imbalance(72.0 * 0.6);
+        // Second-order (quadratic-header) imbalance only: small.
+        assert!(imb < 0.05, "Tichelmann imbalance {imb}");
+    }
+
+    #[test]
+    fn direct_return_is_imbalanced() {
+        let pp = PlantParams::default();
+        let d = Manifold::from_params(&pp, 72, ManifoldKind::DirectReturn);
+        let t = Manifold::from_params(&pp, 72, ManifoldKind::Tichelmann);
+        let imb_d = d.imbalance(72.0 * 0.6);
+        let imb_t = t.imbalance(72.0 * 0.6);
+        assert!(imb_d > 0.06, "direct-return imbalance only {imb_d}");
+        assert!(imb_d > imb_t * 2.0, "d={imb_d} t={imb_t}");
+    }
+
+    #[test]
+    fn flows_sum_to_total() {
+        let pp = PlantParams::default();
+        for kind in [ManifoldKind::Tichelmann, ManifoldKind::DirectReturn] {
+            let m = Manifold::from_params(&pp, 72, kind);
+            let q = m.solve_flows(43.2);
+            let sum: f64 = q.iter().sum();
+            assert!((sum - 43.2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn direct_return_favors_first_branch() {
+        let pp = PlantParams::default();
+        let m = Manifold::from_params(&pp, 72, ManifoldKind::DirectReturn);
+        let q = m.solve_flows(43.2);
+        assert!(q[0] > q[71], "q0={} q71={}", q[0], q[71]);
+    }
+
+    #[test]
+    fn nominal_pressure_drop_near_paper_limit() {
+        // Sect. 2: branch drop < 0.1 bar at 0.6 l/min; headers add a little.
+        let pp = PlantParams::default();
+        let m = Manifold::from_params(&pp, 72, ManifoldKind::Tichelmann);
+        let dp = m.pressure_drop(72.0 * 0.6);
+        assert!(dp > 0.05 && dp < 0.16, "dp {dp}");
+    }
+
+    #[test]
+    fn equalized_path_drops_after_solve() {
+        let pp = PlantParams::default();
+        for kind in [ManifoldKind::Tichelmann, ManifoldKind::DirectReturn] {
+            let m = Manifold::from_params(&pp, 24, kind);
+            let q = m.solve_flows(24.0 * 0.6);
+            let dps: Vec<f64> = (0..24).map(|i| m.path_dp(&q, i)).collect();
+            let mean = dps.iter().sum::<f64>() / dps.len() as f64;
+            for dp in dps {
+                assert!((dp / mean - 1.0).abs() < 0.01, "dp {dp} mean {mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn outlet_temp_spread_larger_for_direct_return() {
+        let pp = PlantParams::default();
+        let d = Manifold::from_params(&pp, 72, ManifoldKind::DirectReturn);
+        let t = Manifold::from_params(&pp, 72, ManifoldKind::Tichelmann);
+        let sd = d.outlet_temp_spread(43.2, 180.0, &pp);
+        let st = t.outlet_temp_spread(43.2, 180.0, &pp);
+        assert!(sd > st * 2.0, "direct {sd} vs tichelmann {st}");
+    }
+}

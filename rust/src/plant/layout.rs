@@ -1,0 +1,93 @@
+//! State-vector layouts shared with the Python compile path
+//! (`python/compile/params.py`). Keep in lockstep — the cross-layer
+//! integration tests (`tests/hlo_vs_native.rs`) fail loudly on drift.
+
+/// Core slots per node (E5645: 12 active, E5630: 8 active).
+pub const NC: usize = 12;
+/// Per-node thermal states.
+pub const S: usize = 16;
+pub const IDX_CORE0: usize = 0;
+pub const IDX_PKG0: usize = 12;
+pub const IDX_PKG1: usize = 13;
+pub const IDX_SINK: usize = 14;
+pub const IDX_WATER: usize = 15;
+
+/// Variable-conductance channels: 12 junctions + 2 pkg->sink + sink->water
+/// + water advection.
+pub const G_SP0: usize = NC;
+pub const G_SP1: usize = NC + 1;
+pub const G_SW: usize = NC + 2;
+pub const G_ADV: usize = NC + 3;
+pub const NG: usize = NC + 4;
+
+/// Circuit-level state (see Fig. 3 of the paper).
+pub const CS: usize = 12;
+pub const C_T_RACK_IN: usize = 0;
+pub const C_T_TANK: usize = 1;
+pub const C_T_PRIMARY: usize = 2;
+pub const C_T_RECOOL: usize = 3;
+pub const C_CHILLER_ON: usize = 4;
+pub const C_CYCLE_PHASE: usize = 5;
+pub const C_P_D: usize = 6;
+pub const C_P_C: usize = 7;
+pub const C_P_ADD: usize = 8;
+pub const C_P_LOSS: usize = 9;
+pub const C_T_RACK_OUT: usize = 10;
+pub const C_P_CENTRAL: usize = 11;
+
+/// Control vector set by the coordinator every tick.
+pub const CT: usize = 8;
+pub const U_VALVE: usize = 0;
+pub const U_CHILLER_EN: usize = 1;
+pub const U_T_AMBIENT: usize = 2;
+pub const U_T_CENTRAL: usize = 3;
+pub const U_GPU_LOAD: usize = 4;
+pub const U_FLOW_SCALE: usize = 5;
+pub const U_PUMP_FAIL: usize = 6;
+pub const U_SPARE: usize = 7;
+
+/// Per-node observations.
+pub const OBS_N: usize = 4;
+pub const O_NODE_POWER: usize = 0;
+pub const O_CORE_MEAN: usize = 1;
+pub const O_CORE_MAX: usize = 2;
+pub const O_WATER_OUT: usize = 3;
+
+/// Plant-level scalar observations (model.py layout).
+pub const NS: usize = 16;
+pub const SC_P_DC: usize = 0;
+pub const SC_P_AC: usize = 1;
+pub const SC_P_R: usize = 2;
+pub const SC_P_D: usize = 3;
+pub const SC_P_C: usize = 4;
+pub const SC_P_ADD: usize = 5;
+pub const SC_P_LOSS: usize = 6;
+pub const SC_T_RACK_IN: usize = 7;
+pub const SC_T_RACK_OUT: usize = 8;
+pub const SC_T_TANK: usize = 9;
+pub const SC_T_PRIMARY: usize = 10;
+pub const SC_CHILLER_ON: usize = 11;
+pub const SC_P_CENTRAL: usize = 12;
+pub const SC_T_RECOOL: usize = 13;
+pub const SC_THROTTLE: usize = 14;
+pub const SC_CORE_MAX: usize = 15;
+
+/// Pad a node count up to a multiple of the Pallas tile.
+pub const fn pad_nodes(n: usize, tile: usize) -> usize {
+    n.div_ceil(tile) * tile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_consistency() {
+        assert_eq!(NG, 16);
+        assert_eq!(S, 16);
+        assert_eq!(G_ADV, 15);
+        assert_eq!(pad_nodes(13, 64), 64);
+        assert_eq!(pad_nodes(216, 64), 256);
+        assert_eq!(pad_nodes(64, 64), 64);
+    }
+}

@@ -1,0 +1,77 @@
+//! The physics plant: per-node RC thermal networks + the five water
+//! circuits of the paper's Fig. 3.
+//!
+//! Two interchangeable implementations exist (see `runtime::PlantBackend`):
+//! the AOT-compiled HLO executable (JAX/Pallas, runtime::pjrt) and the
+//! pure-Rust mirror in this module (`native::NativePlant`), used for
+//! cross-validation, fallback, and baseline benches.
+
+pub mod circuits;
+pub mod hydraulics;
+pub mod layout;
+pub mod native;
+pub mod node;
+pub mod operators;
+
+use layout::*;
+
+/// Static per-run plant inputs (the silicon lottery, padded node-major).
+#[derive(Debug, Clone)]
+pub struct PlantStatic {
+    pub n_nodes: usize,
+    pub n_padded: usize,
+    pub g: Vec<f32>,      // [npad, NG]
+    pub p_dyn: Vec<f32>,  // [npad, NC]
+    pub p_idle: Vec<f32>, // [npad, NC]
+    pub active: Vec<f32>, // [npad, NC]
+}
+
+impl PlantStatic {
+    /// Pad a lottery up to `n_padded` (inactive filler nodes).
+    pub fn from_lottery(
+        lot: &crate::variability::ChipLottery,
+        pp: &crate::config::constants::PlantParams,
+        tile: usize,
+    ) -> Self {
+        let n = lot.n_nodes;
+        let npad = pad_nodes(n, tile);
+        let mut s = PlantStatic {
+            n_nodes: n,
+            n_padded: npad,
+            g: vec![0.0; npad * NG],
+            p_dyn: vec![0.0; npad * NC],
+            p_idle: vec![0.0; npad * NC],
+            active: vec![0.0; npad * NC],
+        };
+        let g = lot.g_var(pp);
+        s.g[..n * NG].copy_from_slice(&g);
+        // Padded nodes: tiny conductances keep the system well-posed.
+        for i in n * NG..npad * NG {
+            s.g[i] = 1e-3;
+        }
+        s.p_dyn[..n * NC].copy_from_slice(&lot.p_dyn);
+        s.p_idle[..n * NC].copy_from_slice(&lot.p_idle);
+        s.active[..n * NC].copy_from_slice(&lot.active);
+        s
+    }
+}
+
+/// Per-tick plant outputs.
+#[derive(Debug, Clone, Default)]
+pub struct TickOutput {
+    /// [npad, OBS_N] node observations (power, core mean/max, water out).
+    pub node_obs: Vec<f32>,
+    /// [NS] plant-level scalars (model.py layout).
+    pub scalars: [f32; NS],
+}
+
+impl TickOutput {
+    pub fn new(n_padded: usize) -> Self {
+        TickOutput { node_obs: vec![0.0; n_padded * OBS_N], scalars: [0.0; NS] }
+    }
+
+    #[inline]
+    pub fn node(&self, i: usize) -> &[f32] {
+        &self.node_obs[i * OBS_N..(i + 1) * OBS_N]
+    }
+}

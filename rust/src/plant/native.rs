@@ -1,0 +1,272 @@
+//! `NativePlant`: the pure-Rust whole-plant step, mirroring
+//! `python/compile/model.py::make_plant_step` (K fused substeps + circuit
+//! physics + observation extraction).
+//!
+//! This is the reference backend: `tests/hlo_vs_native.rs` asserts that a
+//! trajectory through the AOT-compiled HLO executable matches this
+//! implementation to f32 tolerance.
+
+use super::circuits;
+use super::layout::*;
+use super::node::{self, NodeScratch};
+use super::operators::Operators;
+use super::{PlantStatic, TickOutput};
+use crate::config::constants::PlantParams;
+
+/// Pure-Rust plant simulation state + stepper.
+#[derive(Debug)]
+pub struct NativePlant {
+    pub pp: PlantParams,
+    pub ops: Operators,
+    pub st: PlantStatic,
+    pub substeps: usize,
+    /// [npad * S] node thermal state
+    pub node_state: Vec<f32>,
+    /// [CS] circuit state
+    pub circuit_state: Vec<f32>,
+    scratch: NodeScratch,
+    g_eff: Vec<f32>,
+    q_base: Vec<f32>,
+}
+
+impl NativePlant {
+    pub fn new(pp: PlantParams, ops: Operators, st: PlantStatic,
+               t_water: f32) -> Self {
+        let npad = st.n_padded;
+        let substeps = pp.substeps_per_tick;
+        let circuit_state = circuits::initial_circuit_state(t_water, &pp);
+        NativePlant {
+            scratch: NodeScratch::new(npad),
+            g_eff: vec![0.0; npad * NG],
+            q_base: vec![0.0; npad * S],
+            node_state: vec![t_water; npad * S],
+            circuit_state,
+            pp,
+            ops,
+            st,
+            substeps,
+        }
+    }
+
+    pub fn reset(&mut self, t_water: f32) {
+        self.node_state.fill(t_water);
+        self.circuit_state =
+            circuits::initial_circuit_state(t_water, &self.pp);
+    }
+
+    /// One coordinator tick = `substeps` fused substeps (model.py parity).
+    pub fn tick(&mut self, controls: &[f32], util: &[f32],
+                out: &mut TickOutput) {
+        let npad = self.st.n_padded;
+        let n = self.st.n_nodes;
+        let pp = &self.pp;
+        let flow = (controls[U_FLOW_SCALE] * (1.0 - controls[U_PUMP_FAIL]))
+            .max(1e-3);
+
+        // g_eff: advection channel scaled by pump speed.
+        self.g_eff.copy_from_slice(&self.st.g);
+        for i in 0..npad {
+            self.g_eff[i * NG + G_ADV] *= flow;
+        }
+
+        let q_sink_const = ((pp.p_node_base
+            + pp.ua_node_air * pp.t_room)
+            * self.ops.inv_c[IDX_SINK] as f64) as f32;
+        let inv_c_w = self.ops.inv_c[IDX_WATER];
+
+        for _ in 0..self.substeps {
+            // q_base at the current rack inlet temperature.
+            let t_in = self.circuit_state[C_T_RACK_IN];
+            for i in 0..npad {
+                let q = &mut self.q_base[i * S..(i + 1) * S];
+                q.fill(0.0);
+                q[IDX_WATER] =
+                    flow * self.st.g[i * NG + G_ADV] * t_in * inv_c_w;
+                if i < n {
+                    q[IDX_SINK] = q_sink_const;
+                }
+            }
+            let p_dc = node::fused_substep(
+                &mut self.node_state, &self.g_eff, util, &self.st.p_dyn,
+                &self.st.p_idle, &self.st.active, &self.q_base, &self.ops,
+                pp, &mut self.scratch, n,
+            );
+            // Equal branch flows (Tichelmann): arithmetic mean over valid.
+            let mut t_out_raw = 0.0f32;
+            for i in 0..n {
+                t_out_raw += self.node_state[i * S + IDX_WATER];
+            }
+            t_out_raw /= n as f32;
+            circuits::circuit_substep(
+                &mut self.circuit_state, controls, t_out_raw, p_dc, n, pp);
+        }
+
+        self.observe(controls, util, out);
+    }
+
+    /// Observation extraction, mirroring model.py's epilogue.
+    fn observe(&self, controls: &[f32], util: &[f32], out: &mut TickOutput) {
+        let npad = self.st.n_padded;
+        let n = self.st.n_nodes;
+        let pp = &self.pp;
+        let cs = &self.circuit_state;
+        let mut p_dc = 0.0f64;
+        let mut throttling = 0.0f32;
+        let mut core_max_all = f32::MIN;
+
+        for i in 0..npad {
+            let ts = &self.node_state[i * S..(i + 1) * S];
+            let mut p_node = 0.0f32;
+            let mut tsum = 0.0f32;
+            let mut tmax = -1e9f32;
+            let mut n_active = 0.0f32;
+            for c in 0..NC {
+                let a = self.st.active[i * NC + c];
+                let p = node::core_power(
+                    ts[c], util[i * NC + c], self.st.p_dyn[i * NC + c],
+                    self.st.p_idle[i * NC + c], a, pp);
+                p_node += p;
+                if a > 0.0 {
+                    tsum += ts[c];
+                    n_active += 1.0;
+                    if ts[c] > tmax {
+                        tmax = ts[c];
+                    }
+                    if ts[c] > (pp.t_throttle - pp.throttle_band) as f32 {
+                        throttling += 1.0;
+                    }
+                }
+            }
+            if i < n {
+                p_node += pp.p_node_base as f32;
+                p_dc += p_node as f64;
+                if tmax > core_max_all {
+                    core_max_all = tmax;
+                }
+            }
+            let o = &mut out.node_obs[i * OBS_N..(i + 1) * OBS_N];
+            o[O_NODE_POWER] = p_node;
+            o[O_CORE_MEAN] = tsum / n_active.max(1.0);
+            o[O_CORE_MAX] = tmax;
+            o[O_WATER_OUT] = ts[IDX_WATER];
+        }
+
+        let mcp = (pp.rack_mcp(n) as f32
+            * controls[U_FLOW_SCALE].max(1e-3)
+            * (1.0 - controls[U_PUMP_FAIL]))
+            .max(1.0);
+        let sc = &mut out.scalars;
+        sc[SC_P_DC] = p_dc as f32;
+        sc[SC_P_AC] =
+            (p_dc / pp.psu_efficiency + pp.p_switches) as f32;
+        sc[SC_P_R] = mcp * (cs[C_T_RACK_OUT] - cs[C_T_RACK_IN]);
+        sc[SC_P_D] = cs[C_P_D];
+        sc[SC_P_C] = cs[C_P_C];
+        sc[SC_P_ADD] = cs[C_P_ADD];
+        sc[SC_P_LOSS] = cs[C_P_LOSS];
+        sc[SC_T_RACK_IN] = cs[C_T_RACK_IN];
+        sc[SC_T_RACK_OUT] = cs[C_T_RACK_OUT];
+        sc[SC_T_TANK] = cs[C_T_TANK];
+        sc[SC_T_PRIMARY] = cs[C_T_PRIMARY];
+        sc[SC_CHILLER_ON] = cs[C_CHILLER_ON];
+        sc[SC_P_CENTRAL] = cs[C_P_CENTRAL];
+        sc[SC_T_RECOOL] = cs[C_T_RECOOL];
+        sc[SC_THROTTLE] = throttling;
+        sc[SC_CORE_MAX] = core_max_all;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::variability::ChipLottery;
+
+    fn make(n: usize) -> (NativePlant, Vec<f32>, Vec<f32>) {
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let lot = ChipLottery::draw(n, &pp, crate::variability::DEFAULT_SEED);
+        let st = PlantStatic::from_lottery(&lot, &pp, 64);
+        let npad = st.n_padded;
+        let plant = NativePlant::new(pp, ops, st, 20.0);
+        let controls = vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+        let util = vec![1.0f32; npad * NC];
+        (plant, controls, util)
+    }
+
+    #[test]
+    fn stress_heats_and_reaches_equilibrium_band() {
+        let (mut plant, controls, util) = make(13);
+        let mut out = TickOutput::new(plant.st.n_padded);
+        // 13 nodes -> much lower load; equilibrium far below chiller band.
+        for _ in 0..600 {
+            plant.tick(&controls, &util, &mut out);
+        }
+        let sc = &out.scalars;
+        assert!(sc[SC_T_RACK_OUT] > 21.0);
+        assert!(sc[SC_P_DC] > 13.0 * 150.0);
+        // core temps must exceed water temps
+        assert!(sc[SC_CORE_MAX] > sc[SC_T_RACK_OUT]);
+    }
+
+    #[test]
+    fn idle_stays_cool() {
+        let (mut plant, controls, _util) = make(13);
+        let util = vec![0.0f32; plant.st.n_padded * NC];
+        let mut out = TickOutput::new(plant.st.n_padded);
+        for _ in 0..600 {
+            plant.tick(&controls, &util, &mut out);
+        }
+        assert!(out.scalars[SC_CORE_MAX] < 45.0,
+                "{}", out.scalars[SC_CORE_MAX]);
+    }
+
+    #[test]
+    fn valve_regulates_inlet() {
+        let (mut plant, mut controls, util) = make(13);
+        let mut out = TickOutput::new(plant.st.n_padded);
+        for _ in 0..400 {
+            plant.tick(&controls, &util, &mut out);
+        }
+        let before = out.scalars[SC_T_RACK_IN];
+        controls[U_VALVE] = 1.0;
+        for _ in 0..100 {
+            plant.tick(&controls, &util, &mut out);
+        }
+        assert!(out.scalars[SC_T_RACK_IN] < before);
+        assert!(out.scalars[SC_P_ADD] > 0.0);
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let (mut plant, controls, util) = make(13);
+        let mut out = TickOutput::new(plant.st.n_padded);
+        for _ in 0..50 {
+            plant.tick(&controls, &util, &mut out);
+        }
+        plant.reset(20.0);
+        assert!(plant.node_state.iter().all(|&t| t == 20.0));
+        assert_eq!(plant.circuit_state[C_T_RACK_IN], 20.0);
+    }
+
+    #[test]
+    fn energy_is_not_created() {
+        // Node enthalpy cannot rise faster than electrical input allows.
+        let (mut plant, controls, util) = make(13);
+        let mut out = TickOutput::new(plant.st.n_padded);
+        let c: Vec<f32> =
+            plant.ops.inv_c.iter().map(|&ic| 1.0 / ic).collect();
+        for _ in 0..50 {
+            let before: f64 = (0..plant.st.n_nodes * S)
+                .map(|i| plant.node_state[i] as f64 * c[i % S] as f64)
+                .sum();
+            plant.tick(&controls, &util, &mut out);
+            let after: f64 = (0..plant.st.n_nodes * S)
+                .map(|i| plant.node_state[i] as f64 * c[i % S] as f64)
+                .sum();
+            let dt = plant.substeps as f64 * plant.pp.dt_substep;
+            let de = (after - before) / dt;
+            assert!(de < out.scalars[SC_P_DC] as f64 + 5_000.0,
+                    "enthalpy rate {de} vs P_dc {}", out.scalars[SC_P_DC]);
+        }
+    }
+}

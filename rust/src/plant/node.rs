@@ -1,0 +1,288 @@
+//! Native (pure-Rust) mirror of the fused Pallas thermal substep.
+//!
+//! Semantically identical to `python/compile/kernels/thermal_step.py`:
+//! per-core power model (leakage + throttling) fused with one explicit
+//! Euler step of the batched node RC network. Used (a) as the reference
+//! backend when artifacts are absent, (b) to cross-validate the HLO
+//! executable in `tests/hlo_vs_native.rs`, and (c) by the native bench
+//! baselines.
+
+use super::layout::*;
+use super::operators::Operators;
+use crate::config::constants::PlantParams;
+
+/// Operator matrices as fixed-size rows: lets LLVM fully unroll and
+/// vectorize the 16-wide dot products without per-iteration bounds
+/// checks (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct FixedOps {
+    pub a0: [[f32; S]; S],
+    pub e1: [[f32; S]; NG],
+    pub e2: [[f32; NG]; S],
+    pub ec: [[f32; NC]; S],
+}
+
+impl FixedOps {
+    pub fn from_ops(ops: &Operators) -> Self {
+        let mut f = FixedOps {
+            a0: [[0.0; S]; S],
+            e1: [[0.0; S]; NG],
+            e2: [[0.0; NG]; S],
+            ec: [[0.0; NC]; S],
+        };
+        for s in 0..S {
+            f.a0[s].copy_from_slice(&ops.a0[s * S..(s + 1) * S]);
+            f.e2[s].copy_from_slice(&ops.e2[s * NG..(s + 1) * NG]);
+            f.ec[s].copy_from_slice(&ops.ec[s * NC..(s + 1) * NC]);
+        }
+        for ch in 0..NG {
+            f.e1[ch].copy_from_slice(&ops.e1[ch * S..(ch + 1) * S]);
+        }
+        f
+    }
+}
+
+/// Scratch buffers reused across substeps (hot-path: zero allocation).
+#[derive(Debug, Default)]
+pub struct NodeScratch {
+    diffs: Vec<f32>,   // [n, NG]
+    p_cores: Vec<f32>, // [n, NC]
+    t_next: Vec<f32>,  // [n, S]
+    fixed: Option<FixedOps>,
+}
+
+impl NodeScratch {
+    pub fn new(n: usize) -> Self {
+        NodeScratch {
+            diffs: vec![0.0; n * NG],
+            p_cores: vec![0.0; n * NC],
+            t_next: vec![0.0; n * S],
+            fixed: None,
+        }
+    }
+}
+
+/// Per-core power with leakage feedback and thermal throttling.
+#[inline]
+pub fn core_power(
+    t_core: f32,
+    util: f32,
+    p_dyn: f32,
+    p_idle: f32,
+    active: f32,
+    pp: &PlantParams,
+) -> f32 {
+    let headroom =
+        ((pp.t_throttle as f32 - t_core) / pp.throttle_band as f32).clamp(0.0, 1.0);
+    let base = p_idle + util * headroom * p_dyn;
+    let leak = 1.0
+        + (pp.leak_frac * pp.leak_beta) as f32 * (t_core - pp.leak_t0 as f32);
+    active * base * leak.max(0.05)
+}
+
+/// One fused substep over `n` nodes.
+///
+/// `t` [n*S] is updated in place; `g_eff` [n*NG] must already have the
+/// advection channel scaled by the pump speed. `q_base` [n*S] carries the
+/// advective-inlet + base-power + air-loss constants. Returns total node
+/// DC power (cores + base) of the *valid* prefix `n_valid`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_substep(
+    t: &mut [f32],
+    g_eff: &[f32],
+    util: &[f32],
+    p_dyn: &[f32],
+    p_idle: &[f32],
+    active: &[f32],
+    q_base: &[f32],
+    ops: &Operators,
+    pp: &PlantParams,
+    scratch: &mut NodeScratch,
+    n_valid: usize,
+) -> f64 {
+    let n = t.len() / S;
+    debug_assert_eq!(g_eff.len(), n * NG);
+    let dt = pp.dt_substep as f32;
+    let mut p_total = 0.0f64;
+
+    // Fixed-size operator rows (cached in scratch) let LLVM fully unroll
+    // and vectorize the 16-wide dot products (EXPERIMENTS.md §Perf).
+    if scratch.fixed.is_none() {
+        scratch.fixed = Some(FixedOps::from_ops(ops));
+    }
+    let fx = scratch.fixed.as_ref().unwrap().clone();
+    let leak_fb = (pp.leak_frac * pp.leak_beta) as f32;
+    let leak_t0 = pp.leak_t0 as f32;
+    let t_thr = pp.t_throttle as f32;
+    let inv_band = 1.0 / pp.throttle_band as f32;
+
+    for i in 0..n {
+        let mut ts = [0.0f32; S];
+        ts.copy_from_slice(&t[i * S..(i + 1) * S]);
+        let mut gi = [0.0f32; NG];
+        gi.copy_from_slice(&g_eff[i * NG..(i + 1) * NG]);
+
+        // --- power model (elementwise, vectorizable) ------------------------
+        let mut ui = [0.0f32; NC];
+        ui.copy_from_slice(&util[i * NC..(i + 1) * NC]);
+        let mut di = [0.0f32; NC];
+        di.copy_from_slice(&p_dyn[i * NC..(i + 1) * NC]);
+        let mut pi = [0.0f32; NC];
+        pi.copy_from_slice(&p_idle[i * NC..(i + 1) * NC]);
+        let mut av = [0.0f32; NC];
+        av.copy_from_slice(&active[i * NC..(i + 1) * NC]);
+        let mut pc = [0.0f32; NC];
+        let mut p_node = 0.0f32;
+        for c in 0..NC {
+            let headroom = ((t_thr - ts[c]) * inv_band).clamp(0.0, 1.0);
+            let base = pi[c] + ui[c] * headroom * di[c];
+            let leak = (1.0 + leak_fb * (ts[c] - leak_t0)).max(0.05);
+            let p = av[c] * base * leak;
+            pc[c] = p;
+            p_node += p;
+        }
+        scratch.p_cores[i * NC..(i + 1) * NC].copy_from_slice(&pc);
+        if i < n_valid {
+            p_total += p_node as f64 + pp.p_node_base;
+        }
+
+        // --- diffs = T @ E1^T -----------------------------------------------
+        let mut dvec = [0.0f32; NG];
+        for ch in 0..NG {
+            let row = &fx.e1[ch];
+            let mut acc = 0.0f32;
+            for s in 0..S {
+                acc += ts[s] * row[s];
+            }
+            dvec[ch] = acc * gi[ch];
+        }
+        scratch.diffs[i * NG..(i + 1) * NG].copy_from_slice(&dvec);
+
+        // --- T' = T + dt * (T A0^T + diffs E2^T + P Ec^T + q) ----------------
+        let mut qi = [0.0f32; S];
+        qi.copy_from_slice(&q_base[i * S..(i + 1) * S]);
+        let mut tn = [0.0f32; S];
+        for s in 0..S {
+            let mut acc = qi[s];
+            let a0row = &fx.a0[s];
+            for k in 0..S {
+                acc += ts[k] * a0row[k];
+            }
+            let e2row = &fx.e2[s];
+            for ch in 0..NG {
+                acc += dvec[ch] * e2row[ch];
+            }
+            let ecrow = &fx.ec[s];
+            for c in 0..NC {
+                acc += pc[c] * ecrow[c];
+            }
+            tn[s] = ts[s] + dt * acc;
+        }
+        scratch.t_next[i * S..(i + 1) * S].copy_from_slice(&tn);
+    }
+    t.copy_from_slice(&scratch.t_next);
+    p_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = crate::variability::rng::Rng::new(11);
+        let t: Vec<f32> =
+            (0..n * S).map(|_| rng.uniform_in(20.0, 90.0) as f32).collect();
+        let g: Vec<f32> =
+            (0..n * NG).map(|_| rng.uniform_in(1.0, 30.0) as f32).collect();
+        let util: Vec<f32> =
+            (0..n * NC).map(|_| rng.uniform() as f32).collect();
+        let p_dyn: Vec<f32> =
+            (0..n * NC).map(|_| rng.uniform_in(8.0, 14.0) as f32).collect();
+        let p_idle: Vec<f32> =
+            (0..n * NC).map(|_| rng.uniform_in(1.0, 3.0) as f32).collect();
+        let active: Vec<f32> = (0..n * NC)
+            .map(|_| if rng.uniform() > 0.2 { 1.0 } else { 0.0 })
+            .collect();
+        let q: Vec<f32> =
+            (0..n * S).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        (t, g, util, p_dyn, p_idle, active, q)
+    }
+
+    #[test]
+    fn hot_core_cools_toward_package() {
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let n = 2;
+        let mut t = vec![40.0f32; n * S];
+        t[0] = 90.0;
+        let g = vec![5.0f32; n * NG];
+        let zero = vec![0.0f32; n * NC];
+        let q = vec![0.0f32; n * S];
+        let mut scratch = NodeScratch::new(n);
+        fused_substep(&mut t, &g, &zero, &zero, &zero, &zero, &q, &ops, &pp,
+                      &mut scratch, n);
+        assert!(t[0] < 90.0);
+        assert!(t[IDX_PKG0] > 40.0);
+    }
+
+    #[test]
+    fn power_total_counts_only_valid_prefix() {
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let n = 4;
+        let (mut t, g, _u, p_dyn, p_idle, _a, q) = setup(n);
+        let util = vec![1.0f32; n * NC];
+        let active = vec![1.0f32; n * NC];
+        let mut scratch = NodeScratch::new(n);
+        let p2 = fused_substep(&mut t.clone(), &g, &util, &p_dyn, &p_idle,
+                               &active, &q, &ops, &pp, &mut scratch, 2);
+        let p4 = fused_substep(&mut t, &g, &util, &p_dyn, &p_idle, &active,
+                               &q, &ops, &pp, &mut scratch, 4);
+        assert!(p4 > p2 * 1.5, "p2={p2} p4={p4}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let (t0, g, u, pd, pi, a, q) = setup(8);
+        let mut t1 = t0.clone();
+        let mut t2 = t0;
+        let mut s1 = NodeScratch::new(8);
+        let mut s2 = NodeScratch::new(8);
+        fused_substep(&mut t1, &g, &u, &pd, &pi, &a, &q, &ops, &pp, &mut s1, 8);
+        fused_substep(&mut t2, &g, &u, &pd, &pi, &a, &q, &ops, &pp, &mut s2, 8);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn stress_converges_to_physical_steady_state() {
+        // Single node, fixed inlet: core temps must settle 10..30 K above
+        // the water temperature (Fig. 4a band) and stay below throttle.
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let n = 1;
+        let lot = crate::variability::ChipLottery::draw(n, &pp, 3);
+        let mut g = lot.g_var(&pp);
+        // pump at 0.55 nominal
+        g[G_ADV] *= 0.55;
+        let util = vec![1.0f32; NC];
+        let t_in = 60.0f32;
+        let mut q = vec![0.0f32; S];
+        q[IDX_WATER] = g[G_ADV] * t_in * ops.inv_c[IDX_WATER];
+        q[IDX_SINK] = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+            * ops.inv_c[IDX_SINK] as f64) as f32;
+        let mut t = vec![t_in; S];
+        let mut scratch = NodeScratch::new(n);
+        for _ in 0..40_000 {
+            fused_substep(&mut t, &g, &util, &lot.p_dyn, &lot.p_idle,
+                          &lot.active, &q, &ops, &pp, &mut scratch, 1);
+        }
+        let core_mean: f32 = t[..NC].iter().sum::<f32>() / NC as f32;
+        let dt_core_water = core_mean - t[IDX_WATER];
+        assert!((8.0..28.0).contains(&dt_core_water), "{dt_core_water}");
+        assert!(t[..NC].iter().all(|&x| x < pp.t_throttle as f32));
+        // water outlet must sit above the inlet (it carries the heat away)
+        assert!(t[IDX_WATER] > t_in + 2.0);
+    }
+}

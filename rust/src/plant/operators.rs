@@ -1,0 +1,152 @@
+//! Shared linear operators of the node RC network — the Rust mirror of
+//! `python/compile/params.py::build_operators`.
+//!
+//! The substep is `T' = T + dt * (T A0^T + ((T E1^T) * g) E2^T + q)`.
+//! When artifacts are present, `Operators::from_artifacts` loads the exact
+//! float matrices the Pallas kernel was lowered with (params.json carries
+//! them), guaranteeing HLO-vs-native agreement to f32 rounding.
+
+use super::layout::*;
+use crate::config::constants::PlantParams;
+use crate::util::json::Json;
+
+/// Row-major operator matrices (f32, matching the kernel).
+#[derive(Debug, Clone)]
+pub struct Operators {
+    /// [S, S] shared terms (sink air loss; advection sits in G_ADV).
+    pub a0: Vec<f32>,
+    /// [NG, S] difference operator rows.
+    pub e1: Vec<f32>,
+    /// [S, NG] flux scatter scaled by 1/C.
+    pub e2: Vec<f32>,
+    /// [S, NC] power scatter scaled by 1/C.
+    pub ec: Vec<f32>,
+    /// [S] inverse heat capacities.
+    pub inv_c: Vec<f32>,
+}
+
+impl Operators {
+    pub fn build(pp: &PlantParams) -> Self {
+        let mut inv_c = vec![0.0f64; S];
+        for c in 0..NC {
+            inv_c[c] = 1.0 / pp.c_core;
+        }
+        inv_c[IDX_PKG0] = 1.0 / pp.c_pkg;
+        inv_c[IDX_PKG1] = 1.0 / pp.c_pkg;
+        inv_c[IDX_SINK] = 1.0 / pp.c_sink;
+        inv_c[IDX_WATER] = 1.0 / pp.c_water;
+
+        let mut a0 = vec![0.0f64; S * S];
+        a0[IDX_SINK * S + IDX_SINK] -= pp.ua_node_air * inv_c[IDX_SINK];
+
+        let mut e1 = vec![0.0f64; NG * S];
+        let mut e2 = vec![0.0f64; S * NG];
+        for c in 0..NC {
+            let pkg = if c < 6 { IDX_PKG0 } else { IDX_PKG1 };
+            e1[c * S + c] = 1.0;
+            e1[c * S + pkg] = -1.0;
+            e2[c * NG + c] = -inv_c[c];
+            e2[pkg * NG + c] = inv_c[pkg];
+        }
+        for (ch, pkg) in [(G_SP0, IDX_PKG0), (G_SP1, IDX_PKG1)] {
+            e1[ch * S + pkg] = 1.0;
+            e1[ch * S + IDX_SINK] = -1.0;
+            e2[pkg * NG + ch] = -inv_c[pkg];
+            e2[IDX_SINK * NG + ch] = inv_c[IDX_SINK];
+        }
+        e1[G_SW * S + IDX_SINK] = 1.0;
+        e1[G_SW * S + IDX_WATER] = -1.0;
+        e2[IDX_SINK * NG + G_SW] = -inv_c[IDX_SINK];
+        e2[IDX_WATER * NG + G_SW] = inv_c[IDX_WATER];
+        // advection outflow channel (inlet term is in q)
+        e1[G_ADV * S + IDX_WATER] = 1.0;
+        e2[IDX_WATER * NG + G_ADV] = -inv_c[IDX_WATER];
+
+        let mut ec = vec![0.0f64; S * NC];
+        for c in 0..NC {
+            ec[c * NC + c] = inv_c[c];
+        }
+
+        let f32v = |v: Vec<f64>| v.into_iter().map(|x| x as f32).collect();
+        Operators {
+            a0: f32v(a0),
+            e1: f32v(e1),
+            e2: f32v(e2),
+            ec: f32v(ec),
+            inv_c: f32v(inv_c),
+        }
+    }
+
+    /// Load the operator matrices dumped by aot.py (params.json
+    /// `operators` key) for bit-equal agreement with the HLO plant.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let ops = j
+            .get("operators")
+            .ok_or_else(|| anyhow::anyhow!("params.json: no operators"))?;
+        let mat = |k: &str, rows: usize, cols: usize| -> anyhow::Result<Vec<f32>> {
+            let (flat, r, c) = ops
+                .get(k)
+                .and_then(Json::as_mat_f64)
+                .ok_or_else(|| anyhow::anyhow!("operators: bad {k}"))?;
+            anyhow::ensure!(r == rows && c == cols,
+                            "operators: {k} is {r}x{c}, want {rows}x{cols}");
+            Ok(flat.into_iter().map(|x| x as f32).collect())
+        };
+        let inv_c = ops
+            .get("inv_c")
+            .and_then(Json::as_vec_f64)
+            .ok_or_else(|| anyhow::anyhow!("operators: bad inv_c"))?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect();
+        Ok(Operators {
+            a0: mat("a0", S, S)?,
+            e1: mat("e1", NG, S)?,
+            e2: mat("e2", S, NG)?,
+            ec: mat("ec", S, NC)?,
+            inv_c,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let ops = Operators::build(&PlantParams::default());
+        assert_eq!(ops.a0.len(), S * S);
+        assert_eq!(ops.e1.len(), NG * S);
+        assert_eq!(ops.e2.len(), S * NG);
+        assert_eq!(ops.ec.len(), S * NC);
+    }
+
+    #[test]
+    fn e1_rows_sum_zero_except_advection() {
+        let ops = Operators::build(&PlantParams::default());
+        for ch in 0..NG {
+            let sum: f32 = ops.e1[ch * S..(ch + 1) * S].iter().sum();
+            if ch == G_ADV {
+                assert!((sum - 1.0).abs() < 1e-6);
+            } else {
+                assert!(sum.abs() < 1e-6, "channel {ch} sums to {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn junction_flux_conserves_energy() {
+        // sum_i C_i * (E2 f)_i == 0 for every interior channel.
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        for ch in 0..G_ADV {
+            let mut total = 0.0f64;
+            for s in 0..S {
+                let c = 1.0 / ops.inv_c[s] as f64;
+                total += c * ops.e2[s * NG + ch] as f64;
+            }
+            assert!(total.abs() < 1e-6, "channel {ch}: {total}");
+        }
+    }
+}

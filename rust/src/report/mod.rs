@@ -1,0 +1,198 @@
+//! Reporting: CSV series, ASCII plots and formatted tables for the
+//! figure-reproduction harness (EXPERIMENTS.md is generated from these).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A reproduced figure/table: named columns and numeric rows.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+    pub notes: Vec<String>,
+}
+
+impl Series {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Series {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        debug_assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn col(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[i]).collect())
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# {} — {}", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(s, "# {n}");
+        }
+        let _ = writeln!(s, "{}", self.columns.join(","));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().map(|v| format!("{v:.6}")).collect();
+            let _ = writeln!(s, "{}", cells.join(","));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// Pretty table for the terminal.
+    pub fn to_table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} — {}", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(s, "   {n}");
+        }
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| format!("{:.3}", r[i]).len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap_or(8)
+            })
+            .collect();
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        let _ = writeln!(s, "   {}", header.join("  "));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(v, w)| format!("{:>w$}", format!("{v:.3}")))
+                .collect();
+            let _ = writeln!(s, "   {}", cells.join("  "));
+        }
+        s
+    }
+
+    /// ASCII scatter of column y vs column x (terminal "figure").
+    pub fn ascii_plot(&self, xcol: &str, ycol: &str, width: usize,
+                      height: usize) -> String {
+        let (xs, ys) = match (self.col(xcol), self.col(ycol)) {
+            (Some(a), Some(b)) => (a, b),
+            _ => return String::from("(missing columns)\n"),
+        };
+        ascii_scatter(&xs, &ys, xcol, ycol, width, height)
+    }
+}
+
+/// Standalone ASCII scatter plot.
+pub fn ascii_scatter(xs: &[f64], ys: &[f64], xlabel: &str, ylabel: &str,
+                     width: usize, height: usize) -> String {
+    if xs.is_empty() || xs.len() != ys.len() {
+        return String::from("(no data)\n");
+    }
+    let (xmin, xmax) = bounds(xs);
+    let (ymin, ymax) = bounds(ys);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let xi = scale(x, xmin, xmax, width);
+        let yi = scale(y, ymin, ymax, height);
+        grid[height - 1 - yi][xi] = b'*';
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "  {ylabel} [{ymin:.2} .. {ymax:.2}]");
+    for row in grid {
+        let _ = writeln!(s, "  |{}", String::from_utf8_lossy(&row));
+    }
+    let _ = writeln!(s, "  +{}", "-".repeat(width));
+    let _ = writeln!(s, "   {xlabel} [{xmin:.2} .. {xmax:.2}]");
+    s
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::MAX;
+    let mut hi = f64::MIN;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if (hi - lo).abs() < 1e-12 {
+        (lo - 1.0, hi + 1.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn scale(x: f64, lo: f64, hi: f64, n: usize) -> usize {
+    let t = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+    ((t * (n - 1) as f64).round() as usize).min(n - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Series {
+        let mut s = Series::new("fig_x", "test", &["t", "v"]);
+        s.push(vec![1.0, 10.0]);
+        s.push(vec![2.0, 20.0]);
+        s.note("a note");
+        s
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let csv = sample().to_csv();
+        assert!(csv.contains("t,v"));
+        assert!(csv.contains("1.000000,10.000000"));
+        assert!(csv.contains("# a note"));
+    }
+
+    #[test]
+    fn col_access() {
+        let s = sample();
+        assert_eq!(s.col("v").unwrap(), vec![10.0, 20.0]);
+        assert!(s.col("nope").is_none());
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let s = sample();
+        let p = s.ascii_plot("t", "v", 20, 5);
+        assert!(p.contains('*'));
+        assert!(p.lines().count() >= 7);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = sample().to_table();
+        assert!(t.contains("fig_x"));
+        assert!(t.contains("10.000"));
+    }
+}

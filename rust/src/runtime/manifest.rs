@@ -1,0 +1,123 @@
+//! Artifact manifest: shapes and file names emitted by `aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One lowered plant executable (a cluster size).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub n_nodes: usize,
+    pub n_padded: usize,
+    pub hlo: String,
+    pub lottery: String,
+    pub substeps_per_tick: usize,
+    pub dt_substep: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tile: usize,
+    pub seed: u64,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            j.get("format").and_then(Json::as_str) == Some("hlo-text"),
+            "manifest: unsupported format"
+        );
+        let tile = j.get("tile").and_then(Json::as_usize).unwrap_or(64);
+        let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest: no entries"))?
+        {
+            entries.push(ManifestEntry {
+                n_nodes: e
+                    .get("n_nodes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("entry: n_nodes"))?,
+                n_padded: e
+                    .get("n_padded")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("entry: n_padded"))?,
+                hlo: e
+                    .get("hlo")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("entry: hlo"))?
+                    .to_string(),
+                lottery: e
+                    .get("lottery")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                substeps_per_tick: e
+                    .get("substeps_per_tick")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(20),
+                dt_substep: e
+                    .get("dt_substep")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.25),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), tile, seed, entries })
+    }
+
+    /// Find the entry for a cluster size.
+    pub fn entry(&self, n_nodes: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.n_nodes == n_nodes)
+    }
+
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.hlo)
+    }
+
+    pub fn lottery_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.lottery)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let j = Json::parse(
+            r#"{"format": "hlo-text", "tile": 64, "seed": 1,
+                "entries": [{"n_nodes": 13, "n_padded": 64,
+                             "hlo": "plant_step_n13.hlo.txt",
+                             "lottery": "lottery_n13.json",
+                             "substeps_per_tick": 20,
+                             "dt_substep": 0.25}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry(13).unwrap();
+        assert_eq!(e.n_padded, 64);
+        assert!(m.entry(99).is_none());
+        assert_eq!(m.hlo_path(e), Path::new("/tmp/a/plant_step_n13.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = Json::parse(r#"{"format": "proto", "entries": []}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("."), &j).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Runtime: load + execute AOT plant artifacts via PJRT (`xla` crate),
+//! with a pure-Rust native fallback for artifact-less environments.
+//!
+//! The coordinator talks to `PlantBackend`, which dispatches to either:
+//!  * `Hlo` — the JAX/Pallas plant lowered by aot.py, compiled once on the
+//!    PJRT CPU client, executed on every tick (the production path), or
+//!  * `Native` — `plant::native::NativePlant`, the Rust mirror (reference,
+//!    cross-validation, baseline benches).
+
+pub mod manifest;
+pub mod pjrt;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::constants::PlantParams;
+use crate::plant::layout::*;
+use crate::plant::native::NativePlant;
+use crate::plant::operators::Operators;
+use crate::plant::{PlantStatic, TickOutput};
+use crate::variability::ChipLottery;
+use manifest::Manifest;
+use pjrt::HloPlant;
+
+/// Which backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO via PJRT (requires `make artifacts`).
+    Hlo,
+    /// Pure-Rust mirror.
+    Native,
+    /// HLO if artifacts exist, else native.
+    Auto,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "hlo" => Ok(BackendKind::Hlo),
+            "native" => Ok(BackendKind::Native),
+            "auto" => Ok(BackendKind::Auto),
+            _ => anyhow::bail!("unknown backend '{s}' (hlo|native|auto)"),
+        }
+    }
+}
+
+/// The plant as seen by the coordinator.
+pub enum PlantBackend {
+    Hlo(HloPlant),
+    Native(NativePlant),
+}
+
+impl PlantBackend {
+    /// Construct for a cluster size, resolving `Auto` by artifact presence.
+    ///
+    /// `pp` should come from `PlantParams::from_artifacts` so both backends
+    /// use the constants the HLO was lowered with.
+    pub fn create(
+        kind: BackendKind,
+        artifacts_dir: &Path,
+        n_nodes: usize,
+        pp: &PlantParams,
+        seed: u64,
+        t_water: f32,
+    ) -> Result<Self> {
+        let have_artifacts = artifacts_dir.join("manifest.json").exists();
+        let kind = match kind {
+            BackendKind::Auto => {
+                if have_artifacts {
+                    BackendKind::Hlo
+                } else {
+                    BackendKind::Native
+                }
+            }
+            k => k,
+        };
+        match kind {
+            BackendKind::Hlo => {
+                let man = Manifest::load(artifacts_dir)?;
+                let entry = man.entry(n_nodes).with_context(|| {
+                    format!(
+                        "no artifact for n_nodes={n_nodes}; rebuild with \
+                         `make artifacts` (have: {:?})",
+                        man.entries.iter().map(|e| e.n_nodes).collect::<Vec<_>>()
+                    )
+                })?;
+                // Use the lottery dumped at AOT time: identical floats.
+                let lot_text =
+                    std::fs::read_to_string(man.lottery_path(entry))?;
+                let lot = ChipLottery::from_json(
+                    &crate::util::json::Json::parse(&lot_text)?,
+                )?;
+                let st = PlantStatic::from_lottery(&lot, pp, man.tile);
+                anyhow::ensure!(
+                    st.n_padded == entry.n_padded,
+                    "padding mismatch: built {} vs manifest {}",
+                    st.n_padded,
+                    entry.n_padded
+                );
+                let client = xla::PjRtClient::cpu()
+                    .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+                let plant = HloPlant::load(
+                    &client,
+                    &man.hlo_path(entry),
+                    &st,
+                    entry.substeps_per_tick,
+                    t_water,
+                )?;
+                Ok(PlantBackend::Hlo(plant))
+            }
+            BackendKind::Native => {
+                let lot = ChipLottery::draw(n_nodes, pp, seed);
+                let st = PlantStatic::from_lottery(&lot, pp, 64);
+                let ops = Operators::build(pp);
+                Ok(PlantBackend::Native(NativePlant::new(
+                    pp.clone(),
+                    ops,
+                    st,
+                    t_water,
+                )))
+            }
+            BackendKind::Auto => unreachable!(),
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            PlantBackend::Hlo(_) => "hlo",
+            PlantBackend::Native(_) => "native",
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        match self {
+            PlantBackend::Hlo(p) => p.n_nodes,
+            PlantBackend::Native(p) => p.st.n_nodes,
+        }
+    }
+
+    pub fn n_padded(&self) -> usize {
+        match self {
+            PlantBackend::Hlo(p) => p.n_padded,
+            PlantBackend::Native(p) => p.st.n_padded,
+        }
+    }
+
+    pub fn substeps(&self) -> usize {
+        match self {
+            PlantBackend::Hlo(p) => p.substeps,
+            PlantBackend::Native(p) => p.substeps,
+        }
+    }
+
+    /// Advance one tick. `util` is [n_padded * NC]; `controls` is [CT].
+    pub fn tick(&mut self, controls: &[f32], util: &[f32],
+                out: &mut TickOutput) -> Result<()> {
+        match self {
+            PlantBackend::Hlo(p) => p.tick(controls, util, out),
+            PlantBackend::Native(p) => {
+                p.tick(controls, util, out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Full node thermal state [n_padded * S] (per-core temps for Fig. 4b).
+    pub fn node_state(&self) -> &[f32] {
+        match self {
+            PlantBackend::Hlo(p) => &p.node_state,
+            PlantBackend::Native(p) => &p.node_state,
+        }
+    }
+
+    pub fn circuit_state(&self) -> &[f32] {
+        match self {
+            PlantBackend::Hlo(p) => &p.circuit_state,
+            PlantBackend::Native(p) => &p.circuit_state,
+        }
+    }
+
+    pub fn reset(&mut self, t_water: f32) {
+        match self {
+            PlantBackend::Hlo(p) => p.reset(t_water),
+            PlantBackend::Native(p) => p.reset(t_water),
+        }
+    }
+
+    /// Simulated seconds advanced per tick.
+    pub fn tick_seconds(&self, pp: &PlantParams) -> f64 {
+        self.substeps() as f64 * pp.dt_substep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("hlo".parse::<BackendKind>().unwrap(), BackendKind::Hlo);
+        assert_eq!("auto".parse::<BackendKind>().unwrap(), BackendKind::Auto);
+        assert!("x".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn native_backend_without_artifacts() {
+        let pp = PlantParams::default();
+        let mut b = PlantBackend::create(
+            BackendKind::Native,
+            Path::new("/nonexistent"),
+            13,
+            &pp,
+            1,
+            20.0,
+        )
+        .unwrap();
+        assert_eq!(b.n_nodes(), 13);
+        assert_eq!(b.n_padded(), 64);
+        let mut out = TickOutput::new(b.n_padded());
+        let controls = vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+        let util = vec![1.0f32; b.n_padded() * NC];
+        b.tick(&controls, &util, &mut out).unwrap();
+        assert!(out.scalars[SC_P_DC] > 1000.0);
+    }
+
+    #[test]
+    fn auto_falls_back_to_native() {
+        let pp = PlantParams::default();
+        let b = PlantBackend::create(
+            BackendKind::Auto,
+            Path::new("/nonexistent"),
+            13,
+            &pp,
+            1,
+            20.0,
+        )
+        .unwrap();
+        assert_eq!(b.kind_name(), "native");
+    }
+}

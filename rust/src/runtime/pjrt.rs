@@ -1,0 +1,174 @@
+//! PJRT execution of the AOT-lowered plant (the request-path hot loop).
+//!
+//! Loads `artifacts/plant_step_n{N}.hlo.txt` (HLO *text* — see aot.py for
+//! why not serialized protos), compiles it once on the PJRT CPU client,
+//! and executes it every coordinator tick. Python never runs here.
+//!
+//! Hot-path notes (EXPERIMENTS.md §Perf): the static lottery arrays
+//! (g/p_dyn/p_idle/active) are uploaded to device buffers once and reused
+//! via `execute_b`; only the state + util + controls change per tick.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::plant::layout::*;
+use crate::plant::{PlantStatic, TickOutput};
+
+/// A compiled plant executable bound to a PJRT client.
+pub struct HloPlant {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_nodes: usize,
+    pub n_padded: usize,
+    pub substeps: usize,
+    /// Device-resident static inputs (g, p_dyn, p_idle, active).
+    static_bufs: Vec<xla::PjRtBuffer>,
+    /// Host-side state mirrors.
+    pub node_state: Vec<f32>,
+    pub circuit_state: Vec<f32>,
+    /// Reusable host literals for the per-tick uploads.
+    client: xla::PjRtClient,
+    /// Executions since construction (telemetry).
+    pub ticks_executed: u64,
+}
+
+impl HloPlant {
+    /// Load + compile an HLO text file.
+    pub fn load(
+        client: &xla::PjRtClient,
+        hlo_path: &Path,
+        st: &PlantStatic,
+        substeps: usize,
+        t_water: f32,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("hlo path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", hlo_path.display()))?;
+
+        let npad = st.n_padded;
+        let dev = client
+            .addressable_devices()
+            .into_iter()
+            .next()
+            .context("no pjrt device")?;
+        let up = |data: &[f32], rows: usize, cols: usize| -> Result<xla::PjRtBuffer> {
+            client
+                .buffer_from_host_buffer(data, &[rows, cols], Some(&dev))
+                .map_err(|e| anyhow::anyhow!("upload: {e}"))
+        };
+        let static_bufs = vec![
+            up(&st.g, npad, NG)?,
+            up(&st.p_dyn, npad, NC)?,
+            up(&st.p_idle, npad, NC)?,
+            up(&st.active, npad, NC)?,
+        ];
+
+        Ok(HloPlant {
+            exe,
+            n_nodes: st.n_nodes,
+            n_padded: npad,
+            substeps,
+            static_bufs,
+            node_state: vec![t_water; npad * S],
+            circuit_state: crate::plant::circuits::initial_circuit_state(
+                t_water,
+                &crate::config::constants::PlantParams::default(),
+            ),
+            client: client.clone(),
+            ticks_executed: 0,
+        })
+    }
+
+    pub fn reset(&mut self, t_water: f32) {
+        self.node_state.fill(t_water);
+        self.circuit_state = crate::plant::circuits::initial_circuit_state(
+            t_water,
+            &crate::config::constants::PlantParams::default(),
+        );
+    }
+
+    /// Execute one tick: uploads state/util/controls, runs the executable,
+    /// downloads the 4-tuple (node_state', circuit_state', node_obs,
+    /// scalars) and refreshes the host mirrors.
+    pub fn tick(&mut self, controls: &[f32], util: &[f32],
+                out: &mut TickOutput) -> Result<()> {
+        let npad = self.n_padded;
+        debug_assert_eq!(util.len(), npad * NC);
+        debug_assert_eq!(controls.len(), CT);
+
+        let dev = self
+            .client
+            .addressable_devices()
+            .into_iter()
+            .next()
+            .context("no pjrt device")?;
+        let b_state = self
+            .client
+            .buffer_from_host_buffer(&self.node_state, &[npad, S], Some(&dev))
+            .map_err(|e| anyhow::anyhow!("upload state: {e}"))?;
+        let b_cs = self
+            .client
+            .buffer_from_host_buffer(&self.circuit_state, &[CS], Some(&dev))
+            .map_err(|e| anyhow::anyhow!("upload circuit: {e}"))?;
+        let b_util = self
+            .client
+            .buffer_from_host_buffer(util, &[npad, NC], Some(&dev))
+            .map_err(|e| anyhow::anyhow!("upload util: {e}"))?;
+        let b_ctl = self
+            .client
+            .buffer_from_host_buffer(controls, &[CT], Some(&dev))
+            .map_err(|e| anyhow::anyhow!("upload controls: {e}"))?;
+
+        // Parameter order matches model.plant_step:
+        //   node_state, circuit_state, util, controls, g, p_dyn, p_idle, active
+        let args: Vec<&xla::PjRtBuffer> = vec![
+            &b_state,
+            &b_cs,
+            &b_util,
+            &b_ctl,
+            &self.static_bufs[0],
+            &self.static_bufs[1],
+            &self.static_bufs[2],
+            &self.static_bufs[3],
+        ];
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}",
+                        parts.len());
+
+        parts[0]
+            .copy_raw_to(&mut self.node_state)
+            .map_err(|e| anyhow::anyhow!("state out: {e}"))?;
+        parts[1]
+            .copy_raw_to(&mut self.circuit_state)
+            .map_err(|e| anyhow::anyhow!("circuit out: {e}"))?;
+        if out.node_obs.len() != npad * OBS_N {
+            out.node_obs.resize(npad * OBS_N, 0.0);
+        }
+        parts[2]
+            .copy_raw_to(&mut out.node_obs)
+            .map_err(|e| anyhow::anyhow!("obs out: {e}"))?;
+        let mut scalars = vec![0.0f32; NS];
+        parts[3]
+            .copy_raw_to(&mut scalars)
+            .map_err(|e| anyhow::anyhow!("scalars out: {e}"))?;
+        out.scalars.copy_from_slice(&scalars);
+        self.ticks_executed += 1;
+        Ok(())
+    }
+}

@@ -1,0 +1,122 @@
+//! Fixed-bin histogram (the paper's Figs. 4b and 5b).
+
+/// A histogram over [lo, hi) with uniform bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins() as f64
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let i = ((x - self.lo) / self.bin_width()) as usize;
+            let i = i.min(self.bins() - 1);
+            self.counts[i] += 1;
+        }
+    }
+
+    pub fn push_all<I: IntoIterator<Item = f64>>(&mut self, xs: I) {
+        for x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = self.bin_width();
+        (0..self.bins()).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Normalized densities (sum * bin_width = 1 over in-range mass).
+    pub fn densities(&self) -> Vec<f64> {
+        let in_range = (self.total - self.underflow - self.overflow) as f64;
+        if in_range == 0.0 {
+            return vec![0.0; self.bins()];
+        }
+        let w = self.bin_width();
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / (in_range * w))
+            .collect()
+    }
+
+    /// The mode's bin center.
+    pub fn mode(&self) -> f64 {
+        let (i, _) = self
+            .counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .unwrap();
+        self.centers()[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_flows() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push_all([-1.0, 0.0, 0.5, 5.5, 9.99, 10.0, 42.0]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.total, 7);
+    }
+
+    #[test]
+    fn densities_integrate_to_one() {
+        let mut h = Histogram::new(-3.0, 3.0, 60);
+        let mut rng = crate::variability::rng::Rng::new(3);
+        for _ in 0..10_000 {
+            h.push(rng.normal());
+        }
+        let mass: f64 =
+            h.densities().iter().map(|d| d * h.bin_width()).sum();
+        assert!((mass - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mode_of_gaussian_near_mean() {
+        let mut h = Histogram::new(50.0, 110.0, 60);
+        let mut rng = crate::variability::rng::Rng::new(9);
+        for _ in 0..50_000 {
+            h.push(84.0 + 2.8 * rng.normal());
+        }
+        assert!((h.mode() - 84.0).abs() < 1.5, "{}", h.mode());
+    }
+}

@@ -1,0 +1,114 @@
+//! Linear regression / interpolation.
+//!
+//! Fig. 5(b) protocol: "we measure the DC power on most six-core nodes for
+//! various temperatures, interpolate to 80 degC, and then construct a
+//! histogram of the interpolated node power."
+
+/// Ordinary least-squares line fit y = a + b x.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Line {
+    pub a: f64,
+    pub b: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+impl Line {
+    pub fn at(&self, x: f64) -> f64 {
+        self.a + self.b * x
+    }
+}
+
+/// Fit a line through (x, y) samples. Returns None for < 2 points or
+/// degenerate x.
+pub fn fit_line(xs: &[f64], ys: &[f64]) -> Option<Line> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    if sxx < 1e-12 {
+        return None;
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy < 1e-12 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    Some(Line { a, b, r2 })
+}
+
+/// Piecewise-linear interpolation of y at `x` over sorted xs.
+/// Extrapolates with the end segments (as the paper's protocol needs when
+/// 80 degC lies beyond a node's measured band).
+pub fn interp_at(xs: &[f64], ys: &[f64], x: f64) -> Option<f64> {
+    if xs.len() != ys.len() || xs.is_empty() {
+        return None;
+    }
+    if xs.len() == 1 {
+        return Some(ys[0]);
+    }
+    debug_assert!(xs.windows(2).all(|w| w[0] <= w[1]));
+    let i = match xs.iter().position(|&xi| xi >= x) {
+        Some(0) => 1,
+        Some(i) => i,
+        None => xs.len() - 1,
+    };
+    let (x0, x1) = (xs[i - 1], xs[i]);
+    let (y0, y1) = (ys[i - 1], ys[i]);
+    if (x1 - x0).abs() < 1e-12 {
+        return Some(0.5 * (y0 + y1));
+    }
+    Some(y0 + (y1 - y0) * (x - x0) / (x1 - x0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let l = fit_line(&xs, &ys).unwrap();
+        assert!((l.a - 1.0).abs() < 1e-12);
+        assert!((l.b - 2.0).abs() < 1e-12);
+        assert!((l.r2 - 1.0).abs() < 1e-12);
+        assert!((l.at(80.0) - 161.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_rejected() {
+        assert!(fit_line(&[1.0], &[2.0]).is_none());
+        assert!(fit_line(&[2.0, 2.0], &[1.0, 5.0]).is_none());
+    }
+
+    #[test]
+    fn interp_interior_and_extrapolation() {
+        let xs = [60.0, 70.0, 75.0];
+        let ys = [190.0, 200.0, 205.0];
+        assert!((interp_at(&xs, &ys, 65.0).unwrap() - 195.0).abs() < 1e-9);
+        // extrapolate to 80 with the last segment (slope 1 W/K)
+        assert!((interp_at(&xs, &ys, 80.0).unwrap() - 210.0).abs() < 1e-9);
+        // and below with the first segment
+        assert!((interp_at(&xs, &ys, 55.0).unwrap() - 185.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_line_r2_below_one() {
+        let mut rng = crate::variability::rng::Rng::new(8);
+        let xs: Vec<f64> = (0..200).map(|i| i as f64 / 10.0).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|&x| 2.0 + 0.5 * x + rng.normal()).collect();
+        let l = fit_line(&xs, &ys).unwrap();
+        assert!((l.b - 0.5).abs() < 0.05);
+        assert!(l.r2 > 0.7 && l.r2 < 1.0);
+    }
+}

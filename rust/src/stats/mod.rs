@@ -1,0 +1,136 @@
+//! Statistics substrate: the analysis the paper applies to its
+//! measurements — histograms with Gaussian fits (Figs. 4b, 5b), averages
+//! with standard-deviation error bars (Figs. 4a, 5a, 6a), linear
+//! interpolation of per-node power to a reference temperature (Fig. 5b),
+//! and error propagation for the flow-meter accuracies (Figs. 6b, 7).
+
+pub mod gauss;
+pub mod histogram;
+pub mod interp;
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::MAX, max: f64::MIN }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n;
+        self.n += other.n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Mean and population std of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let mut r = Running::new();
+    for &x in xs {
+        r.push(x);
+    }
+    (r.mean(), r.std())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let (m, s) = mean_std(&xs);
+        assert!((m - 4.0).abs() < 1e-12);
+        let var: f64 =
+            xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 5.0;
+        assert!((s - var.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 5.0).collect();
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for &x in &xs[..40] {
+            a.push(x);
+        }
+        for &x in &xs[40..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        let mut all = Running::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.std() - all.std()).abs() < 1e-10);
+        assert_eq!(a.count(), 100);
+    }
+
+    #[test]
+    fn empty_running_is_safe() {
+        let r = Running::new();
+        assert_eq!(r.var(), 0.0);
+        assert_eq!(r.count(), 0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Small self-contained utilities (the vendored crate set has no serde,
+//! clap, or rand — these modules fill the gaps as first-class substrates).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+/// Clamp helper for f32 (stable API, avoids float NaN surprises: NaN -> lo).
+#[inline]
+pub fn clampf(x: f32, lo: f32, hi: f32) -> f32 {
+    if x >= hi {
+        hi
+    } else if x >= lo {
+        x
+    } else {
+        lo
+    }
+}
+
+/// Linear interpolation.
+#[inline]
+pub fn lerp(a: f32, b: f32, t: f32) -> f32 {
+    a + (b - a) * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_works() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+        assert_eq!(clampf(f32::NAN, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn lerp_works() {
+        assert_eq!(lerp(0.0, 10.0, 0.25), 2.5);
+    }
+}

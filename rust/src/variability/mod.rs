@@ -1,0 +1,227 @@
+//! Manufacturing variability: the "silicon lottery" (Figs. 4b, 5b).
+//!
+//! The paper attributes the large spreads in core temperature and node
+//! power "to the manufacturing process of the chips, not to our
+//! liquid-cooling solution". This module draws per-chip/per-core/per-mount
+//! multipliers with the exact algorithm and draw order of
+//! `python/compile/params.py::draw_chip_lottery`, so the Rust native plant
+//! and the AOT-lowered HLO plant see the same silicon.
+
+pub mod rng;
+
+use crate::config::constants::PlantParams;
+use crate::plant::layout::{NC, NG};
+use rng::Rng;
+
+/// Default lottery seed (shared with aot.py).
+pub const DEFAULT_SEED: u64 = 0x1DA7AC001;
+
+/// Per-node variability arrays, node-major.
+#[derive(Debug, Clone)]
+pub struct ChipLottery {
+    pub n_nodes: usize,
+    /// 1.0 if core slot exists (E5630 nodes populate 8 of 12 slots).
+    pub active: Vec<f32>, // [n, NC]
+    /// junction->package conductance 1/R_jc [W/K]
+    pub g_jc: Vec<f32>, // [n, NC]
+    /// per-core dynamic power at 100 % util [W]
+    pub p_dyn: Vec<f32>, // [n, NC]
+    /// per-core idle power [W]
+    pub p_idle: Vec<f32>, // [n, NC]
+    /// pkg->sink conductance per socket [W/K]
+    pub g_sp: Vec<f32>, // [n, 2]
+    /// sink->water conductance [W/K]
+    pub g_sw: Vec<f32>, // [n]
+    /// 1.0 for six-core (E5645) nodes — the only ones in the paper's plots
+    pub six_core: Vec<f32>, // [n]
+}
+
+impl ChipLottery {
+    /// Draw the lottery; mirrors `params.draw_chip_lottery` exactly.
+    pub fn draw(n_nodes: usize, pp: &PlantParams, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // Which nodes are four-core (E5630): scale the paper's 22/216 ratio.
+        let n_four =
+            ((n_nodes as f64 * 22.0 / 216.0) + 0.5).floor() as usize;
+        let mut four_idx = std::collections::BTreeSet::new();
+        if n_four > 0 {
+            let stride = (n_nodes / n_four).max(1);
+            let mut i = 7 % n_nodes;
+            while four_idx.len() < n_four {
+                four_idx.insert(i % n_nodes);
+                i += stride;
+            }
+        }
+
+        let mut lot = ChipLottery {
+            n_nodes,
+            active: vec![0.0; n_nodes * NC],
+            g_jc: vec![0.0; n_nodes * NC],
+            p_dyn: vec![0.0; n_nodes * NC],
+            p_idle: vec![0.0; n_nodes * NC],
+            g_sp: vec![0.0; n_nodes * 2],
+            g_sw: vec![0.0; n_nodes],
+            six_core: vec![0.0; n_nodes],
+        };
+
+        for n in 0..n_nodes {
+            let four = four_idx.contains(&n);
+            lot.six_core[n] = if four { 0.0 } else { 1.0 };
+            let cores_per_chip = if four { 4 } else { 6 };
+            for chip in 0..2 {
+                let m_r_chip = 1.0 + pp.sigma_r_chip * rng.normal();
+                let m_p_chip = 1.0 + pp.sigma_p_chip * rng.normal();
+                for c in 0..6 {
+                    let slot = n * NC + chip * 6 + c;
+                    if c >= cores_per_chip {
+                        lot.active[slot] = 0.0;
+                        lot.g_jc[slot] = 1e-3;
+                        lot.p_dyn[slot] = 0.0;
+                        lot.p_idle[slot] = 0.0;
+                        // Burn the draws to keep the stream aligned.
+                        rng.normal();
+                        rng.normal();
+                        continue;
+                    }
+                    let m_r = (m_r_chip
+                        * (1.0 + pp.sigma_r_core * rng.normal()))
+                    .max(0.35);
+                    let m_p = (m_p_chip
+                        * (1.0 + pp.sigma_p_core * rng.normal()))
+                    .max(0.60);
+                    lot.active[slot] = 1.0;
+                    lot.g_jc[slot] = (1.0 / (pp.r_jc * m_r)) as f32;
+                    lot.p_dyn[slot] = (pp.p_core_dyn * m_p) as f32;
+                    lot.p_idle[slot] = (pp.p_core_idle * m_p) as f32;
+                }
+            }
+            let m_sp0 = (1.0 + pp.sigma_mount * rng.normal()).max(0.5);
+            let m_sp1 = (1.0 + pp.sigma_mount * rng.normal()).max(0.5);
+            let m_sw = (1.0 + pp.sigma_mount * rng.normal()).max(0.5);
+            lot.g_sp[n * 2] = (1.0 / (pp.r_sp * m_sp0)) as f32;
+            lot.g_sp[n * 2 + 1] = (1.0 / (pp.r_sp * m_sp1)) as f32;
+            lot.g_sw[n] = (1.0 / (pp.r_sw * m_sw)) as f32;
+        }
+        lot
+    }
+
+    /// Load a lottery dumped by aot.py (`artifacts/lottery_n{N}.json`)
+    /// so the coordinator uses *exactly* the floats the HLO was built with.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        let n_nodes = j
+            .get("n_nodes")
+            .and_then(|v| v.as_usize())
+            .context("lottery: n_nodes")?;
+        let mat = |k: &str| -> anyhow::Result<Vec<f32>> {
+            let (flat, r, _c) = j
+                .get(k)
+                .and_then(|v| v.as_mat_f64())
+                .with_context(|| format!("lottery: field {k}"))?;
+            anyhow::ensure!(r == n_nodes, "lottery: {k} rows {r} != {n_nodes}");
+            Ok(flat.into_iter().map(|x| x as f32).collect())
+        };
+        let vec1 = |k: &str| -> anyhow::Result<Vec<f32>> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_vec_f64())
+                .with_context(|| format!("lottery: field {k}"))?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect())
+        };
+        Ok(ChipLottery {
+            n_nodes,
+            active: mat("active")?,
+            g_jc: mat("g_jc")?,
+            p_dyn: mat("p_dyn")?,
+            p_idle: mat("p_idle")?,
+            g_sp: mat("g_sp")?,
+            g_sw: vec1("g_sw")?,
+            six_core: vec1("six_core")?,
+        })
+    }
+
+    /// Assemble the [n, NG] variable-conductance matrix (kernel input).
+    /// Channel `G_ADV` carries the nominal advective conductance.
+    pub fn g_var(&self, pp: &PlantParams) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.n_nodes * NG];
+        for n in 0..self.n_nodes {
+            for c in 0..NC {
+                g[n * NG + c] = self.g_jc[n * NC + c];
+            }
+            g[n * NG + NC] = self.g_sp[n * 2];
+            g[n * NG + NC + 1] = self.g_sp[n * 2 + 1];
+            g[n * NG + NC + 2] = self.g_sw[n];
+            g[n * NG + NC + 3] = pp.node_mcp() as f32;
+        }
+        g
+    }
+
+    /// Indices of six-core nodes (the population in the paper's figures).
+    pub fn six_core_nodes(&self) -> Vec<usize> {
+        (0..self.n_nodes).filter(|&n| self.six_core[n] > 0.5).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::constants::PlantParams;
+
+    #[test]
+    fn deterministic() {
+        let pp = PlantParams::default();
+        let a = ChipLottery::draw(8, &pp, 42);
+        let b = ChipLottery::draw(8, &pp, 42);
+        assert_eq!(a.g_jc, b.g_jc);
+        assert_eq!(a.p_dyn, b.p_dyn);
+    }
+
+    #[test]
+    fn four_core_ratio_full_cluster() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(216, &pp, DEFAULT_SEED);
+        let n_four = lot.six_core.iter().filter(|&&s| s == 0.0).count();
+        assert_eq!(n_four, 22);
+        // Four-core nodes have 8 active slots; six-core have 12.
+        for n in 0..216 {
+            let act: f32 = lot.active[n * NC..(n + 1) * NC].iter().sum();
+            if lot.six_core[n] > 0.5 {
+                assert_eq!(act, 12.0);
+            } else {
+                assert_eq!(act, 8.0);
+            }
+        }
+    }
+
+    #[test]
+    fn power_spread_in_band() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(216, &pp, DEFAULT_SEED);
+        let mut node_p = Vec::new();
+        for n in 0..216 {
+            if lot.six_core[n] < 0.5 {
+                continue;
+            }
+            let p: f32 = (0..NC)
+                .map(|c| lot.p_dyn[n * NC + c] + lot.p_idle[n * NC + c])
+                .sum();
+            node_p.push(p);
+        }
+        let mean = node_p.iter().sum::<f32>() / node_p.len() as f32;
+        let var = node_p.iter().map(|p| (p - mean) * (p - mean)).sum::<f32>()
+            / node_p.len() as f32;
+        let sigma = var.sqrt();
+        assert!(sigma > 3.5 && sigma < 7.5, "sigma {sigma}");
+    }
+
+    #[test]
+    fn g_var_layout() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(4, &pp, 1);
+        let g = lot.g_var(&pp);
+        assert_eq!(g.len(), 4 * NG);
+        // advection channel = node m*cp
+        assert!((g[NG - 1] - pp.node_mcp() as f32).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,154 @@
+//! Deterministic RNG mirrored bit-for-bit (integer stream) with
+//! `python/compile/params.py::Rng` so both sides draw the identical
+//! manufacturing lottery from the same seed.
+
+/// One SplitMix64 step.
+#[inline]
+pub fn splitmix64(state: u64) -> (u64, u64) {
+    let state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (state, z ^ (z >> 31))
+}
+
+/// Deterministic RNG (SplitMix64 + Box-Muller), the Python mirror.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed, cached_normal: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let (s, out) = splitmix64(self.state);
+        self.state = s;
+        out
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution (same as Python mirror).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box-Muller (pair-cached, matching Python).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.cached_normal.take() {
+            return v;
+        }
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Exponentially distributed with the given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.uniform()).ln() / rate
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.uniform() * n as f64) as usize % n.max(1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) ("13 randomly selected nodes").
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k.min(n));
+        idx.sort_unstable();
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Known-answer test for seed 0 (standard SplitMix64 vector).
+        let (_, v) = splitmix64(0);
+        assert_eq!(v, 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn python_mirror_stream() {
+        // Golden values from python/compile/params.py::Rng(0x1DA7AC001):
+        //   >>> r = Rng(0x1DA7AC001); [r.next_u64() for _ in range(3)]
+        let mut r = Rng::new(0x1DA7AC001);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        let c = r.next_u64();
+        // Cross-checked against the Python implementation in
+        // tests/cross_lottery.rs using the dumped lottery JSON; here we
+        // only pin determinism and non-degeneracy.
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        let mut r2 = Rng::new(0x1DA7AC001);
+        assert_eq!(a, r2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(123);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Rng::new(99);
+        let s = r.sample_indices(216, 13);
+        assert_eq!(s.len(), 13);
+        for w in s.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(*s.last().unwrap() < 216);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

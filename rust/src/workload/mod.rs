@@ -1,0 +1,46 @@
+//! Workload substrate: the cluster's job load.
+//!
+//! The paper measures under two regimes (Sect. 4): (i) the `stress` tool
+//! pinning all cores of 13 randomly selected nodes, and (ii) "production
+//! mode, i.e., various jobs of different sizes and with different
+//! computing and communication requirements are scheduled and executed by
+//! the batch queueing system". This module provides both: a stress
+//! generator and a batch-queue scheduler (FIFO + backfill) fed by a
+//! synthetic production job mix.
+
+pub mod jobs;
+pub mod scheduler;
+pub mod stress;
+
+use crate::plant::layout::NC;
+
+/// A utilization plan: per-core utilization for every (padded) node slot.
+#[derive(Debug, Clone)]
+pub struct UtilPlan {
+    pub n_padded: usize,
+    pub util: Vec<f32>, // [n_padded * NC]
+}
+
+impl UtilPlan {
+    pub fn idle(n_padded: usize) -> Self {
+        UtilPlan { n_padded, util: vec![0.0; n_padded * NC] }
+    }
+
+    pub fn set_node(&mut self, node: usize, u: f32) {
+        for c in 0..NC {
+            self.util[node * NC + c] = u;
+        }
+    }
+
+    pub fn node_mean(&self, node: usize) -> f32 {
+        self.util[node * NC..(node + 1) * NC].iter().sum::<f32>() / NC as f32
+    }
+}
+
+/// Something that produces per-tick utilization plans.
+pub trait WorkloadSource {
+    /// Advance simulated time by `dt` seconds and refresh `plan`.
+    fn advance(&mut self, dt: f64, plan: &mut UtilPlan);
+    /// Human-readable stats line for the run report.
+    fn stats(&self) -> String;
+}

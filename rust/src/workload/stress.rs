@@ -1,0 +1,125 @@
+//! The `stress` workload of Sect. 4: "a subset of 13 randomly selected
+//! nodes (six-core E5645 processors ...) running a well-defined load (the
+//! standard stress tool)". All cores of the selected nodes pinned at
+//! 100 % utilization; the rest of the cluster idles (or runs a background
+//! load for the production variants).
+
+use super::{UtilPlan, WorkloadSource};
+use crate::variability::rng::Rng;
+
+/// Stress on a random subset of six-core nodes.
+pub struct StressWorkload {
+    pub selected: Vec<usize>,
+    pub util: f32,
+    pub background_util: f32,
+    n_nodes: usize,
+}
+
+impl StressWorkload {
+    /// Select `k` random *six-core* nodes (the paper's figures only
+    /// include E5645 processors).
+    pub fn new(
+        lot: &crate::variability::ChipLottery,
+        k: usize,
+        seed: u64,
+    ) -> Self {
+        let six = lot.six_core_nodes();
+        let mut rng = Rng::new(seed ^ 0x5757_5757);
+        let picks = rng.sample_indices(six.len(), k);
+        let selected: Vec<usize> = picks.into_iter().map(|i| six[i]).collect();
+        StressWorkload {
+            selected,
+            util: 1.0,
+            background_util: 0.0,
+            n_nodes: lot.n_nodes,
+        }
+    }
+
+    /// All nodes under stress (cluster-wide maximum load, Sect. 3's
+    /// equilibrium scenario).
+    pub fn full(n_nodes: usize) -> Self {
+        StressWorkload {
+            selected: (0..n_nodes).collect(),
+            util: 1.0,
+            background_util: 0.0,
+            n_nodes,
+        }
+    }
+
+    /// Whole cluster idle.
+    pub fn idle(n_nodes: usize) -> Self {
+        StressWorkload {
+            selected: Vec::new(),
+            util: 0.0,
+            background_util: 0.0,
+            n_nodes,
+        }
+    }
+}
+
+impl WorkloadSource for StressWorkload {
+    fn advance(&mut self, _dt: f64, plan: &mut UtilPlan) {
+        for u in plan.util.iter_mut() {
+            *u = 0.0;
+        }
+        // background on all real nodes
+        if self.background_util > 0.0 {
+            for n in 0..self.n_nodes {
+                plan.set_node(n, self.background_util);
+            }
+        }
+        for &n in &self.selected {
+            plan.set_node(n, self.util);
+        }
+    }
+
+    fn stats(&self) -> String {
+        format!(
+            "stress: {} nodes @ util={:.2} (background {:.2})",
+            self.selected.len(),
+            self.util,
+            self.background_util
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::constants::PlantParams;
+    use crate::variability::ChipLottery;
+
+    #[test]
+    fn selects_only_six_core_nodes() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(216, &pp, 1);
+        let w = StressWorkload::new(&lot, 13, 42);
+        assert_eq!(w.selected.len(), 13);
+        for &n in &w.selected {
+            assert!(lot.six_core[n] > 0.5, "node {n} is four-core");
+        }
+    }
+
+    #[test]
+    fn plan_has_exactly_selected_nodes_busy() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(216, &pp, 1);
+        let mut w = StressWorkload::new(&lot, 13, 42);
+        let mut plan = UtilPlan::idle(256);
+        w.advance(5.0, &mut plan);
+        let busy: Vec<usize> =
+            (0..256).filter(|&n| plan.node_mean(n) > 0.0).collect();
+        assert_eq!(busy, w.selected);
+    }
+
+    #[test]
+    fn deterministic_selection() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(216, &pp, 1);
+        let a = StressWorkload::new(&lot, 13, 42);
+        let b = StressWorkload::new(&lot, 13, 42);
+        assert_eq!(a.selected, b.selected);
+        let c = StressWorkload::new(&lot, 13, 43);
+        assert_ne!(a.selected, c.selected);
+    }
+}

@@ -1,0 +1,140 @@
+//! Coordinator-level integration tests on the native backend (fast, no
+//! artifacts needed): regulation, workloads, failover, energy accounting.
+
+use idatacool::config::{SimConfig, WorkloadKind};
+use idatacool::coordinator::supervisor::Fault;
+use idatacool::coordinator::SimulationDriver;
+
+fn base(n: usize) -> SimConfig {
+    let mut cfg = SimConfig::idatacool_full();
+    cfg.n_nodes = n;
+    cfg.backend = "native".into();
+    cfg.sensor_noise = false;
+    cfg
+}
+
+#[test]
+fn pid_regulates_t_out_to_setpoint() {
+    let mut cfg = base(216);
+    cfg.workload = WorkloadKind::Stress;
+    cfg.stress_nodes = 216; // full stress: plenty of heat
+    cfg.t_out_setpoint = 63.0;
+    cfg.t_water_init = 60.0;
+    cfg.duration_s = 5400.0;
+    let mut driver = SimulationDriver::new(cfg).unwrap();
+    let res = driver.run(1).unwrap();
+    let tail = &res.trace[res.trace.len() - 60..];
+    let mean: f64 =
+        tail.iter().map(|t| t.t_rack_out).sum::<f64>() / tail.len() as f64;
+    assert!((mean - 63.0).abs() < 0.8, "settled at {mean}");
+}
+
+#[test]
+fn production_day_smoke() {
+    let mut cfg = base(216);
+    cfg.duration_s = 1800.0;
+    cfg.t_water_init = 63.0;
+    let mut driver = SimulationDriver::new(cfg).unwrap();
+    let res = driver.run(6).unwrap();
+    assert!(res.energy.mean_p_ac() > 10_000.0, "{}", res.energy.mean_p_ac());
+    assert!(res.energy.heat_in_water_fraction() > 0.2);
+    assert!(res.trace.iter().all(|t| t.core_max < 101.0));
+}
+
+#[test]
+fn chiller_failure_failover_keeps_rack_bounded() {
+    let mut cfg = base(216);
+    cfg.workload = WorkloadKind::Stress;
+    cfg.stress_nodes = 216;
+    cfg.t_out_setpoint = 67.0;
+    cfg.t_water_init = 65.0;
+    cfg.duration_s = 7200.0;
+    let mut driver = SimulationDriver::with_faults(
+        cfg,
+        vec![Fault::ChillerFailure { start_s: 1800.0, end_s: 5400.0 }],
+    )
+    .unwrap();
+    let res = driver.run(1).unwrap();
+    let max_during = res
+        .trace
+        .iter()
+        .filter(|t| t.t_s >= 1800.0 && t.t_s <= 5400.0)
+        .map(|t| t.t_rack_out)
+        .fold(0.0f64, f64::max);
+    assert!(max_during < 73.0, "rack ran away to {max_during}");
+    // supervisor must have logged the state change
+    assert!(res.events.iter().any(|e| e.msg.contains("ChillerDown")));
+    // and the chiller must be re-enabled afterwards
+    assert!(res.trace.iter().rev().take(20).any(|t| t.chiller_on));
+}
+
+#[test]
+fn pump_failure_throttles_but_survives() {
+    let mut cfg = base(13);
+    cfg.workload = WorkloadKind::Stress;
+    cfg.stress_nodes = 13;
+    cfg.t_water_init = 60.0;
+    cfg.t_out_setpoint = 65.0;
+    cfg.duration_s = 2400.0;
+    let mut driver = SimulationDriver::with_faults(
+        cfg,
+        vec![Fault::PumpFailure { start_s: 600.0, end_s: 1200.0 }],
+    )
+    .unwrap();
+    let res = driver.run(1).unwrap();
+    // cores heat up during the pump outage and must throttle, not exceed
+    // the silicon limit by more than the band
+    let max_core =
+        res.trace.iter().map(|t| t.core_max).fold(0.0f64, f64::max);
+    assert!(max_core < 102.5, "cores ran to {max_core}");
+    let throttled = res.trace.iter().any(|t| t.throttling > 0);
+    assert!(throttled, "pump failure should force throttling");
+}
+
+#[test]
+fn idle_cluster_uses_little_power() {
+    let mut cfg = base(13);
+    cfg.workload = WorkloadKind::Idle;
+    cfg.duration_s = 900.0;
+    let mut driver = SimulationDriver::new(cfg).unwrap();
+    let res = driver.run(6).unwrap();
+    // 13 nodes x (12 x ~1.9 idle + 44 base) ~ 0.9 kW DC + PSU + switches
+    let p = res.energy.mean_p_ac();
+    assert!(p < 6_000.0, "{p}");
+}
+
+#[test]
+fn sensor_noise_perturbs_but_does_not_bias() {
+    let mut quiet = base(13);
+    quiet.duration_s = 900.0;
+    quiet.workload = WorkloadKind::Stress;
+    quiet.stress_nodes = 13;
+    let mut noisy = quiet.clone();
+    noisy.sensor_noise = true;
+    let r1 = SimulationDriver::new(quiet).unwrap().run(1).unwrap();
+    let r2 = SimulationDriver::new(noisy).unwrap().run(1).unwrap();
+    let m1: f64 = r1.trace.iter().map(|t| t.t_rack_out).sum::<f64>()
+        / r1.trace.len() as f64;
+    let m2: f64 = r2.trace.iter().map(|t| t.t_rack_out).sum::<f64>()
+        / r2.trace.len() as f64;
+    assert!((m1 - m2).abs() < 0.5, "noise bias: {m1} vs {m2}");
+    // but individual samples must differ
+    assert!(r1
+        .trace
+        .iter()
+        .zip(&r2.trace)
+        .any(|(a, b)| (a.t_rack_out - b.t_rack_out).abs() > 1e-6));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let mut cfg = base(13);
+    cfg.duration_s = 600.0;
+    cfg.sensor_noise = true;
+    let a = SimulationDriver::new(cfg.clone()).unwrap().run(1).unwrap();
+    let b = SimulationDriver::new(cfg).unwrap().run(1).unwrap();
+    for (x, y) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(x.t_rack_out, y.t_rack_out);
+        assert_eq!(x.p_ac, y.p_ac);
+    }
+}

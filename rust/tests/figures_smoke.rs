@@ -1,0 +1,100 @@
+//! End-to-end smoke of the figure harness at test-sized windows: every
+//! figure id must run and produce sane, paper-shaped output.
+
+use idatacool::config::SimConfig;
+use idatacool::figures::{self, sweep::SweepOptions};
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::idatacool_full();
+    c.backend = "native".into(); // fast + artifact-independent
+    c.sensor_noise = true;
+    c
+}
+
+fn tiny() -> SweepOptions {
+    SweepOptions {
+        settle_s: 150.0,
+        measure_s: 120.0,
+        settle_tol: 3.0,
+        max_extra_settle_s: 300.0,
+        histogram_samples: 2,
+        equilibrium_s: 2000.0,
+    }
+}
+
+#[test]
+fn sweep_figures_have_paper_shape() {
+    let data =
+        figures::sweep::run_sweep(&cfg(), &[50.0, 60.0, 68.0], &tiny())
+            .unwrap();
+    assert_eq!(data.points.len(), 3);
+
+    let f4a = figures::fig4a(&data);
+    let dts = f4a.col("dt_core_out").unwrap();
+    // DT(core-out) in the paper's 14..20 band, non-decreasing-ish
+    for &dt in &dts {
+        assert!((12.0..22.0).contains(&dt), "dt {dt}");
+    }
+    assert!(*dts.last().unwrap() > dts.first().unwrap() - 0.5);
+
+    let f6a = figures::fig6a(&data);
+    let rel = f6a.col("rel_power").unwrap();
+    assert!(rel[0] == 1.0);
+    assert!(*rel.last().unwrap() > 1.02 && *rel.last().unwrap() < 1.12,
+            "power rise {}", rel.last().unwrap());
+
+    let f7a = figures::fig7a(&data);
+    let hiw = f7a.col("heat_in_water").unwrap();
+    assert!(*hiw.first().unwrap() > *hiw.last().unwrap(),
+            "heat-in-water must fall with T");
+    assert!((0.3..0.8).contains(hiw.first().unwrap()));
+
+    let f7b = figures::fig7b(&data);
+    let pd = f7b.col("transferred_frac").unwrap();
+    assert!(*pd.last().unwrap() > *pd.first().unwrap(),
+            "transferred fraction must rise with T");
+    // Fig 7b significantly lower than Fig 7a (paper's P_loss observation)
+    assert!(*pd.last().unwrap() < *hiw.last().unwrap());
+
+    let f5b = figures::fig5b(&data);
+    assert!(f5b.notes[0].contains("mu="));
+}
+
+#[test]
+fn fig4b_histogram_fits_near_paper() {
+    let mut c = cfg();
+    c.duration_s = 600.0;
+    let s = figures::fig4b(&c, &tiny()).unwrap();
+    // note carries the fit: mu should be in the paper's neighborhood
+    let note = &s.notes[0];
+    let mu: f64 = note
+        .split("mu=")
+        .nth(1)
+        .unwrap()
+        .split(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((78.0..90.0).contains(&mu), "fit mu {mu} from note {note}");
+}
+
+#[test]
+fn equilibrium_settles_in_band() {
+    let s = figures::equilibrium(&cfg(), &tiny()).unwrap();
+    let t_out = s.col("t_out").unwrap();
+    // tiny run won't fully settle, but must be heating monotonically
+    // through the standby band and past 40 degC
+    assert!(t_out.last().unwrap() > &40.0, "{}", t_out.last().unwrap());
+    assert!(t_out.windows(2).filter(|w| w[1] < w[0] - 0.5).count() < 3);
+}
+
+#[test]
+fn manifold_ablation_shape() {
+    let s = figures::manifold_ablation(&cfg());
+    let t = s.col("imb_tichelmann").unwrap();
+    let d = s.col("imb_direct").unwrap();
+    for (a, b) in t.iter().zip(&d) {
+        assert!(b > a, "direct return must be worse ({b} vs {a})");
+    }
+}

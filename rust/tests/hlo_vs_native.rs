@@ -1,0 +1,173 @@
+//! Cross-layer integration: the AOT HLO plant (JAX/Pallas via PJRT) must
+//! match the native Rust mirror trajectory-for-trajectory.
+//!
+//! Skips (with a note) when `make artifacts` has not run.
+
+use std::path::Path;
+
+use idatacool::config::constants::PlantParams;
+use idatacool::plant::layout::*;
+use idatacool::plant::TickOutput;
+use idatacool::runtime::{BackendKind, PlantBackend};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn pair(n: usize) -> Option<(PlantBackend, PlantBackend, PlantParams)> {
+    let art = artifacts()?;
+    let pp = PlantParams::from_artifacts(art);
+    let hlo = PlantBackend::create(
+        BackendKind::Hlo, art, n, &pp, 0x1DA7AC001, 20.0)
+        .expect("hlo backend");
+    let nat = PlantBackend::create(
+        BackendKind::Native, art, n, &pp, 0x1DA7AC001, 20.0)
+        .expect("native backend");
+    Some((hlo, nat, pp))
+}
+
+fn run_compare(n: usize, ticks: usize, controls: Vec<f32>, util_fill: f32)
+               -> Option<(f32, f32)> {
+    let (mut hlo, mut nat, _pp) = pair(n)?;
+    let npad = hlo.n_padded();
+    let util = vec![util_fill; npad * NC];
+    let mut oh = TickOutput::new(npad);
+    let mut on = TickOutput::new(npad);
+    let mut max_dt = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for _ in 0..ticks {
+        hlo.tick(&controls, &util, &mut oh).unwrap();
+        nat.tick(&controls, &util, &mut on).unwrap();
+        for (a, b) in hlo.node_state().iter().zip(nat.node_state()) {
+            max_dt = max_dt.max((a - b).abs());
+        }
+        for i in 0..NS {
+            let d = (oh.scalars[i] - on.scalars[i]).abs()
+                / oh.scalars[i].abs().max(1.0);
+            max_rel = max_rel.max(d);
+        }
+    }
+    Some((max_dt, max_rel))
+}
+
+fn ctl(valve: f32, flow: f32) -> Vec<f32> {
+    vec![valve, 1.0, 18.0, 8.0, 9000.0, flow, 0.0, 0.0]
+}
+
+#[test]
+fn trajectories_agree_stress() {
+    if let Some((dt, rel)) = run_compare(4, 60, ctl(0.0, 0.55), 1.0) {
+        assert!(dt < 0.05, "node state diverged by {dt}");
+        assert!(rel < 0.01, "scalars diverged by {rel}");
+    }
+}
+
+#[test]
+fn trajectories_agree_idle() {
+    if let Some((dt, rel)) = run_compare(4, 60, ctl(0.0, 0.55), 0.0) {
+        assert!(dt < 0.05, "{dt}");
+        assert!(rel < 0.01, "{rel}");
+    }
+}
+
+#[test]
+fn trajectories_agree_valve_open() {
+    if let Some((dt, rel)) = run_compare(4, 60, ctl(1.0, 0.55), 0.8) {
+        assert!(dt < 0.05, "{dt}");
+        assert!(rel < 0.01, "{rel}");
+    }
+}
+
+#[test]
+fn trajectories_agree_full_cluster() {
+    if let Some((dt, rel)) = run_compare(216, 20, ctl(0.3, 0.55), 0.9) {
+        assert!(dt < 0.05, "{dt}");
+        assert!(rel < 0.01, "{rel}");
+    }
+}
+
+#[test]
+fn trajectories_agree_pump_failure() {
+    let mut c = ctl(0.0, 0.55);
+    c[U_PUMP_FAIL] = 1.0;
+    if let Some((dt, _rel)) = run_compare(4, 30, c, 1.0) {
+        assert!(dt < 0.05, "{dt}");
+    }
+}
+
+#[test]
+fn hlo_reset_reproduces_trajectory() {
+    let Some((mut hlo, _nat, _pp)) = pair(4) else { return };
+    let npad = hlo.n_padded();
+    let util = vec![1.0f32; npad * NC];
+    let controls = ctl(0.0, 0.55);
+    let mut out = TickOutput::new(npad);
+    let mut first = Vec::new();
+    for _ in 0..10 {
+        hlo.tick(&controls, &util, &mut out).unwrap();
+        first.push(out.scalars[SC_T_RACK_OUT]);
+    }
+    hlo.reset(20.0);
+    for i in 0..10 {
+        hlo.tick(&controls, &util, &mut out).unwrap();
+        assert_eq!(out.scalars[SC_T_RACK_OUT], first[i], "tick {i}");
+    }
+}
+
+#[test]
+fn lottery_matches_python_dump() {
+    // The lottery JSON dumped by aot.py must equal the Rust draw.
+    let Some(art) = artifacts() else { return };
+    let pp = PlantParams::from_artifacts(art);
+    let text = std::fs::read_to_string(art.join("lottery_n13.json")).unwrap();
+    let j = idatacool::util::json::Json::parse(&text).unwrap();
+    let from_py = idatacool::variability::ChipLottery::from_json(&j).unwrap();
+    let seed = idatacool::util::json::Json::parse(
+        &std::fs::read_to_string(art.join("manifest.json")).unwrap())
+        .unwrap()
+        .get("seed")
+        .and_then(|v| v.as_f64())
+        .unwrap() as u64;
+    let drawn = idatacool::variability::ChipLottery::draw(13, &pp, seed);
+    for (a, b) in from_py.g_jc.iter().zip(&drawn.g_jc) {
+        assert!((a - b).abs() < 2e-4 * a.abs().max(1.0),
+                "lottery drift: {a} vs {b}");
+    }
+    for (a, b) in from_py.p_dyn.iter().zip(&drawn.p_dyn) {
+        assert!((a - b).abs() < 2e-4 * a.abs().max(1.0));
+    }
+    assert_eq!(from_py.six_core, drawn.six_core);
+}
+
+#[test]
+fn params_json_matches_rust_defaults() {
+    let Some(art) = artifacts() else { return };
+    let pp_art = PlantParams::from_artifacts(art);
+    let pp_def = PlantParams::default();
+    // Single-source-of-truth check: aot params == rust defaults.
+    assert_eq!(pp_art, pp_def,
+               "params.json drifted from constants.rs defaults");
+}
+
+#[test]
+fn operators_json_matches_rust_build() {
+    let Some(art) = artifacts() else { return };
+    let text = std::fs::read_to_string(art.join("params.json")).unwrap();
+    let j = idatacool::util::json::Json::parse(&text).unwrap();
+    let from_py =
+        idatacool::plant::operators::Operators::from_json(&j).unwrap();
+    let pp = PlantParams::from_artifacts(art);
+    let built = idatacool::plant::operators::Operators::build(&pp);
+    for (a, b) in from_py.a0.iter().zip(&built.a0) {
+        assert!((a - b).abs() < 1e-6, "a0 drift {a} vs {b}");
+    }
+    for (a, b) in from_py.e2.iter().zip(&built.e2) {
+        assert!((a - b).abs() < 1e-6, "e2 drift {a} vs {b}");
+    }
+}

@@ -1,0 +1,300 @@
+//! Property-based tests (hand-rolled harness; the vendored crate set has
+//! no proptest). Each property runs across many seeded random cases; on
+//! failure the seed is printed for reproduction.
+
+use idatacool::config::constants::PlantParams;
+use idatacool::plant::hydraulics::{Manifold, ManifoldKind};
+use idatacool::plant::layout::*;
+use idatacool::plant::node::{self, NodeScratch};
+use idatacool::plant::operators::Operators;
+use idatacool::stats::{gauss, histogram::Histogram, interp, Running};
+use idatacool::util::json::Json;
+use idatacool::variability::rng::Rng;
+use idatacool::workload::scheduler::BatchScheduler;
+use idatacool::workload::{UtilPlan, WorkloadSource};
+
+/// Run `f` for `cases` seeded cases, reporting the failing seed.
+fn forall(cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xFEED_0000 + seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- plant ---
+
+#[test]
+fn prop_junction_exchange_conserves_energy() {
+    // For arbitrary states and conductances, the E1/E2 interior channels
+    // transfer energy without creating it: sum_i C_i dT_i == 0.
+    let pp = PlantParams::default();
+    let ops = Operators::build(&pp);
+    forall(50, |rng| {
+        let t: Vec<f32> =
+            (0..S).map(|_| rng.uniform_in(-20.0, 120.0) as f32).collect();
+        let g: Vec<f32> =
+            (0..NG).map(|_| rng.uniform_in(0.0, 60.0) as f32).collect();
+        let mut total = 0.0f64;
+        for s in 0..S {
+            let mut flux = 0.0f64;
+            for ch in 0..G_ADV {
+                // diff = (E1 T)_ch
+                let mut d = 0.0f64;
+                for k in 0..S {
+                    d += (ops.e1[ch * S + k] * t[k]) as f64;
+                }
+                flux += d * g[ch] as f64 * ops.e2[s * NG + ch] as f64;
+            }
+            total += flux / ops.inv_c[s] as f64;
+        }
+        assert!(total.abs() < 0.5, "created {total} W");
+    });
+}
+
+#[test]
+fn prop_substep_is_contraction_without_power() {
+    // With zero power and zero q, temperatures must stay within the
+    // initial envelope (diffusion cannot create new extremes).
+    let pp = PlantParams::default();
+    let ops = Operators::build(&pp);
+    forall(40, |rng| {
+        let n = 4;
+        let mut t: Vec<f32> =
+            (0..n * S).map(|_| rng.uniform_in(10.0, 95.0) as f32).collect();
+        let mut g: Vec<f32> =
+            (0..n * NG).map(|_| rng.uniform_in(0.5, 40.0) as f32).collect();
+        // no advection (exchanges with external inlet), no air loss
+        for i in 0..n {
+            g[i * NG + G_ADV] = 0.0;
+        }
+        let mut ops2 = ops.clone();
+        ops2.a0.fill(0.0);
+        let zero = vec![0.0f32; n * NC];
+        let q = vec![0.0f32; n * S];
+        let lo = t.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = t.iter().cloned().fold(f32::MIN, f32::max);
+        let mut scratch = NodeScratch::new(n);
+        for _ in 0..200 {
+            node::fused_substep(&mut t, &g, &zero, &zero, &zero, &zero, &q,
+                                &ops2, &pp, &mut scratch, n);
+        }
+        for &x in &t {
+            assert!(x >= lo - 0.01 && x <= hi + 0.01,
+                    "escaped envelope: {x} not in [{lo}, {hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_hotter_inlet_hotter_cores() {
+    // Monotonicity: raising the inlet temperature can only raise the
+    // steady-state core temperatures.
+    let pp = PlantParams::default();
+    let ops = Operators::build(&pp);
+    forall(10, |rng| {
+        let lot = idatacool::variability::ChipLottery::draw(
+            1, &pp, rng.next_u64());
+        let util = vec![1.0f32; NC];
+        let run = |t_in: f32| -> f32 {
+            let mut g = lot.g_var(&pp);
+            g[G_ADV] *= 0.55;
+            let mut q = vec![0.0f32; S];
+            q[IDX_WATER] = g[G_ADV] * t_in * ops.inv_c[IDX_WATER];
+            q[IDX_SINK] = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+                * ops.inv_c[IDX_SINK] as f64) as f32;
+            let mut t = vec![t_in; S];
+            let mut scratch = NodeScratch::new(1);
+            for _ in 0..20_000 {
+                node::fused_substep(&mut t, &g, &util, &lot.p_dyn,
+                                    &lot.p_idle, &lot.active, &q, &ops, &pp,
+                                    &mut scratch, 1);
+            }
+            t[..NC].iter().sum::<f32>() / NC as f32
+        };
+        let t1 = rng.uniform_in(30.0, 55.0) as f32;
+        let t2 = t1 + rng.uniform_in(2.0, 10.0) as f32;
+        assert!(run(t2) > run(t1), "monotonicity violated");
+    });
+}
+
+// ------------------------------------------------------------ hydraulics ---
+
+#[test]
+fn prop_manifold_flows_positive_and_sum() {
+    let pp = PlantParams::default();
+    forall(30, |rng| {
+        let n = 2 + rng.below(96);
+        let kind = if rng.uniform() < 0.5 {
+            ManifoldKind::Tichelmann
+        } else {
+            ManifoldKind::DirectReturn
+        };
+        let m = Manifold::from_params(&pp, n, kind);
+        let total = rng.uniform_in(0.1, 3.0) * n as f64;
+        let q = m.solve_flows(total);
+        let sum: f64 = q.iter().sum();
+        assert!((sum - total).abs() < 1e-6 * total.max(1.0));
+        assert!(q.iter().all(|&x| x > 0.0), "non-positive branch flow");
+    });
+}
+
+// -------------------------------------------------------------- scheduler ---
+
+#[test]
+fn prop_scheduler_never_oversubscribes_or_leaks() {
+    forall(8, |rng| {
+        let n = 8 + rng.below(128);
+        let load = rng.uniform_in(0.3, 0.98);
+        let mut s = BatchScheduler::new(n, load, rng.next_u64());
+        let mut plan = UtilPlan::idle(n);
+        let mut max_alloc = 0;
+        for _ in 0..800 {
+            s.advance(rng.uniform_in(5.0, 120.0), &mut plan);
+            max_alloc = max_alloc.max(s.allocated_nodes());
+            assert!(s.allocated_nodes() <= n);
+            // plan is consistent with allocation
+            let busy = (0..n).filter(|&i| plan.node_mean(i) > 0.0).count();
+            assert_eq!(busy, s.allocated_nodes());
+        }
+        // long-run accounting: started >= finished
+        assert!(s.started >= s.finished);
+    });
+}
+
+// ------------------------------------------------------------------ stats ---
+
+#[test]
+fn prop_running_matches_two_pass() {
+    forall(40, |rng| {
+        let n = 2 + rng.below(500);
+        let xs: Vec<f64> =
+            (0..n).map(|_| rng.uniform_in(-1e3, 1e3)).collect();
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!((r.mean() - mean).abs() < 1e-9 * mean.abs().max(1.0));
+        assert!((r.var() - var).abs() < 1e-7 * var.max(1.0));
+    });
+}
+
+#[test]
+fn prop_gaussian_fit_recovers_parameters() {
+    forall(10, |rng| {
+        let mu = rng.uniform_in(-50.0, 200.0);
+        let sigma = rng.uniform_in(0.5, 20.0);
+        let xs: Vec<f64> =
+            (0..8000).map(|_| mu + sigma * rng.normal()).collect();
+        let g = gauss::fit_sigma_clipped(&xs, 2.5, 8);
+        assert!((g.mu - mu).abs() < 0.15 * sigma, "mu {} vs {mu}", g.mu);
+        assert!((g.sigma - sigma).abs() < 0.12 * sigma,
+                "sigma {} vs {sigma}", g.sigma);
+    });
+}
+
+#[test]
+fn prop_histogram_mass_conserved() {
+    forall(30, |rng| {
+        let mut h = Histogram::new(0.0, 100.0, 1 + rng.below(200));
+        let n = 1 + rng.below(5000);
+        for _ in 0..n {
+            h.push(rng.uniform_in(-20.0, 120.0));
+        }
+        let binned: u64 = h.counts.iter().sum();
+        assert_eq!(binned + h.underflow + h.overflow, n as u64);
+    });
+}
+
+#[test]
+fn prop_interp_exact_on_knots_and_bounded_between() {
+    forall(30, |rng| {
+        let n = 2 + rng.below(20);
+        let mut xs: Vec<f64> =
+            (0..n).map(|_| rng.uniform_in(0.0, 100.0)).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        if xs.len() < 2 {
+            return;
+        }
+        let ys: Vec<f64> =
+            xs.iter().map(|_| rng.uniform_in(-10.0, 10.0)).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            let y = interp::interp_at(&xs, &ys, x).unwrap();
+            assert!((y - ys[i]).abs() < 1e-6, "not exact on knot");
+        }
+        // between two adjacent knots the value is within their envelope
+        for w in xs.windows(2).zip(ys.windows(2)) {
+            let (xw, yw) = w;
+            let mid = 0.5 * (xw[0] + xw[1]);
+            let y = interp::interp_at(&xs, &ys, mid).unwrap();
+            let lo = yw[0].min(yw[1]) - 1e-9;
+            let hi = yw[0].max(yw[1]) + 1e-9;
+            assert!(y >= lo && y <= hi);
+        }
+    });
+}
+
+// ------------------------------------------------------------------- json ---
+
+#[test]
+fn prop_json_roundtrip_numbers() {
+    forall(60, |rng| {
+        let v = rng.uniform_in(-1e12, 1e12);
+        let text = format!("{{\"x\": {v}}}");
+        let j = Json::parse(&text).unwrap();
+        let got = j.get("x").unwrap().as_f64().unwrap();
+        assert!((got - v).abs() <= 1e-6 * v.abs().max(1.0));
+    });
+}
+
+#[test]
+fn prop_json_display_reparses() {
+    forall(40, |rng| {
+        // build a random nested value, display it, reparse it
+        fn build(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { 0 } else { rng.below(5) } {
+                0 => Json::Num((rng.uniform_in(-1e6, 1e6) * 100.0).round()
+                               / 100.0),
+                1 => Json::Bool(rng.uniform() < 0.5),
+                2 => Json::Str(format!("s{}", rng.below(1000))),
+                3 => Json::Arr((0..rng.below(4))
+                    .map(|_| build(rng, depth - 1))
+                    .collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..rng.below(4) {
+                        m.insert(format!("k{i}"), build(rng, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = build(rng, 3);
+        let text = v.to_string();
+        let re = Json::parse(&text).unwrap();
+        assert_eq!(v, re, "roundtrip failed for {text}");
+    });
+}
+
+// -------------------------------------------------------------------- pid ---
+
+#[test]
+fn prop_pid_output_always_in_bounds() {
+    forall(40, |rng| {
+        let mut pid = idatacool::coordinator::pid::Pid::valve_default();
+        for _ in 0..300 {
+            let e = rng.uniform_in(-100.0, 100.0);
+            let dt = rng.uniform_in(0.1, 30.0);
+            let u = pid.update(e, dt);
+            assert!((0.0..=1.0).contains(&u), "u={u}");
+        }
+    });
+}
