@@ -21,8 +21,10 @@ fn main() -> anyhow::Result<()> {
     cfg.pp = idatacool::config::constants::PlantParams::from_artifacts(
         &cfg.artifacts_dir,
     );
-    let mut opts = SweepOptions::default();
-    opts.equilibrium_s = args.f64_or("duration", 16_000.0);
+    let opts = SweepOptions {
+        equilibrium_s: args.f64_or("duration", 16_000.0),
+        ..SweepOptions::default()
+    };
 
     println!("Sect. 3 equilibrium experiment ({} nodes)", cfg.n_nodes);
     let s = figures::equilibrium(&cfg, &opts)?;

@@ -50,12 +50,16 @@ fn main() -> anyhow::Result<()> {
 
     // --- regulation quality --------------------------------------------------
     let t_outs: Vec<f64> = res.trace.iter().map(|t| t.t_rack_out).collect();
-    let (mu, sigma) = idatacool::stats::mean_std(&t_outs);
-    println!("\n--- regulation ---");
-    println!("T_out = {mu:.2} +- {sigma:.2} degC (setpoint {})",
-             driver.cfg.t_out_setpoint);
-    let ts: Vec<f64> = res.trace.iter().map(|t| t.t_s / 3600.0).collect();
-    println!("{}", ascii_scatter(&ts, &t_outs, "t [h]", "T_out [degC]", 64, 12));
+    if !t_outs.is_empty() {
+        let (mu, sigma) = idatacool::stats::mean_std(&t_outs);
+        println!("\n--- regulation ---");
+        println!("T_out = {mu:.2} +- {sigma:.2} degC (setpoint {})",
+                 driver.cfg.t_out_setpoint);
+        let ts: Vec<f64> =
+            res.trace.iter().map(|t| t.t_s / 3600.0).collect();
+        println!("{}",
+                 ascii_scatter(&ts, &t_outs, "t [h]", "T_out [degC]", 64, 12));
+    }
 
     // --- Fig. 4b-style core histogram at the end of the run ------------------
     let temps = driver.core_temperatures();

@@ -8,11 +8,14 @@
 
 use idatacool::config::SimConfig;
 use idatacool::coordinator::SimulationDriver;
+use idatacool::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
     let mut cfg = SimConfig::idatacool_full();
-    cfg.n_nodes = 13; // small: quickstart should finish in seconds
-    cfg.duration_s = 1800.0;
+    cfg.n_nodes = args.usize_or("nodes", 13); // small: finishes in seconds
+    cfg.backend = args.str_or("backend", "auto").to_string();
+    cfg.duration_s = args.f64_or("duration", 1800.0);
     cfg.t_out_setpoint = 67.0;
     cfg.t_water_init = 60.0;
 

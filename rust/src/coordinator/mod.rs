@@ -95,6 +95,20 @@ impl SimulationDriver {
         Self::with_faults(cfg, Vec::new())
     }
 
+    /// Construct from a prebuilt config with an explicit seed override and
+    /// fault schedule. This is the fleet engine's entry point: the fleet
+    /// driver builds one config per plant (scenario overrides applied) and
+    /// derives a deterministic per-plant seed, independent of which shard
+    /// thread ends up running the plant.
+    pub fn from_prebuilt(
+        mut cfg: SimConfig,
+        seed: u64,
+        faults: Vec<Fault>,
+    ) -> Result<Self> {
+        cfg.seed = seed;
+        Self::with_faults(cfg, faults)
+    }
+
     pub fn with_faults(cfg: SimConfig, faults: Vec<Fault>) -> Result<Self> {
         let kind: BackendKind = cfg.backend.parse()?;
         let backend = PlantBackend::create(
@@ -301,5 +315,29 @@ impl SimulationDriver {
         let mut wall = 0.0;
         let sample = self.step(tick_s, &mut out, &mut wall)?;
         Ok((out, sample))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fleet engine moves whole drivers across `std::thread::scope`
+    /// shard threads; keep this a compile-time guarantee.
+    #[test]
+    fn simulation_driver_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<SimulationDriver>();
+        assert_send::<RunResult>();
+    }
+
+    #[test]
+    fn from_prebuilt_overrides_seed() {
+        let mut cfg = SimConfig::test_small();
+        cfg.duration_s = 60.0;
+        cfg.seed = 1;
+        let driver =
+            SimulationDriver::from_prebuilt(cfg, 0xBEEF, Vec::new()).unwrap();
+        assert_eq!(driver.cfg.seed, 0xBEEF);
     }
 }

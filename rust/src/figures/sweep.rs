@@ -121,9 +121,7 @@ pub fn run_sweep(cfg: &SimConfig, setpoints: &[f64], opts: &SweepOptions)
         }
 
         // --- measure ------------------------------------------------------
-        let sel = match driver.workload.as_ref() {
-            w => parse_selected(&w.stats(), &driver),
-        };
+        let sel = parse_selected(&driver.workload.stats(), &driver);
         if selected.is_empty() {
             selected = sel.clone();
         }

@@ -1,0 +1,236 @@
+//! Cross-plant aggregation: fleet PUE/ERE distributions, worst-case
+//! throttling, and the facility energy-reuse headline, rendered through
+//! the `report` substrate.
+//!
+//! Definitions (per plant, over the run's energy account):
+//!  * PUE  = E_AC / E_DC — facility electrical input per unit of IT
+//!    (DC-side) energy; >= 1, lower is better.
+//!  * ERE  = (E_AC - E_credit) / E_DC — PUE with the facility-side
+//!    cooling credit (this plant's share of the pooled chiller output)
+//!    subtracted, the energy-reuse-effectiveness analogue.
+//!
+//! Every reduction iterates plants in index order with plain f64
+//! arithmetic, so fleet aggregates are bitwise identical across shard
+//! counts (the determinism acceptance gate).
+
+use crate::report::Series;
+use crate::stats::histogram::Histogram;
+use crate::stats::Running;
+
+use super::facility::FacilityReport;
+use super::PlantRun;
+
+/// Per-plant derived metrics.
+#[derive(Debug, Clone)]
+pub struct PlantMetrics {
+    pub index: usize,
+    pub label: String,
+    pub seed: u64,
+    pub pue: f64,
+    pub ere: f64,
+    /// The plant's own chiller reuse fraction (E_c / E_AC).
+    pub reuse_local: f64,
+    /// Facility cooling credit per unit of electrical input.
+    pub credit_frac: f64,
+    /// Ticks with at least one core in the throttle band.
+    pub throttle_ticks: u64,
+    pub t_out_mean: f64,
+    pub mean_p_ac_w: f64,
+}
+
+/// Fleet-level aggregate: distributions + headline numbers.
+#[derive(Debug, Clone)]
+pub struct FleetAggregate {
+    pub per_plant: Vec<PlantMetrics>,
+    pub pue_stats: Running,
+    pub ere_stats: Running,
+    pub pue_hist: Histogram,
+    pub ere_hist: Histogram,
+    /// Chilled water delivered by the shared facility per unit of fleet
+    /// electrical input — the fleet's headline reuse number.
+    pub facility_reuse_fraction: f64,
+    pub worst_throttle_plant: Option<usize>,
+    pub worst_throttle_ticks: u64,
+    pub fleet_e_ac: f64,
+    pub fleet_e_dc: f64,
+}
+
+fn safe_div(a: f64, b: f64) -> f64 {
+    if b.abs() < 1e-9 {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+impl FleetAggregate {
+    /// Reduce finished plant runs + the facility report (plants must be in
+    /// index order; the fleet driver guarantees it).
+    pub fn build(plants: &[PlantRun], facility: &FacilityReport) -> Self {
+        let mut per_plant = Vec::with_capacity(plants.len());
+        let mut pue_stats = Running::new();
+        let mut ere_stats = Running::new();
+        let mut pue_hist = Histogram::new(1.0, 1.6, 24);
+        let mut ere_hist = Histogram::new(0.6, 1.6, 40);
+        let mut fleet_e_ac = 0.0;
+        let mut fleet_e_dc = 0.0;
+        let mut worst: Option<(usize, u64)> = None;
+
+        for (i, p) in plants.iter().enumerate() {
+            let e = &p.result.energy;
+            let credit_j = facility.plant_credit_j.get(i).copied().unwrap_or(0.0);
+            let pue = safe_div(e.e_ac, e.e_dc);
+            let ere = safe_div(e.e_ac - credit_j, e.e_dc);
+            let mut t_out = Running::new();
+            for s in &p.result.trace {
+                t_out.push(s.t_rack_out);
+            }
+            let throttle_ticks = p
+                .result
+                .trace
+                .iter()
+                .filter(|s| s.throttling > 0)
+                .count() as u64;
+            let is_worse = match worst {
+                None => true,
+                Some((_, w)) => throttle_ticks > w,
+            };
+            if is_worse {
+                worst = Some((p.index, throttle_ticks));
+            }
+            pue_stats.push(pue);
+            ere_stats.push(ere);
+            pue_hist.push(pue);
+            ere_hist.push(ere);
+            fleet_e_ac += e.e_ac;
+            fleet_e_dc += e.e_dc;
+            per_plant.push(PlantMetrics {
+                index: p.index,
+                label: p.label.clone(),
+                seed: p.seed,
+                pue,
+                ere,
+                reuse_local: e.reuse_fraction(),
+                credit_frac: safe_div(credit_j, e.e_ac),
+                throttle_ticks,
+                t_out_mean: t_out.mean(),
+                mean_p_ac_w: e.mean_p_ac(),
+            });
+        }
+
+        FleetAggregate {
+            per_plant,
+            pue_stats,
+            ere_stats,
+            pue_hist,
+            ere_hist,
+            facility_reuse_fraction: facility.reuse_fraction(),
+            worst_throttle_plant: worst.map(|(i, _)| i),
+            worst_throttle_ticks: worst.map(|(_, w)| w).unwrap_or(0),
+            fleet_e_ac,
+            fleet_e_dc,
+        }
+    }
+
+    /// Render the aggregate as report series (per-plant table + PUE/ERE
+    /// distribution histograms).
+    pub fn series(&self) -> Vec<Series> {
+        let mut plants = Series::new(
+            "fleet_plants",
+            "Per-plant fleet metrics",
+            &["plant", "pue", "ere", "reuse_local", "credit_frac",
+              "throttle_ticks", "t_out_mean", "p_ac_kw"],
+        );
+        for m in &self.per_plant {
+            plants.push(vec![
+                m.index as f64,
+                m.pue,
+                m.ere,
+                m.reuse_local,
+                m.credit_frac,
+                m.throttle_ticks as f64,
+                m.t_out_mean,
+                m.mean_p_ac_w / 1e3,
+            ]);
+        }
+        for m in &self.per_plant {
+            plants.note(format!("plant {}: {} (seed {:#x})",
+                                m.index, m.label, m.seed));
+        }
+
+        let mut pue = Series::new(
+            "fleet_pue_hist",
+            "Fleet PUE distribution (E_AC / E_DC)",
+            &["pue", "density"],
+        );
+        for (x, d) in self.pue_hist.centers().into_iter()
+            .zip(self.pue_hist.densities())
+        {
+            pue.push(vec![x, d]);
+        }
+        pue.note(format!("mean {:.4} +- {:.4} over {} plants",
+                         self.pue_stats.mean(), self.pue_stats.std(),
+                         self.per_plant.len()));
+
+        let mut ere = Series::new(
+            "fleet_ere_hist",
+            "Fleet ERE distribution ((E_AC - E_credit) / E_DC)",
+            &["ere", "density"],
+        );
+        for (x, d) in self.ere_hist.centers().into_iter()
+            .zip(self.ere_hist.densities())
+        {
+            ere.push(vec![x, d]);
+        }
+        ere.note(format!("mean {:.4} +- {:.4}; facility reuse {:.1}%",
+                         self.ere_stats.mean(), self.ere_stats.std(),
+                         100.0 * self.facility_reuse_fraction));
+
+        vec![plants, pue, ere]
+    }
+
+    /// One-paragraph headline for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet aggregate: {} plants; PUE {:.4} +- {:.4} \
+             [{:.4}..{:.4}]; ERE {:.4} +- {:.4}; worst throttling {} ticks \
+             (plant {}); fleet E_AC {:.1} kWh; facility energy-reuse \
+             fraction {:.1}%",
+            self.per_plant.len(),
+            self.pue_stats.mean(),
+            self.pue_stats.std(),
+            self.pue_stats.min(),
+            self.pue_stats.max(),
+            self.ere_stats.mean(),
+            self.ere_stats.std(),
+            self.worst_throttle_ticks,
+            self.worst_throttle_plant
+                .map(|i| i.to_string())
+                .unwrap_or_else(|| "-".into()),
+            self.fleet_e_ac / 3.6e6,
+            100.0 * self.facility_reuse_fraction,
+        )
+    }
+
+    /// Order-sensitive bitwise fingerprint of every aggregate number —
+    /// the determinism gate compares this across shard counts.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: u64, v: f64) -> u64 {
+            (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01B3)
+        }
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for m in &self.per_plant {
+            h = mix(h, m.pue);
+            h = mix(h, m.ere);
+            h = mix(h, m.reuse_local);
+            h = mix(h, m.credit_frac);
+            h = mix(h, m.throttle_ticks as f64);
+            h = mix(h, m.t_out_mean);
+            h = mix(h, m.mean_p_ac_w);
+        }
+        h = mix(h, self.facility_reuse_fraction);
+        h = mix(h, self.fleet_e_ac);
+        h = mix(h, self.fleet_e_dc);
+        h
+    }
+}

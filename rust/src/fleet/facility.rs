@@ -1,0 +1,327 @@
+//! The shared facility loop: pooled heat recovery + aggregate adsorption
+//! chiller.
+//!
+//! The paper's energy-reuse path (Sect. 3/4): hot water from the racks
+//! drives an InvenSor adsorption chiller whose chilled-water output cools
+//! *other parts of the computing center*. A fleet of iDataCool plants
+//! shares one such facility: every tick the per-plant recovered heat
+//! (the power transferred into the driving circuits, P_d) is pooled, the
+//! aggregate chiller converts it with the paper's Sect.-4 COP-vs-return-
+//! temperature curve (Fig. 6b) subject to a fleet-scaled capacity cap
+//! (Fig. 6b's P_c^max curve x number of chiller units), and the chilled
+//! output is fed back as a facility-side cooling credit, split across
+//! plants pro rata to their heat contribution.
+//!
+//! The model is pure accounting over the plants' tick traces: it never
+//! perturbs plant physics, so plant runs stay embarrassingly parallel and
+//! the facility pass is bitwise deterministic in plant-index order
+//! regardless of shard count.
+
+use crate::config::constants::PlantParams;
+
+/// Facility-side chiller parameters: the paper's Sect.-4 curves (owned by
+/// `PlantParams` — the single source of truth) scaled to a fleet of
+/// `units` chiller installations.
+#[derive(Debug, Clone)]
+pub struct FacilityParams {
+    /// Plant constants carrying the Sect.-4 chiller curves.
+    pub pp: PlantParams,
+    /// Number of chiller units backing the facility loop.
+    pub units: usize,
+}
+
+impl FacilityParams {
+    /// Derive from the plant constants, one chiller unit per plant.
+    pub fn from_plant(pp: &PlantParams, n_plants: usize) -> Self {
+        FacilityParams { pp: pp.clone(), units: n_plants.max(1) }
+    }
+
+    /// COP vs driving (return) temperature — Fig. 6b. Zero in standby.
+    pub fn cop(&self, t_drive: f64) -> f64 {
+        self.pp.cop(t_drive)
+    }
+
+    /// Chilled-water capacity of one unit [W] vs driving temperature.
+    pub fn pc_max_unit(&self, t_drive: f64) -> f64 {
+        self.pp.pc_max(t_drive)
+    }
+
+    /// Aggregate chilled-water capacity [W] of the facility.
+    pub fn capacity_w(&self, t_drive: f64) -> f64 {
+        self.units as f64 * self.pc_max_unit(t_drive)
+    }
+}
+
+/// One plant's contribution to the facility loop at one tick.
+#[derive(Debug, Clone, Copy)]
+pub struct PlantTick {
+    /// Heat recovered into the plant's driving circuit (P_d) [W].
+    pub p_heat_w: f64,
+    /// The plant's return (rack outlet = driving) temperature [degC].
+    pub t_return: f64,
+    /// The plant's electrical input (P_AC) [W].
+    pub p_ac_w: f64,
+}
+
+/// The facility's response at one tick.
+#[derive(Debug, Clone)]
+pub struct FacilityTick {
+    /// Pooled recovered heat (sum of plant contributions, signed) [W].
+    pub pooled_w: f64,
+    /// Heat-weighted fleet return temperature driving the chiller [degC].
+    pub t_drive: f64,
+    /// Aggregate COP at the driving temperature.
+    pub cop: f64,
+    /// Chilled-water output delivered to the rest of the center [W].
+    pub p_chilled_w: f64,
+    /// Per-plant cooling credit (sums to `p_chilled_w`) [W].
+    pub credits_w: Vec<f64>,
+}
+
+/// Tick-integrating facility model.
+#[derive(Debug, Clone)]
+pub struct FacilityModel {
+    pub params: FacilityParams,
+    /// Integrated pooled recovered heat (signed sum) [J].
+    pub e_pooled: f64,
+    /// Integrated positive (chiller-driving) heat [J].
+    pub e_driven: f64,
+    /// Integrated chilled-water output [J].
+    pub e_chilled: f64,
+    /// Integrated fleet electrical input [J].
+    pub e_ac: f64,
+    pub seconds: f64,
+    pub ticks: u64,
+    pub peak_pooled_w: f64,
+    t_drive_sum: f64,
+    plant_credit_j: Vec<f64>,
+}
+
+/// Frozen summary of a finished facility pass.
+#[derive(Debug, Clone)]
+pub struct FacilityReport {
+    pub e_pooled: f64,
+    pub e_driven: f64,
+    pub e_chilled: f64,
+    pub e_ac: f64,
+    pub seconds: f64,
+    pub ticks: u64,
+    pub peak_pooled_w: f64,
+    /// Time-mean driving temperature [degC].
+    pub t_drive_mean: f64,
+    /// Integrated cooling credit per plant [J]; sums to `e_chilled`.
+    pub plant_credit_j: Vec<f64>,
+    pub units: usize,
+}
+
+impl FacilityReport {
+    /// The headline: facility energy-reuse fraction — chilled water
+    /// delivered to the rest of the center per unit of fleet electricity.
+    pub fn reuse_fraction(&self) -> f64 {
+        if self.e_ac > 1e-9 {
+            self.e_chilled / self.e_ac
+        } else {
+            0.0
+        }
+    }
+
+    /// Effective time-averaged COP of the facility chiller (chilled
+    /// output per unit of *driving* heat — negative contributions from
+    /// heat-absorbing plants are excluded, so this never exceeds the
+    /// curve's `cop_max`).
+    pub fn mean_cop(&self) -> f64 {
+        if self.e_driven > 1e-9 {
+            self.e_chilled / self.e_driven
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "facility: pooled {:.1} kWh over {:.0} s (peak {:.1} kW, mean \
+             T_drive {:.1} degC, {} chiller units) -> chilled {:.1} kWh \
+             (mean COP {:.3}); energy-reuse fraction {:.1}%",
+            self.e_pooled / 3.6e6,
+            self.seconds,
+            self.peak_pooled_w / 1e3,
+            self.t_drive_mean,
+            self.units,
+            self.e_chilled / 3.6e6,
+            self.mean_cop(),
+            100.0 * self.reuse_fraction(),
+        )
+    }
+}
+
+impl FacilityModel {
+    pub fn new(params: FacilityParams, n_plants: usize) -> Self {
+        FacilityModel {
+            params,
+            e_pooled: 0.0,
+            e_driven: 0.0,
+            e_chilled: 0.0,
+            e_ac: 0.0,
+            seconds: 0.0,
+            ticks: 0,
+            peak_pooled_w: f64::MIN,
+            t_drive_sum: 0.0,
+            plant_credit_j: vec![0.0; n_plants],
+        }
+    }
+
+    /// Pool one tick of per-plant contributions (plant-index order) and
+    /// advance the integrals by `dt` seconds.
+    ///
+    /// Invariant (tested): `pooled_w` equals the plain sum of the inputs'
+    /// `p_heat_w`, and `credits_w` sums to `p_chilled_w`.
+    pub fn pool_tick(&mut self, inputs: &[PlantTick], dt: f64) -> FacilityTick {
+        let pooled: f64 = inputs.iter().map(|p| p.p_heat_w).sum();
+        // Only positive contributions drive the chiller (a plant with a
+        // cold tank transiently *absorbs* heat; it cannot be un-pooled).
+        let heat_pos: f64 = inputs.iter().map(|p| p.p_heat_w.max(0.0)).sum();
+        let t_drive = if heat_pos > 1.0 {
+            inputs
+                .iter()
+                .map(|p| p.p_heat_w.max(0.0) * p.t_return)
+                .sum::<f64>()
+                / heat_pos
+        } else if !inputs.is_empty() {
+            inputs.iter().map(|p| p.t_return).sum::<f64>()
+                / inputs.len() as f64
+        } else {
+            0.0
+        };
+        let cop = self.params.cop(t_drive);
+        let p_chilled = (heat_pos * cop).min(self.params.capacity_w(t_drive));
+        let credits_w: Vec<f64> = if p_chilled > 0.0 && heat_pos > 0.0 {
+            inputs
+                .iter()
+                .map(|p| p_chilled * p.p_heat_w.max(0.0) / heat_pos)
+                .collect()
+        } else {
+            vec![0.0; inputs.len()]
+        };
+
+        self.e_pooled += pooled * dt;
+        self.e_driven += heat_pos * dt;
+        self.e_chilled += p_chilled * dt;
+        self.e_ac += inputs.iter().map(|p| p.p_ac_w).sum::<f64>() * dt;
+        self.seconds += dt;
+        self.ticks += 1;
+        self.peak_pooled_w = self.peak_pooled_w.max(pooled);
+        self.t_drive_sum += t_drive;
+        for (c, j) in credits_w.iter().zip(self.plant_credit_j.iter_mut()) {
+            *j += c * dt;
+        }
+
+        FacilityTick { pooled_w: pooled, t_drive, cop, p_chilled_w: p_chilled, credits_w }
+    }
+
+    pub fn into_report(self) -> FacilityReport {
+        FacilityReport {
+            e_pooled: self.e_pooled,
+            e_driven: self.e_driven,
+            e_chilled: self.e_chilled,
+            e_ac: self.e_ac,
+            seconds: self.seconds,
+            t_drive_mean: if self.ticks > 0 {
+                self.t_drive_sum / self.ticks as f64
+            } else {
+                0.0
+            },
+            peak_pooled_w: if self.ticks > 0 { self.peak_pooled_w } else { 0.0 },
+            ticks: self.ticks,
+            plant_credit_j: self.plant_credit_j,
+            units: self.params.units,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(units: usize) -> FacilityParams {
+        FacilityParams::from_plant(&PlantParams::default(), units)
+    }
+
+    fn tick(p: f64, t: f64) -> PlantTick {
+        PlantTick { p_heat_w: p, t_return: t, p_ac_w: 50_000.0 }
+    }
+
+    #[test]
+    fn cop_curve_matches_plant_curve() {
+        let pp = PlantParams::default();
+        let fp = params(4);
+        for t in [40.0, 55.0, 57.0, 63.0, 70.0, 90.0] {
+            assert_eq!(fp.cop(t), pp.cop(t), "t={t}");
+            assert_eq!(fp.pc_max_unit(t), pp.pc_max(t), "t={t}");
+        }
+        assert_eq!(fp.capacity_w(70.0), 4.0 * pp.pc_max(70.0));
+    }
+
+    #[test]
+    fn pooling_conserves_heat() {
+        let mut m = FacilityModel::new(params(3), 3);
+        let inputs = vec![tick(12_000.0, 66.0), tick(9_000.0, 64.0),
+                          tick(15_000.0, 68.0)];
+        let expect: f64 = inputs.iter().map(|p| p.p_heat_w).sum();
+        let out = m.pool_tick(&inputs, 5.0);
+        assert_eq!(out.pooled_w, expect);
+        assert_eq!(m.e_pooled, expect * 5.0);
+        let credit_sum: f64 = out.credits_w.iter().sum();
+        assert!((credit_sum - out.p_chilled_w).abs() < 1e-6,
+                "{credit_sum} vs {}", out.p_chilled_w);
+    }
+
+    #[test]
+    fn standby_below_threshold() {
+        let mut m = FacilityModel::new(params(2), 2);
+        let out = m.pool_tick(&[tick(10_000.0, 45.0), tick(10_000.0, 50.0)],
+                              5.0);
+        assert_eq!(out.cop, 0.0);
+        assert_eq!(out.p_chilled_w, 0.0);
+        assert!(out.credits_w.iter().all(|&c| c == 0.0));
+        // pooled heat is still accounted even in standby
+        assert_eq!(out.pooled_w, 20_000.0);
+    }
+
+    #[test]
+    fn capacity_caps_chilled_output() {
+        let expected = params(1).capacity_w(70.0);
+        let mut m = FacilityModel::new(params(1), 1);
+        // enormous pooled heat: output must clip at the unit capacity
+        let out = m.pool_tick(&[tick(10_000_000.0, 70.0)], 1.0);
+        assert_eq!(out.p_chilled_w, expected);
+    }
+
+    #[test]
+    fn negative_contribution_reduces_pool_not_credits() {
+        let mut m = FacilityModel::new(params(2), 2);
+        let out = m.pool_tick(&[tick(20_000.0, 66.0), tick(-3_000.0, 30.0)],
+                              5.0);
+        assert_eq!(out.pooled_w, 17_000.0);
+        // the absorbing plant gets no credit
+        assert_eq!(out.credits_w[1], 0.0);
+        assert!(out.credits_w[0] > 0.0);
+        // drive temperature is that of the contributing plant
+        assert!((out.t_drive - 66.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_integrates_and_sums_credits() {
+        let mut m = FacilityModel::new(params(2), 2);
+        for _ in 0..10 {
+            m.pool_tick(&[tick(12_000.0, 66.0), tick(8_000.0, 66.0)], 5.0);
+        }
+        let r = m.into_report();
+        assert_eq!(r.ticks, 10);
+        assert!((r.seconds - 50.0).abs() < 1e-12);
+        let credit_sum: f64 = r.plant_credit_j.iter().sum();
+        assert!((credit_sum - r.e_chilled).abs() < 1e-6 * r.e_chilled.max(1.0));
+        assert!(r.reuse_fraction() > 0.0 && r.reuse_fraction() < 1.0);
+        assert!((r.t_drive_mean - 66.0).abs() < 1e-9);
+        assert!(r.summary().contains("energy-reuse"));
+    }
+}

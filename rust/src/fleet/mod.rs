@@ -1,0 +1,261 @@
+//! Fleet engine: sharded multi-plant simulation against one shared
+//! facility loop.
+//!
+//! The single-plant twin reproduces one iDataCool installation; the fleet
+//! engine scales it *out*: N independent `SimulationDriver` instances —
+//! one per plant, each with its own `PlantBackend`, workload, telemetry
+//! and fault schedule — sharded round-robin across OS threads
+//! (`std::thread::scope`, one shard per core by default). After the plant
+//! runs finish, the shared facility pass (`facility`) pools the per-tick
+//! recovered heat in plant-index order, drives the aggregate adsorption
+//! chiller, and feeds the cooling credit back into each plant's energy
+//! account; `aggregate` reduces the fleet to PUE/ERE distributions and the
+//! facility energy-reuse headline.
+//!
+//! Determinism: per-plant seeds are a pure function of the fleet seed and
+//! the plant index (`plant_seed`), plant simulations are self-contained,
+//! and every cross-plant reduction runs in plant-index order — so a
+//! K-shard run is bitwise identical to a 1-shard run with the same seeds.
+
+pub mod aggregate;
+pub mod facility;
+pub mod scenario;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::coordinator::{RunResult, SimulationDriver};
+use crate::variability::rng::splitmix64;
+
+use aggregate::FleetAggregate;
+use facility::{FacilityModel, FacilityParams, FacilityReport, PlantTick};
+use scenario::{PlantSpec, Scenario};
+
+/// Fleet-level run configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of plants in the fleet.
+    pub n_plants: usize,
+    /// Shard (OS thread) count; clamped to the plant count.
+    pub shards: usize,
+    /// Base per-plant configuration the scenario derives from.
+    pub base: SimConfig,
+    /// Fleet seed; per-plant seeds derive from it via `plant_seed`.
+    pub fleet_seed: u64,
+    pub scenario: Scenario,
+}
+
+/// One plant's finished run plus its fleet identity.
+pub struct PlantRun {
+    pub index: usize,
+    pub label: String,
+    pub seed: u64,
+    /// Simulated seconds per tick (identical across the fleet).
+    pub tick_s: f64,
+    pub result: RunResult,
+}
+
+/// The whole fleet outcome.
+pub struct FleetRun {
+    pub plants: Vec<PlantRun>,
+    pub facility: FacilityReport,
+    pub aggregate: FleetAggregate,
+    pub shards: usize,
+    pub wall_s: f64,
+}
+
+/// Deterministic per-plant seed: a SplitMix64 mix of the fleet seed and
+/// the plant index — independent of shard assignment and shard count.
+pub fn plant_seed(fleet_seed: u64, plant: usize) -> u64 {
+    let salt = (plant as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let (_, z) = splitmix64(fleet_seed ^ salt);
+    z
+}
+
+/// Runs a fleet to completion.
+pub struct FleetDriver {
+    pub cfg: FleetConfig,
+}
+
+impl FleetDriver {
+    pub fn new(cfg: FleetConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.n_plants > 0, "fleet needs at least one plant");
+        anyhow::ensure!(cfg.shards > 0, "fleet needs at least one shard");
+        cfg.base.validate()?;
+        Ok(FleetDriver { cfg })
+    }
+
+    /// The per-plant run recipes (scenario overrides + derived seeds),
+    /// in plant-index order.
+    pub fn specs(&self) -> Vec<PlantSpec> {
+        (0..self.cfg.n_plants)
+            .map(|i| {
+                self.cfg.scenario.plant_spec(
+                    i,
+                    self.cfg.n_plants,
+                    &self.cfg.base,
+                    plant_seed(self.cfg.fleet_seed, i),
+                )
+            })
+            .collect()
+    }
+
+    /// Run every plant (sharded across threads), then the facility pass
+    /// and the fleet aggregation.
+    pub fn run(&self) -> Result<FleetRun> {
+        let start = Instant::now();
+        let specs = self.specs();
+        let n_plants = specs.len();
+        let shards = self.cfg.shards.clamp(1, n_plants);
+
+        // Round-robin shard assignment: plant i -> shard i % K.
+        let mut buckets: Vec<Vec<PlantSpec>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        for (i, spec) in specs.into_iter().enumerate() {
+            buckets[i % shards].push(spec);
+        }
+
+        let mut slots: Vec<Option<PlantRun>> =
+            (0..n_plants).map(|_| None).collect();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(buckets.len());
+            for bucket in buckets {
+                handles.push(scope.spawn(move || run_bucket(bucket)));
+            }
+            for h in handles {
+                let shard_runs = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("fleet shard panicked"))??;
+                for run in shard_runs {
+                    let i = run.index;
+                    slots[i] = Some(run);
+                }
+            }
+            Ok(())
+        })?;
+        let plants: Vec<PlantRun> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.ok_or_else(|| anyhow::anyhow!("plant {i} produced no run"))
+            })
+            .collect::<Result<_>>()?;
+
+        // Facility pass + aggregation, both in plant-index order.
+        let params =
+            FacilityParams::from_plant(&self.cfg.base.pp, self.cfg.n_plants);
+        let facility = run_facility(&plants, params);
+        let aggregate = FleetAggregate::build(&plants, &facility);
+
+        Ok(FleetRun {
+            plants,
+            facility,
+            aggregate,
+            shards,
+            wall_s: start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Run one shard's plants sequentially (each plant owns its full driver).
+fn run_bucket(bucket: Vec<PlantSpec>) -> Result<Vec<PlantRun>> {
+    let mut out = Vec::with_capacity(bucket.len());
+    for spec in bucket {
+        let PlantSpec { index, label, seed, cfg, faults } = spec;
+        let mut driver = SimulationDriver::from_prebuilt(cfg, seed, faults)?;
+        let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+        // sample_every = 1: the facility pass needs every tick.
+        let result = driver.run(1)?;
+        out.push(PlantRun { index, label, seed, tick_s, result });
+    }
+    Ok(out)
+}
+
+/// Replay the finished plant traces through the shared facility loop,
+/// tick-aligned and in plant-index order.
+pub fn run_facility(plants: &[PlantRun], params: FacilityParams)
+                    -> FacilityReport {
+    let mut model = FacilityModel::new(params, plants.len());
+    let n_ticks = plants
+        .iter()
+        .map(|p| p.result.trace.len())
+        .min()
+        .unwrap_or(0);
+    let dt = plants.first().map(|p| p.tick_s).unwrap_or(0.0);
+    let mut inputs = Vec::with_capacity(plants.len());
+    for t in 0..n_ticks {
+        inputs.clear();
+        for p in plants {
+            let s = &p.result.trace[t];
+            inputs.push(PlantTick {
+                p_heat_w: s.p_d,
+                t_return: s.t_rack_out,
+                p_ac_w: s.p_ac,
+            });
+        }
+        model.pool_tick(&inputs, dt);
+    }
+    model.into_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plant_seeds_are_stable_and_distinct() {
+        let s: Vec<u64> = (0..32).map(|i| plant_seed(0x1DA7, i)).collect();
+        let again: Vec<u64> = (0..32).map(|i| plant_seed(0x1DA7, i)).collect();
+        assert_eq!(s, again);
+        for (i, a) in s.iter().enumerate() {
+            for b in &s[i + 1..] {
+                assert_ne!(a, b, "seed collision");
+            }
+        }
+        // and the fleet seed matters
+        assert_ne!(plant_seed(1, 0), plant_seed(2, 0));
+    }
+
+    #[test]
+    fn driver_rejects_degenerate_configs() {
+        let base = SimConfig::test_small();
+        let scenario = Scenario::by_name("baseline").unwrap();
+        let bad = FleetConfig {
+            n_plants: 0,
+            shards: 1,
+            base: base.clone(),
+            fleet_seed: 1,
+            scenario,
+        };
+        assert!(FleetDriver::new(bad).is_err());
+        let bad = FleetConfig {
+            n_plants: 2,
+            shards: 0,
+            base,
+            fleet_seed: 1,
+            scenario,
+        };
+        assert!(FleetDriver::new(bad).is_err());
+    }
+
+    #[test]
+    fn specs_cover_every_plant_in_order() {
+        let base = SimConfig::test_small();
+        let cfg = FleetConfig {
+            n_plants: 5,
+            shards: 2,
+            base,
+            fleet_seed: 9,
+            scenario: Scenario::by_name("mixed").unwrap(),
+        };
+        let d = FleetDriver::new(cfg).unwrap();
+        let specs = d.specs();
+        assert_eq!(specs.len(), 5);
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.seed, plant_seed(9, i));
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Declarative scenario catalog for fleet runs.
+//!
+//! A scenario is a *typed* recipe that turns the fleet's base `SimConfig`
+//! into one concrete per-plant configuration plus a timed `Fault` schedule
+//! (routed through the existing `Supervisor`). Everything is a pure
+//! function of `(scenario, plant index, fleet size, base config)` so a
+//! fleet run is reproducible regardless of how plants are sharded across
+//! threads.
+//!
+//! Catalog (see the paper's Sect. 3 redundancy narrative and the
+//! energy-aware-operation regimes of arXiv:2411.16204):
+//!  * `baseline`          homogeneous production fleet, no faults
+//!  * `heatwave`          ambient ramp staggered across the fleet
+//!  * `chiller-outage`    adsorption-chiller failures on half the plants
+//!  * `pump-degradation`  progressive pump derating + one pump failure
+//!  * `load-surge`        staggered GPU-cluster load surges at high load
+//!  * `mixed`             stress / production / idle thirds
+
+use crate::config::{SimConfig, WorkloadKind};
+use crate::coordinator::supervisor::Fault;
+
+/// Scenario identity (the catalog key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    Baseline,
+    Heatwave,
+    ChillerOutage,
+    PumpDegradation,
+    LoadSurge,
+    Mixed,
+}
+
+/// A catalog entry, resolvable by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scenario {
+    pub kind: ScenarioKind,
+}
+
+/// One plant's fully resolved run recipe.
+#[derive(Debug, Clone)]
+pub struct PlantSpec {
+    pub index: usize,
+    pub label: String,
+    pub seed: u64,
+    pub cfg: SimConfig,
+    pub faults: Vec<Fault>,
+}
+
+impl Scenario {
+    /// The catalog: `(name, kind, description)`.
+    pub const CATALOG: &[(&str, ScenarioKind, &str)] = &[
+        (
+            "baseline",
+            ScenarioKind::Baseline,
+            "homogeneous fleet on the base workload, no faults",
+        ),
+        (
+            "heatwave",
+            ScenarioKind::Heatwave,
+            "ambient ramp: +8..+16 degC staggered across the fleet at \
+             high production load",
+        ),
+        (
+            "chiller-outage",
+            ScenarioKind::ChillerOutage,
+            "adsorption-chiller failure windows, staggered over every \
+             second plant (Sect. 3 failover path)",
+        ),
+        (
+            "pump-degradation",
+            ScenarioKind::PumpDegradation,
+            "progressive rack-pump derating across the fleet; the worst \
+             plant additionally suffers a pump failure window",
+        ),
+        (
+            "load-surge",
+            ScenarioKind::LoadSurge,
+            "staggered GPU-cluster load surges on the primary circuit at \
+             98% production load",
+        ),
+        (
+            "mixed",
+            ScenarioKind::Mixed,
+            "mixed fleet: stress / production / idle thirds",
+        ),
+    ];
+
+    /// Resolve a scenario by its catalog name.
+    pub fn by_name(name: &str) -> anyhow::Result<Scenario> {
+        for (n, kind, _) in Self::CATALOG {
+            if *n == name {
+                return Ok(Scenario { kind: *kind });
+            }
+        }
+        anyhow::bail!(
+            "unknown scenario '{name}' (have: {})",
+            Self::names().join(", ")
+        )
+    }
+
+    /// All catalog names, in catalog order.
+    pub fn names() -> Vec<&'static str> {
+        Self::CATALOG.iter().map(|(n, _, _)| *n).collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        Self::CATALOG
+            .iter()
+            .find(|(_, k, _)| *k == self.kind)
+            .map(|(n, _, _)| *n)
+            .expect("scenario kind missing from catalog")
+    }
+
+    pub fn description(&self) -> &'static str {
+        Self::CATALOG
+            .iter()
+            .find(|(_, k, _)| *k == self.kind)
+            .map(|(_, _, d)| *d)
+            .expect("scenario kind missing from catalog")
+    }
+
+    /// Resolve plant `index` of `n_plants` against the base config.
+    ///
+    /// Overrides are deliberately conservative: every produced config must
+    /// pass `SimConfig::validate` for any base config that does.
+    pub fn plant_spec(
+        &self,
+        index: usize,
+        n_plants: usize,
+        base: &SimConfig,
+        seed: u64,
+    ) -> PlantSpec {
+        let mut cfg = base.clone();
+        let mut faults = Vec::new();
+        // Position of this plant in the fleet, in [0, 1].
+        let frac = if n_plants > 1 {
+            index as f64 / (n_plants - 1) as f64
+        } else {
+            0.0
+        };
+        let dur = cfg.duration_s;
+
+        match self.kind {
+            // Baseline keeps the base workload (so --workload/--preset
+            // flow through); the other scenarios define the load shape as
+            // part of the scenario itself.
+            ScenarioKind::Baseline => {}
+            ScenarioKind::Heatwave => {
+                cfg.workload = WorkloadKind::Production;
+                cfg.production_load = base.production_load.max(0.95);
+                cfg.t_ambient = base.t_ambient + 8.0 + 8.0 * frac;
+            }
+            ScenarioKind::ChillerOutage => {
+                cfg.workload = WorkloadKind::Production;
+                if index % 2 == 0 {
+                    let start = (0.2 + 0.05 * index as f64).min(0.6) * dur;
+                    let end = (start + 0.25 * dur).min(0.95 * dur);
+                    faults.push(Fault::ChillerFailure {
+                        start_s: start,
+                        end_s: end,
+                    });
+                }
+            }
+            ScenarioKind::PumpDegradation => {
+                cfg.workload = WorkloadKind::Production;
+                cfg.pump_speed = (base.pump_speed * (1.0 - 0.35 * frac)).max(0.3);
+                if index + 1 == n_plants && n_plants > 1 {
+                    faults.push(Fault::PumpFailure {
+                        start_s: 0.4 * dur,
+                        end_s: 0.5 * dur,
+                    });
+                }
+            }
+            ScenarioKind::LoadSurge => {
+                cfg.workload = WorkloadKind::Production;
+                cfg.production_load = 0.98;
+                let start = (0.1 + 0.7 * frac) * dur;
+                faults.push(Fault::GpuSurge {
+                    start_s: start,
+                    end_s: (start + 0.15 * dur).min(dur),
+                    load_w: cfg.pp.gpu_peak_w,
+                });
+            }
+            ScenarioKind::Mixed => match index % 3 {
+                0 => {
+                    cfg.workload = WorkloadKind::Stress;
+                    cfg.stress_nodes = cfg.n_nodes;
+                    cfg.stress_background = 0.25;
+                }
+                1 => {
+                    cfg.workload = WorkloadKind::Production;
+                }
+                _ => {
+                    cfg.workload = WorkloadKind::Idle;
+                }
+            },
+        }
+
+        // Fleet runs study the coupled operating point, not the multi-hour
+        // warm-up: start each plant near the paper's production band so
+        // short runs already exercise the facility chiller.
+        cfg.t_water_init = base.t_water_init.max(62.0);
+
+        let label = format!("{}/p{index:02}", self.name());
+        cfg.name = label.clone();
+        PlantSpec { index, label, seed, cfg, faults }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_resolves_by_name() {
+        for name in Scenario::names() {
+            let s = Scenario::by_name(name).unwrap();
+            assert_eq!(s.name(), name);
+            assert!(!s.description().is_empty());
+        }
+        assert!(Scenario::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn specs_validate_for_every_catalog_entry() {
+        let base = SimConfig::test_small();
+        for name in Scenario::names() {
+            let s = Scenario::by_name(name).unwrap();
+            for n_plants in [1usize, 2, 5, 8] {
+                for i in 0..n_plants {
+                    let spec = s.plant_spec(i, n_plants, &base, 42 + i as u64);
+                    spec.cfg.validate().unwrap_or_else(|e| {
+                        panic!("{name} plant {i}/{n_plants}: {e}")
+                    });
+                    for f in &spec.faults {
+                        let (a, b) = match *f {
+                            Fault::ChillerFailure { start_s, end_s }
+                            | Fault::PumpFailure { start_s, end_s }
+                            | Fault::GpuSurge { start_s, end_s, .. } => {
+                                (start_s, end_s)
+                            }
+                        };
+                        assert!(a < b, "{name}: empty fault window");
+                        assert!(b <= spec.cfg.duration_s + 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn specs_are_deterministic() {
+        let base = SimConfig::test_small();
+        let s = Scenario::by_name("heatwave").unwrap();
+        let a = s.plant_spec(3, 8, &base, 7);
+        let b = s.plant_spec(3, 8, &base, 7);
+        assert_eq!(a.cfg.t_ambient, b.cfg.t_ambient);
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.faults, b.faults);
+    }
+
+    #[test]
+    fn mixed_fleet_rotates_workloads() {
+        let base = SimConfig::test_small();
+        let s = Scenario::by_name("mixed").unwrap();
+        let kinds: Vec<WorkloadKind> = (0..6)
+            .map(|i| s.plant_spec(i, 6, &base, 0).cfg.workload)
+            .collect();
+        assert_eq!(kinds[0], WorkloadKind::Stress);
+        assert_eq!(kinds[1], WorkloadKind::Production);
+        assert_eq!(kinds[2], WorkloadKind::Idle);
+        assert_eq!(kinds[3], WorkloadKind::Stress);
+    }
+}

@@ -11,6 +11,9 @@
 //!  * **L3** (this crate): the data-center control plane — scheduler,
 //!    PID/valve control, chiller supervision, failover, telemetry,
 //!    energy accounting — executing the plant via PJRT on every tick.
+//!  * **Fleet** (`fleet`): N plants sharded across OS threads against one
+//!    shared facility loop (pooled heat recovery + aggregate adsorption
+//!    chiller), with a declarative scenario catalog.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-figure reproductions.
@@ -19,6 +22,7 @@ pub mod config;
 pub mod coordinator;
 pub mod economics;
 pub mod figures;
+pub mod fleet;
 pub mod plant;
 pub mod report;
 pub mod runtime;

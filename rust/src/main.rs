@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run         simulate a configuration and print the run report
+//!   fleet       sharded multi-plant fleet + shared facility loop
 //!   figures     regenerate the paper's figures (CSV + ASCII)
 //!   equilibrium the Sect.-3 cold-start narrative (alias: figures --fig s3)
 //!   validate    cross-backend validation + fault-injection checks
@@ -9,6 +10,7 @@
 //!
 //! Examples:
 //!   idatacool run --preset full --duration 3600 --setpoint 67
+//!   idatacool fleet --plants 8 --scenario heatwave --shards 4
 //!   idatacool figures --fig all --quick --out results
 //!   idatacool validate --faults
 
@@ -19,6 +21,8 @@ use anyhow::Result;
 use idatacool::config::SimConfig;
 use idatacool::coordinator::SimulationDriver;
 use idatacool::figures::{self, sweep::SweepOptions};
+use idatacool::fleet::scenario::Scenario;
+use idatacool::fleet::{FleetConfig, FleetDriver};
 use idatacool::runtime::manifest::Manifest;
 use idatacool::util::cli::Args;
 
@@ -26,6 +30,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("figures") => cmd_figures(&args),
         Some("equilibrium") => cmd_figures_with(&args, "s3"),
         Some("validate") => cmd_validate(&args),
@@ -40,7 +45,7 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 idatacool — digital twin of the iDataCool hot-water-cooled HPC system
 
-USAGE: idatacool <run|figures|equilibrium|validate|info> [flags]
+USAGE: idatacool <run|fleet|figures|equilibrium|validate|info> [flags]
 
 common flags:
   --config <file.toml>   load a TOML config (presets: full|subset13|test_small)
@@ -52,6 +57,14 @@ common flags:
   --setpoint <degC>      rack-outlet setpoint
   --workload <stress|production|idle>
   --seed <n>
+fleet flags:
+  --plants <n>           number of plants in the fleet (default 4)
+  --shards <k>           OS threads to shard plants over (default: cores)
+  --scenario <name>      baseline|heatwave|chiller-outage|pump-degradation|
+                         load-surge|mixed (default baseline)
+  (common flags above configure the per-plant base; every scenario except
+   baseline sets the workload itself, and backend \"auto\" resolves to
+   native for fleet runs)
 figures flags:
   --fig <id|all|sweep>   4a 4b 5a 5b 6a 6b 7a 7b r1 s3 r2 manifold binning econ
   --out <dir>            write CSVs here (default: results)
@@ -127,6 +140,64 @@ fn cmd_run(args: &Args) -> Result<()> {
             last.throttling
         );
     }
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let mut base = build_config(args)?;
+    // Fleet runs shard plant backends across threads; resolve the default
+    // "auto" to the artifact-independent native backend, but respect a
+    // backend pinned via --backend or a config file.
+    if base.backend == "auto" {
+        base.backend = "native".into();
+    }
+    let n_plants = args.usize_or("plants", 4);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // Clamp exactly as FleetDriver::run will, so the header matches what
+    // actually runs.
+    let shards = args
+        .usize_or("shards", cores.min(n_plants.max(1)))
+        .clamp(1, n_plants.max(1));
+    let scenario = Scenario::by_name(args.str_or("scenario", "baseline"))?;
+
+    println!(
+        "fleet: {} plants x {} nodes ({} backend), scenario '{}' ({}), \
+         {} shards, {:.0}s sim, fleet seed {:#x}",
+        n_plants, base.n_nodes, base.backend, scenario.name(),
+        scenario.description(), shards, base.duration_s, base.seed,
+    );
+
+    let fleet_seed = base.seed;
+    let driver = FleetDriver::new(FleetConfig {
+        n_plants,
+        shards,
+        base,
+        fleet_seed,
+        scenario,
+    })?;
+    let run = driver.run()?;
+
+    for s in run.aggregate.series() {
+        println!("{}", s.to_table());
+        if s.columns.len() >= 2 && s.rows.len() >= 3 {
+            let (xc, yc) = (s.columns[0].clone(), s.columns[1].clone());
+            println!("{}", s.ascii_plot(&xc, &yc, 64, 12));
+        }
+    }
+    println!("{}", run.facility.summary());
+    println!("{}", run.aggregate.summary());
+    println!(
+        "fleet perf: {} plants on {} shards in {:.2}s wall",
+        run.plants.len(),
+        run.shards,
+        run.wall_s
+    );
+    println!(
+        "aggregate fingerprint: {:#018x} (shard-count independent)",
+        run.aggregate.fingerprint()
+    );
     Ok(())
 }
 

@@ -23,7 +23,7 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
-                    .map_or(false, |n| !n.starts_with("--"))
+                    .is_some_and(|n| !n.starts_with("--"))
                 {
                     let v = it.next().unwrap();
                     out.flags.insert(rest.to_string(), v);

@@ -21,12 +21,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset context.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
@@ -194,7 +201,7 @@ impl<'a> Parser<'a> {
         }
         while self
             .peek()
-            .map_or(false, |c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
         {
             self.i += 1;
         }

@@ -38,7 +38,10 @@ impl UtilPlan {
 }
 
 /// Something that produces per-tick utilization plans.
-pub trait WorkloadSource {
+///
+/// `Send` is a supertrait so a boxed workload (and with it the whole
+/// `SimulationDriver`) can move across the fleet engine's shard threads.
+pub trait WorkloadSource: Send {
     /// Advance simulated time by `dt` seconds and refresh `plan`.
     fn advance(&mut self, dt: f64, plan: &mut UtilPlan);
     /// Human-readable stats line for the run report.

@@ -1,0 +1,175 @@
+//! Fleet-engine integration tests on the native backend: determinism
+//! across shard counts, facility heat-pool conservation, and a smoke run
+//! per scenario-catalog entry.
+
+use idatacool::config::constants::PlantParams;
+use idatacool::config::SimConfig;
+use idatacool::fleet::facility::{FacilityModel, FacilityParams, PlantTick};
+use idatacool::fleet::scenario::Scenario;
+use idatacool::fleet::{plant_seed, FleetConfig, FleetDriver, FleetRun};
+
+fn base() -> SimConfig {
+    // 13 nodes, native backend, noiseless — fast and deterministic.
+    let mut c = SimConfig::test_small();
+    c.duration_s = 600.0;
+    c
+}
+
+fn fleet(n_plants: usize, shards: usize, scenario: &str) -> FleetRun {
+    let base = base();
+    let cfg = FleetConfig {
+        n_plants,
+        shards,
+        fleet_seed: base.seed,
+        scenario: Scenario::by_name(scenario).unwrap(),
+        base,
+    };
+    FleetDriver::new(cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn sharding_does_not_change_the_aggregate() {
+    let a = fleet(6, 1, "heatwave");
+    let b = fleet(6, 4, "heatwave");
+    assert_eq!(a.plants.len(), b.plants.len());
+    for (x, y) in a.plants.iter().zip(&b.plants) {
+        assert_eq!(x.index, y.index);
+        assert_eq!(x.seed, y.seed);
+        assert_eq!(x.result.trace.len(), y.result.trace.len());
+    }
+    for (x, y) in a.aggregate.per_plant.iter().zip(&b.aggregate.per_plant) {
+        assert_eq!(x.pue.to_bits(), y.pue.to_bits(), "plant {}", x.index);
+        assert_eq!(x.ere.to_bits(), y.ere.to_bits(), "plant {}", x.index);
+        assert_eq!(x.throttle_ticks, y.throttle_ticks);
+        assert_eq!(x.t_out_mean.to_bits(), y.t_out_mean.to_bits());
+    }
+    assert_eq!(a.facility.e_pooled.to_bits(), b.facility.e_pooled.to_bits());
+    assert_eq!(a.facility.e_chilled.to_bits(), b.facility.e_chilled.to_bits());
+    assert_eq!(a.aggregate.fingerprint(), b.aggregate.fingerprint());
+}
+
+#[test]
+fn repeated_runs_are_bitwise_identical() {
+    let a = fleet(4, 2, "baseline");
+    let b = fleet(4, 2, "baseline");
+    assert_eq!(a.aggregate.fingerprint(), b.aggregate.fingerprint());
+}
+
+#[test]
+fn per_plant_seeds_derive_from_the_fleet_seed() {
+    let fleet_seed = base().seed;
+    let r = fleet(4, 2, "baseline");
+    for (i, p) in r.plants.iter().enumerate() {
+        assert_eq!(p.index, i);
+        assert_eq!(p.seed, plant_seed(fleet_seed, i));
+    }
+    let mut seeds: Vec<u64> = r.plants.iter().map(|p| p.seed).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), r.plants.len(), "seed collision");
+}
+
+#[test]
+fn facility_heat_pool_conserves_trace_sum() {
+    // Fleet-level conservation: the facility's integrated pooled heat
+    // must equal the per-tick sum of every plant's recovered heat.
+    let r = fleet(3, 2, "baseline");
+    let n_ticks = r
+        .plants
+        .iter()
+        .map(|p| p.result.trace.len())
+        .min()
+        .unwrap();
+    assert!(n_ticks > 0);
+    let dt = r.plants[0].tick_s;
+    let mut e = 0.0f64;
+    for t in 0..n_ticks {
+        let pooled: f64 =
+            r.plants.iter().map(|p| p.result.trace[t].p_d).sum();
+        e += pooled * dt;
+    }
+    assert_eq!(e.to_bits(), r.facility.e_pooled.to_bits(),
+               "facility input {} != trace sum {e}", r.facility.e_pooled);
+    // credits never exceed what the chiller produced, and sum to it
+    let credit_sum: f64 = r.facility.plant_credit_j.iter().sum();
+    assert!(
+        (credit_sum - r.facility.e_chilled).abs()
+            <= 1e-9 * r.facility.e_chilled.abs().max(1.0),
+        "{credit_sum} vs {}",
+        r.facility.e_chilled
+    );
+}
+
+#[test]
+fn synthetic_pool_tick_conserves_each_tick() {
+    let params = FacilityParams::from_plant(&PlantParams::default(), 3);
+    let mut m = FacilityModel::new(params, 3);
+    let mut expected = 0.0f64;
+    for k in 0..50 {
+        let inputs = vec![
+            PlantTick { p_heat_w: 10_000.0 + 37.0 * k as f64,
+                        t_return: 65.0, p_ac_w: 50_000.0 },
+            PlantTick { p_heat_w: 8_000.0 - 11.0 * k as f64,
+                        t_return: 63.0, p_ac_w: 48_000.0 },
+            PlantTick { p_heat_w: 12_500.0, t_return: 67.0,
+                        p_ac_w: 52_000.0 },
+        ];
+        let sum: f64 = inputs.iter().map(|p| p.p_heat_w).sum();
+        let out = m.pool_tick(&inputs, 5.0);
+        assert_eq!(out.pooled_w.to_bits(), sum.to_bits(), "tick {k}");
+        expected += sum * 5.0;
+    }
+    let r = m.into_report();
+    assert_eq!(r.e_pooled.to_bits(), expected.to_bits());
+}
+
+#[test]
+fn scenario_catalog_smoke() {
+    // Every catalog entry must run end-to-end and stay physical.
+    for name in Scenario::names() {
+        let r = fleet(3, 2, name);
+        assert_eq!(r.plants.len(), 3, "{name}");
+        for p in &r.plants {
+            assert!(
+                p.result.energy.mean_p_ac() > 1_000.0,
+                "{name}/{}: implausible power {}",
+                p.label,
+                p.result.energy.mean_p_ac()
+            );
+            assert!(
+                p.result.trace.iter().all(|t| t.core_max < 105.0),
+                "{name}/{}: cores ran away",
+                p.label
+            );
+        }
+        assert!(r.facility.e_pooled.is_finite(), "{name}");
+        assert!(r.facility.reuse_fraction() >= 0.0, "{name}");
+        assert_eq!(
+            r.facility.plant_credit_j.len(),
+            r.plants.len(),
+            "{name}"
+        );
+        let agg = &r.aggregate;
+        assert_eq!(agg.per_plant.len(), 3, "{name}");
+        for m in &agg.per_plant {
+            assert!(m.pue >= 1.0, "{name}: PUE {} < 1", m.pue);
+            assert!(m.ere <= m.pue, "{name}: ERE above PUE");
+        }
+        // the report renders
+        assert_eq!(agg.series().len(), 3, "{name}");
+        assert!(agg.summary().contains("facility energy-reuse"), "{name}");
+    }
+}
+
+#[test]
+fn heatwave_fleet_reuses_energy() {
+    // Warm-started production plants above the chiller band must deliver
+    // a non-trivial facility reuse fraction.
+    let r = fleet(4, 2, "heatwave");
+    assert!(
+        r.facility.reuse_fraction() > 0.02,
+        "facility reuse {:.4}",
+        r.facility.reuse_fraction()
+    );
+    assert!(r.facility.e_chilled > 0.0);
+}

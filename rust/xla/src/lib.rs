@@ -1,0 +1,151 @@
+//! API-compatible stub of the vendored `xla` PJRT bindings.
+//!
+//! Environments without the vendored XLA closure (CI, laptops, the test
+//! grid) still need the `idatacool` crate to build: the coordinator, the
+//! figure harness and the whole fleet engine run on the pure-Rust native
+//! plant. This stub provides the exact API surface `runtime::pjrt` uses —
+//! every entry point that would touch a real PJRT runtime returns an error,
+//! so `BackendKind::Auto` falls back to the native backend and an explicit
+//! `--backend hlo` fails with a clear message instead of a link error.
+//!
+//! The production build replaces this path dependency with the vendored
+//! bindings; the signatures below must stay in lockstep with them. Note
+//! that the fleet engine moves whole `SimulationDriver`s (and with them
+//! any HLO backend handles) across shard threads, so the vendored
+//! client/buffer/executable types must be `Send` — if they are not, the
+//! fleet must construct HLO backends on their owning shard thread instead
+//! (the coordinator's `simulation_driver_is_send` test flags this at
+//! compile time).
+
+use std::fmt;
+
+/// Error type matching the vendored bindings' `Display`-able errors.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "pjrt unavailable in this build ({what}): the xla stub is linked; \
+         use the native backend or build against the vendored xla crate"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+/// A PJRT device handle.
+#[derive(Debug, Clone)]
+pub struct PjRtDevice;
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+/// A host literal (downloaded buffer contents).
+#[derive(Debug)]
+pub struct Literal;
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        Vec::new()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn copy_raw_to(&self, _out: &mut [f32]) -> Result<()> {
+        unavailable("Literal::copy_raw_to")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn error_is_displayable() {
+        let e = Error("boom".into());
+        assert_eq!(format!("{e}"), "boom");
+    }
+}
