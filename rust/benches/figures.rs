@@ -6,13 +6,13 @@
 //! end-to-end; the *values* are produced by `idatacool figures` and
 //! recorded in EXPERIMENTS.md.
 
+use idatacool::bench::{fast_mode, Bench};
 use idatacool::config::SimConfig;
 use idatacool::figures::{self, sweep::SweepOptions};
-use idatacool::util::bench::Bench;
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new(0, 2);
-    if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
+    if fast_mode() {
         b = Bench::new(0, 1);
     }
     println!("{}", Bench::header());

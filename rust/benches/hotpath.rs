@@ -1,102 +1,66 @@
 //! Hot-path micro/meso benchmarks (EXPERIMENTS.md §Perf).
 //!
-//! Measures each layer of the stack in isolation:
-//!   * L1/L2 equivalent: one plant tick (20 fused substeps) — HLO-via-PJRT
-//!     vs the native Rust mirror, at 13 and 216 nodes;
-//!   * L3 pieces: scheduler advance, PID update, telemetry sampling,
-//!     manifold solve, lottery draw, full coordinator tick.
+//! The artifact-independent cases live in the registered `hotpath` suite
+//! (`idatacool::bench::suites`, also reachable as `idatacool bench
+//! --suite hotpath`); this harness runs that suite and layers the
+//! HLO-via-PJRT cases on top when artifacts exist:
+//!   * one plant tick (fused substeps) at 13 and 216 nodes;
+//!   * the full coordinator tick on the hlo backend.
 //!
 //! Run: `cargo bench --bench hotpath` (BENCH_FAST=1 for CI sizing).
+//! Set BENCH_JSON=<path> to also write the machine-readable report of
+//! the native suite (the HLO cases print only: their backend/config
+//! metadata differs, so they must not share the native report's
+//! fingerprint).
 
+use idatacool::bench::{suites, Bench};
 use idatacool::config::constants::PlantParams;
 use idatacool::config::SimConfig;
-use idatacool::coordinator::telemetry::{SensorSpec, Telemetry};
 use idatacool::coordinator::SimulationDriver;
-use idatacool::plant::hydraulics::{Manifold, ManifoldKind};
 use idatacool::plant::layout::*;
 use idatacool::plant::TickOutput;
 use idatacool::runtime::{BackendKind, PlantBackend};
-use idatacool::util::bench::Bench;
-use idatacool::variability::ChipLottery;
-use idatacool::workload::scheduler::BatchScheduler;
-use idatacool::workload::{UtilPlan, WorkloadSource};
 
 fn main() -> anyhow::Result<()> {
-    let mut b = Bench::from_env();
-    println!("{}", Bench::header());
-    let pp = PlantParams::from_artifacts(std::path::Path::new("artifacts"));
-    let art = std::path::Path::new("artifacts");
-    let have_hlo = art.join("manifest.json").exists();
+    // Native layers: the registered suite (prints as it runs).
+    let report = suites::run_suite("hotpath")?;
 
-    // --- plant tick: native vs hlo -----------------------------------------
-    for &n in &[13usize, 216] {
-        let controls = vec![0.0f32, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
-        let mut nat = PlantBackend::create(
-            BackendKind::Native, art, n, &pp, 0x1DA7AC001, 20.0)?;
-        let util = vec![1.0f32; nat.n_padded() * NC];
-        let mut out = TickOutput::new(nat.n_padded());
-        let node_substeps = (n * nat.substeps()) as f64;
-        b.run_with_units(
-            &format!("plant_tick/native/n{n}"), node_substeps,
-            "node-substeps", &mut || {
-                nat.tick(&controls, &util, &mut out).unwrap();
-            });
-        if have_hlo {
+    // HLO layers on top, when artifacts exist.
+    let art = std::path::Path::new("artifacts");
+    if art.join("manifest.json").exists() {
+        let pp = PlantParams::from_artifacts(art);
+        let mut b = Bench::from_env();
+        for &n in &[13usize, 216] {
+            let controls =
+                vec![0.0f32, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
             let mut hlo = PlantBackend::create(
                 BackendKind::Hlo, art, n, &pp, 0x1DA7AC001, 20.0)?;
             let util = vec![1.0f32; hlo.n_padded() * NC];
             let mut out = TickOutput::new(hlo.n_padded());
+            let node_substeps = (n * hlo.substeps()) as f64;
             b.run_with_units(
                 &format!("plant_tick/hlo/n{n}"), node_substeps,
                 "node-substeps", &mut || {
                     hlo.tick(&controls, &util, &mut out).unwrap();
                 });
         }
-    }
-
-    // --- L3 coordinator tick (everything around the plant) ------------------
-    for backend in ["native", "hlo"] {
-        if backend == "hlo" && !have_hlo {
-            continue;
-        }
         let mut cfg = SimConfig::idatacool_full();
-        cfg.backend = backend.into();
+        cfg.backend = "hlo".into();
         cfg.t_water_init = 63.0;
         cfg.pp = pp.clone();
         let mut driver = SimulationDriver::new(cfg)?;
         let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+        let mut out = TickOutput::new(driver.backend.n_padded());
         b.run_with_units(
-            &format!("coordinator_tick/{backend}/n216"), tick_s,
-            "sim-seconds", &mut || {
-                driver.tick_once().unwrap();
+            "coordinator_tick/hlo/n216", tick_s, "sim-seconds", &mut || {
+                driver.tick_into(&mut out).unwrap();
             });
     }
 
-    // --- L3 substrates -------------------------------------------------------
-    let mut sched = BatchScheduler::new(216, 0.92, 7);
-    let mut plan = UtilPlan::idle(256);
-    b.run("scheduler_advance/n216", || {
-        sched.advance(5.0, &mut plan);
-    });
-
-    let mut tel = Telemetry::new(SensorSpec::default(), 3);
-    b.run("telemetry_sample/256-cores", || {
-        let mut acc = 0.0;
-        for _ in 0..256 {
-            acc += tel.core_temp(84.0);
-        }
-        std::hint::black_box(acc);
-    });
-
-    let man = Manifold::from_params(&pp, 72, ManifoldKind::Tichelmann);
-    b.run("manifold_solve/72-branches", || {
-        std::hint::black_box(man.solve_flows(43.2));
-    });
-
-    b.run("lottery_draw/n216", || {
-        std::hint::black_box(ChipLottery::draw(216, &pp, 1));
-    });
-
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        std::fs::write(&path, report.to_json())?;
+        println!("\nwrote {path}");
+    }
     println!("\n(see EXPERIMENTS.md §Perf for the tracked history)");
     Ok(())
 }

@@ -1,0 +1,278 @@
+//! Baseline comparison: the perf-regression gate behind
+//! `idatacool bench --compare bench/baseline.json --max-regress PCT`.
+//!
+//! Every bench present in the baseline with a recorded time is gated:
+//! the run fails when `ns/iter` regresses more than the threshold (the
+//! per-bench `max_regress_pct` override when present, else the gate's
+//! default). Benches missing on either side are reported but never fail
+//! the gate — suites are allowed to evolve. A baseline marked
+//! `placeholder` gates nothing; it exists so the file can be checked in
+//! before a reference machine has recorded real numbers.
+
+use std::fmt::Write as _;
+
+use super::record::BenchReport;
+
+/// One gated bench: baseline vs current.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub id: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// Relative change in ns/iter, percent (positive = slower).
+    pub delta_pct: f64,
+    pub threshold_pct: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of comparing a suite run against its baseline.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub suite: String,
+    pub deltas: Vec<BenchDelta>,
+    /// Baseline benches absent from the current run (warn only).
+    pub missing: Vec<String>,
+    /// Current benches absent from the baseline (info only).
+    pub added: Vec<String>,
+    pub baseline_placeholder: bool,
+    /// Metadata mismatches (config fingerprint, fast_mode, backend) that
+    /// make the timings incomparable; when non-empty the gate is off and
+    /// the report says so loudly — refresh the baseline instead.
+    pub incomparable: Vec<String>,
+}
+
+impl Comparison {
+    pub fn build(
+        baseline: &BenchReport,
+        current: &BenchReport,
+        default_threshold_pct: f64,
+    ) -> Self {
+        let mut deltas = Vec::new();
+        let mut missing = Vec::new();
+        for rec in &baseline.benches {
+            match current.get(&rec.id) {
+                None => missing.push(rec.id.clone()),
+                Some(cur) => {
+                    let delta_pct = if rec.ns_per_iter > 0.0 {
+                        100.0 * (cur.ns_per_iter - rec.ns_per_iter)
+                            / rec.ns_per_iter
+                    } else {
+                        0.0
+                    };
+                    let threshold_pct =
+                        rec.max_regress_pct.unwrap_or(default_threshold_pct);
+                    deltas.push(BenchDelta {
+                        id: rec.id.clone(),
+                        base_ns: rec.ns_per_iter,
+                        cur_ns: cur.ns_per_iter,
+                        delta_pct,
+                        threshold_pct,
+                        regressed: delta_pct > threshold_pct,
+                    });
+                }
+            }
+        }
+        let added = current
+            .benches
+            .iter()
+            .filter(|b| baseline.get(&b.id).is_none())
+            .map(|b| b.id.clone())
+            .collect();
+        let mut incomparable = Vec::new();
+        if !baseline.placeholder {
+            for (what, base, cur) in [
+                (
+                    "config_fingerprint",
+                    &baseline.config_fingerprint,
+                    &current.config_fingerprint,
+                ),
+                ("backend", &baseline.backend, &current.backend),
+            ] {
+                if base != cur {
+                    incomparable
+                        .push(format!("{what}: baseline {base} vs run {cur}"));
+                }
+            }
+            if baseline.fast_mode != current.fast_mode {
+                incomparable.push(format!(
+                    "fast_mode: baseline {} vs run {} (BENCH_FAST sizing)",
+                    baseline.fast_mode, current.fast_mode
+                ));
+            }
+        }
+        Comparison {
+            suite: current.suite.clone(),
+            deltas,
+            missing,
+            added,
+            baseline_placeholder: baseline.placeholder,
+            incomparable,
+        }
+    }
+
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        if self.baseline_placeholder || !self.incomparable.is_empty() {
+            return Vec::new();
+        }
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.regressions().is_empty()
+    }
+
+    /// Human-readable comparison table + notes.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "compare '{}' vs baseline ({} gated):",
+            self.suite,
+            self.deltas.len()
+        );
+        if self.baseline_placeholder {
+            let _ = writeln!(
+                s,
+                "  baseline is a placeholder — nothing gated; record one \
+                 with `idatacool bench --suite all --baseline-out \
+                 bench/baseline.json`"
+            );
+        }
+        for m in &self.incomparable {
+            let _ = writeln!(
+                s,
+                "  WARNING: incomparable with baseline ({m}) — nothing \
+                 gated; refresh the baseline"
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  {:<44} {:>12} {:>12} {:>9} {:>7}",
+            "benchmark", "baseline", "current", "delta", "gate"
+        );
+        for d in &self.deltas {
+            let _ = writeln!(
+                s,
+                "  {:<44} {:>12} {:>12} {:>+8.1}% {:>7}",
+                d.id,
+                super::fmt_s(d.base_ns * 1e-9),
+                super::fmt_s(d.cur_ns * 1e-9),
+                d.delta_pct,
+                if self.baseline_placeholder || !self.incomparable.is_empty()
+                {
+                    "-"
+                } else if d.regressed {
+                    "FAIL"
+                } else {
+                    "ok"
+                },
+            );
+        }
+        for id in &self.missing {
+            let _ = writeln!(s, "  missing in current run (warn): {id}");
+        }
+        for id in &self.added {
+            let _ = writeln!(s, "  new bench (not in baseline): {id}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::record::{BenchRecord, SCHEMA};
+
+    fn report(suite: &str, cases: &[(&str, f64, Option<f64>)]) -> BenchReport {
+        BenchReport {
+            schema: SCHEMA.into(),
+            suite: suite.into(),
+            git_rev: "test".into(),
+            backend: "native".into(),
+            config_fingerprint: "0x0".into(),
+            fast_mode: true,
+            placeholder: false,
+            benches: cases
+                .iter()
+                .map(|(id, ns, thr)| BenchRecord {
+                    id: id.to_string(),
+                    ns_per_iter: *ns,
+                    std_ns: 0.0,
+                    min_ns: *ns,
+                    p95_ns: *ns,
+                    iters: 3,
+                    units_per_sec: 0.0,
+                    unit: String::new(),
+                    max_regress_pct: *thr,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn gate_fires_above_threshold_only() {
+        let base = report("s", &[("a", 100.0, None), ("b", 100.0, None)]);
+        let cur = report("s", &[("a", 130.0, None), ("b", 110.0, None)]);
+        let cmp = Comparison::build(&base, &cur, 25.0);
+        assert!(!cmp.passed());
+        let regs = cmp.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].id, "a");
+        assert!((regs[0].delta_pct - 30.0).abs() < 1e-9);
+        // 10 % is under the 25 % gate
+        assert!(!cmp.deltas.iter().find(|d| d.id == "b").unwrap().regressed);
+    }
+
+    #[test]
+    fn per_bench_threshold_overrides_default() {
+        let base = report("s", &[("a", 100.0, Some(50.0))]);
+        let cur = report("s", &[("a", 130.0, None)]);
+        let cmp = Comparison::build(&base, &cur, 25.0);
+        assert!(cmp.passed(), "50% override must win over the 25% default");
+        let tight = report("s", &[("a", 100.0, Some(10.0))]);
+        let cmp = Comparison::build(&tight, &cur, 25.0);
+        assert!(!cmp.passed(), "10% override must tighten the 25% default");
+    }
+
+    #[test]
+    fn speedups_and_missing_benches_never_fail() {
+        let base = report("s", &[("a", 100.0, None), ("gone", 50.0, None)]);
+        let cur = report("s", &[("a", 40.0, None), ("new", 9.0, None)]);
+        let cmp = Comparison::build(&base, &cur, 25.0);
+        assert!(cmp.passed());
+        assert_eq!(cmp.missing, vec!["gone".to_string()]);
+        assert_eq!(cmp.added, vec!["new".to_string()]);
+        assert!(cmp.report().contains("missing in current run"));
+    }
+
+    #[test]
+    fn mismatched_metadata_disarms_the_gate_loudly() {
+        let base = report("s", &[("a", 100.0, None)]);
+        let cur = report("s", &[("a", 1e9, None)]);
+        for tweak in ["fingerprint", "fast_mode", "backend"] {
+            let mut c = cur.clone();
+            match tweak {
+                "fingerprint" => c.config_fingerprint = "0xff".into(),
+                "fast_mode" => c.fast_mode = false,
+                _ => c.backend = "hlo".into(),
+            }
+            let cmp = Comparison::build(&base, &c, 25.0);
+            assert!(cmp.passed(), "{tweak}: incomparable must not gate");
+            assert!(!cmp.incomparable.is_empty(), "{tweak}");
+            assert!(cmp.report().contains("incomparable"), "{tweak}");
+        }
+        // identical metadata stays armed
+        let cmp = Comparison::build(&base, &cur, 25.0);
+        assert!(!cmp.passed());
+    }
+
+    #[test]
+    fn placeholder_baseline_gates_nothing() {
+        let mut base = report("s", &[("a", 1.0, None)]);
+        base.placeholder = true;
+        let cur = report("s", &[("a", 1e9, None)]);
+        let cmp = Comparison::build(&base, &cur, 25.0);
+        assert!(cmp.passed());
+        assert!(cmp.report().contains("placeholder"));
+    }
+}

@@ -1,0 +1,265 @@
+//! First-class benchmarking subsystem.
+//!
+//! Layers:
+//!  * the measurement runner (`Bench`/`BenchResult`) — criterion-style
+//!    warmup + timed iterations with trimmed-mean/std/min/p50/p95 stats
+//!    (no criterion in the vendored crate set);
+//!  * `record` — the machine-readable result schema (`idatacool-bench/1`
+//!    JSON: suite, bench id, ns/iter, units/sec, git rev, backend,
+//!    config fingerprint) written to `BENCH_<suite>.json`;
+//!  * `compare` — the baseline comparator behind CI's perf-regression
+//!    gate (`bench/baseline.json`, per-bench thresholds);
+//!  * `suites` — the registered suites the `idatacool bench` subcommand
+//!    runs (`hotpath`, `fleet`).
+//!
+//! `crate::util::bench` re-exports the runner for older call sites
+//! (`rust/benches/*.rs`, `examples/perf_scan.rs`).
+
+pub mod compare;
+pub mod record;
+pub mod suites;
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    /// Work units per iteration (for throughput reporting).
+    pub units_per_iter: f64,
+    pub unit_name: String,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            self.units_per_iter / self.mean_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let tp = if self.units_per_iter > 0.0 {
+            format!("  {:>12.1} {}/s", self.throughput(), self.unit_name)
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}{}",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.std_s),
+            fmt_s(self.min_s),
+            fmt_s(self.p95_s),
+            tp
+        )
+    }
+}
+
+/// Pretty time formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// True when `BENCH_FAST=1` (CI-sized runs).
+pub fn fast_mode() -> bool {
+    std::env::var("BENCH_FAST").ok().as_deref() == Some("1")
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, measure_iters: 12, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup_iters: warmup, measure_iters: iters, results: Vec::new() }
+    }
+
+    /// Honor `BENCH_FAST=1` for CI-sized runs. Fast sizing keeps 5
+    /// measure iterations — the minimum at which the trimmed mean drops
+    /// a sample, so one OS scheduling spike cannot move the mean that
+    /// CI's regression gate compares.
+    pub fn from_env() -> Self {
+        if fast_mode() {
+            Bench::new(1, 5)
+        } else {
+            Bench::default()
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}",
+            "benchmark", "mean", "std", "min", "p95"
+        )
+    }
+
+    /// Time `f` (which should perform one full iteration of the case).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_units(name, 0.0, "", &mut f)
+    }
+
+    /// Time with throughput units (e.g. simulated seconds, node-substeps).
+    /// Mean/std are computed with the slowest ~5 % of samples trimmed —
+    /// at least one sample once there are >= 5 (robust against OS
+    /// scheduling spikes); min/p50/p95 always use every sample.
+    pub fn run_with_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        unit_name: &str,
+        f: &mut F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.total_cmp(b));
+        // Trimmed mean: drop the slowest ~5 % of samples — at least one
+        // once there are >= 5 — to damp OS scheduling spikes (min/p50/p95
+        // still use every sample).
+        let drop = if times.len() >= 5 {
+            (times.len() / 20).max(1)
+        } else {
+            0
+        };
+        let kept = &times[..times.len() - drop];
+        let n = kept.len() as f64;
+        let mean = kept.iter().sum::<f64>() / n;
+        let var = kept.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: times[0],
+            p50_s: times[times.len() / 2],
+            p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            units_per_iter,
+            unit_name: unit_name.to_string(),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::new(1, 5);
+        let r = b
+            .run("noop-spin", || {
+                let mut x = 0u64;
+                for i in 0..10_000 {
+                    x = x.wrapping_add(i);
+                }
+                std::hint::black_box(x);
+            })
+            .clone();
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+        assert!(r.p95_s >= r.p50_s);
+        assert!(r.report().contains("noop-spin"));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new(0, 3);
+        let r = b
+            .run_with_units("units", 100.0, "items", &mut || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            })
+            .clone();
+        assert!(r.throughput() > 1000.0 && r.throughput() < 200_000.0);
+    }
+
+    #[test]
+    fn fmt_human() {
+        assert_eq!(fmt_s(2.5), "2.500s");
+        assert_eq!(fmt_s(0.0025), "2.500ms");
+        assert_eq!(fmt_s(2.5e-6), "2.500us");
+    }
+
+    #[test]
+    fn trimmed_mean_ignores_one_spike() {
+        // At the default 12-iteration sizing, one huge scheduling spike
+        // lands in the trimmed tail and the mean stays near the fast
+        // samples (this is what keeps the CI regression gate stable).
+        let mut b = Bench::new(0, 12);
+        let mut i = 0usize;
+        let r = b
+            .run("spiky", || {
+                i += 1;
+                if i == 7 {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                }
+            })
+            .clone();
+        assert!(r.mean_s < 0.010, "trimmed mean {} absorbed spike", r.mean_s);
+        assert_eq!(r.iters, 12);
+        assert!(r.p95_s >= 0.020, "p95 must still see the spike");
+    }
+
+    #[test]
+    fn tiny_sample_counts_are_not_trimmed() {
+        // Below 5 samples every one stays in the mean.
+        let mut b = Bench::new(0, 3);
+        let r = b
+            .run("tiny", || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            })
+            .clone();
+        assert!(r.mean_s >= 0.002 * 0.9, "mean {} lost samples", r.mean_s);
+    }
+
+    #[test]
+    fn fast_sizing_still_trims_one_sample() {
+        // `BENCH_FAST` runs 5 iterations, so the trim drops exactly one:
+        // one spike cannot move the gated mean.
+        let mut b = Bench::new(0, 5);
+        let mut i = 0usize;
+        let r = b
+            .run("fast-spiky", || {
+                i += 1;
+                if i == 3 {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                }
+            })
+            .clone();
+        assert!(r.mean_s < 0.010, "trimmed mean {} absorbed spike", r.mean_s);
+    }
+}

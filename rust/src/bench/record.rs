@@ -1,0 +1,387 @@
+//! Machine-readable benchmark records: the `idatacool-bench/1` schema.
+//!
+//! One `BenchReport` per suite, serialized to `BENCH_<suite>.json` with a
+//! stable field set (suite, bench id, ns/iter, units/sec, git rev,
+//! backend, config fingerprint) so CI can diff runs across commits. The
+//! JSON is built on `crate::util::json` (the vendored crate set has no
+//! serde): reports render through the `Json` value tree, whose object
+//! keys are `BTreeMap`-ordered — the emitted key order is alphabetical
+//! and therefore stable across runs and platforms.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::SimConfig;
+use crate::util::json::Json;
+
+use super::BenchResult;
+
+/// Schema identifier carried by every report.
+pub const SCHEMA: &str = "idatacool-bench/1";
+
+/// One benchmark case in the machine-readable report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Stable bench id, e.g. `plant_tick/native/n216`.
+    pub id: String,
+    pub ns_per_iter: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+    pub iters: usize,
+    /// Throughput (0 when the case has no unit).
+    pub units_per_sec: f64,
+    pub unit: String,
+    /// Per-bench regression threshold override for the comparator
+    /// (baselines only; `None` uses the gate's `--max-regress` default).
+    pub max_regress_pct: Option<f64>,
+}
+
+impl BenchRecord {
+    pub fn from_result(r: &BenchResult) -> Self {
+        BenchRecord {
+            id: r.name.clone(),
+            ns_per_iter: r.mean_s * 1e9,
+            std_ns: r.std_s * 1e9,
+            min_ns: r.min_s * 1e9,
+            p95_ns: r.p95_s * 1e9,
+            iters: r.iters,
+            units_per_sec: r.throughput(),
+            unit: r.unit_name.clone(),
+            max_regress_pct: None,
+        }
+    }
+}
+
+/// A full suite run: metadata + one record per bench.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub schema: String,
+    pub suite: String,
+    pub git_rev: String,
+    pub backend: String,
+    /// FNV-mixed hash of the reference config (hex string: u64 does not
+    /// survive a round trip through JSON f64 numbers).
+    pub config_fingerprint: String,
+    /// True when the run used `BENCH_FAST=1` sizing.
+    pub fast_mode: bool,
+    /// Placeholder baselines gate nothing; see `compare`.
+    pub placeholder: bool,
+    pub benches: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    pub fn from_results(
+        suite: &str,
+        backend: &str,
+        config_fingerprint: u64,
+        fast: bool,
+        results: &[BenchResult],
+    ) -> Self {
+        BenchReport {
+            schema: SCHEMA.to_string(),
+            suite: suite.to_string(),
+            git_rev: git_rev(),
+            backend: backend.to_string(),
+            config_fingerprint: format!("{config_fingerprint:#018x}"),
+            fast_mode: fast,
+            placeholder: false,
+            benches: results.iter().map(BenchRecord::from_result).collect(),
+        }
+    }
+
+    pub fn get(&self, id: &str) -> Option<&BenchRecord> {
+        self.benches.iter().find(|b| b.id == id)
+    }
+
+    pub fn to_json_value(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::Str(self.schema.clone()));
+        m.insert("suite".into(), Json::Str(self.suite.clone()));
+        m.insert("git_rev".into(), Json::Str(self.git_rev.clone()));
+        m.insert("backend".into(), Json::Str(self.backend.clone()));
+        m.insert(
+            "config_fingerprint".into(),
+            Json::Str(self.config_fingerprint.clone()),
+        );
+        m.insert("fast_mode".into(), Json::Bool(self.fast_mode));
+        m.insert("placeholder".into(), Json::Bool(self.placeholder));
+        let benches = self
+            .benches
+            .iter()
+            .map(|b| {
+                let mut e = BTreeMap::new();
+                e.insert("id".into(), Json::Str(b.id.clone()));
+                e.insert("ns_per_iter".into(), Json::Num(b.ns_per_iter));
+                e.insert("std_ns".into(), Json::Num(b.std_ns));
+                e.insert("min_ns".into(), Json::Num(b.min_ns));
+                e.insert("p95_ns".into(), Json::Num(b.p95_ns));
+                e.insert("iters".into(), Json::Num(b.iters as f64));
+                e.insert("units_per_sec".into(), Json::Num(b.units_per_sec));
+                e.insert("unit".into(), Json::Str(b.unit.clone()));
+                if let Some(t) = b.max_regress_pct {
+                    e.insert("max_regress_pct".into(), Json::Num(t));
+                }
+                Json::Obj(e)
+            })
+            .collect();
+        m.insert("benches".into(), Json::Arr(benches));
+        Json::Obj(m)
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_json_value().to_string()
+    }
+
+    pub fn from_json_value(j: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("bench report: field '{k}'"))?
+                .to_string())
+        };
+        let schema = s("schema")?;
+        anyhow::ensure!(
+            schema == SCHEMA,
+            "unsupported bench schema '{schema}' (want '{SCHEMA}')"
+        );
+        let mut benches = Vec::new();
+        for (i, e) in j
+            .get("benches")
+            .and_then(Json::as_arr)
+            .context("bench report: field 'benches'")?
+            .iter()
+            .enumerate()
+        {
+            let f = |k: &str| -> Result<f64> {
+                e.get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("bench #{i}: field '{k}'"))
+            };
+            benches.push(BenchRecord {
+                id: e
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("bench #{i}: field 'id'"))?
+                    .to_string(),
+                ns_per_iter: f("ns_per_iter")?,
+                std_ns: f("std_ns")?,
+                min_ns: f("min_ns")?,
+                p95_ns: f("p95_ns")?,
+                iters: f("iters")? as usize,
+                units_per_sec: f("units_per_sec")?,
+                unit: e
+                    .get("unit")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                max_regress_pct: e.get("max_regress_pct").and_then(Json::as_f64),
+            });
+        }
+        Ok(BenchReport {
+            schema,
+            suite: s("suite")?,
+            git_rev: s("git_rev")?,
+            backend: s("backend")?,
+            config_fingerprint: s("config_fingerprint")?,
+            fast_mode: j.get("fast_mode").and_then(Json::as_bool).unwrap_or(false),
+            placeholder: j
+                .get("placeholder")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            benches,
+        })
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_json_value(&Json::parse(text)?)
+    }
+}
+
+/// A baseline file: one or more suite reports (`bench/baseline.json` is a
+/// JSON array; a bare report object is accepted too).
+#[derive(Debug, Clone)]
+pub struct BaselineFile {
+    pub reports: Vec<BenchReport>,
+}
+
+impl BaselineFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read baseline {}", path.display()))?;
+        Self::from_json(&text)
+            .with_context(|| format!("parse baseline {}", path.display()))
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let reports = match &j {
+            Json::Arr(items) => items
+                .iter()
+                .map(BenchReport::from_json_value)
+                .collect::<Result<Vec<_>>>()?,
+            _ => vec![BenchReport::from_json_value(&j)?],
+        };
+        Ok(BaselineFile { reports })
+    }
+
+    pub fn find(&self, suite: &str) -> Option<&BenchReport> {
+        self.reports.iter().find(|r| r.suite == suite)
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::Arr(self.reports.iter().map(BenchReport::to_json_value).collect())
+            .to_string()
+    }
+}
+
+/// Best-effort git revision: `IDATACOOL_GIT_REV` env override, then
+/// `git rev-parse`, then `"unknown"` (benches must run outside checkouts).
+pub fn git_rev() -> String {
+    if let Ok(v) = std::env::var("IDATACOOL_GIT_REV") {
+        if !v.is_empty() {
+            return v;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// FNV-mixed fingerprint of the configuration knobs that change what a
+/// bench measures; reports with different fingerprints are not comparable.
+pub fn config_fingerprint(cfg: &SimConfig) -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    h = mix(h, cfg.n_nodes as u64);
+    h = mix(h, cfg.seed);
+    h = mix(h, cfg.t_out_setpoint.to_bits());
+    h = mix(h, cfg.pump_speed.to_bits());
+    h = mix(h, cfg.production_load.to_bits());
+    h = mix(h, cfg.pp.substeps_per_tick as u64);
+    h = mix(h, cfg.pp.dt_substep.to_bits());
+    for b in cfg.backend.bytes() {
+        h = mix(h, b as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            schema: SCHEMA.into(),
+            suite: "hotpath".into(),
+            git_rev: "abc123def456".into(),
+            backend: "native".into(),
+            config_fingerprint: "0x00000000deadbeef".into(),
+            fast_mode: true,
+            placeholder: false,
+            benches: vec![
+                BenchRecord {
+                    id: "plant_tick/native/n216".into(),
+                    ns_per_iter: 123456.789,
+                    std_ns: 1000.5,
+                    min_ns: 120000.0,
+                    p95_ns: 130000.25,
+                    iters: 12,
+                    units_per_sec: 4320.0,
+                    unit: "node-substeps".into(),
+                    max_regress_pct: None,
+                },
+                BenchRecord {
+                    id: "manifold_solve/72-branches".into(),
+                    ns_per_iter: 0.0625,
+                    std_ns: 0.001,
+                    min_ns: 0.05,
+                    p95_ns: 0.08,
+                    iters: 3,
+                    units_per_sec: 0.0,
+                    unit: "".into(),
+                    max_regress_pct: Some(40.0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_round_trips_exactly() {
+        let r = sample_report();
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        // f64 Display emits the shortest round-trip representation, so
+        // numeric fields survive bit-exactly.
+        assert_eq!(
+            r.benches[0].ns_per_iter.to_bits(),
+            back.benches[0].ns_per_iter.to_bits()
+        );
+        assert_eq!(
+            r.benches[1].max_regress_pct.unwrap().to_bits(),
+            back.benches[1].max_regress_pct.unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn baseline_accepts_array_and_single_object() {
+        let r = sample_report();
+        let arr = format!("[{}]", r.to_json());
+        let b = BaselineFile::from_json(&arr).unwrap();
+        assert_eq!(b.reports.len(), 1);
+        assert!(b.find("hotpath").is_some());
+        assert!(b.find("fleet").is_none());
+        let single = BaselineFile::from_json(&r.to_json()).unwrap();
+        assert_eq!(single.reports.len(), 1);
+        let back = BaselineFile::from_json(&b.to_json()).unwrap();
+        assert_eq!(back.reports[0], r);
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let text = sample_report().to_json().replace(SCHEMA, "bogus/9");
+        assert!(BenchReport::from_json(&text).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_knobs() {
+        let a = SimConfig::test_small();
+        let mut b = SimConfig::test_small();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.n_nodes = 216;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        let mut c = SimConfig::test_small();
+        c.backend = "hlo".into();
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+
+    #[test]
+    fn from_results_converts_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            mean_s: 2e-6,
+            std_s: 1e-7,
+            min_s: 1.8e-6,
+            p50_s: 2e-6,
+            p95_s: 2.4e-6,
+            units_per_iter: 10.0,
+            unit_name: "items".into(),
+        };
+        let rep = BenchReport::from_results("s", "native", 7, false, &[r]);
+        assert_eq!(rep.suite, "s");
+        assert!((rep.benches[0].ns_per_iter - 2000.0).abs() < 1e-9);
+        assert!((rep.benches[0].units_per_sec - 5e6).abs() < 1.0);
+        assert!(rep.config_fingerprint.starts_with("0x"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Registered benchmark suites for the `idatacool bench` subcommand.
+//!
+//! Suites are artifact-independent (native backend) so they run anywhere,
+//! including CI's `perf-smoke` job. The HLO-backend cases stay in
+//! `rust/benches/hotpath.rs`, which layers them on top of the `hotpath`
+//! suite when artifacts exist.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::constants::PlantParams;
+use crate::config::SimConfig;
+use crate::coordinator::telemetry::{SensorSpec, Telemetry};
+use crate::coordinator::SimulationDriver;
+use crate::figures::sweep::{self, SweepOptions};
+use crate::fleet::scenario::Scenario;
+use crate::fleet::{FleetConfig, FleetDriver};
+use crate::plant::hydraulics::{Manifold, ManifoldKind};
+use crate::plant::layout::NC;
+use crate::plant::TickOutput;
+use crate::runtime::{BackendKind, PlantBackend};
+use crate::variability::ChipLottery;
+use crate::workload::scheduler::BatchScheduler;
+use crate::workload::{UtilPlan, WorkloadSource};
+
+use super::record::{config_fingerprint, BenchReport};
+use super::{fast_mode, Bench};
+
+/// A registered suite.
+pub struct SuiteEntry {
+    pub name: &'static str,
+    pub description: &'static str,
+    runner: fn(&mut Bench) -> Result<()>,
+    /// Fingerprint of everything that changes what *this* suite
+    /// measures; the comparator disarms when it differs from the
+    /// baseline's, so each suite must hash its own knobs.
+    fingerprint: fn() -> u64,
+}
+
+/// The suite catalog.
+pub const SUITES: &[SuiteEntry] = &[
+    SuiteEntry {
+        name: "hotpath",
+        description: "per-layer hot paths: plant tick, coordinator tick, \
+                      scheduler, telemetry, manifold solve, lottery draw",
+        runner: hotpath,
+        fingerprint: hotpath_fingerprint,
+    },
+    SuiteEntry {
+        name: "fleet",
+        description: "meso benchmarks: sharded fleet runs and the \
+                      serial-vs-parallel setpoint sweep",
+        runner: fleet,
+        fingerprint: fleet_fingerprint,
+    },
+];
+
+pub fn by_name(name: &str) -> Result<&'static SuiteEntry> {
+    SUITES.iter().find(|s| s.name == name).ok_or_else(|| {
+        let names: Vec<&str> = SUITES.iter().map(|s| s.name).collect();
+        anyhow::anyhow!("unknown bench suite '{name}' (have {names:?})")
+    })
+}
+
+/// Run one suite and package the results as a machine-readable report.
+pub fn run_suite(name: &str) -> Result<BenchReport> {
+    let entry = by_name(name)?;
+    println!("suite '{}': {}", entry.name, entry.description);
+    println!("{}", Bench::header());
+    let mut b = Bench::from_env();
+    (entry.runner)(&mut b)?;
+    Ok(BenchReport::from_results(
+        entry.name,
+        &reference_config().backend,
+        (entry.fingerprint)(),
+        fast_mode(),
+        &b.results,
+    ))
+}
+
+/// The full-cluster preset pinned to the native backend — the config the
+/// hotpath coordinator bench and the sweep benches actually run.
+fn reference_config() -> SimConfig {
+    let mut cfg = SimConfig::idatacool_full();
+    cfg.backend = "native".into();
+    cfg.pp = PlantParams::from_artifacts(&cfg.artifacts_dir);
+    cfg
+}
+
+fn hotpath_fingerprint() -> u64 {
+    config_fingerprint(&reference_config())
+}
+
+fn fleet_fingerprint() -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    // Everything the fleet suite measures: the per-plant base config,
+    // the fleet shape, the sweep config and its timing knobs.
+    let mut h = config_fingerprint(&fleet_base());
+    h = mix(h, config_fingerprint(&reference_config()));
+    h = mix(h, FLEET_PLANTS as u64);
+    let o = fleet_sweep_opts();
+    for v in [o.settle_s, o.measure_s, o.settle_tol, o.max_extra_settle_s] {
+        h = mix(h, v.to_bits());
+    }
+    for sp in SWEEP_SETPOINTS {
+        h = mix(h, sp.to_bits());
+    }
+    h
+}
+
+const FLEET_PLANTS: usize = 4;
+const SWEEP_SETPOINTS: &[f64] = &[50.0, 59.0, 68.0];
+
+/// Per-plant base of the fleet benches (shared with `fleet_fingerprint`).
+fn fleet_base() -> SimConfig {
+    let mut base = SimConfig::test_small();
+    base.duration_s = 600.0;
+    base
+}
+
+/// Sweep sizing of the fleet benches (shared with `fleet_fingerprint`).
+fn fleet_sweep_opts() -> SweepOptions {
+    SweepOptions {
+        settle_s: 150.0,
+        measure_s: 120.0,
+        settle_tol: 3.0,
+        max_extra_settle_s: 300.0,
+        histogram_samples: 2,
+        equilibrium_s: 2000.0,
+    }
+}
+
+/// Micro/meso hot paths (native mirror of `benches/hotpath.rs`).
+fn hotpath(b: &mut Bench) -> Result<()> {
+    let art = Path::new("artifacts");
+    let pp = PlantParams::from_artifacts(art);
+
+    for &n in &[13usize, 216] {
+        let controls = vec![0.0f32, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+        let mut nat = PlantBackend::create(
+            BackendKind::Native, art, n, &pp, 0x1DA7AC001, 20.0)?;
+        let util = vec![1.0f32; nat.n_padded() * NC];
+        let mut out = TickOutput::new(nat.n_padded());
+        let node_substeps = (n * nat.substeps()) as f64;
+        b.run_with_units(
+            &format!("plant_tick/native/n{n}"), node_substeps,
+            "node-substeps", &mut || {
+                nat.tick(&controls, &util, &mut out).unwrap();
+            });
+    }
+
+    // Full coordinator tick around the plant, allocation-free path.
+    let mut cfg = reference_config();
+    cfg.t_water_init = 63.0;
+    let mut driver = SimulationDriver::new(cfg)?;
+    let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+    let mut out = TickOutput::new(driver.backend.n_padded());
+    b.run_with_units(
+        "coordinator_tick/native/n216", tick_s, "sim-seconds", &mut || {
+            driver.tick_into(&mut out).unwrap();
+        });
+
+    let mut sched = BatchScheduler::new(216, 0.92, 7);
+    let mut plan = UtilPlan::idle(256);
+    b.run("scheduler_advance/n216", || {
+        sched.advance(5.0, &mut plan);
+    });
+
+    let mut tel = Telemetry::new(SensorSpec::default(), 3);
+    b.run("telemetry_sample/256-cores", || {
+        let mut acc = 0.0;
+        for _ in 0..256 {
+            acc += tel.core_temp(84.0);
+        }
+        std::hint::black_box(acc);
+    });
+
+    let man = Manifold::from_params(&pp, 72, ManifoldKind::Tichelmann);
+    let mut flows = Vec::new();
+    b.run("manifold_solve/72-branches", || {
+        man.solve_flows_into(43.2, &mut flows);
+        std::hint::black_box(&flows);
+    });
+
+    b.run("lottery_draw/n216", || {
+        std::hint::black_box(ChipLottery::draw(216, &pp, 1));
+    });
+    Ok(())
+}
+
+/// Fleet engine + figure-sweep meso benchmarks.
+fn fleet(b: &mut Bench) -> Result<()> {
+    let base = fleet_base();
+    let scenario = Scenario::by_name("mixed")?;
+    for shards in [1usize, 4] {
+        let driver = FleetDriver::new(FleetConfig {
+            n_plants: FLEET_PLANTS,
+            shards,
+            base: base.clone(),
+            fleet_seed: 0x1DA7,
+            scenario,
+        })?;
+        b.run_with_units(
+            &format!("fleet_run/p4s{shards}/n13"),
+            FLEET_PLANTS as f64 * base.duration_s,
+            "plant-sim-seconds", &mut || {
+                driver.run().unwrap();
+            });
+    }
+
+    // The Fig. 4-7 setpoint sweep, serial vs sharded (the two must stay
+    // bitwise identical — tests/sweep_parallel.rs is the gate; this pair
+    // tracks the speedup).
+    let cfg = reference_config();
+    let opts = fleet_sweep_opts();
+    let sps = SWEEP_SETPOINTS;
+    let sim_s = (opts.settle_s + opts.measure_s) * sps.len() as f64;
+    b.run_with_units(
+        "sweep_serial/3-setpoints", sim_s, "sim-seconds", &mut || {
+            sweep::run_sweep_sharded(&cfg, sps, &opts, 1).unwrap();
+        });
+    let shards = sweep::default_sweep_shards(sps.len());
+    b.run_with_units(
+        &format!("sweep_parallel/3-setpoints/s{shards}"), sim_s,
+        "sim-seconds", &mut || {
+            sweep::run_sweep_sharded(&cfg, sps, &opts, shards).unwrap();
+        });
+    Ok(())
+}

@@ -275,18 +275,29 @@ impl SimulationDriver {
     /// Returns (node_power, core_mean, core_max, water_out) per node.
     pub fn node_observations(&mut self, out: &TickOutput)
                              -> Vec<[f64; OBS_N]> {
+        let mut v = Vec::new();
+        self.node_observations_into(out, &mut v);
+        v
+    }
+
+    /// `node_observations` into a caller-owned buffer (hot-path variant:
+    /// measurement loops reuse one buffer across ticks instead of
+    /// allocating per tick). Telemetry draws are identical to
+    /// `node_observations`, so both variants produce the same samples.
+    pub fn node_observations_into(&mut self, out: &TickOutput,
+                                  buf: &mut Vec<[f64; OBS_N]>) {
         let n = self.backend.n_nodes();
-        let mut v = Vec::with_capacity(n);
+        buf.clear();
+        buf.reserve(n);
         for i in 0..n {
             let o = out.node(i);
-            v.push([
+            buf.push([
                 self.telemetry.node_power(o[O_NODE_POWER] as f64),
                 self.telemetry.core_temp(o[O_CORE_MEAN] as f64),
                 self.telemetry.core_temp(o[O_CORE_MAX] as f64),
                 self.telemetry.node_water_temp(o[O_WATER_OUT] as f64),
             ]);
         }
-        v
     }
 
     /// Per-core temperatures (BMC-sampled) of the valid nodes — the raw
@@ -307,13 +318,28 @@ impl SimulationDriver {
         temps
     }
 
+    /// Advance one tick, writing the plant outputs into a caller-owned
+    /// `TickOutput` (hot-path variant of `tick_once`: measurement loops
+    /// reuse one buffer across ticks instead of allocating per tick).
+    ///
+    /// The scalars are zeroed first: `step` hands them to the supervisor
+    /// *before* the plant tick (over-temperature checks), and `tick_once`
+    /// always supplied a fresh zeroed buffer there — a reused buffer must
+    /// not change that. Both backends fully overwrite `node_obs`, so the
+    /// rest of the buffer needs no reset.
+    pub fn tick_into(&mut self, out: &mut TickOutput)
+                     -> Result<TraceSample> {
+        out.scalars = [0.0; NS];
+        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
+        let mut wall = 0.0;
+        self.step(tick_s, out, &mut wall)
+    }
+
     /// Expose one TickOutput-sized buffer (convenience for callers that
     /// need direct access between run segments).
     pub fn tick_once(&mut self) -> Result<(TickOutput, TraceSample)> {
-        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
         let mut out = TickOutput::new(self.backend.n_padded());
-        let mut wall = 0.0;
-        let sample = self.step(tick_s, &mut out, &mut wall)?;
+        let sample = self.tick_into(&mut out)?;
         Ok((out, sample))
     }
 }

@@ -5,6 +5,14 @@
 //! the statistics the paper reports (time+node averages with standard
 //! deviations for the 13 selected nodes, plant-level energy fractions,
 //! and per-node (T_core, P_node) pairs for the Fig. 5b interpolation).
+//!
+//! Setpoints are independent simulations (each builds its own driver from
+//! the same config), so the sweep parallelizes with the fleet engine's
+//! sharding pattern: setpoint i goes to shard i % K
+//! (`util::shard::round_robin`), each shard runs its setpoints on its own
+//! OS thread, and the reduction walks results in setpoint order — a
+//! K-shard sweep is bitwise identical to the serial one
+//! (`tests/sweep_parallel.rs` is the gate).
 
 use std::collections::BTreeMap;
 
@@ -14,7 +22,9 @@ use crate::config::{SimConfig, WorkloadKind};
 use crate::coordinator::energy::EnergyAccount;
 use crate::coordinator::SimulationDriver;
 use crate::plant::layout::*;
+use crate::plant::TickOutput;
 use crate::stats::Running;
+use crate::util::shard::round_robin;
 
 /// Sweep timing knobs (short values for tests, long for real runs).
 #[derive(Debug, Clone)]
@@ -89,85 +99,190 @@ pub struct SweepData {
     pub selected: Vec<usize>,
 }
 
-/// Run the stress sweep over the given setpoints.
+/// One setpoint's finished measurement — the unit of parallel work.
+struct SetpointRun {
+    point: SweepPoint,
+    /// (six-core node index, (core_mean, node_power)) in node order.
+    node_tp: Vec<(usize, (f64, f64))>,
+    selected: Vec<usize>,
+}
+
+/// Shard count for a sweep: every available core (capped at the setpoint
+/// count), overridable via `IDATACOOL_SWEEP_SHARDS` (1 forces serial).
+/// An unparseable override warns and falls back — never silently.
+pub fn default_sweep_shards(n_setpoints: usize) -> usize {
+    let cores = match std::env::var("IDATACOOL_SWEEP_SHARDS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(k) => k,
+            Err(_) => {
+                eprintln!(
+                    "warning: IDATACOOL_SWEEP_SHARDS='{v}' is not a \
+                     non-negative integer; using all available cores"
+                );
+                available_cores()
+            }
+        },
+        Err(_) => available_cores(),
+    };
+    cores.clamp(1, n_setpoints.max(1))
+}
+
+fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run the stress sweep over the given setpoints, sharded across all
+/// configured threads. Bitwise identical to `run_sweep_serial`.
 pub fn run_sweep(cfg: &SimConfig, setpoints: &[f64], opts: &SweepOptions)
                  -> Result<SweepData> {
-    let mut points = Vec::new();
+    run_sweep_sharded(cfg, setpoints, opts,
+                      default_sweep_shards(setpoints.len()))
+}
+
+/// The single-threaded reference path.
+pub fn run_sweep_serial(cfg: &SimConfig, setpoints: &[f64],
+                        opts: &SweepOptions) -> Result<SweepData> {
+    run_sweep_sharded(cfg, setpoints, opts, 1)
+}
+
+/// Run the sweep over an explicit shard (OS thread) count.
+pub fn run_sweep_sharded(cfg: &SimConfig, setpoints: &[f64],
+                         opts: &SweepOptions, shards: usize)
+                         -> Result<SweepData> {
+    let n = setpoints.len();
+    let shards = shards.clamp(1, n.max(1));
+    let mut slots: Vec<Option<SetpointRun>> = (0..n).map(|_| None).collect();
+
+    if shards <= 1 {
+        for (i, &sp) in setpoints.iter().enumerate() {
+            slots[i] = Some(measure_setpoint(cfg, sp, opts)?);
+        }
+    } else {
+        let indexed: Vec<(usize, f64)> =
+            setpoints.iter().copied().enumerate().collect();
+        let buckets = round_robin(indexed, shards);
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(buckets.len());
+            for bucket in buckets {
+                handles.push(scope.spawn(
+                    move || -> Result<Vec<(usize, SetpointRun)>> {
+                        let mut runs = Vec::with_capacity(bucket.len());
+                        for (i, sp) in bucket {
+                            runs.push((i, measure_setpoint(cfg, sp, opts)?));
+                        }
+                        Ok(runs)
+                    },
+                ));
+            }
+            for h in handles {
+                let shard_runs = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("sweep shard panicked"))??;
+                for (i, run) in shard_runs {
+                    slots[i] = Some(run);
+                }
+            }
+            Ok(())
+        })?;
+    }
+
+    // Reduce in setpoint order — identical for every shard count.
+    let mut points = Vec::with_capacity(n);
     let mut node_series: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
     let mut selected = Vec::new();
-
-    for &sp in setpoints {
-        let mut c = cfg.clone();
-        c.workload = WorkloadKind::Stress;
-        c.stress_background = 1.0; // full background so high T_out is reachable
-        c.t_out_setpoint = sp;
-        c.t_water_init = (sp - 3.0).max(20.0); // warm start
-        let mut driver = SimulationDriver::new(c)?;
-        let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
-
-        // --- settle -------------------------------------------------------
-        driver.run_ticks((opts.settle_s / tick_s).ceil() as u64, 0)?;
-        let mut extra = 0.0;
-        loop {
-            let t_out =
-                driver.backend.circuit_state()[C_T_RACK_OUT] as f64;
-            if (t_out - sp).abs() < opts.settle_tol
-                || extra >= opts.max_extra_settle_s
-            {
-                break;
-            }
-            driver.run_ticks((60.0 / tick_s).ceil() as u64, 0)?;
-            extra += 60.0;
-        }
-
-        // --- measure ------------------------------------------------------
-        let sel = parse_selected(&driver.workload.stats(), &driver);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let run = slot.ok_or_else(|| {
+            anyhow::anyhow!("setpoint {i} produced no measurement")
+        })?;
         if selected.is_empty() {
-            selected = sel.clone();
+            selected = run.selected;
         }
-        let mut t_out = Running::new();
-        let mut t_tank = Running::new();
-        let mut sel_core = Running::new();
-        let mut sel_power = Running::new();
-        let mut valve = Running::new();
-        let mut energy = EnergyAccount::new();
-        // per-node accumulators over the window (six-core only)
-        let six = driver.lottery.six_core_nodes();
-        let mut node_t: BTreeMap<usize, Running> = BTreeMap::new();
-        let mut node_p: BTreeMap<usize, Running> = BTreeMap::new();
-
-        let ticks = (opts.measure_s / tick_s).ceil() as u64;
-        for _ in 0..ticks {
-            let (out, sample) = driver.tick_once()?;
-            energy.push(&out.scalars, tick_s);
-            t_out.push(sample.t_rack_out);
-            t_tank.push(sample.t_tank);
-            valve.push(sample.valve);
-            let obs = driver.node_observations(&out);
-            for &n in &sel {
-                sel_core.push(obs[n][O_CORE_MEAN]);
-                sel_power.push(obs[n][O_NODE_POWER]);
-            }
-            for &n in &six {
-                node_t.entry(n).or_default().push(obs[n][O_CORE_MEAN]);
-                node_p.entry(n).or_default().push(obs[n][O_NODE_POWER]);
-            }
+        for (node, tp) in run.node_tp {
+            node_series.entry(node).or_default().push(tp);
         }
+        points.push(run.point);
+    }
+    Ok(SweepData { points, node_series, selected })
+}
 
+/// Warm-start, settle and measure one setpoint. Self-contained: builds
+/// its own driver from `cfg`, so concurrent setpoints share nothing.
+fn measure_setpoint(cfg: &SimConfig, sp: f64, opts: &SweepOptions)
+                    -> Result<SetpointRun> {
+    let mut c = cfg.clone();
+    c.workload = WorkloadKind::Stress;
+    c.stress_background = 1.0; // full background so high T_out is reachable
+    c.t_out_setpoint = sp;
+    c.t_water_init = (sp - 3.0).max(20.0); // warm start
+    let mut driver = SimulationDriver::new(c)?;
+    let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+
+    // --- settle -----------------------------------------------------------
+    driver.run_ticks((opts.settle_s / tick_s).ceil() as u64, 0)?;
+    let mut extra = 0.0;
+    loop {
+        let t_out = driver.backend.circuit_state()[C_T_RACK_OUT] as f64;
+        if (t_out - sp).abs() < opts.settle_tol
+            || extra >= opts.max_extra_settle_s
+        {
+            break;
+        }
+        driver.run_ticks((60.0 / tick_s).ceil() as u64, 0)?;
+        extra += 60.0;
+    }
+
+    // --- measure ----------------------------------------------------------
+    let sel = parse_selected(&driver.workload.stats(), &driver);
+    let mut t_out = Running::new();
+    let mut t_tank = Running::new();
+    let mut sel_core = Running::new();
+    let mut sel_power = Running::new();
+    let mut valve = Running::new();
+    let mut energy = EnergyAccount::new();
+    // per-node accumulators over the window (six-core only)
+    let six = driver.lottery.six_core_nodes().to_vec();
+    let mut node_t: BTreeMap<usize, Running> = BTreeMap::new();
+    let mut node_p: BTreeMap<usize, Running> = BTreeMap::new();
+
+    // Hot loop: one TickOutput + one observation buffer reused across the
+    // whole window (no per-tick allocation).
+    let mut out = TickOutput::new(driver.backend.n_padded());
+    let mut obs: Vec<[f64; OBS_N]> =
+        Vec::with_capacity(driver.backend.n_nodes());
+    let ticks = (opts.measure_s / tick_s).ceil() as u64;
+    for _ in 0..ticks {
+        let sample = driver.tick_into(&mut out)?;
+        energy.push(&out.scalars, tick_s);
+        t_out.push(sample.t_rack_out);
+        t_tank.push(sample.t_tank);
+        valve.push(sample.valve);
+        driver.node_observations_into(&out, &mut obs);
+        for &n in &sel {
+            sel_core.push(obs[n][O_CORE_MEAN]);
+            sel_power.push(obs[n][O_NODE_POWER]);
+        }
         for &n in &six {
-            let t = node_t[&n].mean();
-            let p = node_p[&n].mean();
-            node_series.entry(n).or_default().push((t, p));
+            node_t.entry(n).or_default().push(obs[n][O_CORE_MEAN]);
+            node_p.entry(n).or_default().push(obs[n][O_NODE_POWER]);
         }
+    }
 
-        // Fig. 7a error bars: temporal fluctuations of in/out temps + flow
-        let hiw = energy.heat_in_water_fraction();
-        let hiw_err = hiw
-            * ((t_out.std() / (t_out.mean() - 20.0).max(1.0)).powi(2)
-                + 0.005f64.powi(2))
-            .sqrt()
-            + 0.01;
-        points.push(SweepPoint {
+    let node_tp = six
+        .iter()
+        .map(|&n| (n, (node_t[&n].mean(), node_p[&n].mean())))
+        .collect();
+
+    // Fig. 7a error bars: temporal fluctuations of in/out temps + flow
+    let hiw = energy.heat_in_water_fraction();
+    let hiw_err = hiw
+        * ((t_out.std() / (t_out.mean() - 20.0).max(1.0)).powi(2)
+            + 0.005f64.powi(2))
+        .sqrt()
+        + 0.01;
+    Ok(SetpointRun {
+        point: SweepPoint {
             setpoint: sp,
             t_out,
             t_tank,
@@ -180,9 +295,10 @@ pub fn run_sweep(cfg: &SimConfig, setpoints: &[f64], opts: &SweepOptions)
             reuse: energy.reuse_fraction(),
             valve_mean: valve.mean(),
             p_ac: energy.mean_p_ac(),
-        });
-    }
-    Ok(SweepData { points, node_series, selected })
+        },
+        node_tp,
+        selected: sel,
+    })
 }
 
 /// The driver owns the workload behind a trait object; recover the

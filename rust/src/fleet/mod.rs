@@ -27,6 +27,7 @@ use anyhow::Result;
 
 use crate::config::SimConfig;
 use crate::coordinator::{RunResult, SimulationDriver};
+use crate::util::shard::round_robin;
 use crate::variability::rng::splitmix64;
 
 use aggregate::FleetAggregate;
@@ -110,12 +111,9 @@ impl FleetDriver {
         let n_plants = specs.len();
         let shards = self.cfg.shards.clamp(1, n_plants);
 
-        // Round-robin shard assignment: plant i -> shard i % K.
-        let mut buckets: Vec<Vec<PlantSpec>> =
-            (0..shards).map(|_| Vec::new()).collect();
-        for (i, spec) in specs.into_iter().enumerate() {
-            buckets[i % shards].push(spec);
-        }
+        // Round-robin shard assignment: plant i -> shard i % K (shared
+        // with the parallel setpoint sweep, util::shard).
+        let buckets = round_robin(specs, shards);
 
         let mut slots: Vec<Option<PlantRun>> =
             (0..n_plants).map(|_| None).collect();

@@ -18,6 +18,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-figure reproductions.
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod economics;

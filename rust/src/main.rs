@@ -5,6 +5,7 @@
 //!   fleet       sharded multi-plant fleet + shared facility loop
 //!   figures     regenerate the paper's figures (CSV + ASCII)
 //!   equilibrium the Sect.-3 cold-start narrative (alias: figures --fig s3)
+//!   bench       registered benchmark suites + perf-regression gate
 //!   validate    cross-backend validation + fault-injection checks
 //!   info        artifact / manifest / platform info
 //!
@@ -12,6 +13,8 @@
 //!   idatacool run --preset full --duration 3600 --setpoint 67
 //!   idatacool fleet --plants 8 --scenario heatwave --shards 4
 //!   idatacool figures --fig all --quick --out results
+//!   idatacool bench --suite hotpath --json BENCH_hotpath.json
+//!   idatacool bench --suite all --json . --compare bench/baseline.json
 //!   idatacool validate --faults
 
 use std::path::PathBuf;
@@ -33,6 +36,7 @@ fn main() -> Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("figures") => cmd_figures(&args),
         Some("equilibrium") => cmd_figures_with(&args, "s3"),
+        Some("bench") => cmd_bench(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -45,7 +49,7 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 idatacool — digital twin of the iDataCool hot-water-cooled HPC system
 
-USAGE: idatacool <run|fleet|figures|equilibrium|validate|info> [flags]
+USAGE: idatacool <run|fleet|figures|equilibrium|bench|validate|info> [flags]
 
 common flags:
   --config <file.toml>   load a TOML config (presets: full|subset13|test_small)
@@ -69,6 +73,14 @@ figures flags:
   --fig <id|all|sweep>   4a 4b 5a 5b 6a 6b 7a 7b r1 s3 r2 manifold binning econ
   --out <dir>            write CSVs here (default: results)
   --quick                short settle/measure windows (CI-sized)
+bench flags:
+  --suite <name|all>     registered suite (hotpath|fleet; default all)
+  --json <path>          write BENCH_<suite>.json (file for one suite,
+                         directory for several); BENCH_FAST=1 shrinks runs
+  --compare <baseline>   gate against bench/baseline.json-style file
+  --max-regress <pct>    regression threshold for --compare (default 25)
+  --baseline-out <path>  write all suite reports as a new baseline file
+  --list                 list registered suites
 validate flags:
   --faults               include fault-injection scenarios
   --ticks <n>            trajectory length for backend comparison
@@ -151,15 +163,30 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if base.backend == "auto" {
         base.backend = "native".into();
     }
-    let n_plants = args.usize_or("plants", 4);
+    let n_plants = args.usize_strict("plants", 4)?;
+    anyhow::ensure!(
+        n_plants >= 1,
+        "--plants must be at least 1 (a fleet needs at least one plant)"
+    );
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
+    let shards_req = args.usize_strict("shards", cores.min(n_plants))?;
+    anyhow::ensure!(
+        shards_req >= 1,
+        "--shards must be at least 1 (use 1 for a serial run)"
+    );
     // Clamp exactly as FleetDriver::run will, so the header matches what
-    // actually runs.
-    let shards = args
-        .usize_or("shards", cores.min(n_plants.max(1)))
-        .clamp(1, n_plants.max(1));
+    // actually runs — but tell the user instead of doing it silently.
+    let shards = if shards_req > n_plants {
+        eprintln!(
+            "warning: --shards {shards_req} exceeds --plants {n_plants}; \
+             clamping to {n_plants} (one shard per plant)"
+        );
+        n_plants
+    } else {
+        shards_req
+    };
     let scenario = Scenario::by_name(args.str_or("scenario", "baseline"))?;
 
     println!(
@@ -236,6 +263,96 @@ fn cmd_figures_with(args: &Args, id: &str) -> Result<()> {
         println!("({:.1}s wall)", t0.elapsed().as_secs_f64());
     }
     Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    use idatacool::bench::compare::Comparison;
+    use idatacool::bench::record::BaselineFile;
+    use idatacool::bench::suites;
+
+    if args.has("list") {
+        for s in suites::SUITES {
+            println!("{:<10} {}", s.name, s.description);
+        }
+        return Ok(());
+    }
+
+    let which = args.str_or("suite", "all");
+    let names: Vec<&'static str> = if which == "all" {
+        suites::SUITES.iter().map(|s| s.name).collect()
+    } else {
+        vec![suites::by_name(which)?.name]
+    };
+    let max_regress = args.f64_or("max-regress", 25.0);
+    let baseline = match args.get("compare") {
+        Some(p) => Some(BaselineFile::load(std::path::Path::new(p))?),
+        None => None,
+    };
+
+    let mut reports = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for name in &names {
+        let report = suites::run_suite(name)?;
+        if let Some(json) = args.get("json") {
+            let path = bench_json_path(json, name, names.len() > 1);
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(&path, report.to_json())?;
+            println!("wrote {}", path.display());
+        }
+        if let Some(base) = &baseline {
+            match base.find(name) {
+                Some(b) => {
+                    let cmp = Comparison::build(b, &report, max_regress);
+                    print!("{}", cmp.report());
+                    for d in cmp.regressions() {
+                        failures.push(format!(
+                            "{}/{} +{:.1}% (gate {:.0}%)",
+                            name, d.id, d.delta_pct, d.threshold_pct
+                        ));
+                    }
+                }
+                None => println!(
+                    "baseline has no suite '{name}'; nothing gated"
+                ),
+            }
+        }
+        reports.push(report);
+        println!();
+    }
+
+    if let Some(out) = args.get("baseline-out") {
+        let path = std::path::Path::new(out);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, BaselineFile { reports }.to_json())?;
+        println!("baseline written to {out}");
+    }
+
+    anyhow::ensure!(
+        failures.is_empty(),
+        "perf regression gate failed: {}",
+        failures.join("; ")
+    );
+    Ok(())
+}
+
+/// Resolve `--json` into a concrete file path: a directory (or a
+/// multi-suite run) gets `BENCH_<suite>.json` inside it; a single suite
+/// with a non-directory path writes exactly that file.
+fn bench_json_path(arg: &str, suite: &str, multi: bool) -> PathBuf {
+    let p = PathBuf::from(arg);
+    if p.is_dir() || multi {
+        p.join(format!("BENCH_{suite}.json"))
+    } else {
+        p
+    }
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {

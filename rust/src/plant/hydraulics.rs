@@ -86,20 +86,76 @@ impl Manifold {
         }
     }
 
+    /// All branch-path pressure drops at once in O(n): one prefix-sum
+    /// pass over the branch flows, then cumulative supply/return header
+    /// sweeps. Mirrors the O(n^2)-per-branch reference `path_dp` (kept
+    /// for validation and one-shot callers) up to float summation order.
+    fn path_dps_into(&self, q: &[f64], prefix: &mut [f64], dps: &mut [f64]) {
+        let n = self.n;
+        prefix[0] = 0.0;
+        for (j, &qj) in q.iter().enumerate() {
+            prefix[j + 1] = prefix[j] + qj;
+        }
+        let total = prefix[n];
+        // Supply header (segments 0..=i, segment j carrying the flow
+        // still headed downstream) + the branch term.
+        let mut supply = 0.0;
+        for i in 0..n {
+            let remaining = total - prefix[i];
+            supply += self.r_segment * remaining * remaining;
+            dps[i] = supply + self.r_branch * q[i] * q[i];
+        }
+        match self.kind {
+            ManifoldKind::DirectReturn => {
+                // Return segments i, i-1, ..., 1; segment j carries the
+                // collected flow of branches j..n.
+                let mut ret = 0.0;
+                for i in 1..n {
+                    let seg = total - prefix[i];
+                    ret += self.r_segment * seg * seg;
+                    dps[i] += ret;
+                }
+            }
+            ManifoldKind::Tichelmann => {
+                // Reverse return: segments i..n-1; segment j carries the
+                // collected flow of branches 0..=j.
+                let mut ret = 0.0;
+                for i in (0..n).rev() {
+                    dps[i] += ret;
+                    ret += self.r_segment * prefix[i] * prefix[i];
+                }
+            }
+        }
+    }
+
     /// Solve branch flows [l/min] for a given total rack flow by fixed-
     /// point iteration on equal path pressure drops.
     pub fn solve_flows(&self, total_flow_lpm: f64) -> Vec<f64> {
+        let mut q = Vec::new();
+        self.solve_flows_into(total_flow_lpm, &mut q);
+        q
+    }
+
+    /// `solve_flows` into a caller-owned buffer; the scratch vectors are
+    /// hoisted out of the fixed-point loop (previously one `dps`
+    /// allocation per iteration, each filled by an O(n^2)-per-branch
+    /// sweep), so a solve is two scratch allocations + O(n) per
+    /// iteration.
+    pub fn solve_flows_into(&self, total_flow_lpm: f64, q: &mut Vec<f64>) {
         let n = self.n;
-        let mut q = vec![total_flow_lpm / n as f64; n];
+        q.clear();
+        q.resize(n, total_flow_lpm / n as f64);
+        let mut prefix = vec![0.0f64; n + 1];
+        let mut dps = vec![0.0f64; n];
         for _ in 0..300 {
-            let dps: Vec<f64> = (0..n).map(|i| self.path_dp(&q, i)).collect();
+            self.path_dps_into(q, &mut prefix, &mut dps);
             let dp_mean = dps.iter().sum::<f64>() / n as f64;
             let mut changed = 0.0f64;
-            for i in 0..n {
-                let adj = (dp_mean / dps[i]).sqrt().clamp(0.5, 2.0);
-                let new_q = q[i] * (1.0 + 0.5 * (adj - 1.0));
-                changed = changed.max((new_q - q[i]).abs());
-                q[i] = new_q;
+            for (qi, dp) in q.iter_mut().zip(&dps) {
+                let adj = (dp_mean / dp).sqrt().clamp(0.5, 2.0);
+                let new_q = *qi * (1.0 + 0.5 * (adj - 1.0));
+                changed = changed.max((new_q - *qi).abs());
+                *qi = new_q;
             }
             // renormalize to the total
             let sum: f64 = q.iter().sum();
@@ -110,7 +166,6 @@ impl Manifold {
                 break;
             }
         }
-        q
     }
 
     /// Relative flow imbalance: (max - min) / mean.
@@ -214,6 +269,37 @@ mod tests {
                 assert!((dp / mean - 1.0).abs() < 0.01, "dp {dp} mean {mean}");
             }
         }
+    }
+
+    #[test]
+    fn fast_path_dps_match_reference() {
+        // The O(n) prefix-sum evaluation must agree with the O(n^2)
+        // reference `path_dp` to float-summation-order accuracy.
+        let pp = PlantParams::default();
+        for kind in [ManifoldKind::Tichelmann, ManifoldKind::DirectReturn] {
+            let m = Manifold::from_params(&pp, 48, kind);
+            let q = m.solve_flows(48.0 * 0.6);
+            let mut prefix = vec![0.0; 49];
+            let mut dps = vec![0.0; 48];
+            m.path_dps_into(&q, &mut prefix, &mut dps);
+            for (i, &dp) in dps.iter().enumerate() {
+                let reference = m.path_dp(&q, i);
+                assert!(
+                    (dp - reference).abs() <= 1e-12 * reference.abs().max(1e-9),
+                    "{kind:?} branch {i}: fast {dp} vs reference {reference}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solve_flows_into_reuses_buffer() {
+        let pp = PlantParams::default();
+        let m = Manifold::from_params(&pp, 24, ManifoldKind::Tichelmann);
+        let mut q = vec![99.0; 7]; // wrong size + stale contents
+        m.solve_flows_into(24.0 * 0.6, &mut q);
+        assert_eq!(q.len(), 24);
+        assert_eq!(q, m.solve_flows(24.0 * 0.6));
     }
 
     #[test]

@@ -33,12 +33,23 @@ impl NativePlant {
     pub fn new(pp: PlantParams, ops: Operators, st: PlantStatic,
                t_water: f32) -> Self {
         let npad = st.n_padded;
+        let n = st.n_nodes;
         let substeps = pp.substeps_per_tick;
         let circuit_state = circuits::initial_circuit_state(t_water, &pp);
+        // q_base has exactly two live entries per node: the advective
+        // inlet (updated every substep) and the sink constant, which
+        // depends only on plant parameters — set once here so the tick
+        // loop never refills the buffer.
+        let mut q_base = vec![0.0; npad * S];
+        let q_sink_const = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+            * ops.inv_c[IDX_SINK] as f64) as f32;
+        for i in 0..n {
+            q_base[i * S + IDX_SINK] = q_sink_const;
+        }
         NativePlant {
             scratch: NodeScratch::new(npad),
             g_eff: vec![0.0; npad * NG],
-            q_base: vec![0.0; npad * S],
+            q_base,
             node_state: vec![t_water; npad * S],
             circuit_state,
             pp,
@@ -69,22 +80,18 @@ impl NativePlant {
             self.g_eff[i * NG + G_ADV] *= flow;
         }
 
-        let q_sink_const = ((pp.p_node_base
-            + pp.ua_node_air * pp.t_room)
-            * self.ops.inv_c[IDX_SINK] as f64) as f32;
         let inv_c_w = self.ops.inv_c[IDX_WATER];
 
         for _ in 0..self.substeps {
-            // q_base at the current rack inlet temperature.
+            // q_base: only the advective-inlet entry varies within a
+            // tick; the sink constant and the zero entries were set at
+            // construction. g_eff's advection channel already carries
+            // flow * g (f32 multiplication commutes bitwise), so this
+            // reproduces flow * g * t_in * inv_c_w exactly.
             let t_in = self.circuit_state[C_T_RACK_IN];
             for i in 0..npad {
-                let q = &mut self.q_base[i * S..(i + 1) * S];
-                q.fill(0.0);
-                q[IDX_WATER] =
-                    flow * self.st.g[i * NG + G_ADV] * t_in * inv_c_w;
-                if i < n {
-                    q[IDX_SINK] = q_sink_const;
-                }
+                self.q_base[i * S + IDX_WATER] =
+                    self.g_eff[i * NG + G_ADV] * t_in * inv_c_w;
             }
             let p_dc = node::fused_substep(
                 &mut self.node_state, &self.g_eff, util, &self.st.p_dyn,

@@ -107,10 +107,13 @@ pub fn fused_substep(
 
     // Fixed-size operator rows (cached in scratch) let LLVM fully unroll
     // and vectorize the 16-wide dot products (EXPERIMENTS.md §Perf).
-    if scratch.fixed.is_none() {
-        scratch.fixed = Some(FixedOps::from_ops(ops));
+    // Split-borrow the scratch fields so the cached FixedOps can be read
+    // in place while the work buffers are written (no per-substep clone).
+    let NodeScratch { diffs, p_cores, t_next, fixed } = scratch;
+    if fixed.is_none() {
+        *fixed = Some(FixedOps::from_ops(ops));
     }
-    let fx = scratch.fixed.as_ref().unwrap().clone();
+    let fx = fixed.as_ref().unwrap();
     let leak_fb = (pp.leak_frac * pp.leak_beta) as f32;
     let leak_t0 = pp.leak_t0 as f32;
     let t_thr = pp.t_throttle as f32;
@@ -141,7 +144,7 @@ pub fn fused_substep(
             pc[c] = p;
             p_node += p;
         }
-        scratch.p_cores[i * NC..(i + 1) * NC].copy_from_slice(&pc);
+        p_cores[i * NC..(i + 1) * NC].copy_from_slice(&pc);
         if i < n_valid {
             p_total += p_node as f64 + pp.p_node_base;
         }
@@ -156,7 +159,7 @@ pub fn fused_substep(
             }
             dvec[ch] = acc * gi[ch];
         }
-        scratch.diffs[i * NG..(i + 1) * NG].copy_from_slice(&dvec);
+        diffs[i * NG..(i + 1) * NG].copy_from_slice(&dvec);
 
         // --- T' = T + dt * (T A0^T + diffs E2^T + P Ec^T + q) ----------------
         let mut qi = [0.0f32; S];
@@ -178,9 +181,9 @@ pub fn fused_substep(
             }
             tn[s] = ts[s] + dt * acc;
         }
-        scratch.t_next[i * S..(i + 1) * S].copy_from_slice(&tn);
+        t_next[i * S..(i + 1) * S].copy_from_slice(&tn);
     }
-    t.copy_from_slice(&scratch.t_next);
+    t.copy_from_slice(t_next);
     p_total
 }
 

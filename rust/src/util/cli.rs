@@ -60,6 +60,21 @@ impl Args {
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
+
+    /// Like `usize_or`, but a present-yet-unparseable value is an error
+    /// instead of a silent fall-back to the default (user-facing flags
+    /// like `--plants`/`--shards` must not misbehave quietly).
+    pub fn usize_strict(&self, key: &str, default: usize)
+                        -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!(
+                    "--{key} expects a non-negative integer, got '{s}'"
+                )
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +101,20 @@ mod tests {
         assert_eq!(a.usize_or("nodes", 0), 13);
         assert_eq!(a.f64_or("setpoint", 0.0), 67.5);
         assert_eq!(a.f64_or("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn strict_accessor_rejects_garbage() {
+        let a = parse("--plants 4 --shards nope");
+        assert_eq!(a.usize_strict("plants", 1).unwrap(), 4);
+        assert_eq!(a.usize_strict("missing", 7).unwrap(), 7);
+        let err = a.usize_strict("shards", 1).unwrap_err().to_string();
+        assert!(err.contains("--shards") && err.contains("nope"), "{err}");
+        // negative and fractional values are rejected, not truncated
+        let a = parse("--plants -2");
+        assert!(a.usize_strict("plants", 1).is_err());
+        let a = parse("--plants 2.5");
+        assert!(a.usize_strict("plants", 1).is_err());
     }
 
     #[test]

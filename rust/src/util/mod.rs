@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod shard;
 
 /// Clamp helper for f32 (stable API, avoids float NaN surprises: NaN -> lo).
 #[inline]

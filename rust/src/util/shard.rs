@@ -1,0 +1,44 @@
+//! Round-robin shard assignment shared by the fleet engine and the
+//! parallel setpoint sweep.
+//!
+//! Work item `i` lands in bucket `i % shards`. Assignment depends only on
+//! the item order and the shard count — never on thread timing — which is
+//! half of the determinism contract (the other half: reduce results in
+//! item order, not completion order).
+
+/// Distribute `items` over `shards` buckets round-robin (shards is
+/// clamped to at least 1; trailing buckets may be empty when there are
+/// fewer items than shards).
+pub fn round_robin<T>(items: Vec<T>, shards: usize) -> Vec<Vec<T>> {
+    let shards = shards.max(1);
+    let mut buckets: Vec<Vec<T>> = (0..shards).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % shards].push(item);
+    }
+    buckets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_by_index() {
+        let buckets = round_robin((0..7).collect(), 3);
+        assert_eq!(buckets, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+    }
+
+    #[test]
+    fn zero_shards_clamped_to_one() {
+        let buckets = round_robin(vec!["a", "b"], 0);
+        assert_eq!(buckets, vec![vec!["a", "b"]]);
+    }
+
+    #[test]
+    fn more_shards_than_items_leaves_empties() {
+        let buckets = round_robin(vec![1], 3);
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0], vec![1]);
+        assert!(buckets[1].is_empty() && buckets[2].is_empty());
+    }
+}

@@ -34,6 +34,19 @@ pub struct ChipLottery {
     pub g_sw: Vec<f32>, // [n]
     /// 1.0 for six-core (E5645) nodes — the only ones in the paper's plots
     pub six_core: Vec<f32>, // [n]
+    /// Precomputed indices of the six-core nodes (derived from
+    /// `six_core` at construction; hot paths iterate this every tick).
+    six_idx: Vec<usize>,
+}
+
+/// Indices of the six-core entries (`six_core[i] > 0.5`).
+fn six_core_index(six_core: &[f32]) -> Vec<usize> {
+    six_core
+        .iter()
+        .enumerate()
+        .filter(|(_, &s)| s > 0.5)
+        .map(|(i, _)| i)
+        .collect()
 }
 
 impl ChipLottery {
@@ -62,6 +75,7 @@ impl ChipLottery {
             g_sp: vec![0.0; n_nodes * 2],
             g_sw: vec![0.0; n_nodes],
             six_core: vec![0.0; n_nodes],
+            six_idx: Vec::new(),
         };
 
         for n in 0..n_nodes {
@@ -102,6 +116,7 @@ impl ChipLottery {
             lot.g_sp[n * 2 + 1] = (1.0 / (pp.r_sp * m_sp1)) as f32;
             lot.g_sw[n] = (1.0 / (pp.r_sw * m_sw)) as f32;
         }
+        lot.six_idx = six_core_index(&lot.six_core);
         lot
     }
 
@@ -129,6 +144,8 @@ impl ChipLottery {
                 .map(|x| x as f32)
                 .collect())
         };
+        let six_core = vec1("six_core")?;
+        let six_idx = six_core_index(&six_core);
         Ok(ChipLottery {
             n_nodes,
             active: mat("active")?,
@@ -137,7 +154,8 @@ impl ChipLottery {
             p_idle: mat("p_idle")?,
             g_sp: mat("g_sp")?,
             g_sw: vec1("g_sw")?,
-            six_core: vec1("six_core")?,
+            six_core,
+            six_idx,
         })
     }
 
@@ -158,8 +176,9 @@ impl ChipLottery {
     }
 
     /// Indices of six-core nodes (the population in the paper's figures).
-    pub fn six_core_nodes(&self) -> Vec<usize> {
-        (0..self.n_nodes).filter(|&n| self.six_core[n] > 0.5).collect()
+    /// Precomputed at construction — hot loops borrow it per tick.
+    pub fn six_core_nodes(&self) -> &[usize] {
+        &self.six_idx
     }
 }
 
@@ -213,6 +232,16 @@ mod tests {
             / node_p.len() as f32;
         let sigma = var.sqrt();
         assert!(sigma > 3.5 && sigma < 7.5, "sigma {sigma}");
+    }
+
+    #[test]
+    fn six_core_index_matches_flags() {
+        let pp = PlantParams::default();
+        let lot = ChipLottery::draw(50, &pp, DEFAULT_SEED);
+        let expect: Vec<usize> =
+            (0..50).filter(|&n| lot.six_core[n] > 0.5).collect();
+        assert_eq!(lot.six_core_nodes(), expect.as_slice());
+        assert!(!lot.six_core_nodes().is_empty());
     }
 
     #[test]

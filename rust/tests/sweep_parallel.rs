@@ -1,0 +1,182 @@
+//! Determinism gate for the parallel setpoint sweep (the sharded sweep
+//! must be bitwise identical to the serial reference) plus a round trip
+//! of the bench JSON schema through a real suite-shaped report.
+
+use idatacool::bench::compare::Comparison;
+use idatacool::bench::record::{BaselineFile, BenchReport};
+use idatacool::bench::BenchResult;
+use idatacool::config::SimConfig;
+use idatacool::figures::sweep::{self, SweepData, SweepOptions};
+use idatacool::stats::Running;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::idatacool_full();
+    c.backend = "native".into(); // artifact-independent
+    c.sensor_noise = true; // telemetry RNG must also be shard-invariant
+    c
+}
+
+fn tiny() -> SweepOptions {
+    SweepOptions {
+        settle_s: 150.0,
+        measure_s: 120.0,
+        settle_tol: 3.0,
+        max_extra_settle_s: 300.0,
+        histogram_samples: 2,
+        equilibrium_s: 2000.0,
+    }
+}
+
+fn assert_running_bitwise(a: &Running, b: &Running, what: &str) {
+    assert_eq!(a.count(), b.count(), "{what}: count");
+    for (x, y, field) in [
+        (a.mean(), b.mean(), "mean"),
+        (a.std(), b.std(), "std"),
+        (a.min(), b.min(), "min"),
+        (a.max(), b.max(), "max"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {field} {x} vs {y}");
+    }
+}
+
+fn assert_sweeps_bitwise_equal(a: &SweepData, b: &SweepData) {
+    assert_eq!(a.selected, b.selected, "selected stress nodes");
+    assert_eq!(a.points.len(), b.points.len());
+    for (i, (p, q)) in a.points.iter().zip(&b.points).enumerate() {
+        let tag = format!("point {i} (sp {})", p.setpoint);
+        assert_eq!(p.setpoint.to_bits(), q.setpoint.to_bits(), "{tag}");
+        assert_running_bitwise(&p.t_out, &q.t_out, &format!("{tag} t_out"));
+        assert_running_bitwise(&p.t_tank, &q.t_tank, &format!("{tag} t_tank"));
+        assert_running_bitwise(
+            &p.sel_core, &q.sel_core, &format!("{tag} sel_core"));
+        assert_running_bitwise(
+            &p.sel_power, &q.sel_power, &format!("{tag} sel_power"));
+        for (x, y, field) in [
+            (p.hiw, q.hiw, "hiw"),
+            (p.hiw_err, q.hiw_err, "hiw_err"),
+            (p.pd_frac, q.pd_frac, "pd_frac"),
+            (p.cop, q.cop, "cop"),
+            (p.reuse, q.reuse, "reuse"),
+            (p.valve_mean, q.valve_mean, "valve_mean"),
+            (p.p_ac, q.p_ac, "p_ac"),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {field} {x} vs {y}");
+        }
+    }
+    assert_eq!(
+        a.node_series.keys().collect::<Vec<_>>(),
+        b.node_series.keys().collect::<Vec<_>>()
+    );
+    for (node, sa) in &a.node_series {
+        let sb = &b.node_series[node];
+        assert_eq!(sa.len(), sb.len(), "node {node} series length");
+        for ((t1, p1), (t2, p2)) in sa.iter().zip(sb) {
+            assert_eq!(t1.to_bits(), t2.to_bits(), "node {node} core temp");
+            assert_eq!(p1.to_bits(), p2.to_bits(), "node {node} power");
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_bitwise_identical_to_serial() {
+    let sps = [50.0, 59.0, 68.0];
+    let serial = sweep::run_sweep_serial(&cfg(), &sps, &tiny()).unwrap();
+    assert_eq!(serial.points.len(), 3);
+    for shards in [2usize, 3] {
+        let parallel =
+            sweep::run_sweep_sharded(&cfg(), &sps, &tiny(), shards).unwrap();
+        assert_sweeps_bitwise_equal(&serial, &parallel);
+    }
+}
+
+#[test]
+fn default_sweep_entrypoint_matches_serial() {
+    // `run_sweep` (what `figures` calls) shards over all available cores;
+    // it must reduce to the same bits as the serial reference.
+    let sps = [52.0, 66.0];
+    let serial = sweep::run_sweep_serial(&cfg(), &sps, &tiny()).unwrap();
+    let auto = sweep::run_sweep(&cfg(), &sps, &tiny()).unwrap();
+    assert_sweeps_bitwise_equal(&serial, &auto);
+}
+
+#[test]
+fn oversharded_sweep_is_clamped_and_identical() {
+    let sps = [60.0];
+    let serial = sweep::run_sweep_serial(&cfg(), &sps, &tiny()).unwrap();
+    let over = sweep::run_sweep_sharded(&cfg(), &sps, &tiny(), 16).unwrap();
+    assert_sweeps_bitwise_equal(&serial, &over);
+}
+
+#[test]
+fn bench_report_round_trips_through_json() {
+    // Suite-shaped report built from real BenchResult values.
+    let results = vec![
+        BenchResult {
+            name: "plant_tick/native/n216".into(),
+            iters: 12,
+            mean_s: 1.25e-3,
+            std_s: 3.5e-5,
+            min_s: 1.19e-3,
+            p50_s: 1.24e-3,
+            p95_s: 1.34e-3,
+            units_per_iter: 4320.0,
+            unit_name: "node-substeps".into(),
+        },
+        BenchResult {
+            name: "manifold_solve/72-branches".into(),
+            iters: 3,
+            mean_s: 6.25e-5,
+            std_s: 0.0,
+            min_s: 6.0e-5,
+            p50_s: 6.2e-5,
+            p95_s: 7.0e-5,
+            units_per_iter: 0.0,
+            unit_name: String::new(),
+        },
+    ];
+    let report =
+        BenchReport::from_results("hotpath", "native", 0xDEAD_BEEF, true,
+                                  &results);
+    let text = report.to_json();
+    let back = BenchReport::from_json(&text).unwrap();
+    assert_eq!(report, back);
+    assert_eq!(back.suite, "hotpath");
+    assert_eq!(back.benches.len(), 2);
+    assert_eq!(
+        back.benches[0].ns_per_iter.to_bits(),
+        (1.25e-3f64 * 1e9).to_bits()
+    );
+    // and the same object survives as a member of a baseline file
+    let baseline = BaselineFile { reports: vec![report.clone()] };
+    let loaded = BaselineFile::from_json(&baseline.to_json()).unwrap();
+    assert_eq!(loaded.find("hotpath").unwrap(), &report);
+}
+
+#[test]
+fn regression_gate_end_to_end() {
+    let fast = vec![BenchResult {
+        name: "case".into(),
+        iters: 3,
+        mean_s: 1e-4,
+        std_s: 0.0,
+        min_s: 1e-4,
+        p50_s: 1e-4,
+        p95_s: 1e-4,
+        units_per_iter: 0.0,
+        unit_name: String::new(),
+    }];
+    let mut slow = fast.clone();
+    slow[0].mean_s = 1.4e-4; // +40 %
+    let base = BenchReport::from_results("s", "native", 1, true, &fast);
+    let cur = BenchReport::from_results("s", "native", 1, true, &slow);
+    let cmp = Comparison::build(&base, &cur, 25.0);
+    assert!(!cmp.passed(), "+40% must trip a 25% gate");
+    let cmp = Comparison::build(&base, &cur, 50.0);
+    assert!(cmp.passed(), "+40% must pass a 50% gate");
+
+    // per-bench override recorded in the baseline wins
+    let mut tight = base.clone();
+    tight.benches[0].max_regress_pct = Some(10.0);
+    let cmp = Comparison::build(&tight, &cur, 50.0);
+    assert!(!cmp.passed(), "10% per-bench override must win");
+}
