@@ -132,9 +132,18 @@ def make_plant_step(n_nodes: int, pp: P.PlantParams = P.DEFAULT,
 
         # --- per-node observations (the BMC-level view, Sect. 4) ----------
         t_cores = t[:, :P.NC]
-        n_active = jnp.maximum(jnp.sum(active, axis=1), 1.0)
+        n_active_raw = jnp.sum(active, axis=1)
+        n_active = jnp.maximum(n_active_raw, 1.0)
         core_mean = jnp.sum(t_cores * active, axis=1) / n_active
         core_max = jnp.max(jnp.where(active > 0, t_cores, -1e9), axis=1)
+        # Zero active cores (padded filler, fully-binned chips): report
+        # the node water temperature, not the accumulator sentinels —
+        # keep in lockstep with the Rust mirrors (native::observe,
+        # soa::soa_observe).
+        has_active = n_active_raw > 0
+        water = t[:, P.IDX_WATER]
+        core_mean = jnp.where(has_active, core_mean, water)
+        core_max = jnp.where(has_active, core_max, water)
 
         headroom = (pp.t_throttle - t_cores) / pp.throttle_band
         util_eff = util * jnp.clip(headroom, 0.0, 1.0)

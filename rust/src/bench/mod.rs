@@ -86,17 +86,25 @@ pub struct Bench {
     pub warmup_iters: usize,
     pub measure_iters: usize,
     pub results: Vec<BenchResult>,
+    /// When set, only benches whose name contains this substring run;
+    /// the rest are skipped (no warmup, no measurement, no result).
+    pub filter: Option<String>,
 }
 
 impl Default for Bench {
     fn default() -> Self {
-        Bench { warmup_iters: 3, measure_iters: 12, results: Vec::new() }
+        Bench {
+            warmup_iters: 3,
+            measure_iters: 12,
+            results: Vec::new(),
+            filter: None,
+        }
     }
 }
 
 impl Bench {
     pub fn new(warmup: usize, iters: usize) -> Self {
-        Bench { warmup_iters: warmup, measure_iters: iters, results: Vec::new() }
+        Bench { warmup_iters: warmup, measure_iters: iters, ..Bench::default() }
     }
 
     /// Honor `BENCH_FAST=1` for CI-sized runs. Fast sizing keeps 5
@@ -119,7 +127,9 @@ impl Bench {
     }
 
     /// Time `f` (which should perform one full iteration of the case).
-    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+    /// Returns `None` when the case is filtered out.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F)
+                           -> Option<&BenchResult> {
         self.run_with_units(name, 0.0, "", &mut f)
     }
 
@@ -127,13 +137,19 @@ impl Bench {
     /// Mean/std are computed with the slowest ~5 % of samples trimmed —
     /// at least one sample once there are >= 5 (robust against OS
     /// scheduling spikes); min/p50/p95 always use every sample.
+    /// Returns `None` when the case is filtered out.
     pub fn run_with_units<F: FnMut()>(
         &mut self,
         name: &str,
         units_per_iter: f64,
         unit_name: &str,
         f: &mut F,
-    ) -> &BenchResult {
+    ) -> Option<&BenchResult> {
+        if let Some(pat) = &self.filter {
+            if !name.contains(pat.as_str()) {
+                return None;
+            }
+        }
         for _ in 0..self.warmup_iters {
             f();
         }
@@ -169,7 +185,7 @@ impl Bench {
         };
         println!("{}", res.report());
         self.results.push(res);
-        self.results.last().unwrap()
+        self.results.last()
     }
 }
 
@@ -188,6 +204,7 @@ mod tests {
                 }
                 std::hint::black_box(x);
             })
+            .unwrap()
             .clone();
         assert_eq!(r.iters, 5);
         assert!(r.mean_s > 0.0);
@@ -203,8 +220,21 @@ mod tests {
             .run_with_units("units", 100.0, "items", &mut || {
                 std::thread::sleep(std::time::Duration::from_millis(1));
             })
+            .unwrap()
             .clone();
         assert!(r.throughput() > 1000.0 && r.throughput() < 200_000.0);
+    }
+
+    #[test]
+    fn filter_skips_non_matching_cases() {
+        let mut b = Bench::new(0, 1);
+        b.filter = Some("tick".into());
+        let mut ran = 0usize;
+        assert!(b.run("plant_tick/n64", || ran += 1).is_some());
+        assert!(b.run("lottery_draw/n216", || ran += 1).is_none());
+        assert_eq!(ran, 1, "filtered closure must not execute");
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].name, "plant_tick/n64");
     }
 
     #[test]
@@ -228,6 +258,7 @@ mod tests {
                     std::thread::sleep(std::time::Duration::from_millis(30));
                 }
             })
+            .unwrap()
             .clone();
         assert!(r.mean_s < 0.010, "trimmed mean {} absorbed spike", r.mean_s);
         assert_eq!(r.iters, 12);
@@ -242,6 +273,7 @@ mod tests {
             .run("tiny", || {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             })
+            .unwrap()
             .clone();
         assert!(r.mean_s >= 0.002 * 0.9, "mean {} lost samples", r.mean_s);
     }
@@ -259,6 +291,7 @@ mod tests {
                     std::thread::sleep(std::time::Duration::from_millis(30));
                 }
             })
+            .unwrap()
             .clone();
         assert!(r.mean_s < 0.010, "trimmed mean {} absorbed spike", r.mean_s);
     }

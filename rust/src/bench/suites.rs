@@ -17,8 +17,12 @@ use crate::figures::sweep::{self, SweepOptions};
 use crate::fleet::scenario::Scenario;
 use crate::fleet::{FleetConfig, FleetDriver};
 use crate::plant::hydraulics::{Manifold, ManifoldKind};
-use crate::plant::layout::NC;
-use crate::plant::TickOutput;
+use crate::plant::layout::{G_ADV, IDX_SINK, IDX_WATER, NC, NG, S};
+use crate::plant::native::NativePlant;
+use crate::plant::node::{self, NodeScratch};
+use crate::plant::operators::Operators;
+use crate::plant::soa::{self, SoaState};
+use crate::plant::{PlantKernel, PlantStatic, TickOutput};
 use crate::runtime::{BackendKind, PlantBackend};
 use crate::variability::ChipLottery;
 use crate::workload::scheduler::BatchScheduler;
@@ -65,10 +69,25 @@ pub fn by_name(name: &str) -> Result<&'static SuiteEntry> {
 
 /// Run one suite and package the results as a machine-readable report.
 pub fn run_suite(name: &str) -> Result<BenchReport> {
+    run_suite_filtered(name, None)
+}
+
+/// `run_suite` restricted to benches whose id contains `filter` (the
+/// `idatacool bench --filter` path). Suite setup still runs; skipped
+/// benches are simply absent from the report, which the baseline
+/// comparator treats as a warning, never a gate failure.
+pub fn run_suite_filtered(name: &str, filter: Option<&str>)
+                          -> Result<BenchReport> {
     let entry = by_name(name)?;
-    println!("suite '{}': {}", entry.name, entry.description);
+    match filter {
+        Some(f) => println!(
+            "suite '{}' (filter '{f}'): {}", entry.name, entry.description
+        ),
+        None => println!("suite '{}': {}", entry.name, entry.description),
+    }
     println!("{}", Bench::header());
     let mut b = Bench::from_env();
+    b.filter = filter.map(String::from);
     (entry.runner)(&mut b)?;
     Ok(BenchReport::from_results(
         entry.name,
@@ -89,7 +108,20 @@ fn reference_config() -> SimConfig {
 }
 
 fn hotpath_fingerprint() -> u64 {
-    config_fingerprint(&reference_config())
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    // The env-resolved kernel changes what plant_tick/coordinator_tick
+    // measure, so an IDATACOOL_KERNEL=reference run must not be gated
+    // against an SoA baseline.
+    let mut h = config_fingerprint(&reference_config());
+    let kernel = PlantKernel::from_env()
+        .map(|k| k.name())
+        .unwrap_or("invalid");
+    for b in kernel.bytes() {
+        h = mix(h, b as u64);
+    }
+    h
 }
 
 fn fleet_fingerprint() -> u64 {
@@ -150,6 +182,69 @@ fn hotpath(b: &mut Bench) -> Result<()> {
             "node-substeps", &mut || {
                 nat.tick(&controls, &util, &mut out).unwrap();
             });
+    }
+
+    // SoA vs reference kernel head-to-head at n=64 — one full Pallas
+    // tile, every lane fully occupied (the fairest layout comparison).
+    {
+        let n = 64usize;
+        let lot = ChipLottery::draw(n, &pp, 0x50A_64);
+        let st = PlantStatic::from_lottery(&lot, &pp, 64);
+        let ops = Operators::build(&pp);
+        let npad = st.n_padded;
+        let controls = vec![0.0f32, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+        let util = vec![1.0f32; npad * NC];
+
+        // raw substep: identical inputs for both kernels
+        let mut t = vec![45.0f32; npad * S];
+        let mut g_eff = st.g.clone();
+        for i in 0..npad {
+            g_eff[i * NG + G_ADV] *= 0.75;
+        }
+        let mut q = vec![0.0f32; npad * S];
+        // same sink + advective-inlet forcing SoaState::new/set_inlet build
+        let q_sink = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+            * ops.inv_c[IDX_SINK] as f64) as f32;
+        for i in 0..n {
+            q[i * S + IDX_SINK] = q_sink;
+        }
+        for i in 0..npad {
+            q[i * S + IDX_WATER] =
+                g_eff[i * NG + G_ADV] * 55.0 * ops.inv_c[IDX_WATER];
+        }
+        let mut scratch = NodeScratch::new(npad);
+        b.run_with_units(
+            "ref_substep/n64", n as f64, "node-substeps", &mut || {
+                std::hint::black_box(node::fused_substep(
+                    &mut t, &g_eff, &util, &st.p_dyn, &st.p_idle,
+                    &st.active, &q, &ops, &pp, &mut scratch, n));
+            });
+        let mut sst = SoaState::new(&st, &ops, &pp);
+        let t0 = vec![45.0f32; npad * S];
+        sst.load(&t0, &util);
+        sst.set_flow(0.75);
+        sst.set_inlet(55.0, ops.inv_c[IDX_WATER]);
+        b.run_with_units(
+            "soa_substep/n64", n as f64, "node-substeps", &mut || {
+                std::hint::black_box(
+                    soa::soa_substep(&mut sst, &pp, n));
+            });
+
+        // whole plant tick (substeps + circuits + observe epilogue)
+        for (kname, kernel) in [
+            ("ref", PlantKernel::Reference),
+            ("soa", PlantKernel::Soa),
+        ] {
+            let mut plant = NativePlant::with_kernel(
+                pp.clone(), ops.clone(), st.clone(), 20.0, kernel);
+            let mut out = TickOutput::new(npad);
+            let node_substeps = (n * plant.substeps) as f64;
+            b.run_with_units(
+                &format!("{kname}_plant_tick/n64"), node_substeps,
+                "node-substeps", &mut || {
+                    plant.tick(&controls, &util, &mut out);
+                });
+        }
     }
 
     // Full coordinator tick around the plant, allocation-free path.

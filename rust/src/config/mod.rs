@@ -41,6 +41,9 @@ pub struct SimConfig {
     pub n_nodes: usize,
     /// Backend: "hlo" | "native" | "auto".
     pub backend: String,
+    /// Native substep kernel: "soa" | "reference" | "auto" (auto defers
+    /// to the `IDATACOOL_KERNEL` env override, then the SoA default).
+    pub kernel: String,
     /// Artifacts directory.
     pub artifacts_dir: PathBuf,
     /// Lottery seed (must match aot.py for the HLO backend).
@@ -83,6 +86,7 @@ impl Default for SimConfig {
             name: "default".into(),
             n_nodes: 216,
             backend: "auto".into(),
+            kernel: "auto".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             seed: crate::variability::DEFAULT_SEED,
             t_water_init: 20.0,
@@ -151,6 +155,7 @@ impl SimConfig {
         self.name = doc.str_or("name", &self.name).to_string();
         self.n_nodes = doc.usize_or("cluster.nodes", self.n_nodes);
         self.backend = doc.str_or("cluster.backend", &self.backend).to_string();
+        self.kernel = doc.str_or("cluster.kernel", &self.kernel).to_string();
         if let Some(v) = doc.get("cluster.artifacts_dir") {
             self.artifacts_dir = PathBuf::from(
                 v.as_str().ok_or_else(|| anyhow::anyhow!("artifacts_dir"))?,
@@ -185,6 +190,11 @@ impl SimConfig {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_nodes > 0, "n_nodes must be positive");
+        anyhow::ensure!(
+            self.kernel.parse::<crate::plant::PlantKernel>().is_ok(),
+            "unknown kernel '{}' (soa|reference|auto)",
+            self.kernel
+        );
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.valve_fixed),
             "valve_fixed must be in [0,1]"
@@ -232,6 +242,7 @@ mod tests {
             [cluster]
             nodes = 13
             backend = "native"
+            kernel = "reference"
             [control]
             t_out_setpoint = 49
             [workload]
@@ -244,6 +255,7 @@ mod tests {
         assert_eq!(cfg.n_nodes, 13);
         assert_eq!(cfg.workload, WorkloadKind::Stress);
         assert_eq!(cfg.t_out_setpoint, 49.0);
+        assert_eq!(cfg.kernel, "reference");
     }
 
     #[test]
@@ -251,6 +263,8 @@ mod tests {
         let doc = TomlDoc::parse("[control]\nt_out_setpoint = 150\n").unwrap();
         assert!(SimConfig::default().apply_toml(&doc).is_err());
         let doc = TomlDoc::parse("[workload]\nkind = \"bogus\"\n").unwrap();
+        assert!(SimConfig::default().apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[cluster]\nkernel = \"bogus\"\n").unwrap();
         assert!(SimConfig::default().apply_toml(&doc).is_err());
     }
 }

@@ -111,8 +111,10 @@ impl SimulationDriver {
 
     pub fn with_faults(cfg: SimConfig, faults: Vec<Fault>) -> Result<Self> {
         let kind: BackendKind = cfg.backend.parse()?;
-        let backend = PlantBackend::create(
+        let kernel = crate::plant::PlantKernel::resolve(&cfg.kernel)?;
+        let backend = PlantBackend::create_with_kernel(
             kind,
+            kernel,
             &cfg.artifacts_dir,
             cfg.n_nodes,
             &cfg.pp,

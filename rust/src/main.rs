@@ -56,6 +56,10 @@ common flags:
   --preset <name>        start from a preset instead of the default
   --nodes <n>            cluster size (artifact must exist for hlo backend)
   --backend <hlo|native|auto>
+  --kernel <soa|reference|auto>
+                         native substep kernel (auto: IDATACOOL_KERNEL
+                         env override, then the lane-major SoA default;
+                         \"reference\" is the node-major oracle)
   --artifacts <dir>      artifacts directory (default: artifacts)
   --duration <s>         simulated duration
   --setpoint <degC>      rack-outlet setpoint
@@ -75,11 +79,16 @@ figures flags:
   --quick                short settle/measure windows (CI-sized)
 bench flags:
   --suite <name|all>     registered suite (hotpath|fleet; default all)
+  --filter <substring>   run only benches whose id contains <substring>
+                         (suite setup still runs; skipped benches are
+                         absent from the report — missing-vs-baseline
+                         is a warning, never a gate failure)
   --json <path>          write BENCH_<suite>.json (file for one suite,
                          directory for several); BENCH_FAST=1 shrinks runs
   --compare <baseline>   gate against bench/baseline.json-style file
   --max-regress <pct>    regression threshold for --compare (default 25)
   --baseline-out <path>  write all suite reports as a new baseline file
+                         (refuses --filter: partial baselines un-gate)
   --list                 list registered suites
 validate flags:
   --faults               include fault-injection scenarios
@@ -99,6 +108,7 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     };
     cfg.n_nodes = args.usize_or("nodes", cfg.n_nodes);
     cfg.backend = args.str_or("backend", &cfg.backend).to_string();
+    cfg.kernel = args.str_or("kernel", &cfg.kernel).to_string();
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(d);
     }
@@ -125,8 +135,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     let mut driver = SimulationDriver::new(cfg)?;
     let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+    let kernel = driver.backend.kernel_name();
     let res = driver.run(12)?;
-    println!("backend: {}", res.backend);
+    println!("backend: {} (kernel: {})", res.backend, kernel);
     println!("{}", res.energy.summary());
     println!("workload: {}", res.workload_stats);
     println!(
@@ -188,11 +199,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         shards_req
     };
     let scenario = Scenario::by_name(args.str_or("scenario", "baseline"))?;
+    let kernel = idatacool::plant::PlantKernel::resolve(&base.kernel)?;
 
     println!(
-        "fleet: {} plants x {} nodes ({} backend), scenario '{}' ({}), \
-         {} shards, {:.0}s sim, fleet seed {:#x}",
-        n_plants, base.n_nodes, base.backend, scenario.name(),
+        "fleet: {} plants x {} nodes ({} backend, {} kernel), \
+         scenario '{}' ({}), {} shards, {:.0}s sim, fleet seed {:#x}",
+        n_plants, base.n_nodes, base.backend, kernel.name(), scenario.name(),
         scenario.description(), shards, base.duration_s, base.seed,
     );
 
@@ -284,6 +296,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         vec![suites::by_name(which)?.name]
     };
     let max_regress = args.f64_or("max-regress", 25.0);
+    let filter = args.get("filter");
+    // A filtered run produces a partial report; written as a baseline it
+    // would silently drop every filtered-out bench from the regression
+    // gate forever (missing baseline entries are never gated).
+    anyhow::ensure!(
+        !(filter.is_some() && args.has("baseline-out")),
+        "--filter cannot be combined with --baseline-out: a partial \
+         baseline would permanently un-gate the filtered-out benches"
+    );
     let baseline = match args.get("compare") {
         Some(p) => Some(BaselineFile::load(std::path::Path::new(p))?),
         None => None,
@@ -292,7 +313,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut reports = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     for name in &names {
-        let report = suites::run_suite(name)?;
+        let report = suites::run_suite_filtered(name, filter)?;
         if let Some(json) = args.get("json") {
             let path = bench_json_path(json, name, names.len() > 1);
             if let Some(dir) = path.parent() {
@@ -379,8 +400,12 @@ fn cmd_validate(args: &Args) -> Result<()> {
     };
     let mut hlo = PlantBackend::create(
         BackendKind::Hlo, &cfg.artifacts_dir, n, &cfg.pp, cfg.seed, 20.0)?;
-    let mut nat = PlantBackend::create(
-        BackendKind::Native, &cfg.artifacts_dir, n, &cfg.pp, cfg.seed, 20.0)?;
+    // Validate against the node-major reference kernel — the oracle —
+    // regardless of the SoA default or env override (SoA-vs-reference
+    // parity is covered by proptests::prop_kernel_parity).
+    let mut nat = PlantBackend::create_with_kernel(
+        BackendKind::Native, idatacool::plant::PlantKernel::Reference,
+        &cfg.artifacts_dir, n, &cfg.pp, cfg.seed, 20.0)?;
     let npad = hlo.n_padded();
     let controls = vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
     let util = vec![1.0f32; npad * NC];

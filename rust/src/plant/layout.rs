@@ -77,6 +77,31 @@ pub const fn pad_nodes(n: usize, tile: usize) -> usize {
     n.div_ceil(tile) * tile
 }
 
+/// Transpose a node-major `[n][w]` buffer into lane-major `[w][n]`
+/// (the SoA kernel's layout: one contiguous `n`-length lane per state /
+/// channel / core slot, so a scalar-broadcast FMA sweeps all nodes).
+pub fn transpose_to_lanes(src: &[f32], dst: &mut [f32], n: usize, w: usize) {
+    debug_assert_eq!(src.len(), n * w);
+    debug_assert_eq!(dst.len(), n * w);
+    for i in 0..n {
+        for s in 0..w {
+            dst[s * n + i] = src[i * w + s];
+        }
+    }
+}
+
+/// Inverse of `transpose_to_lanes`: lane-major `[w][n]` back to
+/// node-major `[n][w]`.
+pub fn transpose_from_lanes(src: &[f32], dst: &mut [f32], n: usize, w: usize) {
+    debug_assert_eq!(src.len(), n * w);
+    debug_assert_eq!(dst.len(), n * w);
+    for i in 0..n {
+        for s in 0..w {
+            dst[i * w + s] = src[s * n + i];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +114,22 @@ mod tests {
         assert_eq!(pad_nodes(13, 64), 64);
         assert_eq!(pad_nodes(216, 64), 256);
         assert_eq!(pad_nodes(64, 64), 64);
+    }
+
+    #[test]
+    fn transpose_round_trips_and_places_lanes() {
+        let (n, w) = (5, 3);
+        let src: Vec<f32> = (0..n * w).map(|x| x as f32).collect();
+        let mut lanes = vec![0.0; n * w];
+        transpose_to_lanes(&src, &mut lanes, n, w);
+        // node i, slot s lands in lane s at offset i
+        for i in 0..n {
+            for s in 0..w {
+                assert_eq!(lanes[s * n + i], src[i * w + s]);
+            }
+        }
+        let mut back = vec![0.0; n * w];
+        transpose_from_lanes(&lanes, &mut back, n, w);
+        assert_eq!(back, src);
     }
 }

@@ -12,8 +12,75 @@ pub mod layout;
 pub mod native;
 pub mod node;
 pub mod operators;
+pub mod soa;
 
 use layout::*;
+
+/// Which native substep kernel steps the node thermal state.
+///
+/// Both kernels implement the same physics; they differ only in memory
+/// layout. `Reference` is the node-major (AoS) oracle (`node::
+/// fused_substep`, one node at a time, 16-wide dot products). `Soa` is
+/// the lane-major kernel (`soa::soa_substep`): state transposed to
+/// `[S][n_padded]` lanes so every operator contraction becomes a
+/// scalar-broadcast FMA over a contiguous lane that LLVM vectorizes
+/// across nodes. See DESIGN.md §5 and EXPERIMENTS.md §Perf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlantKernel {
+    /// Node-major AoS reference kernel — the cross-check oracle.
+    Reference,
+    /// Lane-major SoA kernel — the default backend.
+    #[default]
+    Soa,
+}
+
+impl std::str::FromStr for PlantKernel {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "reference" | "ref" | "aos" => Ok(PlantKernel::Reference),
+            "soa" | "lanes" => Ok(PlantKernel::Soa),
+            // "auto" is accepted everywhere a kernel can be named
+            // (CLI/TOML resolve it via the env; a literal parse — e.g.
+            // IDATACOOL_KERNEL=auto — means the default).
+            "auto" => Ok(PlantKernel::default()),
+            _ => anyhow::bail!(
+                "unknown plant kernel '{s}' (soa|reference|auto)"
+            ),
+        }
+    }
+}
+
+impl PlantKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlantKernel::Reference => "reference",
+            PlantKernel::Soa => "soa",
+        }
+    }
+
+    /// Resolve the `IDATACOOL_KERNEL` environment override; unset or
+    /// empty means the default (SoA). An unparseable value is an error,
+    /// not a silent fall-back.
+    pub fn from_env() -> anyhow::Result<Self> {
+        match std::env::var("IDATACOOL_KERNEL") {
+            Ok(v) if !v.is_empty() => v.parse().map_err(|e| {
+                anyhow::anyhow!("IDATACOOL_KERNEL: {e}")
+            }),
+            _ => Ok(PlantKernel::default()),
+        }
+    }
+
+    /// Resolve a config/CLI selector: `"auto"` defers to the
+    /// environment (then the default), anything else parses strictly.
+    pub fn resolve(s: &str) -> anyhow::Result<Self> {
+        if s == "auto" {
+            Self::from_env()
+        } else {
+            s.parse()
+        }
+    }
+}
 
 /// Static per-run plant inputs (the silicon lottery, padded node-major).
 #[derive(Debug, Clone)]
@@ -73,5 +140,30 @@ impl TickOutput {
     #[inline]
     pub fn node(&self, i: usize) -> &[f32] {
         &self.node_obs[i * OBS_N..(i + 1) * OBS_N]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_parses_and_defaults_to_soa() {
+        assert_eq!(PlantKernel::default(), PlantKernel::Soa);
+        assert_eq!("soa".parse::<PlantKernel>().unwrap(), PlantKernel::Soa);
+        assert_eq!(
+            "reference".parse::<PlantKernel>().unwrap(),
+            PlantKernel::Reference
+        );
+        assert_eq!(
+            "ref".parse::<PlantKernel>().unwrap(),
+            PlantKernel::Reference
+        );
+        assert!("bogus".parse::<PlantKernel>().is_err());
+        // "auto" parses to the default (IDATACOOL_KERNEL=auto must work)
+        assert_eq!("auto".parse::<PlantKernel>().unwrap(),
+                   PlantKernel::default());
+        assert_eq!(PlantKernel::resolve("soa").unwrap(), PlantKernel::Soa);
+        assert!(PlantKernel::resolve("nope").is_err());
     }
 }

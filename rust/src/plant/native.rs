@@ -2,15 +2,19 @@
 //! `python/compile/model.py::make_plant_step` (K fused substeps + circuit
 //! physics + observation extraction).
 //!
-//! This is the reference backend: `tests/hlo_vs_native.rs` asserts that a
-//! trajectory through the AOT-compiled HLO executable matches this
-//! implementation to f32 tolerance.
+//! Two interchangeable substep kernels implement the node physics (see
+//! `PlantKernel`): the node-major reference kernel (`node`) — the
+//! cross-check oracle `tests/hlo_vs_native.rs` also validates the HLO
+//! executable against — and the lane-major SoA kernel (`soa`), the
+//! default. `tests/proptests.rs::prop_kernel_parity` pins the two to
+//! tight f32 tolerance.
 
 use super::circuits;
 use super::layout::*;
 use super::node::{self, NodeScratch};
 use super::operators::Operators;
-use super::{PlantStatic, TickOutput};
+use super::soa::{self, SoaState};
+use super::{PlantKernel, PlantStatic, TickOutput};
 use crate::config::constants::PlantParams;
 
 /// Pure-Rust plant simulation state + stepper.
@@ -20,38 +24,69 @@ pub struct NativePlant {
     pub ops: Operators,
     pub st: PlantStatic,
     pub substeps: usize,
-    /// [npad * S] node thermal state
+    pub kernel: PlantKernel,
+    /// [npad * S] node thermal state (node-major, authoritative between
+    /// ticks for both kernels).
     pub node_state: Vec<f32>,
     /// [CS] circuit state
     pub circuit_state: Vec<f32>,
     scratch: NodeScratch,
     g_eff: Vec<f32>,
     q_base: Vec<f32>,
+    /// Effective flow of the last tick: the g_eff rebuild is skipped
+    /// while the pump controls are unchanged.
+    last_flow: Option<f32>,
+    /// Lane-major state (allocated only for the SoA kernel).
+    soa: Option<SoaState>,
 }
 
 impl NativePlant {
     pub fn new(pp: PlantParams, ops: Operators, st: PlantStatic,
                t_water: f32) -> Self {
+        Self::with_kernel(pp, ops, st, t_water, PlantKernel::default())
+    }
+
+    pub fn with_kernel(pp: PlantParams, ops: Operators, st: PlantStatic,
+                       t_water: f32, kernel: PlantKernel) -> Self {
         let npad = st.n_padded;
         let n = st.n_nodes;
         let substeps = pp.substeps_per_tick;
         let circuit_state = circuits::initial_circuit_state(t_water, &pp);
-        // q_base has exactly two live entries per node: the advective
-        // inlet (updated every substep) and the sink constant, which
-        // depends only on plant parameters — set once here so the tick
-        // loop never refills the buffer.
-        let mut q_base = vec![0.0; npad * S];
-        let q_sink_const = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
-            * ops.inv_c[IDX_SINK] as f64) as f32;
-        for i in 0..n {
-            q_base[i * S + IDX_SINK] = q_sink_const;
-        }
+        // Each kernel owns its working set; the other's stays empty so
+        // a fleet of SoA plants does not carry dead AoS buffers (and
+        // vice versa).
+        let (scratch, g_eff, q_base, soa) = match kernel {
+            PlantKernel::Reference => {
+                // q_base has exactly two live entries per node: the
+                // advective inlet (updated every substep) and the sink
+                // constant, which depends only on plant parameters —
+                // set once here so the tick loop never refills the
+                // buffer. (SoaState fills its own lane-major mirror.)
+                let mut q_base = vec![0.0; npad * S];
+                let q_sink_const =
+                    ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+                        * ops.inv_c[IDX_SINK] as f64) as f32;
+                for i in 0..n {
+                    q_base[i * S + IDX_SINK] = q_sink_const;
+                }
+                (NodeScratch::new(npad), vec![0.0; npad * NG], q_base, None)
+            }
+            PlantKernel::Soa => (
+                NodeScratch::new(0),
+                Vec::new(),
+                Vec::new(),
+                Some(SoaState::new(&st, &ops, &pp)),
+            ),
+        };
         NativePlant {
-            scratch: NodeScratch::new(npad),
-            g_eff: vec![0.0; npad * NG],
+            scratch,
+            g_eff,
             q_base,
             node_state: vec![t_water; npad * S],
             circuit_state,
+            last_flow: None,
+            soa,
+            kernel,
             pp,
             ops,
             st,
@@ -63,60 +98,109 @@ impl NativePlant {
         self.node_state.fill(t_water);
         self.circuit_state =
             circuits::initial_circuit_state(t_water, &self.pp);
+        self.last_flow = None;
+    }
+
+    /// Rebuild the kernel's derived state after an external edit to the
+    /// static inputs (`st` is `pub`): the SoA lane mirrors and the
+    /// flow-derived `g_eff` cache both copy from `st` and would
+    /// otherwise keep serving stale values until the pump control
+    /// changes.
+    pub fn refresh_static(&mut self) {
+        if self.kernel == PlantKernel::Soa {
+            self.soa = Some(SoaState::new(&self.st, &self.ops, &self.pp));
+        }
+        self.last_flow = None;
     }
 
     /// One coordinator tick = `substeps` fused substeps (model.py parity).
     pub fn tick(&mut self, controls: &[f32], util: &[f32],
                 out: &mut TickOutput) {
-        let npad = self.st.n_padded;
         let n = self.st.n_nodes;
-        let pp = &self.pp;
         let flow = (controls[U_FLOW_SCALE] * (1.0 - controls[U_PUMP_FAIL]))
             .max(1e-3);
-
-        // g_eff: advection channel scaled by pump speed.
-        self.g_eff.copy_from_slice(&self.st.g);
-        for i in 0..npad {
-            self.g_eff[i * NG + G_ADV] *= flow;
-        }
-
+        // g_eff depends only on the static conductances and the pump
+        // flow; skip the rebuild while the controls keep it unchanged.
+        let flow_changed = self.last_flow != Some(flow);
+        self.last_flow = Some(flow);
         let inv_c_w = self.ops.inv_c[IDX_WATER];
 
-        for _ in 0..self.substeps {
-            // q_base: only the advective-inlet entry varies within a
-            // tick; the sink constant and the zero entries were set at
-            // construction. g_eff's advection channel already carries
-            // flow * g (f32 multiplication commutes bitwise), so this
-            // reproduces flow * g * t_in * inv_c_w exactly.
-            let t_in = self.circuit_state[C_T_RACK_IN];
-            for i in 0..npad {
-                self.q_base[i * S + IDX_WATER] =
-                    self.g_eff[i * NG + G_ADV] * t_in * inv_c_w;
+        match self.kernel {
+            PlantKernel::Reference => {
+                let npad = self.st.n_padded;
+                if flow_changed {
+                    // advection channel scaled by pump speed
+                    self.g_eff.copy_from_slice(&self.st.g);
+                    for i in 0..npad {
+                        self.g_eff[i * NG + G_ADV] *= flow;
+                    }
+                }
+                for _ in 0..self.substeps {
+                    // q_base: only the advective-inlet entry varies
+                    // within a tick; the sink constant and the zero
+                    // entries were set at construction. g_eff's
+                    // advection channel already carries flow * g (f32
+                    // multiplication commutes bitwise), so this
+                    // reproduces flow * g * t_in * inv_c_w exactly.
+                    let t_in = self.circuit_state[C_T_RACK_IN];
+                    for i in 0..npad {
+                        self.q_base[i * S + IDX_WATER] =
+                            self.g_eff[i * NG + G_ADV] * t_in * inv_c_w;
+                    }
+                    let p_dc = node::fused_substep(
+                        &mut self.node_state, &self.g_eff, util,
+                        &self.st.p_dyn, &self.st.p_idle, &self.st.active,
+                        &self.q_base, &self.ops, &self.pp,
+                        &mut self.scratch, n,
+                    );
+                    // Equal branch flows (Tichelmann): arithmetic mean
+                    // over the valid prefix.
+                    let mut t_out_raw = 0.0f32;
+                    for i in 0..n {
+                        t_out_raw += self.node_state[i * S + IDX_WATER];
+                    }
+                    t_out_raw /= n as f32;
+                    circuits::circuit_substep(
+                        &mut self.circuit_state, controls, t_out_raw,
+                        p_dc, n, &self.pp);
+                }
+                self.observe(controls, util, out);
             }
-            let p_dc = node::fused_substep(
-                &mut self.node_state, &self.g_eff, util, &self.st.p_dyn,
-                &self.st.p_idle, &self.st.active, &self.q_base, &self.ops,
-                pp, &mut self.scratch, n,
-            );
-            // Equal branch flows (Tichelmann): arithmetic mean over valid.
-            let mut t_out_raw = 0.0f32;
-            for i in 0..n {
-                t_out_raw += self.node_state[i * S + IDX_WATER];
+            PlantKernel::Soa => {
+                let soa = self.soa.as_mut().expect("SoA kernel state");
+                if flow_changed {
+                    soa.set_flow(flow);
+                }
+                soa.load(&self.node_state, util);
+                for _ in 0..self.substeps {
+                    let t_in = self.circuit_state[C_T_RACK_IN];
+                    soa.set_inlet(t_in, inv_c_w);
+                    let (p_dc, t_out_sum) =
+                        soa::soa_substep(soa, &self.pp, n);
+                    let t_out_raw = t_out_sum / n as f32;
+                    circuits::circuit_substep(
+                        &mut self.circuit_state, controls, t_out_raw,
+                        p_dc, n, &self.pp);
+                }
+                // Fused epilogue: observations + the node-major
+                // write-back come out of the lanes in one pass.
+                let (p_dc, throttling, core_max_all) = soa::soa_observe(
+                    soa, &self.pp, n, &mut self.node_state,
+                    &mut out.node_obs);
+                self.fill_scalars(controls, p_dc, throttling,
+                                  core_max_all, out);
             }
-            t_out_raw /= n as f32;
-            circuits::circuit_substep(
-                &mut self.circuit_state, controls, t_out_raw, p_dc, n, pp);
         }
-
-        self.observe(controls, util, out);
     }
 
-    /// Observation extraction, mirroring model.py's epilogue.
+    /// Observation extraction, mirroring model.py's epilogue (the
+    /// reference-kernel path; the SoA kernel fuses this into its final
+    /// substep pass — `soa::soa_observe`).
     fn observe(&self, controls: &[f32], util: &[f32], out: &mut TickOutput) {
         let npad = self.st.n_padded;
         let n = self.st.n_nodes;
         let pp = &self.pp;
-        let cs = &self.circuit_state;
+        let coeffs = node::PowerCoeffs::new(pp);
         let mut p_dc = 0.0f64;
         let mut throttling = 0.0f32;
         let mut core_max_all = f32::MIN;
@@ -129,9 +213,9 @@ impl NativePlant {
             let mut n_active = 0.0f32;
             for c in 0..NC {
                 let a = self.st.active[i * NC + c];
-                let p = node::core_power(
+                let p = coeffs.core_power(
                     ts[c], util[i * NC + c], self.st.p_dyn[i * NC + c],
-                    self.st.p_idle[i * NC + c], a, pp);
+                    self.st.p_idle[i * NC + c], a);
                 p_node += p;
                 if a > 0.0 {
                     tsum += ts[c];
@@ -144,6 +228,15 @@ impl NativePlant {
                     }
                 }
             }
+            // Zero active cores: report the water temperature, not the
+            // accumulator sentinels (-1e9 / 0.0) — padded filler nodes
+            // and fully-binned chips would otherwise leak them into the
+            // observations and SC_CORE_MAX.
+            let (tmax, tmean) = if n_active > 0.0 {
+                (tmax, tsum / n_active)
+            } else {
+                (ts[IDX_WATER], ts[IDX_WATER])
+            };
             if i < n {
                 p_node += pp.p_node_base as f32;
                 p_dc += p_node as f64;
@@ -153,12 +246,20 @@ impl NativePlant {
             }
             let o = &mut out.node_obs[i * OBS_N..(i + 1) * OBS_N];
             o[O_NODE_POWER] = p_node;
-            o[O_CORE_MEAN] = tsum / n_active.max(1.0);
+            o[O_CORE_MEAN] = tmean;
             o[O_CORE_MAX] = tmax;
             o[O_WATER_OUT] = ts[IDX_WATER];
         }
 
-        let mcp = (pp.rack_mcp(n) as f32
+        self.fill_scalars(controls, p_dc, throttling, core_max_all, out);
+    }
+
+    /// Scalar block shared by both kernels' epilogues.
+    fn fill_scalars(&self, controls: &[f32], p_dc: f64, throttling: f32,
+                    core_max_all: f32, out: &mut TickOutput) {
+        let pp = &self.pp;
+        let cs = &self.circuit_state;
+        let mcp = (pp.rack_mcp(self.st.n_nodes) as f32
             * controls[U_FLOW_SCALE].max(1e-3)
             * (1.0 - controls[U_PUMP_FAIL]))
             .max(1.0);
@@ -188,16 +289,22 @@ mod tests {
     use super::*;
     use crate::variability::ChipLottery;
 
-    fn make(n: usize) -> (NativePlant, Vec<f32>, Vec<f32>) {
+    fn make_with(n: usize, kernel: PlantKernel)
+                 -> (NativePlant, Vec<f32>, Vec<f32>) {
         let pp = PlantParams::default();
         let ops = Operators::build(&pp);
         let lot = ChipLottery::draw(n, &pp, crate::variability::DEFAULT_SEED);
         let st = PlantStatic::from_lottery(&lot, &pp, 64);
         let npad = st.n_padded;
-        let plant = NativePlant::new(pp, ops, st, 20.0);
+        let plant = NativePlant::with_kernel(pp, ops, st, 20.0, kernel);
         let controls = vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
         let util = vec![1.0f32; npad * NC];
         (plant, controls, util)
+    }
+
+    /// Default kernel (SoA) — what `NativePlant::new` builds.
+    fn make(n: usize) -> (NativePlant, Vec<f32>, Vec<f32>) {
+        make_with(n, PlantKernel::default())
     }
 
     #[test]
@@ -253,6 +360,89 @@ mod tests {
         plant.reset(20.0);
         assert!(plant.node_state.iter().all(|&t| t == 20.0));
         assert_eq!(plant.circuit_state[C_T_RACK_IN], 20.0);
+    }
+
+    #[test]
+    fn kernels_agree_over_a_trajectory() {
+        // Quick cross-kernel smoke (the exhaustive randomized version
+        // lives in tests/proptests.rs::prop_kernel_parity).
+        let (mut refp, controls, util) = make_with(13, PlantKernel::Reference);
+        let (mut soap, _, _) = make_with(13, PlantKernel::Soa);
+        let mut or = TickOutput::new(refp.st.n_padded);
+        let mut os = TickOutput::new(soap.st.n_padded);
+        for _ in 0..80 {
+            refp.tick(&controls, &util, &mut or);
+            soap.tick(&controls, &util, &mut os);
+        }
+        for (a, b) in refp.node_state.iter().zip(&soap.node_state) {
+            assert!((a - b).abs() < 1e-3, "state: ref {a} vs soa {b}");
+        }
+        for i in 0..NS {
+            let denom = or.scalars[i].abs().max(1.0);
+            let rel = (or.scalars[i] - os.scalars[i]).abs() / denom;
+            assert!(rel < 1e-4, "scalar {i}: {} vs {}", or.scalars[i],
+                    os.scalars[i]);
+        }
+    }
+
+    #[test]
+    fn idle_cores_report_water_temperature_not_sentinel() {
+        // Regression: a node with zero active cores used to report
+        // O_CORE_MAX = -1e9, and an all-idle plant leaked the sentinel
+        // into SC_CORE_MAX. Both must clamp to the node water temp.
+        for kernel in [PlantKernel::Reference, PlantKernel::Soa] {
+            let (mut plant, controls, util) = make_with(13, kernel);
+            // Fully bin node 0 (the paper's chip lottery can disable
+            // cores; force the extreme case).
+            for c in 0..NC {
+                plant.st.active[c] = 0.0;
+            }
+            plant.refresh_static();
+            let mut out = TickOutput::new(plant.st.n_padded);
+            for _ in 0..10 {
+                plant.tick(&controls, &util, &mut out);
+            }
+            let o = out.node(0);
+            assert_eq!(o[O_CORE_MAX], o[O_WATER_OUT], "{kernel:?}");
+            assert_eq!(o[O_CORE_MEAN], o[O_WATER_OUT], "{kernel:?}");
+            assert!(o[O_CORE_MAX] > 0.0, "{kernel:?}");
+            // padded filler nodes never had active cores either
+            let pad = out.node(plant.st.n_nodes);
+            assert_eq!(pad[O_CORE_MAX], pad[O_WATER_OUT], "{kernel:?}");
+
+            // all-idle plant: SC_CORE_MAX is a water temperature, not
+            // f32::MIN / -1e9
+            plant.st.active.fill(0.0);
+            plant.refresh_static();
+            plant.tick(&controls, &util, &mut out);
+            assert!(out.scalars[SC_CORE_MAX] > 0.0, "{kernel:?}");
+            assert!(out.scalars[SC_CORE_MAX] < 100.0, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn flow_cache_tracks_control_changes() {
+        for kernel in [PlantKernel::Reference, PlantKernel::Soa] {
+            let (mut plant, mut controls, util) = make_with(13, kernel);
+            let mut out = TickOutput::new(plant.st.n_padded);
+            let g_adv = |p: &NativePlant, i: usize| match p.kernel {
+                PlantKernel::Reference => p.g_eff[i * NG + G_ADV],
+                PlantKernel::Soa => {
+                    let s = p.soa.as_ref().unwrap();
+                    s.g_eff[G_ADV * s.npad + i]
+                }
+            };
+            for &flow in &[0.75f32, 0.75, 0.4, 0.75] {
+                controls[U_FLOW_SCALE] = flow;
+                plant.tick(&controls, &util, &mut out);
+                assert_eq!(plant.last_flow, Some(flow));
+                for i in 0..3 {
+                    assert_eq!(g_adv(&plant, i),
+                               plant.st.g[i * NG + G_ADV] * flow,
+                               "{kernel:?} flow {flow}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Native (pure-Rust) mirror of the fused Pallas thermal substep.
+//! Native (pure-Rust) mirror of the fused Pallas thermal substep, in
+//! node-major (AoS) layout — the *reference* kernel.
 //!
 //! Semantically identical to `python/compile/kernels/thermal_step.py`:
 //! per-core power model (leakage + throttling) fused with one explicit
-//! Euler step of the batched node RC network. Used (a) as the reference
-//! backend when artifacts are absent, (b) to cross-validate the HLO
-//! executable in `tests/hlo_vs_native.rs`, and (c) by the native bench
-//! baselines.
+//! Euler step of the batched node RC network. Used (a) as the
+//! cross-check oracle for both the HLO executable
+//! (`tests/hlo_vs_native.rs`) and the lane-major SoA kernel
+//! (`super::soa`, the default backend;
+//! `tests/proptests.rs::prop_kernel_parity`), (b) as the fallback when
+//! artifacts are absent, and (c) by the native bench baselines
+//! (EXPERIMENTS.md §Perf).
 
 use super::layout::*;
 use super::operators::Operators;
@@ -62,7 +66,46 @@ impl NodeScratch {
     }
 }
 
-/// Per-core power with leakage feedback and thermal throttling.
+/// Precomputed f32 constants of the per-core power model. Every kernel
+/// and observe epilogue (AoS `fused_substep`/`NativePlant::observe`,
+/// SoA `soa_substep`/`soa_observe`) inlines `core_power` from here, so
+/// the four call sites stay term-for-term identical by construction —
+/// the SoA-vs-reference parity contract
+/// (`tests/proptests.rs::prop_kernel_parity`).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCoeffs {
+    pub t_thr: f32,
+    pub inv_band: f32,
+    pub leak_fb: f32,
+    pub leak_t0: f32,
+}
+
+impl PowerCoeffs {
+    pub fn new(pp: &PlantParams) -> Self {
+        PowerCoeffs {
+            t_thr: pp.t_throttle as f32,
+            inv_band: 1.0 / pp.throttle_band as f32,
+            leak_fb: (pp.leak_frac * pp.leak_beta) as f32,
+            leak_t0: pp.leak_t0 as f32,
+        }
+    }
+
+    /// Per-core power with leakage feedback and thermal throttling.
+    #[inline(always)]
+    pub fn core_power(&self, t_core: f32, util: f32, p_dyn: f32,
+                      p_idle: f32, active: f32) -> f32 {
+        let headroom =
+            ((self.t_thr - t_core) * self.inv_band).clamp(0.0, 1.0);
+        let base = p_idle + util * headroom * p_dyn;
+        let leak =
+            (1.0 + self.leak_fb * (t_core - self.leak_t0)).max(0.05);
+        active * base * leak
+    }
+}
+
+/// Per-core power with leakage feedback and thermal throttling
+/// (convenience wrapper; hot paths hoist `PowerCoeffs::new` out of
+/// their loops).
 #[inline]
 pub fn core_power(
     t_core: f32,
@@ -72,12 +115,7 @@ pub fn core_power(
     active: f32,
     pp: &PlantParams,
 ) -> f32 {
-    let headroom =
-        ((pp.t_throttle as f32 - t_core) / pp.throttle_band as f32).clamp(0.0, 1.0);
-    let base = p_idle + util * headroom * p_dyn;
-    let leak = 1.0
-        + (pp.leak_frac * pp.leak_beta) as f32 * (t_core - pp.leak_t0 as f32);
-    active * base * leak.max(0.05)
+    PowerCoeffs::new(pp).core_power(t_core, util, p_dyn, p_idle, active)
 }
 
 /// One fused substep over `n` nodes.
@@ -114,10 +152,7 @@ pub fn fused_substep(
         *fixed = Some(FixedOps::from_ops(ops));
     }
     let fx = fixed.as_ref().unwrap();
-    let leak_fb = (pp.leak_frac * pp.leak_beta) as f32;
-    let leak_t0 = pp.leak_t0 as f32;
-    let t_thr = pp.t_throttle as f32;
-    let inv_band = 1.0 / pp.throttle_band as f32;
+    let coeffs = PowerCoeffs::new(pp);
 
     for i in 0..n {
         let mut ts = [0.0f32; S];
@@ -137,10 +172,7 @@ pub fn fused_substep(
         let mut pc = [0.0f32; NC];
         let mut p_node = 0.0f32;
         for c in 0..NC {
-            let headroom = ((t_thr - ts[c]) * inv_band).clamp(0.0, 1.0);
-            let base = pi[c] + ui[c] * headroom * di[c];
-            let leak = (1.0 + leak_fb * (ts[c] - leak_t0)).max(0.05);
-            let p = av[c] * base * leak;
+            let p = coeffs.core_power(ts[c], ui[c], di[c], pi[c], av[c]);
             pc[c] = p;
             p_node += p;
         }

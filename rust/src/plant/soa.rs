@@ -1,0 +1,458 @@
+//! Lane-major (SoA) mirror of the fused thermal substep.
+//!
+//! `node::fused_substep` walks nodes one at a time in node-major (AoS)
+//! layout and does 16-wide dot products per node. This module keeps the
+//! same physics but transposes everything to lane-major `[slot][n_padded]`
+//! buffers: each operator coefficient becomes a scalar broadcast over a
+//! contiguous `n_padded`-length lane, so LLVM auto-vectorizes the inner
+//! loops across nodes (8–16 lanes per instruction) instead of across the
+//! 16 per-node states. Zero operator coefficients are skipped entirely —
+//! the RC operators are sparse (`a0` has one live entry, `e1`/`e2` rows
+//! have at most three) — which is exact for finite inputs because adding
+//! `0.0 * x` never changes a finite accumulator.
+//!
+//! The per-node accumulation order matches the reference kernel term for
+//! term, so the two kernels agree to f32 rounding (bitwise in practice;
+//! `tests/proptests.rs::prop_kernel_parity` pins the bound). The
+//! observation epilogue (`soa_observe`) is fused with the tick: it reads
+//! the freshly updated lanes, fills the node observations and scalar
+//! components, and writes the node-major `node_state` back in the same
+//! pass — one traversal of node state instead of the reference path's
+//! separate `observe()` sweep. See DESIGN.md §5 and EXPERIMENTS.md §Perf.
+
+use super::layout::*;
+use super::node::{FixedOps, PowerCoeffs};
+use super::operators::Operators;
+use super::PlantStatic;
+use crate::config::constants::PlantParams;
+
+/// Lane-major plant state + scratch for the SoA kernel.
+///
+/// Static inputs (`g`, `p_dyn`, `p_idle`, `active`) are transposed once
+/// at construction; `t` and `util` are reloaded from the node-major
+/// buffers at the start of every tick (`load`), so the node-major
+/// `NativePlant::node_state` stays the authoritative view between ticks.
+#[derive(Debug)]
+pub struct SoaState {
+    pub npad: usize,
+    /// [S][npad] node thermal state lanes.
+    pub t: Vec<f32>,
+    /// [NG][npad] conductances, advection lane unscaled.
+    g: Vec<f32>,
+    /// [NG][npad] effective conductances (advection lane × pump flow).
+    pub g_eff: Vec<f32>,
+    /// [S][npad] forcing; the sink lane is set once at construction,
+    /// the water lane every substep (`set_inlet`).
+    pub q_base: Vec<f32>,
+    /// [NC][npad] per-core utilization lanes (reloaded every tick).
+    pub util: Vec<f32>,
+    p_dyn: Vec<f32>,
+    p_idle: Vec<f32>,
+    active: Vec<f32>,
+    // scratch (hot path: zero allocation per substep)
+    diffs: Vec<f32>,   // [NG][npad]
+    p_cores: Vec<f32>, // [NC][npad]
+    t_next: Vec<f32>,  // [S][npad]
+    p_node: Vec<f32>,  // [npad]
+    obs_tsum: Vec<f32>, // [npad]
+    obs_tmax: Vec<f32>, // [npad]
+    obs_nact: Vec<f32>, // [npad]
+    obs_thr: Vec<f32>,  // [npad]
+    /// Fixed-size operator rows, built eagerly (unlike `NodeScratch`,
+    /// the constructor has the operators in hand — no lazy Option).
+    fixed: FixedOps,
+}
+
+impl SoaState {
+    pub fn new(st: &PlantStatic, ops: &Operators, pp: &PlantParams) -> Self {
+        let npad = st.n_padded;
+        let mut g = vec![0.0; npad * NG];
+        transpose_to_lanes(&st.g, &mut g, npad, NG);
+        let mut p_dyn = vec![0.0; npad * NC];
+        transpose_to_lanes(&st.p_dyn, &mut p_dyn, npad, NC);
+        let mut p_idle = vec![0.0; npad * NC];
+        transpose_to_lanes(&st.p_idle, &mut p_idle, npad, NC);
+        let mut active = vec![0.0; npad * NC];
+        transpose_to_lanes(&st.active, &mut active, npad, NC);
+        // Sink forcing constant, valid nodes only — exactly as the
+        // reference path's `NativePlant::new` fills its q_base.
+        let mut q_base = vec![0.0; npad * S];
+        let q_sink = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+            * ops.inv_c[IDX_SINK] as f64) as f32;
+        for i in 0..st.n_nodes {
+            q_base[IDX_SINK * npad + i] = q_sink;
+        }
+        SoaState {
+            npad,
+            t: vec![0.0; npad * S],
+            g_eff: g.clone(),
+            g,
+            q_base,
+            util: vec![0.0; npad * NC],
+            p_dyn,
+            p_idle,
+            active,
+            diffs: vec![0.0; npad * NG],
+            p_cores: vec![0.0; npad * NC],
+            t_next: vec![0.0; npad * S],
+            p_node: vec![0.0; npad],
+            obs_tsum: vec![0.0; npad],
+            obs_tmax: vec![0.0; npad],
+            obs_nact: vec![0.0; npad],
+            obs_thr: vec![0.0; npad],
+            fixed: FixedOps::from_ops(ops),
+        }
+    }
+
+    /// Load node-major state and utilization for one tick.
+    pub fn load(&mut self, node_state: &[f32], util: &[f32]) {
+        transpose_to_lanes(node_state, &mut self.t, self.npad, S);
+        transpose_to_lanes(util, &mut self.util, self.npad, NC);
+    }
+
+    /// Rescale the advection lane for a new pump flow (all other lanes
+    /// of `g_eff` equal `g` and never change).
+    pub fn set_flow(&mut self, flow: f32) {
+        let npad = self.npad;
+        let src = &self.g[G_ADV * npad..(G_ADV + 1) * npad];
+        let dst = &mut self.g_eff[G_ADV * npad..(G_ADV + 1) * npad];
+        for i in 0..npad {
+            dst[i] = src[i] * flow;
+        }
+    }
+
+    /// Refresh the advective-inlet forcing lane for this substep:
+    /// `q_water = g_adv_eff * t_in / C_water` (g_eff already carries the
+    /// pump flow, and f32 multiplication commutes bitwise).
+    pub fn set_inlet(&mut self, t_in: f32, inv_c_w: f32) {
+        let npad = self.npad;
+        let g = &self.g_eff[G_ADV * npad..(G_ADV + 1) * npad];
+        let q = &mut self.q_base[IDX_WATER * npad..(IDX_WATER + 1) * npad];
+        for i in 0..npad {
+            q[i] = g[i] * t_in * inv_c_w;
+        }
+    }
+}
+
+/// One fused substep over all lanes.
+///
+/// Updates `s.t` in place. Returns the total node DC power of the valid
+/// prefix (cores + base, f64-accumulated in node order like the
+/// reference) and the sum of the *updated* water lane over the valid
+/// prefix — the `t_out` reduction fused into the final lane write, so
+/// the caller's circuit step needs no extra pass over node state.
+pub fn soa_substep(
+    s: &mut SoaState,
+    pp: &PlantParams,
+    n_valid: usize,
+) -> (f64, f32) {
+    let SoaState {
+        npad,
+        t,
+        g_eff,
+        q_base,
+        util,
+        p_dyn,
+        p_idle,
+        active,
+        diffs,
+        p_cores,
+        t_next,
+        p_node,
+        fixed,
+        ..
+    } = s;
+    let npad = *npad;
+    let fx: &FixedOps = fixed;
+    let dt = pp.dt_substep as f32;
+    let coeffs = PowerCoeffs::new(pp);
+
+    // --- power model: elementwise over each core lane --------------------
+    p_node.fill(0.0);
+    for c in 0..NC {
+        let tc = &t[c * npad..(c + 1) * npad];
+        let ui = &util[c * npad..(c + 1) * npad];
+        let di = &p_dyn[c * npad..(c + 1) * npad];
+        let pi = &p_idle[c * npad..(c + 1) * npad];
+        let av = &active[c * npad..(c + 1) * npad];
+        let pc = &mut p_cores[c * npad..(c + 1) * npad];
+        for i in 0..npad {
+            let p = coeffs.core_power(tc[i], ui[i], di[i], pi[i], av[i]);
+            pc[i] = p;
+            p_node[i] += p;
+        }
+    }
+    let mut p_total = 0.0f64;
+    for &p in p_node[..n_valid].iter() {
+        p_total += p as f64 + pp.p_node_base;
+    }
+
+    // --- diffs = (T E1^T) * g: one broadcast FMA per live coefficient ----
+    for ch in 0..NG {
+        let d = &mut diffs[ch * npad..(ch + 1) * npad];
+        d.fill(0.0);
+        for k in 0..S {
+            let w = fx.e1[ch][k];
+            if w == 0.0 {
+                continue;
+            }
+            let tk = &t[k * npad..(k + 1) * npad];
+            for i in 0..npad {
+                d[i] += tk[i] * w;
+            }
+        }
+        let ga = &g_eff[ch * npad..(ch + 1) * npad];
+        for i in 0..npad {
+            d[i] *= ga[i];
+        }
+    }
+
+    // --- T' = T + dt * (q + T A0^T + diffs E2^T + P Ec^T) ----------------
+    let mut t_out_sum = 0.0f32;
+    for row in 0..S {
+        let tn = &mut t_next[row * npad..(row + 1) * npad];
+        tn.copy_from_slice(&q_base[row * npad..(row + 1) * npad]);
+        for k in 0..S {
+            let w = fx.a0[row][k];
+            if w == 0.0 {
+                continue;
+            }
+            let tk = &t[k * npad..(k + 1) * npad];
+            for i in 0..npad {
+                tn[i] += tk[i] * w;
+            }
+        }
+        for ch in 0..NG {
+            let w = fx.e2[row][ch];
+            if w == 0.0 {
+                continue;
+            }
+            let dch = &diffs[ch * npad..(ch + 1) * npad];
+            for i in 0..npad {
+                tn[i] += dch[i] * w;
+            }
+        }
+        for c in 0..NC {
+            let w = fx.ec[row][c];
+            if w == 0.0 {
+                continue;
+            }
+            let pcc = &p_cores[c * npad..(c + 1) * npad];
+            for i in 0..npad {
+                tn[i] += pcc[i] * w;
+            }
+        }
+        let ts = &t[row * npad..(row + 1) * npad];
+        for i in 0..npad {
+            tn[i] = ts[i] + dt * tn[i];
+        }
+        if row == IDX_WATER {
+            for &x in tn[..n_valid].iter() {
+                t_out_sum += x;
+            }
+        }
+    }
+    t.copy_from_slice(t_next);
+    (p_total, t_out_sum)
+}
+
+/// Fused observation epilogue over the post-substep lanes.
+///
+/// Recomputes per-core power at the final temperatures (mirroring the
+/// reference `observe`), fills `node_obs` `[npad, OBS_N]`, writes the
+/// node-major `node_state` back (the tick's transpose-out, fused into
+/// the same pass), and returns `(p_dc, throttling, core_max_all)` for
+/// the scalar block. Nodes with zero active cores report the node water
+/// temperature for core max/mean instead of a sentinel.
+pub fn soa_observe(
+    s: &mut SoaState,
+    pp: &PlantParams,
+    n_valid: usize,
+    node_state: &mut [f32],
+    node_obs: &mut [f32],
+) -> (f64, f32, f32) {
+    let SoaState {
+        npad,
+        t,
+        util,
+        p_dyn,
+        p_idle,
+        active,
+        p_node,
+        obs_tsum,
+        obs_tmax,
+        obs_nact,
+        obs_thr,
+        ..
+    } = s;
+    let npad = *npad;
+    let coeffs = PowerCoeffs::new(pp);
+    let thr_lo = (pp.t_throttle - pp.throttle_band) as f32;
+
+    p_node.fill(0.0);
+    obs_tsum.fill(0.0);
+    obs_tmax.fill(f32::MIN);
+    obs_nact.fill(0.0);
+    obs_thr.fill(0.0);
+    for c in 0..NC {
+        let tc = &t[c * npad..(c + 1) * npad];
+        let ui = &util[c * npad..(c + 1) * npad];
+        let di = &p_dyn[c * npad..(c + 1) * npad];
+        let pi = &p_idle[c * npad..(c + 1) * npad];
+        let av = &active[c * npad..(c + 1) * npad];
+        for i in 0..npad {
+            p_node[i] += coeffs.core_power(tc[i], ui[i], di[i], pi[i], av[i]);
+            let on = av[i] > 0.0;
+            obs_tsum[i] += if on { tc[i] } else { 0.0 };
+            obs_nact[i] += if on { 1.0 } else { 0.0 };
+            obs_tmax[i] =
+                if on && tc[i] > obs_tmax[i] { tc[i] } else { obs_tmax[i] };
+            obs_thr[i] += if on && tc[i] > thr_lo { 1.0 } else { 0.0 };
+        }
+    }
+
+    let water = &t[IDX_WATER * npad..(IDX_WATER + 1) * npad];
+    let mut p_dc = 0.0f64;
+    let mut throttling = 0.0f32;
+    let mut core_max_all = f32::MIN;
+    for i in 0..npad {
+        // Zero active cores: report the water temperature, not the
+        // accumulator sentinels (see native::observe for the same fix).
+        let (tmax, tmean) = if obs_nact[i] > 0.0 {
+            (obs_tmax[i], obs_tsum[i] / obs_nact[i])
+        } else {
+            (water[i], water[i])
+        };
+        let mut p = p_node[i];
+        if i < n_valid {
+            p += pp.p_node_base as f32;
+            p_dc += p as f64;
+            if tmax > core_max_all {
+                core_max_all = tmax;
+            }
+        }
+        throttling += obs_thr[i];
+        let o = &mut node_obs[i * OBS_N..(i + 1) * OBS_N];
+        o[O_NODE_POWER] = p;
+        o[O_CORE_MEAN] = tmean;
+        o[O_CORE_MAX] = tmax;
+        o[O_WATER_OUT] = water[i];
+        // fused transpose-out: node i's column of every lane
+        for row in 0..S {
+            node_state[i * S + row] = t[row * npad + i];
+        }
+    }
+    (p_dc, throttling, core_max_all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plant::node::{self, NodeScratch};
+    use crate::variability::ChipLottery;
+
+    /// Build matching node-major inputs and a loaded SoaState.
+    fn setup(n: usize, seed: u64) -> (PlantStatic, Operators, PlantParams,
+                                      Vec<f32>, Vec<f32>, SoaState) {
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let lot = ChipLottery::draw(n, &pp, seed);
+        let st = PlantStatic::from_lottery(&lot, &pp, 64);
+        let npad = st.n_padded;
+        let mut rng = crate::variability::rng::Rng::new(seed ^ 0x50A);
+        let t: Vec<f32> = (0..npad * S)
+            .map(|_| rng.uniform_in(20.0, 90.0) as f32)
+            .collect();
+        let util: Vec<f32> =
+            (0..npad * NC).map(|_| rng.uniform() as f32).collect();
+        let mut soa = SoaState::new(&st, &ops, &pp);
+        soa.load(&t, &util);
+        soa.set_flow(0.75);
+        soa.set_inlet(55.0, ops.inv_c[IDX_WATER]);
+        (st, ops, pp, t, util, soa)
+    }
+
+    /// The reference kernel on the same inputs (q_base built the way
+    /// NativePlant builds it: sink constant + advective inlet).
+    fn reference_step(
+        st: &PlantStatic,
+        ops: &Operators,
+        pp: &PlantParams,
+        t: &mut [f32],
+        util: &[f32],
+        scratch: &mut NodeScratch,
+    ) -> f64 {
+        let npad = st.n_padded;
+        let mut g_eff = st.g.clone();
+        for i in 0..npad {
+            g_eff[i * NG + G_ADV] *= 0.75;
+        }
+        let q_sink = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
+            * ops.inv_c[IDX_SINK] as f64) as f32;
+        let mut q = vec![0.0f32; npad * S];
+        for i in 0..st.n_nodes {
+            q[i * S + IDX_SINK] = q_sink;
+        }
+        for i in 0..npad {
+            q[i * S + IDX_WATER] =
+                g_eff[i * NG + G_ADV] * 55.0 * ops.inv_c[IDX_WATER];
+        }
+        node::fused_substep(t, &g_eff, util, &st.p_dyn, &st.p_idle,
+                            &st.active, &q, ops, pp, scratch, st.n_nodes)
+    }
+
+    #[test]
+    fn matches_reference_kernel_over_many_substeps() {
+        let (st, ops, pp, t0, util, mut soa) = setup(13, 7);
+        let npad = st.n_padded;
+        let mut t_ref = t0.clone();
+        let mut scratch = NodeScratch::new(npad);
+        let mut p_ref = 0.0;
+        let mut p_soa = 0.0;
+        for _ in 0..50 {
+            p_ref = reference_step(&st, &ops, &pp, &mut t_ref, &util,
+                                   &mut scratch);
+            let (p, _t_out) = soa_substep(&mut soa, &pp, st.n_nodes);
+            p_soa = p;
+        }
+        let mut t_soa = vec![0.0f32; npad * S];
+        transpose_from_lanes(&soa.t, &mut t_soa, npad, S);
+        for (a, b) in t_ref.iter().zip(&t_soa) {
+            assert!((a - b).abs() < 1e-4,
+                    "state diverged: ref {a} vs soa {b}");
+        }
+        let rel = (p_ref - p_soa).abs() / p_ref.abs().max(1.0);
+        assert!(rel < 1e-6, "power diverged: ref {p_ref} vs soa {p_soa}");
+    }
+
+    #[test]
+    fn t_out_sum_matches_water_lane() {
+        let (st, _ops, pp, _t0, _util, mut soa) = setup(13, 3);
+        let (_p, t_out_sum) = soa_substep(&mut soa, &pp, st.n_nodes);
+        let water = &soa.t[IDX_WATER * st.n_padded..];
+        let direct: f32 = water[..st.n_nodes].iter().sum();
+        assert_eq!(t_out_sum, direct);
+    }
+
+    #[test]
+    fn observe_clamps_idle_nodes_to_water_temperature() {
+        let (st, _ops, pp, _t0, _util, mut soa) = setup(13, 5);
+        let npad = st.n_padded;
+        soa_substep(&mut soa, &pp, st.n_nodes);
+        let mut node_state = vec![0.0f32; npad * S];
+        let mut obs = vec![0.0f32; npad * OBS_N];
+        let (p_dc, _thr, core_max) =
+            soa_observe(&mut soa, &pp, st.n_nodes, &mut node_state, &mut obs);
+        assert!(p_dc > 0.0);
+        assert!(core_max > -1e8);
+        // padded nodes have no active cores: max/mean == water, no sentinel
+        let pad = st.n_nodes; // first padded node
+        let o = &obs[pad * OBS_N..(pad + 1) * OBS_N];
+        assert_eq!(o[O_CORE_MAX], o[O_WATER_OUT]);
+        assert_eq!(o[O_CORE_MEAN], o[O_WATER_OUT]);
+        // transpose-out round-trips the lanes
+        let mut lanes = vec![0.0f32; npad * S];
+        transpose_to_lanes(&node_state, &mut lanes, npad, S);
+        assert_eq!(lanes, soa.t);
+    }
+}

@@ -4,8 +4,12 @@
 //! The coordinator talks to `PlantBackend`, which dispatches to either:
 //!  * `Hlo` — the JAX/Pallas plant lowered by aot.py, compiled once on the
 //!    PJRT CPU client, executed on every tick (the production path), or
-//!  * `Native` — `plant::native::NativePlant`, the Rust mirror (reference,
-//!    cross-validation, baseline benches).
+//!  * `Native` — `plant::native::NativePlant`, the Rust mirror (used for
+//!    cross-validation, fallback, and baseline benches). The native
+//!    plant itself steps through one of two kernels
+//!    (`plant::PlantKernel`): the lane-major SoA default or the
+//!    node-major reference oracle — selected per config (`--kernel`,
+//!    `cluster.kernel`) or via `IDATACOOL_KERNEL`.
 
 pub mod manifest;
 pub mod pjrt;
@@ -18,7 +22,7 @@ use crate::config::constants::PlantParams;
 use crate::plant::layout::*;
 use crate::plant::native::NativePlant;
 use crate::plant::operators::Operators;
-use crate::plant::{PlantStatic, TickOutput};
+use crate::plant::{PlantKernel, PlantStatic, TickOutput};
 use crate::variability::ChipLottery;
 use manifest::Manifest;
 use pjrt::HloPlant;
@@ -53,12 +57,37 @@ pub enum PlantBackend {
 }
 
 impl PlantBackend {
-    /// Construct for a cluster size, resolving `Auto` by artifact presence.
+    /// Construct for a cluster size, resolving `Auto` by artifact
+    /// presence and the native kernel from the `IDATACOOL_KERNEL`
+    /// environment override (default: SoA).
     ///
     /// `pp` should come from `PlantParams::from_artifacts` so both backends
     /// use the constants the HLO was lowered with.
     pub fn create(
         kind: BackendKind,
+        artifacts_dir: &Path,
+        n_nodes: usize,
+        pp: &PlantParams,
+        seed: u64,
+        t_water: f32,
+    ) -> Result<Self> {
+        Self::create_with_kernel(
+            kind,
+            PlantKernel::from_env()?,
+            artifacts_dir,
+            n_nodes,
+            pp,
+            seed,
+            t_water,
+        )
+    }
+
+    /// `create` with an explicit native-kernel selection (the HLO
+    /// backend ignores it — kernels only exist on the native side).
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_with_kernel(
+        kind: BackendKind,
+        kernel: PlantKernel,
         artifacts_dir: &Path,
         n_nodes: usize,
         pp: &PlantParams,
@@ -114,11 +143,12 @@ impl PlantBackend {
                 let lot = ChipLottery::draw(n_nodes, pp, seed);
                 let st = PlantStatic::from_lottery(&lot, pp, 64);
                 let ops = Operators::build(pp);
-                Ok(PlantBackend::Native(NativePlant::new(
+                Ok(PlantBackend::Native(NativePlant::with_kernel(
                     pp.clone(),
                     ops,
                     st,
                     t_water,
+                    kernel,
                 )))
             }
             BackendKind::Auto => unreachable!(),
@@ -129,6 +159,14 @@ impl PlantBackend {
         match self {
             PlantBackend::Hlo(_) => "hlo",
             PlantBackend::Native(_) => "native",
+        }
+    }
+
+    /// The substep kernel actually in use ("hlo" for the HLO backend).
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            PlantBackend::Hlo(_) => "hlo",
+            PlantBackend::Native(p) => p.kernel.name(),
         }
     }
 
@@ -223,6 +261,32 @@ mod tests {
         let util = vec![1.0f32; b.n_padded() * NC];
         b.tick(&controls, &util, &mut out).unwrap();
         assert!(out.scalars[SC_P_DC] > 1000.0);
+    }
+
+    #[test]
+    fn explicit_kernel_selection_sticks() {
+        let pp = PlantParams::default();
+        for (kernel, name) in [
+            (PlantKernel::Reference, "reference"),
+            (PlantKernel::Soa, "soa"),
+        ] {
+            let mut b = PlantBackend::create_with_kernel(
+                BackendKind::Native,
+                kernel,
+                Path::new("/nonexistent"),
+                13,
+                &pp,
+                1,
+                20.0,
+            )
+            .unwrap();
+            assert_eq!(b.kernel_name(), name);
+            let mut out = TickOutput::new(b.n_padded());
+            let controls = vec![0.0, 1.0, 18.0, 8.0, 9000.0, 0.75, 0.0, 0.0];
+            let util = vec![1.0f32; b.n_padded() * NC];
+            b.tick(&controls, &util, &mut out).unwrap();
+            assert!(out.scalars[SC_P_DC] > 1000.0);
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::path::Path;
 
 use idatacool::config::constants::PlantParams;
 use idatacool::plant::layout::*;
-use idatacool::plant::TickOutput;
+use idatacool::plant::{PlantKernel, TickOutput};
 use idatacool::runtime::{BackendKind, PlantBackend};
 
 fn artifacts() -> Option<&'static Path> {
@@ -26,8 +26,13 @@ fn pair(n: usize) -> Option<(PlantBackend, PlantBackend, PlantParams)> {
     let hlo = PlantBackend::create(
         BackendKind::Hlo, art, n, &pp, 0x1DA7AC001, 20.0)
         .expect("hlo backend");
-    let nat = PlantBackend::create(
-        BackendKind::Native, art, n, &pp, 0x1DA7AC001, 20.0)
+    // Pin the node-major reference kernel explicitly: this test is the
+    // HLO-vs-oracle anchor and must not follow the SoA default or an
+    // ambient IDATACOOL_KERNEL override (SoA-vs-reference parity has
+    // its own gate, proptests::prop_kernel_parity).
+    let nat = PlantBackend::create_with_kernel(
+        BackendKind::Native, PlantKernel::Reference, art, n, &pp,
+        0x1DA7AC001, 20.0)
         .expect("native backend");
     Some((hlo, nat, pp))
 }

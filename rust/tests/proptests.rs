@@ -5,8 +5,10 @@
 use idatacool::config::constants::PlantParams;
 use idatacool::plant::hydraulics::{Manifold, ManifoldKind};
 use idatacool::plant::layout::*;
+use idatacool::plant::native::NativePlant;
 use idatacool::plant::node::{self, NodeScratch};
 use idatacool::plant::operators::Operators;
+use idatacool::plant::{PlantKernel, PlantStatic, TickOutput};
 use idatacool::stats::{gauss, histogram::Histogram, interp, Running};
 use idatacool::util::json::Json;
 use idatacool::variability::rng::Rng;
@@ -119,6 +121,81 @@ fn prop_hotter_inlet_hotter_cores() {
         let t1 = rng.uniform_in(30.0, 55.0) as f32;
         let t2 = t1 + rng.uniform_in(2.0, 10.0) as f32;
         assert!(run(t2) > run(t1), "monotonicity violated");
+    });
+}
+
+#[test]
+fn prop_kernel_parity() {
+    // The lane-major SoA kernel and the node-major reference kernel must
+    // agree on node observations, scalars, and node state through random
+    // lotteries, controls, and utilization.
+    //
+    // Tolerance: the SoA kernel accumulates every per-node term in the
+    // same order as the reference, skips only exact-zero operator
+    // coefficients, and all four power-model sites share
+    // node::PowerCoeffs::core_power — so the state evolution and the
+    // observe epilogues are bitwise-equal in practice. We still assert
+    // tolerances, not equality: lane reassociation or FMA contraction
+    // by a future codegen change may
+    // perturb last-ulp results. Bounds: 1e-3 degC absolute on
+    // temperatures, 1e-3 relative on powers/scalars, and at most one
+    // count on the throttle tally (both kernels compare the same
+    // temperatures against the same threshold, but a last-ulp
+    // difference for a core sitting exactly on the boundary may flip
+    // one count).
+    let pp = PlantParams::default();
+    forall(6, |rng| {
+        let n = 3 + rng.below(14);
+        let seed = rng.next_u64();
+        let lot = idatacool::variability::ChipLottery::draw(n, &pp, seed);
+        let st = PlantStatic::from_lottery(&lot, &pp, 64);
+        let npad = st.n_padded;
+        let ops = Operators::build(&pp);
+        let mut refp = NativePlant::with_kernel(
+            pp.clone(), ops.clone(), st.clone(), 20.0,
+            PlantKernel::Reference);
+        let mut soap = NativePlant::with_kernel(
+            pp.clone(), ops, st, 20.0, PlantKernel::Soa);
+        let mut or = TickOutput::new(npad);
+        let mut os = TickOutput::new(npad);
+        let mut controls = vec![0.0f32; CT];
+        controls[U_CHILLER_EN] = 1.0;
+        controls[U_T_AMBIENT] = 18.0;
+        controls[U_T_CENTRAL] = 8.0;
+        controls[U_GPU_LOAD] = 9000.0;
+        let mut util = vec![0.0f32; npad * NC];
+        for tick in 0..50 {
+            // hold the flow for stretches so the last_flow cache gets
+            // both hit and miss coverage
+            if tick % 10 == 0 {
+                controls[U_FLOW_SCALE] = rng.uniform_in(0.3, 1.0) as f32;
+                controls[U_VALVE] = rng.uniform() as f32;
+            }
+            for u in util.iter_mut() {
+                *u = rng.uniform() as f32;
+            }
+            refp.tick(&controls, &util, &mut or);
+            soap.tick(&controls, &util, &mut os);
+        }
+        for (a, b) in refp.node_state.iter().zip(&soap.node_state) {
+            assert!((a - b).abs() < 1e-3, "node state: {a} vs {b}");
+        }
+        for i in 0..npad * OBS_N {
+            let (a, b) = (or.node_obs[i], os.node_obs[i]);
+            let denom = a.abs().max(1.0);
+            assert!((a - b).abs() / denom < 1e-3,
+                    "node obs {}: {a} vs {b}", i % OBS_N);
+        }
+        for i in 0..NS {
+            let (a, b) = (or.scalars[i], os.scalars[i]);
+            if i == SC_THROTTLE {
+                assert!((a - b).abs() <= 1.0, "throttle count: {a} vs {b}");
+                continue;
+            }
+            let denom = a.abs().max(1.0);
+            assert!((a - b).abs() / denom < 1e-3,
+                    "scalar {i}: {a} vs {b}");
+        }
     });
 }
 
