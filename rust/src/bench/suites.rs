@@ -58,6 +58,13 @@ pub const SUITES: &[SuiteEntry] = &[
         runner: fleet,
         fingerprint: fleet_fingerprint,
     },
+    SuiteEntry {
+        name: "serve",
+        description: "sim-as-a-service: loopback request latency \
+                      (healthz, cache hit) and full-simulation misses",
+        runner: serve,
+        fingerprint: serve_fingerprint,
+    },
 ];
 
 pub fn by_name(name: &str) -> Result<&'static SuiteEntry> {
@@ -317,11 +324,85 @@ fn fleet(b: &mut Bench) -> Result<()> {
         "sweep_serial/3-setpoints", sim_s, "sim-seconds", &mut || {
             sweep::run_sweep_sharded(&cfg, sps, &opts, 1).unwrap();
         });
-    let shards = sweep::default_sweep_shards(sps.len());
+    let shards = sweep::default_sweep_shards(sps.len())?;
     b.run_with_units(
         &format!("sweep_parallel/3-setpoints/s{shards}"), sim_s,
         "sim-seconds", &mut || {
             sweep::run_sweep_sharded(&cfg, sps, &opts, shards).unwrap();
         });
     Ok(())
+}
+
+/// Base config behind the serve-suite simulations (shared with
+/// `serve_fingerprint`): 13 nodes, 60 simulated seconds (12 ticks).
+fn serve_base() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.duration_s = 60.0;
+    c
+}
+
+const SERVE_WORKERS: usize = 2;
+
+/// Serving-layer benchmarks: a real server on an ephemeral loopback
+/// port, measured through the same `http_roundtrip` client the
+/// integration tests use. `healthz` prices pure HTTP + dispatch,
+/// `cache_hit` prices the LRU fast path end to end, `miss` prices a
+/// full simulation per request (unique seed per iteration).
+fn serve(b: &mut Bench) -> Result<()> {
+    use crate::server::{ServeOptions, Server};
+    use crate::util::http::http_roundtrip;
+
+    let mut opts = ServeOptions::new(serve_base());
+    opts.cfg.addr = "127.0.0.1:0".into();
+    opts.cfg.workers = SERVE_WORKERS;
+    opts.cfg.cache_cap = 64;
+    opts.cfg.queue_cap = 32;
+    let handle = Server::bind(opts)?.spawn();
+    let addr = handle.addr.to_string();
+
+    b.run_with_units("serve_healthz/roundtrip", 1.0, "requests", &mut || {
+        let r = http_roundtrip(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        std::hint::black_box(r);
+    });
+
+    // Unique seed per iteration: every request is a fresh cache miss
+    // and therefore a full 12-tick simulation behind the endpoint.
+    let mut seed = 0u64;
+    b.run_with_units("serve_simulate/miss", 1.0, "requests", &mut || {
+        seed += 1;
+        let body = format!("{{\"seed\": {seed}}}");
+        let r = http_roundtrip(
+            &addr, "POST", "/simulate", Some(body.as_bytes()),
+        )
+        .unwrap();
+        assert_eq!(r.status, 200);
+        std::hint::black_box(r);
+    });
+
+    // Identical request repeated: after priming, every response is the
+    // stored bytes — this is the cache-hit throughput headline.
+    let body: &[u8] = br#"{"seed": 424242}"#;
+    let prime = http_roundtrip(&addr, "POST", "/simulate", Some(body))?;
+    anyhow::ensure!(prime.status == 200, "prime request failed");
+    b.run_with_units("serve_simulate/cache_hit", 1.0, "requests", &mut || {
+        let r =
+            http_roundtrip(&addr, "POST", "/simulate", Some(body)).unwrap();
+        assert_eq!(r.header("x-cache"), Some("hit"));
+        std::hint::black_box(r);
+    });
+
+    handle.stop()?;
+    Ok(())
+}
+
+fn serve_fingerprint() -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    // What the suite measures: the base config the endpoint simulates
+    // and the serving shape (worker count).
+    let mut h = config_fingerprint(&serve_base());
+    h = mix(h, SERVE_WORKERS as u64);
+    h
 }

@@ -33,6 +33,18 @@ impl std::str::FromStr for WorkloadKind {
     }
 }
 
+impl WorkloadKind {
+    /// The catalog name (inverse of `FromStr` — canonical request
+    /// documents round-trip through it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Stress => "stress",
+            WorkloadKind::Production => "production",
+            WorkloadKind::Idle => "idle",
+        }
+    }
+}
+
 /// Full simulation run configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -140,14 +152,19 @@ impl SimConfig {
     pub fn from_toml_file(path: &Path) -> anyhow::Result<Self> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
-        let doc = TomlDoc::parse(&text)?;
+        Self::from_toml_doc(&TomlDoc::parse(&text)?)
+    }
+
+    /// Like `from_toml_file`, from an already-parsed doc (callers that
+    /// also consume other sections — e.g. `[serve]` — parse once).
+    pub fn from_toml_doc(doc: &TomlDoc) -> anyhow::Result<Self> {
         let base = match doc.str_or("preset", "full") {
             "full" => SimConfig::idatacool_full(),
             "subset13" => SimConfig::subset13(),
             "test_small" => SimConfig::test_small(),
             other => anyhow::bail!("unknown preset '{other}'"),
         };
-        base.apply_toml(&doc)
+        base.apply_toml(doc)
     }
 
     /// Apply TOML overrides (flat `section.key` layout, see configs/*.toml).
@@ -223,6 +240,69 @@ impl SimConfig {
     }
 }
 
+/// `[serve]` launcher knobs for `idatacool serve`. Kept separate from
+/// `SimConfig`: these shape the serving process (threads, cache, bind
+/// address), not the physics — they never enter a cache key or a
+/// response document.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Bind address (`serve.addr`).
+    pub addr: String,
+    /// Worker threads (`serve.workers`); simulations are CPU-bound, so
+    /// the default is one per available core.
+    pub workers: usize,
+    /// LRU response-cache entries (`serve.cache_cap`).
+    pub cache_cap: usize,
+    /// Bounded job-queue capacity (`serve.queue_cap`); overflow sheds
+    /// load with a 503.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        ServeConfig {
+            addr: "127.0.0.1:8080".into(),
+            workers,
+            cache_cap: 64,
+            queue_cap: 4 * workers,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply `[serve]` overrides from a TOML doc. Counts are strict:
+    /// a present-yet-non-integer (or zero) value is an error, matching
+    /// the CLI-flag discipline.
+    pub fn apply_toml(mut self, doc: &TomlDoc) -> anyhow::Result<Self> {
+        self.addr = doc.str_or("serve.addr", &self.addr).to_string();
+        self.workers = toml_count(doc, "serve.workers", self.workers)?;
+        self.cache_cap = toml_count(doc, "serve.cache_cap", self.cache_cap)?;
+        self.queue_cap = toml_count(doc, "serve.queue_cap", self.queue_cap)?;
+        Ok(self)
+    }
+}
+
+/// A strictly-parsed positive integer TOML value.
+fn toml_count(doc: &TomlDoc, key: &str, default: usize)
+              -> anyhow::Result<usize> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("{key} must be a positive integer")
+            })?;
+            anyhow::ensure!(
+                x >= 1.0 && x.fract() == 0.0,
+                "{key} must be a positive integer, got {x}"
+            );
+            Ok(x as usize)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,5 +346,44 @@ mod tests {
         assert!(SimConfig::default().apply_toml(&doc).is_err());
         let doc = TomlDoc::parse("[cluster]\nkernel = \"bogus\"\n").unwrap();
         assert!(SimConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn workload_names_round_trip() {
+        for w in [WorkloadKind::Stress, WorkloadKind::Production,
+                  WorkloadKind::Idle] {
+            assert_eq!(w.name().parse::<WorkloadKind>().unwrap(), w);
+        }
+    }
+
+    #[test]
+    fn serve_section_overrides() {
+        let doc = TomlDoc::parse(
+            "[serve]\naddr = \"0.0.0.0:9000\"\nworkers = 3\n\
+             cache_cap = 16\nqueue_cap = 12\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::default().apply_toml(&doc).unwrap();
+        assert_eq!(sc.addr, "0.0.0.0:9000");
+        assert_eq!(sc.workers, 3);
+        assert_eq!(sc.cache_cap, 16);
+        assert_eq!(sc.queue_cap, 12);
+        // defaults survive an empty doc
+        let sc = ServeConfig::default()
+            .apply_toml(&TomlDoc::parse("").unwrap())
+            .unwrap();
+        assert!(sc.workers >= 1 && sc.cache_cap >= 1);
+    }
+
+    #[test]
+    fn serve_section_counts_are_strict() {
+        for bad in ["workers = 0", "workers = 2.5", "workers = \"four\"",
+                    "cache_cap = 0", "queue_cap = -1"] {
+            let doc = TomlDoc::parse(&format!("[serve]\n{bad}\n")).unwrap();
+            assert!(
+                ServeConfig::default().apply_toml(&doc).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 }

@@ -99,6 +99,66 @@ pub struct SweepData {
     pub selected: Vec<usize>,
 }
 
+impl SweepData {
+    /// Machine-readable view (`util::json`, BTreeMap-stable key order)
+    /// — the `data` block of the server's `POST /sweep` response. Pure
+    /// measurement outputs, no wall-clock fields.
+    pub fn to_json_value(&self) -> crate::util::json::Json {
+        use crate::util::json::{Json, JsonBuilder};
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                JsonBuilder::new()
+                    .num("setpoint", p.setpoint)
+                    .num("t_out_mean", p.t_out.mean())
+                    .num("t_out_std", p.t_out.std())
+                    .num("t_tank_mean", p.t_tank.mean())
+                    .num("sel_core_mean", p.sel_core.mean())
+                    .num("sel_core_std", p.sel_core.std())
+                    .num("sel_power_mean", p.sel_power.mean())
+                    .num("sel_power_std", p.sel_power.std())
+                    .num("hiw", p.hiw)
+                    .num("hiw_err", p.hiw_err)
+                    .num("pd_frac", p.pd_frac)
+                    .num("cop", p.cop)
+                    .num("reuse", p.reuse)
+                    .num("valve_mean", p.valve_mean)
+                    .num("p_ac_w", p.p_ac)
+                    .build()
+            })
+            .collect();
+        // node_series as an array of {node, points: [[t, p], ...]} —
+        // arrays preserve numeric node order (object keys would sort
+        // lexicographically).
+        let nodes: Vec<Json> = self
+            .node_series
+            .iter()
+            .map(|(&n, tps)| {
+                JsonBuilder::new()
+                    .num("node", n as f64)
+                    .arr(
+                        "points",
+                        tps.iter()
+                            .map(|&(t, p)| {
+                                Json::Arr(vec![Json::Num(t), Json::Num(p)])
+                            })
+                            .collect(),
+                    )
+                    .build()
+            })
+            .collect();
+        JsonBuilder::new()
+            .arr("points", points)
+            .arr("node_series", nodes)
+            .arr(
+                "selected",
+                self.selected.iter().map(|&n| Json::Num(n as f64)).collect(),
+            )
+            .build()
+    }
+}
+
 /// One setpoint's finished measurement — the unit of parallel work.
 struct SetpointRun {
     point: SweepPoint,
@@ -108,23 +168,29 @@ struct SetpointRun {
 }
 
 /// Shard count for a sweep: every available core (capped at the setpoint
-/// count), overridable via `IDATACOOL_SWEEP_SHARDS` (1 forces serial).
-/// An unparseable override warns and falls back — never silently.
-pub fn default_sweep_shards(n_setpoints: usize) -> usize {
-    let cores = match std::env::var("IDATACOOL_SWEEP_SHARDS") {
-        Ok(v) => match v.trim().parse::<usize>() {
-            Ok(k) => k,
-            Err(_) => {
-                eprintln!(
-                    "warning: IDATACOOL_SWEEP_SHARDS='{v}' is not a \
-                     non-negative integer; using all available cores"
-                );
-                available_cores()
-            }
-        },
-        Err(_) => available_cores(),
-    };
-    cores.clamp(1, n_setpoints.max(1))
+/// count), overridable via `IDATACOOL_SWEEP_SHARDS`. The override gets
+/// the same strict treatment as the `--shards` CLI flag
+/// (`util::cli::env_usize_strict`): an unparseable value is an error —
+/// not a silent fall-back — zero is an error, and a value beyond the
+/// setpoint count clamps with a warning.
+pub fn default_sweep_shards(n_setpoints: usize) -> Result<usize> {
+    let cap = n_setpoints.max(1);
+    match crate::util::cli::env_usize_strict("IDATACOOL_SWEEP_SHARDS")? {
+        Some(0) => anyhow::bail!(
+            "IDATACOOL_SWEEP_SHARDS must be at least 1 \
+             (use 1 for a serial sweep)"
+        ),
+        Some(k) if k > cap => {
+            eprintln!(
+                "warning: IDATACOOL_SWEEP_SHARDS={k} exceeds the \
+                 {n_setpoints} setpoints; clamping to {cap} \
+                 (one shard per setpoint)"
+            );
+            Ok(cap)
+        }
+        Some(k) => Ok(k),
+        None => Ok(available_cores().clamp(1, cap)),
+    }
 }
 
 fn available_cores() -> usize {
@@ -138,7 +204,7 @@ fn available_cores() -> usize {
 pub fn run_sweep(cfg: &SimConfig, setpoints: &[f64], opts: &SweepOptions)
                  -> Result<SweepData> {
     run_sweep_sharded(cfg, setpoints, opts,
-                      default_sweep_shards(setpoints.len()))
+                      default_sweep_shards(setpoints.len())?)
 }
 
 /// The single-threaded reference path.
@@ -208,7 +274,9 @@ pub fn run_sweep_sharded(cfg: &SimConfig, setpoints: &[f64],
 }
 
 /// Warm-start, settle and measure one setpoint. Self-contained: builds
-/// its own driver from `cfg`, so concurrent setpoints share nothing.
+/// its own driver from `cfg`, so concurrent setpoints share nothing —
+/// the unit of work behind the figure sweeps and (via
+/// `run_sweep_sharded`) the server's `POST /sweep` endpoint.
 fn measure_setpoint(cfg: &SimConfig, sp: f64, opts: &SweepOptions)
                     -> Result<SetpointRun> {
     let mut c = cfg.clone();

@@ -16,6 +16,7 @@
 use crate::report::Series;
 use crate::stats::histogram::Histogram;
 use crate::stats::Running;
+use crate::util::json::{Json, JsonBuilder};
 
 use super::facility::FacilityReport;
 use super::PlantRun;
@@ -187,6 +188,53 @@ impl FleetAggregate {
                          100.0 * self.facility_reuse_fraction));
 
         vec![plants, pue, ere]
+    }
+
+    /// Machine-readable view (`util::json`, BTreeMap-stable key order):
+    /// per-plant metrics plus the PUE/ERE aggregates — the `aggregate`
+    /// block of the fleet JSON document.
+    pub fn to_json_value(&self) -> Json {
+        let per_plant: Vec<Json> = self
+            .per_plant
+            .iter()
+            .map(|m| {
+                JsonBuilder::new()
+                    .num("index", m.index as f64)
+                    .str("label", &m.label)
+                    .hex("seed", m.seed)
+                    .num("pue", m.pue)
+                    .num("ere", m.ere)
+                    .num("reuse_local", m.reuse_local)
+                    .num("credit_frac", m.credit_frac)
+                    .num("throttle_ticks", m.throttle_ticks as f64)
+                    .num("t_out_mean", m.t_out_mean)
+                    .num("mean_p_ac_w", m.mean_p_ac_w)
+                    .build()
+            })
+            .collect();
+        let stats = |r: &Running| {
+            JsonBuilder::new()
+                .num("mean", r.mean())
+                .num("std", r.std())
+                .num("min", r.min())
+                .num("max", r.max())
+                .build()
+        };
+        JsonBuilder::new()
+            .set("plants", Json::Arr(per_plant))
+            .set("pue", stats(&self.pue_stats))
+            .set("ere", stats(&self.ere_stats))
+            .num("facility_reuse_fraction", self.facility_reuse_fraction)
+            .set(
+                "worst_throttle_plant",
+                self.worst_throttle_plant
+                    .map(|i| Json::Num(i as f64))
+                    .unwrap_or(Json::Null),
+            )
+            .num("worst_throttle_ticks", self.worst_throttle_ticks as f64)
+            .num("fleet_e_ac_j", self.fleet_e_ac)
+            .num("fleet_e_dc_j", self.fleet_e_dc)
+            .build()
     }
 
     /// One-paragraph headline for the CLI.

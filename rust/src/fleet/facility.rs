@@ -18,6 +18,7 @@
 //! regardless of shard count.
 
 use crate::config::constants::PlantParams;
+use crate::util::json::{Json, JsonBuilder};
 
 /// Facility-side chiller parameters: the paper's Sect.-4 curves (owned by
 /// `PlantParams` — the single source of truth) scaled to a fleet of
@@ -135,6 +136,29 @@ impl FacilityReport {
         } else {
             0.0
         }
+    }
+
+    /// Machine-readable view (`util::json`, BTreeMap-stable key order)
+    /// — the `facility` block of the fleet JSON document. Integrals and
+    /// the per-plant credit vector only; no wall-clock fields.
+    pub fn to_json_value(&self) -> Json {
+        JsonBuilder::new()
+            .num("e_pooled_j", self.e_pooled)
+            .num("e_driven_j", self.e_driven)
+            .num("e_chilled_j", self.e_chilled)
+            .num("e_ac_j", self.e_ac)
+            .num("seconds", self.seconds)
+            .num("ticks", self.ticks as f64)
+            .num("peak_pooled_w", self.peak_pooled_w)
+            .num("t_drive_mean", self.t_drive_mean)
+            .num("mean_cop", self.mean_cop())
+            .num("reuse_fraction", self.reuse_fraction())
+            .num("units", self.units as f64)
+            .arr(
+                "plant_credit_j",
+                self.plant_credit_j.iter().map(|&j| Json::Num(j)).collect(),
+            )
+            .build()
     }
 
     pub fn summary(&self) -> String {
@@ -307,6 +331,22 @@ mod tests {
         assert!(out.credits_w[0] > 0.0);
         // drive temperature is that of the contributing plant
         assert!((out.t_drive - 66.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let mut m = FacilityModel::new(params(2), 2);
+        m.pool_tick(&[tick(12_000.0, 66.0), tick(8_000.0, 66.0)], 5.0);
+        let r = m.into_report();
+        let j = r.to_json_value();
+        assert_eq!(j.get("units").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("ticks").unwrap().as_f64(), Some(1.0));
+        let credits = j.get("plant_credit_j").unwrap().as_vec_f64().unwrap();
+        assert_eq!(credits.len(), 2);
+        // serialized text re-parses (key order is builder-stable)
+        let text = j.to_string();
+        assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);
+        assert!(text.starts_with("{\"e_ac_j\":"), "{text}");
     }
 
     #[test]

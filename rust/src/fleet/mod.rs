@@ -27,6 +27,7 @@ use anyhow::Result;
 
 use crate::config::SimConfig;
 use crate::coordinator::{RunResult, SimulationDriver};
+use crate::util::json::{Json, JsonBuilder};
 use crate::util::shard::round_robin;
 use crate::variability::rng::splitmix64;
 
@@ -65,6 +66,35 @@ pub struct FleetRun {
     pub aggregate: FleetAggregate,
     pub shards: usize,
     pub wall_s: f64,
+}
+
+impl FleetRun {
+    /// The `idatacool-fleet/1` document: PUE/ERE aggregates, per-plant
+    /// metrics and facility credits, and the determinism fingerprint —
+    /// rendered through `util::json`, so key order is BTreeMap-stable.
+    ///
+    /// This is both the `idatacool fleet --json` file and the server's
+    /// `POST /fleet` response body (one serializer, byte for byte). It
+    /// carries **no wall-clock and no execution-shape fields** (shard
+    /// count included): for a given scenario/seed/base the document is
+    /// bitwise reproducible across runs, shard counts, hosts, and the
+    /// CLI/server boundary.
+    pub fn to_json_value(&self, cfg: &FleetConfig) -> Json {
+        JsonBuilder::new()
+            .str("schema", "idatacool-fleet/1")
+            .str("scenario", cfg.scenario.name())
+            .str("base_config", &cfg.base.name)
+            .num("n_plants", self.plants.len() as f64)
+            .hex("fleet_seed", cfg.fleet_seed)
+            .hex("fingerprint", self.aggregate.fingerprint())
+            .set("aggregate", self.aggregate.to_json_value())
+            .set("facility", self.facility.to_json_value())
+            .build()
+    }
+
+    pub fn to_json(&self, cfg: &FleetConfig) -> String {
+        self.to_json_value(cfg).to_string()
+    }
 }
 
 /// Deterministic per-plant seed: a SplitMix64 mix of the fleet seed and

@@ -14,6 +14,9 @@
 //!  * **Fleet** (`fleet`): N plants sharded across OS threads against one
 //!    shared facility loop (pooled heat recovery + aggregate adsorption
 //!    chiller), with a declarative scenario catalog.
+//!  * **Serve** (`server`): the twin as a resident service — a std-only
+//!    HTTP/1.1 server with a worker pool, in-flight request coalescing
+//!    and a fingerprint-keyed LRU response cache (`idatacool serve`).
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-figure reproductions.
@@ -27,6 +30,7 @@ pub mod fleet;
 pub mod plant;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod stats;
 pub mod util;
 pub mod variability;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run         simulate a configuration and print the run report
 //!   fleet       sharded multi-plant fleet + shared facility loop
+//!   serve       sim-as-a-service HTTP server (worker pool + LRU cache)
 //!   figures     regenerate the paper's figures (CSV + ASCII)
 //!   equilibrium the Sect.-3 cold-start narrative (alias: figures --fig s3)
 //!   bench       registered benchmark suites + perf-regression gate
@@ -12,6 +13,8 @@
 //! Examples:
 //!   idatacool run --preset full --duration 3600 --setpoint 67
 //!   idatacool fleet --plants 8 --scenario heatwave --shards 4
+//!   idatacool fleet --plants 8 --scenario heatwave --json fleet.json
+//!   idatacool serve --addr 127.0.0.1:8080 --workers 4 --cache-cap 64
 //!   idatacool figures --fig all --quick --out results
 //!   idatacool bench --suite hotpath --json BENCH_hotpath.json
 //!   idatacool bench --suite all --json . --compare bench/baseline.json
@@ -34,6 +37,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("serve") => cmd_serve(&args),
         Some("figures") => cmd_figures(&args),
         Some("equilibrium") => cmd_figures_with(&args, "s3"),
         Some("bench") => cmd_bench(&args),
@@ -49,7 +53,7 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 idatacool — digital twin of the iDataCool hot-water-cooled HPC system
 
-USAGE: idatacool <run|fleet|figures|equilibrium|bench|validate|info> [flags]
+USAGE: idatacool <run|fleet|serve|figures|equilibrium|bench|validate|info> [flags]
 
 common flags:
   --config <file.toml>   load a TOML config (presets: full|subset13|test_small)
@@ -70,9 +74,23 @@ fleet flags:
   --shards <k>           OS threads to shard plants over (default: cores)
   --scenario <name>      baseline|heatwave|chiller-outage|pump-degradation|
                          load-surge|mixed (default baseline)
+  --json <path>          also write the machine-readable fleet summary
+                         (idatacool-fleet/1: PUE/ERE aggregates, per-plant
+                         credits, determinism fingerprint — the same
+                         document POST /fleet serves)
   (common flags above configure the per-plant base; every scenario except
    baseline sets the workload itself, and backend \"auto\" resolves to
    native for fleet runs)
+serve flags:
+  --addr <host:port>     bind address (default 127.0.0.1:8080; :0 picks an
+                         ephemeral port)
+  --workers <k>          worker threads (default: cores; env override
+                         IDATACOOL_SERVE_WORKERS, strict-parsed)
+  --cache-cap <n>        LRU response-cache entries (default 64)
+  --queue-cap <n>        bounded job queue; overflow answers 503
+  (a --config file's [serve] section sets the same knobs; flags win over
+   env, env wins over TOML. Endpoints: POST /simulate [?stream=1],
+   POST /fleet, POST /sweep, GET /healthz, GET /metrics, POST /shutdown)
 figures flags:
   --fig <id|all|sweep>   4a 4b 5a 5b 6a 6b 7a 7b r1 s3 r2 manifold binning econ
   --out <dir>            write CSVs here (default: results)
@@ -95,9 +113,29 @@ validate flags:
   --ticks <n>            trajectory length for backend comparison
 ";
 
+/// Read and parse `--config` once; `None` when the flag is absent.
+fn load_config_doc(args: &Args)
+                   -> Result<Option<idatacool::config::toml::TomlDoc>> {
+    match args.get("config") {
+        None => Ok(None),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+            Ok(Some(idatacool::config::toml::TomlDoc::parse(&text)?))
+        }
+    }
+}
+
 fn build_config(args: &Args) -> Result<SimConfig> {
-    let mut cfg = if let Some(path) = args.get("config") {
-        SimConfig::from_toml_file(std::path::Path::new(path))?
+    build_config_with(args, load_config_doc(args)?.as_ref())
+}
+
+fn build_config_with(
+    args: &Args,
+    doc: Option<&idatacool::config::toml::TomlDoc>,
+) -> Result<SimConfig> {
+    let mut cfg = if let Some(doc) = doc {
+        SimConfig::from_toml_doc(doc)?
     } else {
         match args.str_or("preset", "full") {
             "full" => SimConfig::idatacool_full(),
@@ -237,7 +275,58 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "aggregate fingerprint: {:#018x} (shard-count independent)",
         run.aggregate.fingerprint()
     );
+    if let Some(path) = args.get("json") {
+        let path = PathBuf::from(path);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        // The same serializer backs the server's POST /fleet response,
+        // so this file is byte-identical to the served body.
+        std::fs::write(&path, run.to_json(&driver.cfg))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use idatacool::config::ServeConfig;
+    use idatacool::server::{resolve_workers, ServeOptions, Server};
+
+    // One read+parse of --config serves both consumers: the SimConfig
+    // base and the [serve] section.
+    let doc = load_config_doc(args)?;
+    let base = build_config_with(args, doc.as_ref())?;
+    let mut sc = ServeConfig::default();
+    if let Some(doc) = &doc {
+        sc = sc.apply_toml(doc)?;
+    }
+    // Precedence: TOML < env < CLI flag. The env override gets the same
+    // strict parse + clamp-with-warning treatment as the flag.
+    if let Some(k) =
+        idatacool::util::cli::env_usize_strict("IDATACOOL_SERVE_WORKERS")?
+    {
+        sc.workers = k;
+    }
+    sc.workers = resolve_workers(args.usize_strict("workers", sc.workers)?)?;
+    sc.addr = args.str_or("addr", &sc.addr).to_string();
+    sc.cache_cap = args.usize_strict("cache-cap", sc.cache_cap)?;
+    sc.queue_cap = args.usize_strict("queue-cap", sc.queue_cap)?;
+
+    let (workers, cache_cap, queue_cap) =
+        (sc.workers, sc.cache_cap, sc.queue_cap);
+    let server = Server::bind(ServeOptions { cfg: sc, base })?;
+    println!(
+        "serving http://{} — {} workers, cache {} entries, queue {} \
+         (POST /simulate | /fleet | /sweep, GET /healthz | /metrics, \
+         POST /shutdown to stop)",
+        server.local_addr(),
+        workers,
+        cache_cap,
+        queue_cap,
+    );
+    server.run()
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

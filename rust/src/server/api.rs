@@ -1,0 +1,695 @@
+//! Request/response schemas of the sim-as-a-service endpoints.
+//!
+//! Requests are flat JSON objects of overrides applied on top of the
+//! server's base `SimConfig`. Parsing is *strict*: an unknown field is a
+//! 400, so a typo can never silently fall back to a default (and then be
+//! answered from the cache as if it had been honored).
+//!
+//! Cache keys: every parsed request is re-serialized into a canonical
+//! BTreeMap-ordered JSON document listing *every* knob that affects the
+//! run (env-resolved kernel included). The key is the bench subsystem's
+//! `config_fingerprint` (bench/record.rs) extended by the same FNV mix
+//! over the endpoint name and the canonical bytes — identical requests
+//! map to one key, any semantic difference changes it, and two textually
+//! different bodies meaning the same run (field order, whitespace,
+//! explicit defaults) share one cache entry.
+//!
+//! Response documents deliberately contain **no wall-clock fields**: a
+//! response is a pure function of the request, so a cache hit is
+//! byte-identical to recomputation and the `/fleet` body equals the
+//! `idatacool fleet --json` file for the same configuration.
+
+use anyhow::{Context, Result};
+
+use crate::config::SimConfig;
+use crate::coordinator::energy::EnergyAccount;
+use crate::coordinator::{RunResult, TraceSample};
+use crate::figures::sweep::SweepOptions;
+use crate::fleet::scenario::Scenario;
+use crate::fleet::FleetConfig;
+use crate::plant::PlantKernel;
+use crate::runtime::BackendKind;
+use crate::util::json::{Json, JsonBuilder};
+
+use std::collections::BTreeMap;
+
+/// Parsed `POST /simulate` body.
+pub struct SimRequest {
+    pub cfg: SimConfig,
+    /// Trace sampling stride (1 = every tick), as in
+    /// `SimulationDriver::run`.
+    pub sample_every: usize,
+}
+
+/// Parsed `POST /sweep` body.
+pub struct SweepRequest {
+    pub cfg: SimConfig,
+    pub setpoints: Vec<f64>,
+    pub quick: bool,
+    pub shards: usize,
+}
+
+/// SimConfig fields a request may override.
+const SIM_KEYS: &[&str] = &[
+    "preset",
+    "name",
+    "nodes",
+    "backend",
+    "kernel",
+    "seed",
+    "duration_s",
+    "setpoint",
+    "workload",
+    "stress_nodes",
+    "stress_background",
+    "production_load",
+    "pump_speed",
+    "t_ambient",
+    "t_central",
+    "gpu_load",
+    "t_water_init",
+    "sensor_noise",
+    "regulate",
+    "valve_fixed",
+];
+
+fn obj_of(body: &str) -> Result<BTreeMap<String, Json>> {
+    let t = body.trim();
+    if t.is_empty() {
+        return Ok(BTreeMap::new());
+    }
+    match Json::parse(t)? {
+        Json::Obj(m) => Ok(m),
+        _ => anyhow::bail!("request body must be a JSON object"),
+    }
+}
+
+fn take_f64(m: &BTreeMap<String, Json>, k: &str) -> Result<Option<f64>> {
+    match m.get(k) {
+        None => Ok(None),
+        Some(j) => j
+            .as_f64()
+            .map(Some)
+            .with_context(|| format!("field '{k}' must be a number")),
+    }
+}
+
+fn take_usize(m: &BTreeMap<String, Json>, k: &str) -> Result<Option<usize>> {
+    match take_f64(m, k)? {
+        None => Ok(None),
+        Some(x) => {
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64,
+                "field '{k}' must be a non-negative integer, got {x}"
+            );
+            Ok(Some(x as usize))
+        }
+    }
+}
+
+fn take_bool(m: &BTreeMap<String, Json>, k: &str) -> Result<Option<bool>> {
+    match m.get(k) {
+        None => Ok(None),
+        Some(j) => j
+            .as_bool()
+            .map(Some)
+            .with_context(|| format!("field '{k}' must be a boolean")),
+    }
+}
+
+fn take_str<'a>(m: &'a BTreeMap<String, Json>, k: &str)
+                -> Result<Option<&'a str>> {
+    match m.get(k) {
+        None => Ok(None),
+        Some(j) => j
+            .as_str()
+            .map(Some)
+            .with_context(|| format!("field '{k}' must be a string")),
+    }
+}
+
+/// Seeds: a JSON number (exact below 2^53) or a string — decimal or
+/// `0x`-prefixed hex — for full 64-bit ids.
+fn take_seed(m: &BTreeMap<String, Json>, k: &str) -> Result<Option<u64>> {
+    match m.get(k) {
+        None => Ok(None),
+        Some(Json::Num(x)) => {
+            anyhow::ensure!(
+                *x >= 0.0 && x.fract() == 0.0 && *x <= 9.007_199_254_740_992e15,
+                "field '{k}': numeric seeds must be integers below 2^53 \
+                 (use a hex string for larger ids)"
+            );
+            Ok(Some(*x as u64))
+        }
+        Some(Json::Str(s)) => {
+            let v = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(h) => u64::from_str_radix(h, 16),
+                None => s.parse::<u64>(),
+            };
+            Ok(Some(v.map_err(|_| {
+                anyhow::anyhow!("field '{k}': bad seed string '{s}'")
+            })?))
+        }
+        Some(_) => anyhow::bail!("field '{k}' must be a number or string"),
+    }
+}
+
+/// Apply the shared SimConfig override fields from `m` onto `cfg`.
+/// Fields listed in `extra` belong to the caller (endpoint-specific) and
+/// are skipped here; anything else outside `SIM_KEYS` is an error.
+fn apply_sim_overrides(
+    m: &BTreeMap<String, Json>,
+    cfg: &mut SimConfig,
+    extra: &[&str],
+) -> Result<()> {
+    for k in m.keys() {
+        if !SIM_KEYS.contains(&k.as_str()) && !extra.contains(&k.as_str()) {
+            anyhow::bail!(
+                "unknown field '{k}' (sim fields: {SIM_KEYS:?}; \
+                 endpoint fields: {extra:?})"
+            );
+        }
+    }
+    // `preset` first: it replaces the whole config, keeping only the
+    // server-side plant constants and artifacts location.
+    if let Some(p) = take_str(m, "preset")? {
+        let mut fresh = match p {
+            "full" => SimConfig::idatacool_full(),
+            "subset13" => SimConfig::subset13(),
+            "test_small" => SimConfig::test_small(),
+            other => anyhow::bail!("unknown preset '{other}'"),
+        };
+        fresh.artifacts_dir = cfg.artifacts_dir.clone();
+        fresh.pp = cfg.pp.clone();
+        *cfg = fresh;
+    }
+    if let Some(v) = take_str(m, "name")? {
+        cfg.name = v.to_string();
+    }
+    if let Some(v) = take_usize(m, "nodes")? {
+        cfg.n_nodes = v;
+    }
+    if let Some(v) = take_str(m, "backend")? {
+        cfg.backend = v.to_string();
+    }
+    if let Some(v) = take_str(m, "kernel")? {
+        cfg.kernel = v.to_string();
+    }
+    if let Some(v) = take_seed(m, "seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = take_f64(m, "duration_s")? {
+        cfg.duration_s = v;
+    }
+    if let Some(v) = take_f64(m, "setpoint")? {
+        cfg.t_out_setpoint = v;
+    }
+    if let Some(v) = take_str(m, "workload")? {
+        cfg.workload = v.parse()?;
+    }
+    if let Some(v) = take_usize(m, "stress_nodes")? {
+        cfg.stress_nodes = v;
+    }
+    if let Some(v) = take_f64(m, "stress_background")? {
+        cfg.stress_background = v;
+    }
+    if let Some(v) = take_f64(m, "production_load")? {
+        cfg.production_load = v;
+    }
+    if let Some(v) = take_f64(m, "pump_speed")? {
+        cfg.pump_speed = v;
+    }
+    if let Some(v) = take_f64(m, "t_ambient")? {
+        cfg.t_ambient = v;
+    }
+    if let Some(v) = take_f64(m, "t_central")? {
+        cfg.t_central = v;
+    }
+    if let Some(v) = take_f64(m, "gpu_load")? {
+        cfg.gpu_load = v;
+    }
+    if let Some(v) = take_f64(m, "t_water_init")? {
+        cfg.t_water_init = v;
+    }
+    if let Some(v) = take_bool(m, "sensor_noise")? {
+        cfg.sensor_noise = v;
+    }
+    if let Some(v) = take_bool(m, "regulate")? {
+        cfg.regulate = v;
+    }
+    if let Some(v) = take_f64(m, "valve_fixed")? {
+        cfg.valve_fixed = v;
+    }
+    // "auto" resolves to the artifact-independent native backend, like
+    // fleet runs; an explicitly requested "hlo" stays hlo.
+    if cfg.backend == "auto" {
+        cfg.backend = "native".into();
+    }
+    let _: BackendKind = cfg.backend.parse()?;
+    // Canonicalize the kernel now (env-resolved): the cache key must
+    // name the kernel that actually runs, not "auto".
+    cfg.kernel = PlantKernel::resolve(&cfg.kernel)?.name().to_string();
+    cfg.validate()?;
+    Ok(())
+}
+
+/// Parse a `POST /simulate` body against the server's base config.
+pub fn parse_sim_request(body: &str, base: &SimConfig) -> Result<SimRequest> {
+    let m = obj_of(body)?;
+    let mut cfg = base.clone();
+    apply_sim_overrides(&m, &mut cfg, &["sample_every"])?;
+    let sample_every = take_usize(&m, "sample_every")?.unwrap_or(1);
+    anyhow::ensure!(sample_every >= 1, "sample_every must be at least 1");
+    Ok(SimRequest { cfg, sample_every })
+}
+
+/// Parse a `POST /fleet` body. `shards` defaults to 1 — the server
+/// already parallelizes across requests, and a fixed default keeps the
+/// response (which records the shard count) host-independent. Shard
+/// count never changes results (the fleet determinism contract).
+pub fn parse_fleet_request(body: &str, base: &SimConfig)
+                           -> Result<FleetConfig> {
+    let m = obj_of(body)?;
+    let mut cfg = base.clone();
+    apply_sim_overrides(&m, &mut cfg, &["plants", "shards", "scenario"])?;
+    let n_plants = take_usize(&m, "plants")?.unwrap_or(4);
+    anyhow::ensure!(n_plants >= 1, "plants must be at least 1");
+    let shards = take_usize(&m, "shards")?.unwrap_or(1);
+    anyhow::ensure!(shards >= 1, "shards must be at least 1");
+    // Clamp here (as FleetDriver::run would) so over-asked shard counts
+    // canonicalize onto the same cache key.
+    let shards = shards.min(n_plants);
+    let scenario =
+        Scenario::by_name(take_str(&m, "scenario")?.unwrap_or("baseline"))?;
+    let fleet_seed = cfg.seed;
+    Ok(FleetConfig { n_plants, shards, base: cfg, fleet_seed, scenario })
+}
+
+/// Parse a `POST /sweep` body. `quick` defaults to true (full sweeps
+/// settle for 30+ simulated minutes per setpoint).
+pub fn parse_sweep_request(body: &str, base: &SimConfig)
+                           -> Result<SweepRequest> {
+    let m = obj_of(body)?;
+    let mut cfg = base.clone();
+    apply_sim_overrides(&m, &mut cfg, &["setpoints", "quick", "shards"])?;
+    let setpoints = match m.get("setpoints") {
+        None => vec![45.0, 55.0, 65.0],
+        Some(j) => j
+            .as_vec_f64()
+            .context("field 'setpoints' must be an array of numbers")?,
+    };
+    anyhow::ensure!(!setpoints.is_empty(), "setpoints must not be empty");
+    // Each setpoint becomes t_out_setpoint of its own run; reject values
+    // the config layer would reject, with the same message.
+    for sp in &setpoints {
+        let mut c = cfg.clone();
+        c.t_out_setpoint = *sp;
+        c.validate().with_context(|| format!("setpoint {sp}"))?;
+    }
+    let quick = take_bool(&m, "quick")?.unwrap_or(true);
+    let shards = take_usize(&m, "shards")?.unwrap_or(1);
+    anyhow::ensure!(shards >= 1, "shards must be at least 1");
+    let shards = shards.min(setpoints.len());
+    Ok(SweepRequest { cfg, setpoints, quick, shards })
+}
+
+impl SweepRequest {
+    pub fn options(&self) -> SweepOptions {
+        if self.quick {
+            SweepOptions::quick()
+        } else {
+            SweepOptions::default()
+        }
+    }
+}
+
+/// Every SimConfig knob that affects a run, as a canonical builder the
+/// per-endpoint canonical documents extend.
+fn sim_config_builder(cfg: &SimConfig) -> JsonBuilder {
+    JsonBuilder::new()
+        .str("backend", &cfg.backend)
+        .num("duration_s", cfg.duration_s)
+        .num("gpu_load", cfg.gpu_load)
+        .str("kernel", &cfg.kernel)
+        .str("name", &cfg.name)
+        .num("n_nodes", cfg.n_nodes as f64)
+        .num("production_load", cfg.production_load)
+        .num("pump_speed", cfg.pump_speed)
+        .bool("regulate", cfg.regulate)
+        .hex("seed", cfg.seed)
+        .bool("sensor_noise", cfg.sensor_noise)
+        .num("stress_background", cfg.stress_background)
+        .num("stress_nodes", cfg.stress_nodes as f64)
+        .num("t_ambient", cfg.t_ambient)
+        .num("t_central", cfg.t_central)
+        .num("t_out_setpoint", cfg.t_out_setpoint)
+        .num("t_water_init", cfg.t_water_init)
+        .num("valve_fixed", cfg.valve_fixed)
+        .str("workload", cfg.workload.name())
+}
+
+/// Canonical `/simulate` request document (the cache-key input).
+pub fn canonical_sim_json(cfg: &SimConfig, sample_every: usize,
+                          stream: bool) -> Json {
+    sim_config_builder(cfg)
+        .num("sample_every", sample_every as f64)
+        .bool("stream", stream)
+        .build()
+}
+
+/// Canonical `/fleet` request document. `shards` is deliberately
+/// absent: the fleet determinism contract makes responses bitwise
+/// identical across shard counts, so requests differing only in shards
+/// must share one cache entry.
+pub fn canonical_fleet_json(fc: &FleetConfig) -> Json {
+    sim_config_builder(&fc.base)
+        .hex("fleet_seed", fc.fleet_seed)
+        .num("plants", fc.n_plants as f64)
+        .str("scenario", fc.scenario.name())
+        .build()
+}
+
+/// Canonical `/sweep` request document. Like `/fleet`, `shards` is
+/// execution shape — a K-shard sweep is bitwise identical to serial
+/// (tests/sweep_parallel.rs) — so it stays out of the cache key.
+pub fn canonical_sweep_json(req: &SweepRequest) -> Json {
+    sim_config_builder(&req.cfg)
+        .bool("quick", req.quick)
+        .arr(
+            "setpoints",
+            req.setpoints.iter().map(|&s| Json::Num(s)).collect(),
+        )
+        .build()
+}
+
+/// The cache key: the bench subsystem's config fingerprint
+/// (bench/record.rs — the knobs CI already keys perf reports on),
+/// extended with the same FNV mix over the endpoint name and the
+/// canonical request bytes so *every* remaining knob contributes.
+pub fn request_fingerprint(endpoint: &str, canonical: &Json,
+                           cfg: &SimConfig) -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    let mut h = crate::bench::record::config_fingerprint(cfg);
+    for b in endpoint.bytes() {
+        h = mix(h, b as u64);
+    }
+    for b in canonical.to_string().bytes() {
+        h = mix(h, b as u64);
+    }
+    h
+}
+
+/// One trace sample as a JSON object (an NDJSON line of `?stream=1`).
+pub fn trace_sample_json(s: &TraceSample) -> Json {
+    JsonBuilder::new()
+        .num("t_s", s.t_s)
+        .num("t_rack_in", s.t_rack_in)
+        .num("t_rack_out", s.t_rack_out)
+        .num("t_tank", s.t_tank)
+        .num("t_primary", s.t_primary)
+        .num("p_ac", s.p_ac)
+        .num("p_dc", s.p_dc)
+        .num("p_r", s.p_r)
+        .num("p_d", s.p_d)
+        .num("p_c", s.p_c)
+        .num("p_add", s.p_add)
+        .num("valve", s.valve)
+        .bool("chiller_on", s.chiller_on)
+        .num("core_max", s.core_max)
+        .num("throttling", s.throttling as f64)
+        .num("utilization", s.utilization)
+        .build()
+}
+
+fn energy_json(e: &EnergyAccount) -> Json {
+    JsonBuilder::new()
+        .num("e_ac_j", e.e_ac)
+        .num("e_dc_j", e.e_dc)
+        .num("e_water_j", e.e_water)
+        .num("e_drive_j", e.e_drive)
+        .num("e_chilled_j", e.e_chilled)
+        .num("e_add_j", e.e_add)
+        .num("e_loss_plumbing_j", e.e_loss_plumbing)
+        .num("e_central_j", e.e_central)
+        .num("seconds", e.seconds)
+        .num("ticks", e.ticks as f64)
+        .num("heat_in_water_fraction", e.heat_in_water_fraction())
+        .num("transferred_fraction", e.transferred_fraction())
+        .num("cop", e.cop())
+        .num("reuse_fraction", e.reuse_fraction())
+        .num("reuse_potential", e.reuse_potential())
+        .num("mean_p_ac_w", e.mean_p_ac())
+        .build()
+}
+
+/// The `/simulate` summary document. Wall-clock perf fields are
+/// deliberately absent: the document is a pure function of the request.
+pub fn simulate_summary_json(
+    cfg: &SimConfig,
+    kernel: &str,
+    sample_every: usize,
+    res: &RunResult,
+) -> Json {
+    let events: Vec<Json> = res
+        .events
+        .iter()
+        .map(|e| {
+            JsonBuilder::new().num("t_s", e.t_s).str("msg", &e.msg).build()
+        })
+        .collect();
+    JsonBuilder::new()
+        .str("schema", "idatacool-sim/1")
+        .str("backend", res.backend)
+        .str("kernel", kernel)
+        .str("name", &cfg.name)
+        .num("n_nodes", cfg.n_nodes as f64)
+        .hex("seed", cfg.seed)
+        .num("duration_s", cfg.duration_s)
+        .num("ticks", res.ticks as f64)
+        .num("sample_every", sample_every as f64)
+        .num("trace_len", res.trace.len() as f64)
+        .set("energy", energy_json(&res.energy))
+        .set("events", Json::Arr(events))
+        .str("workload_stats", &res.workload_stats)
+        .set(
+            "final",
+            res.trace.last().map(trace_sample_json).unwrap_or(Json::Null),
+        )
+        .build()
+}
+
+/// The `?stream=1` body: one NDJSON line per trace sample, closed by the
+/// summary document.
+pub fn trace_ndjson(
+    cfg: &SimConfig,
+    kernel: &str,
+    sample_every: usize,
+    res: &RunResult,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    for s in &res.trace {
+        out.extend_from_slice(trace_sample_json(s).to_string().as_bytes());
+        out.push(b'\n');
+    }
+    out.extend_from_slice(
+        simulate_summary_json(cfg, kernel, sample_every, res)
+            .to_string()
+            .as_bytes(),
+    );
+    out.push(b'\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadKind;
+
+    fn base() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.duration_s = 60.0;
+        c
+    }
+
+    #[test]
+    fn empty_body_is_the_base_config() {
+        let r = parse_sim_request("", &base()).unwrap();
+        assert_eq!(r.cfg.n_nodes, 13);
+        assert_eq!(r.sample_every, 1);
+        // kernel canonicalized away from "auto"
+        assert_ne!(r.cfg.kernel, "auto");
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let r = parse_sim_request(
+            r#"{"duration_s": 120, "setpoint": 55, "seed": 9,
+                "workload": "stress", "sample_every": 3}"#,
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(r.cfg.duration_s, 120.0);
+        assert_eq!(r.cfg.t_out_setpoint, 55.0);
+        assert_eq!(r.cfg.seed, 9);
+        assert_eq!(r.cfg.workload, WorkloadKind::Stress);
+        assert_eq!(r.sample_every, 3);
+    }
+
+    #[test]
+    fn unknown_field_is_rejected() {
+        let err = parse_sim_request(r#"{"duration": 120}"#, &base())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown field 'duration'"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_are_rejected() {
+        let b = base();
+        assert!(parse_sim_request(r#"{"setpoint": 150}"#, &b).is_err());
+        assert!(parse_sim_request(r#"{"workload": "bogus"}"#, &b).is_err());
+        assert!(parse_sim_request(r#"{"backend": "bogus"}"#, &b).is_err());
+        assert!(parse_sim_request(r#"{"kernel": "bogus"}"#, &b).is_err());
+        assert!(parse_sim_request(r#"{"sample_every": 0}"#, &b).is_err());
+        assert!(parse_sim_request(r#"{"nodes": 2.5}"#, &b).is_err());
+        assert!(parse_sim_request("[1,2]", &b).is_err());
+        assert!(parse_sim_request("{bad json", &b).is_err());
+    }
+
+    #[test]
+    fn seeds_accept_numbers_and_hex_strings() {
+        let b = base();
+        let r = parse_sim_request(r#"{"seed": "0xDEADBEEF"}"#, &b).unwrap();
+        assert_eq!(r.cfg.seed, 0xDEAD_BEEF);
+        let r = parse_sim_request(r#"{"seed": "12345"}"#, &b).unwrap();
+        assert_eq!(r.cfg.seed, 12345);
+        assert!(parse_sim_request(r#"{"seed": -1}"#, &b).is_err());
+        assert!(parse_sim_request(r#"{"seed": "xyz"}"#, &b).is_err());
+    }
+
+    #[test]
+    fn fingerprint_canonicalizes_equivalent_bodies() {
+        let b = base();
+        // Different field order + whitespace, same meaning.
+        let r1 = parse_sim_request(
+            r#"{"seed": 5, "duration_s": 60}"#, &b).unwrap();
+        let r2 = parse_sim_request(
+            r#"{ "duration_s":60.0,"seed":5 }"#, &b).unwrap();
+        let k1 = request_fingerprint(
+            "simulate", &canonical_sim_json(&r1.cfg, 1, false), &r1.cfg);
+        let k2 = request_fingerprint(
+            "simulate", &canonical_sim_json(&r2.cfg, 1, false), &r2.cfg);
+        assert_eq!(k1, k2);
+        // Any semantic difference separates keys.
+        let r3 = parse_sim_request(
+            r#"{"seed": 6, "duration_s": 60}"#, &b).unwrap();
+        let k3 = request_fingerprint(
+            "simulate", &canonical_sim_json(&r3.cfg, 1, false), &r3.cfg);
+        assert_ne!(k1, k3);
+        // The stream flag and the endpoint separate keys too.
+        let ks = request_fingerprint(
+            "simulate", &canonical_sim_json(&r1.cfg, 1, true), &r1.cfg);
+        assert_ne!(k1, ks);
+        let kf = request_fingerprint(
+            "fleet", &canonical_sim_json(&r1.cfg, 1, false), &r1.cfg);
+        assert_ne!(k1, kf);
+    }
+
+    #[test]
+    fn fleet_request_defaults_and_clamps() {
+        let fc = parse_fleet_request("", &base()).unwrap();
+        assert_eq!(fc.n_plants, 4);
+        assert_eq!(fc.shards, 1);
+        assert_eq!(fc.scenario.name(), "baseline");
+        let fc = parse_fleet_request(
+            r#"{"plants": 2, "shards": 16, "scenario": "heatwave"}"#,
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(fc.shards, 2, "shards clamp to plants");
+        assert_eq!(fc.scenario.name(), "heatwave");
+        assert!(parse_fleet_request(r#"{"plants": 0}"#, &base()).is_err());
+        assert!(
+            parse_fleet_request(r#"{"scenario": "nope"}"#, &base()).is_err()
+        );
+    }
+
+    #[test]
+    fn shard_count_never_enters_the_cache_key() {
+        // Responses are bitwise identical across shard counts, so
+        // requests differing only in shards share one fingerprint.
+        let a = parse_fleet_request(r#"{"plants": 4}"#, &base()).unwrap();
+        let b = parse_fleet_request(
+            r#"{"plants": 4, "shards": 4}"#, &base()).unwrap();
+        let ka = request_fingerprint(
+            "fleet", &canonical_fleet_json(&a), &a.base);
+        let kb = request_fingerprint(
+            "fleet", &canonical_fleet_json(&b), &b.base);
+        assert_eq!(ka, kb);
+        let s1 = parse_sweep_request(
+            r#"{"setpoints": [50, 60]}"#, &base()).unwrap();
+        let s2 = parse_sweep_request(
+            r#"{"setpoints": [50, 60], "shards": 2}"#, &base()).unwrap();
+        let k1 = request_fingerprint(
+            "sweep", &canonical_sweep_json(&s1), &s1.cfg);
+        let k2 = request_fingerprint(
+            "sweep", &canonical_sweep_json(&s2), &s2.cfg);
+        assert_eq!(k1, k2);
+        // ...but real knobs still separate keys.
+        let c = parse_fleet_request(r#"{"plants": 5}"#, &base()).unwrap();
+        let kc = request_fingerprint(
+            "fleet", &canonical_fleet_json(&c), &c.base);
+        assert_ne!(ka, kc);
+    }
+
+    #[test]
+    fn sweep_request_defaults_and_validation() {
+        let r = parse_sweep_request("", &base()).unwrap();
+        assert_eq!(r.setpoints, vec![45.0, 55.0, 65.0]);
+        assert!(r.quick);
+        assert_eq!(r.shards, 1);
+        let r = parse_sweep_request(
+            r#"{"setpoints": [50, 60], "shards": 8, "quick": true}"#,
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(r.shards, 2, "shards clamp to setpoint count");
+        assert!(
+            parse_sweep_request(r#"{"setpoints": []}"#, &base()).is_err()
+        );
+        assert!(
+            parse_sweep_request(r#"{"setpoints": [150]}"#, &base()).is_err()
+        );
+    }
+
+    #[test]
+    fn summary_json_has_no_wall_clock_fields() {
+        let cfg = base();
+        let res = RunResult {
+            trace: vec![TraceSample { t_s: 5.0, ..Default::default() }],
+            energy: EnergyAccount::new(),
+            events: Vec::new(),
+            workload_stats: "idle".into(),
+            backend: "native",
+            plant_wall_s: 1.25,
+            total_wall_s: 2.5,
+            ticks: 1,
+        };
+        let j = simulate_summary_json(&cfg, "soa", 1, &res);
+        let text = j.to_string();
+        assert!(!text.contains("wall"), "{text}");
+        assert_eq!(j.get("ticks").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("kernel").unwrap().as_str(), Some("soa"));
+        assert!(j.get("final").unwrap().get("t_s").is_some());
+        // NDJSON: one line per sample + the summary line.
+        let nd = trace_ndjson(&cfg, "soa", 1, &res);
+        let lines: Vec<&str> =
+            std::str::from_utf8(&nd).unwrap().trim_end().lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            Json::parse(l).unwrap();
+        }
+    }
+}

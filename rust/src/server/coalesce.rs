@@ -1,0 +1,153 @@
+//! In-flight request coalescing ("single-flight").
+//!
+//! When several concurrent requests hash to the same cache key, exactly
+//! one (the *leader*) runs the simulation; the rest (*followers*) block
+//! on the leader's slot and receive a clone of its response. Combined
+//! with the LRU response cache this gives three request outcomes,
+//! surfaced to clients as the `x-cache` header: `hit` (served from the
+//! cache), `coalesced` (waited on an identical in-flight run), `miss`
+//! (computed here).
+//!
+//! The leader *must* call `complete` exactly once — including on the
+//! error path — or followers would wait forever; the server wraps the
+//! compute in `catch_unwind` and completes the slot with a 500 response
+//! when the simulation panics.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight computation; followers park here.
+pub struct Slot<V> {
+    result: Mutex<Option<V>>,
+    ready: Condvar,
+}
+
+impl<V: Clone> Slot<V> {
+    fn new() -> Self {
+        Slot { result: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    /// Block until the leader publishes, then return a clone.
+    pub fn wait(&self) -> V {
+        let mut g = self.result.lock().unwrap();
+        while g.is_none() {
+            g = self.ready.wait(g).unwrap();
+        }
+        g.as_ref().cloned().unwrap()
+    }
+
+    fn publish(&self, v: V) {
+        *self.result.lock().unwrap() = Some(v);
+        self.ready.notify_all();
+    }
+}
+
+/// The outcome of claiming a key.
+pub enum Claim<V> {
+    /// First arrival: compute, then `Coalescer::complete`.
+    Leader(Arc<Slot<V>>),
+    /// An identical request is already running: `Slot::wait` on it.
+    Follower(Arc<Slot<V>>),
+}
+
+/// Key -> in-flight slot registry.
+pub struct Coalescer<V> {
+    slots: Mutex<HashMap<u64, Arc<Slot<V>>>>,
+}
+
+impl<V: Clone> Default for Coalescer<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V: Clone> Coalescer<V> {
+    pub fn new() -> Self {
+        Coalescer { slots: Mutex::new(HashMap::new()) }
+    }
+
+    /// Atomically become the leader for `key`, or a follower when a
+    /// leader is already in flight.
+    pub fn claim(&self, key: u64) -> Claim<V> {
+        let mut m = self.slots.lock().unwrap();
+        match m.get(&key) {
+            Some(slot) => Claim::Follower(slot.clone()),
+            None => {
+                let slot = Arc::new(Slot::new());
+                m.insert(key, slot.clone());
+                Claim::Leader(slot)
+            }
+        }
+    }
+
+    /// Publish the leader's result: wake every follower and retire the
+    /// key so the next identical request consults the cache afresh.
+    pub fn complete(&self, key: u64, slot: &Arc<Slot<V>>, v: V) {
+        // Remove the registry entry *before* waking followers: a new
+        // request arriving now becomes a fresh leader (or a cache hit)
+        // instead of following a finished slot.
+        self.slots.lock().unwrap().remove(&key);
+        slot.publish(v);
+    }
+
+    /// Number of distinct keys currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leader_then_follower_then_retired() {
+        let c: Coalescer<String> = Coalescer::new();
+        let leader = match c.claim(7) {
+            Claim::Leader(s) => s,
+            Claim::Follower(_) => panic!("first claim must lead"),
+        };
+        assert!(matches!(c.claim(7), Claim::Follower(_)));
+        assert_eq!(c.in_flight(), 1);
+        c.complete(7, &leader, "done".into());
+        assert_eq!(c.in_flight(), 0);
+        // retired key: next claim leads again
+        assert!(matches!(c.claim(7), Claim::Leader(_)));
+    }
+
+    #[test]
+    fn followers_receive_the_leader_result() {
+        let c: Arc<Coalescer<u64>> = Arc::new(Coalescer::new());
+        let leader = match c.claim(1) {
+            Claim::Leader(s) => s,
+            _ => unreachable!(),
+        };
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            joins.push(std::thread::spawn(move || match c.claim(1) {
+                Claim::Follower(s) => s.wait(),
+                // A thread scheduled after `complete` would lead; give
+                // it the same answer so the assert below stays simple.
+                Claim::Leader(s) => {
+                    c.complete(1, &s, 42);
+                    s.wait()
+                }
+            }));
+        }
+        // Let followers park, then publish.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        c.complete(1, &leader, 42);
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 42);
+        }
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let c: Coalescer<u8> = Coalescer::new();
+        assert!(matches!(c.claim(1), Claim::Leader(_)));
+        assert!(matches!(c.claim(2), Claim::Leader(_)));
+        assert_eq!(c.in_flight(), 2);
+    }
+}

@@ -1,0 +1,214 @@
+//! Serving metrics: request/status/cache counters plus a latency
+//! histogram, rendered as the `GET /metrics` JSON document.
+//!
+//! Latency is recorded as log10(milliseconds) into a fixed-bin
+//! `stats::histogram::Histogram` spanning 1 us .. 100 s — uniform bins
+//! in log space resolve both a 40 us cache hit and a 4 s fleet run; the
+//! p50/p99 the endpoint reports come from `Histogram::quantile`, mapped
+//! back to milliseconds.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::stats::histogram::Histogram;
+use crate::util::json::{Json, JsonBuilder};
+
+/// Endpoint labels, in the order the counters are kept.
+pub const ENDPOINTS: &[&str] =
+    &["simulate", "fleet", "sweep", "healthz", "metrics", "shutdown", "other"];
+
+/// Map a request path to its counter index (`other` catches the rest).
+pub fn endpoint_index(path: &str) -> usize {
+    let name = match path {
+        "/simulate" => "simulate",
+        "/fleet" => "fleet",
+        "/sweep" => "sweep",
+        "/healthz" => "healthz",
+        "/metrics" => "metrics",
+        "/shutdown" => "shutdown",
+        _ => "other",
+    };
+    ENDPOINTS.iter().position(|e| *e == name).unwrap()
+}
+
+pub struct Metrics {
+    requests: AtomicU64,
+    by_endpoint: Vec<AtomicU64>,
+    status_2xx: AtomicU64,
+    status_4xx: AtomicU64,
+    status_5xx: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    coalesced: AtomicU64,
+    /// log10(latency [ms]) over [-3, 5): 1 us .. 100 s, 160 bins.
+    latency_log_ms: Mutex<Histogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            by_endpoint: (0..ENDPOINTS.len()).map(|_| AtomicU64::new(0)).collect(),
+            status_2xx: AtomicU64::new(0),
+            status_4xx: AtomicU64::new(0),
+            status_5xx: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            latency_log_ms: Mutex::new(Histogram::new(-3.0, 5.0, 160)),
+        }
+    }
+
+    /// Record one finished request.
+    pub fn record(&self, endpoint: usize, status: u16, latency_s: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.by_endpoint[endpoint].fetch_add(1, Ordering::Relaxed);
+        match status {
+            200..=299 => self.status_2xx.fetch_add(1, Ordering::Relaxed),
+            400..=499 => self.status_4xx.fetch_add(1, Ordering::Relaxed),
+            _ => self.status_5xx.fetch_add(1, Ordering::Relaxed),
+        };
+        let ms = (latency_s * 1e3).max(1e-9);
+        self.latency_log_ms.lock().unwrap().push(ms.log10());
+    }
+
+    pub fn cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn coalesce(&self) {
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cache_hit_count(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_miss_count(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// The `GET /metrics` document.
+    pub fn to_json_value(
+        &self,
+        cache_entries: usize,
+        cache_cap: usize,
+        workers: usize,
+        uptime_s: f64,
+    ) -> Json {
+        let h = self.latency_log_ms.lock().unwrap();
+        let by: BTreeMap<String, Json> = ENDPOINTS
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                (
+                    n.to_string(),
+                    Json::Num(self.by_endpoint[i].load(Ordering::Relaxed) as f64),
+                )
+            })
+            .collect();
+        JsonBuilder::new()
+            .str("schema", "idatacool-serve/1")
+            .num("requests_total", self.requests.load(Ordering::Relaxed) as f64)
+            .set("by_endpoint", Json::Obj(by))
+            .set(
+                "status",
+                JsonBuilder::new()
+                    .num("s2xx", self.status_2xx.load(Ordering::Relaxed) as f64)
+                    .num("s4xx", self.status_4xx.load(Ordering::Relaxed) as f64)
+                    .num("s5xx", self.status_5xx.load(Ordering::Relaxed) as f64)
+                    .build(),
+            )
+            .set(
+                "cache",
+                JsonBuilder::new()
+                    .num("hits", self.cache_hits.load(Ordering::Relaxed) as f64)
+                    .num("misses", self.cache_misses.load(Ordering::Relaxed) as f64)
+                    .num("coalesced", self.coalesced.load(Ordering::Relaxed) as f64)
+                    .num("entries", cache_entries as f64)
+                    .num("capacity", cache_cap as f64)
+                    .build(),
+            )
+            .set(
+                "latency_ms",
+                JsonBuilder::new()
+                    .num("count", h.total as f64)
+                    .num("p50", quantile_ms(&h, 0.50))
+                    .num("p99", quantile_ms(&h, 0.99))
+                    .build(),
+            )
+            .num("workers", workers as f64)
+            .num("uptime_s", uptime_s)
+            .build()
+    }
+}
+
+/// A latency quantile back in milliseconds (0 when nothing recorded).
+fn quantile_ms(h: &Histogram, q: f64) -> f64 {
+    let lg = h.quantile(q);
+    if lg.is_nan() {
+        0.0
+    } else {
+        10f64.powf(lg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_indices_cover_catalog() {
+        assert_eq!(ENDPOINTS[endpoint_index("/simulate")], "simulate");
+        assert_eq!(ENDPOINTS[endpoint_index("/fleet")], "fleet");
+        assert_eq!(ENDPOINTS[endpoint_index("/healthz")], "healthz");
+        assert_eq!(ENDPOINTS[endpoint_index("/nope")], "other");
+    }
+
+    #[test]
+    fn counters_render() {
+        let m = Metrics::new();
+        m.record(endpoint_index("/simulate"), 200, 0.010);
+        m.record(endpoint_index("/simulate"), 200, 0.012);
+        m.record(endpoint_index("/fleet"), 400, 0.001);
+        m.cache_hit();
+        m.cache_miss();
+        m.coalesce();
+        let j = m.to_json_value(3, 64, 4, 1.5);
+        assert_eq!(j.get("requests_total").unwrap().as_f64(), Some(3.0));
+        let by = j.get("by_endpoint").unwrap();
+        assert_eq!(by.get("simulate").unwrap().as_f64(), Some(2.0));
+        assert_eq!(by.get("fleet").unwrap().as_f64(), Some(1.0));
+        let st = j.get("status").unwrap();
+        assert_eq!(st.get("s2xx").unwrap().as_f64(), Some(2.0));
+        assert_eq!(st.get("s4xx").unwrap().as_f64(), Some(1.0));
+        let c = j.get("cache").unwrap();
+        assert_eq!(c.get("hits").unwrap().as_f64(), Some(1.0));
+        assert_eq!(c.get("capacity").unwrap().as_f64(), Some(64.0));
+        let lat = j.get("latency_ms").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(3.0));
+        // ~10 ms requests dominate: p50 lands near 10 ms in log space.
+        let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+        assert!(p50 > 5.0 && p50 < 20.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn empty_latency_is_zero_not_nan() {
+        let m = Metrics::new();
+        let j = m.to_json_value(0, 1, 1, 0.0);
+        let lat = j.get("latency_ms").unwrap();
+        assert_eq!(lat.get("p50").unwrap().as_f64(), Some(0.0));
+        assert_eq!(lat.get("p99").unwrap().as_f64(), Some(0.0));
+    }
+}

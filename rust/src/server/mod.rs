@@ -1,0 +1,571 @@
+//! Sim-as-a-service: a dependency-free (std::net, hand-rolled HTTP/1.1)
+//! simulation server — `idatacool serve`.
+//!
+//! Architecture: a single accept loop feeds accepted connections into a
+//! bounded `pool::JobQueue` drained by a `std::thread` worker pool. Each
+//! worker parses one request (`util::http`), routes it, and answers with
+//! `connection: close`. The three simulation endpoints share one serving
+//! discipline (`serve_cached`):
+//!
+//!  1. **LRU response cache** (`util::lru`), keyed by the request
+//!     fingerprint (`api::request_fingerprint` — the bench subsystem's
+//!     config fingerprint extended over the canonical request document).
+//!     A repeat of an identical request is answered with the *stored
+//!     bytes* — `x-cache: hit`, body bitwise identical to the first
+//!     answer.
+//!  2. **In-flight coalescing** (`coalesce`): concurrent identical
+//!     requests share one simulation; followers get `x-cache:
+//!     coalesced`.
+//!  3. Otherwise the worker computes (`x-cache: miss`), caches, and
+//!     publishes to followers. Error responses are published but never
+//!     cached.
+//!
+//! Determinism: a response body is a pure function of the request (no
+//! wall-clock fields — see `api`), simulations are seeded, and the
+//! `/fleet` body reuses the exact `idatacool fleet --json` serializer —
+//! so a K-worker server answers bitwise identically to a one-shot CLI
+//! run, and cache hits are indistinguishable from recomputation.
+//!
+//! Endpoints: `POST /simulate` (`?stream=1` for per-tick NDJSON),
+//! `POST /fleet`, `POST /sweep`, `GET /healthz`, `GET /metrics`,
+//! `POST /shutdown`.
+
+pub mod api;
+pub mod coalesce;
+pub mod metrics;
+pub mod pool;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ServeConfig, SimConfig};
+use crate::coordinator::SimulationDriver;
+use crate::figures::sweep;
+use crate::fleet::FleetDriver;
+use crate::util::http::{Request, Response};
+use crate::util::json::JsonBuilder;
+use crate::util::lru::Lru;
+
+use coalesce::{Claim, Coalescer};
+use metrics::Metrics;
+use pool::{JobQueue, WorkerPool};
+
+/// Upper clamp on the worker-thread count.
+pub const MAX_WORKERS: usize = 256;
+
+/// Validate a requested worker count the way the fleet CLI validates
+/// `--shards`: zero is an error, an excessive value clamps with a
+/// warning instead of failing or silently obeying.
+pub fn resolve_workers(requested: usize) -> Result<usize> {
+    anyhow::ensure!(
+        requested >= 1,
+        "workers must be at least 1 (use 1 for a serial server)"
+    );
+    if requested > MAX_WORKERS {
+        eprintln!(
+            "warning: {requested} workers exceeds the supported maximum; \
+             clamping to {MAX_WORKERS}"
+        );
+        return Ok(MAX_WORKERS);
+    }
+    Ok(requested)
+}
+
+/// Server construction inputs: the launcher knobs (one
+/// `config::ServeConfig`, however it was assembled from defaults, the
+/// `[serve]` TOML section, env and CLI flags) plus the base simulation
+/// configuration requests override (it carries the artifacts dir and
+/// plant constants loaded at startup).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub cfg: ServeConfig,
+    pub base: SimConfig,
+}
+
+impl ServeOptions {
+    pub fn new(base: SimConfig) -> Self {
+        ServeOptions { cfg: ServeConfig::default(), base }
+    }
+}
+
+/// A cacheable response body (status + content type + shared bytes).
+#[derive(Clone)]
+pub struct CachedResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Arc<Vec<u8>>,
+}
+
+impl CachedResponse {
+    fn to_response(&self, cache_status: &str) -> Response {
+        Response::new(self.status, &self.content_type, (*self.body).clone())
+            .with_header("x-cache", cache_status)
+    }
+}
+
+fn error_cached(status: u16, msg: &str) -> CachedResponse {
+    let body = JsonBuilder::new().str("error", msg).build().to_string();
+    CachedResponse {
+        status,
+        content_type: "application/json".into(),
+        body: Arc::new(body.into_bytes()),
+    }
+}
+
+/// State shared between the accept loop and every worker.
+struct Shared {
+    base: SimConfig,
+    cache: Mutex<Lru<u64, CachedResponse>>,
+    inflight: Coalescer<CachedResponse>,
+    metrics: Metrics,
+    shutdown: AtomicBool,
+    local_addr: SocketAddr,
+    workers: usize,
+    cache_cap: usize,
+    started: Instant,
+}
+
+/// The bound-but-not-yet-running server.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    queue_cap: usize,
+}
+
+impl Server {
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        let sc = opts.cfg;
+        let workers = resolve_workers(sc.workers)?;
+        anyhow::ensure!(sc.cache_cap >= 1, "cache-cap must be at least 1");
+        anyhow::ensure!(sc.queue_cap >= 1, "queue-cap must be at least 1");
+        let mut base = opts.base;
+        // "auto" resolves to the artifact-independent native backend
+        // (mirrors fleet runs); requests may still pin "hlo".
+        if base.backend == "auto" {
+            base.backend = "native".into();
+        }
+        base.validate()?;
+        let listener = TcpListener::bind(&sc.addr)
+            .with_context(|| format!("bind {}", sc.addr))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            base,
+            cache: Mutex::new(Lru::new(sc.cache_cap)),
+            inflight: Coalescer::new(),
+            metrics: Metrics::new(),
+            shutdown: AtomicBool::new(false),
+            local_addr,
+            workers,
+            cache_cap: sc.cache_cap,
+            started: Instant::now(),
+        });
+        Ok(Server { listener, shared, queue_cap: sc.queue_cap })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Blocking accept loop; returns after `POST /shutdown` (every
+    /// already-accepted connection still gets an answer).
+    pub fn run(self) -> Result<()> {
+        let queue = Arc::new(JobQueue::new(self.queue_cap));
+        let pool = {
+            let shared = self.shared.clone();
+            WorkerPool::spawn(self.shared.workers, queue.clone(), move |s| {
+                handle_connection(s, &shared)
+            })
+        };
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    if let Err(s) = queue.push(s) {
+                        shed(s);
+                    }
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+        queue.close();
+        pool.join();
+        Ok(())
+    }
+
+    /// Run on a background thread (tests, benches). Stop with
+    /// `ServerHandle::stop`.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.local_addr();
+        let shared = self.shared.clone();
+        let join = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || self.run())
+            .expect("spawn server thread");
+        ServerHandle { addr, shared, join }
+    }
+}
+
+/// Handle to a background server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    join: std::thread::JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    /// Shut the server down and join the accept loop. The flag is set
+    /// directly (not via `POST /shutdown`), so stopping cannot be
+    /// defeated by a full job queue shedding the wire request; the
+    /// connect ping only wakes the blocked accept call.
+    pub fn stop(self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for _ in 0..50 {
+            if self.join.is_finished()
+                || TcpStream::connect(self.addr).is_ok()
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("server thread panicked"),
+        }
+    }
+}
+
+/// Reject an accepted connection when the job queue is full.
+fn shed(mut s: TcpStream) {
+    let _ = Response::error(503, "job queue full; retry later")
+        .write_to(&mut s);
+}
+
+fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(&stream);
+    let req = match Request::read_from(&mut reader) {
+        Ok(Some(req)) => req,
+        Ok(None) => return, // clean EOF (health probe, shutdown ping)
+        Err(e) => {
+            let _ = Response::error(e.status, &e.msg).write_to(&mut &stream);
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    // Belt and suspenders: `serve_cached` already isolates simulation
+    // panics (they must complete the coalescing slot); this outer catch
+    // keeps a routing bug from killing the worker thread.
+    let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        route(&req, shared)
+    }))
+    .unwrap_or_else(|_| Response::error(500, "internal panic in handler"));
+    shared.metrics.record(
+        metrics::endpoint_index(&req.path),
+        resp.status,
+        t0.elapsed().as_secs_f64(),
+    );
+    let _ = resp.write_to(&mut &stream);
+    if req.method == "POST" && req.path == "/shutdown" {
+        // Wake the accept loop (it is blocked in accept) so it observes
+        // the shutdown flag set by `route`.
+        let _ = TcpStream::connect(shared.local_addr);
+    }
+}
+
+fn route(req: &Request, shared: &Arc<Shared>) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(shared),
+        ("GET", "/metrics") => metrics_response(shared),
+        ("POST", "/shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            Response::json(
+                200,
+                &JsonBuilder::new().str("status", "shutting-down").build(),
+            )
+        }
+        ("POST", "/simulate") => handle_simulate(req, shared),
+        ("POST", "/fleet") => handle_fleet(req, shared),
+        ("POST", "/sweep") => handle_sweep(req, shared),
+        (
+            _,
+            "/healthz" | "/metrics" | "/shutdown" | "/simulate" | "/fleet"
+            | "/sweep",
+        ) => Response::error(
+            405,
+            &format!("method {} not allowed for {}", req.method, req.path),
+        ),
+        _ => Response::error(404, &format!("no route for {}", req.path)),
+    }
+}
+
+fn healthz(shared: &Arc<Shared>) -> Response {
+    Response::json(
+        200,
+        &JsonBuilder::new()
+            .str("status", "ok")
+            .num("in_flight", shared.inflight.in_flight() as f64)
+            .num("uptime_s", shared.started.elapsed().as_secs_f64())
+            .num("workers", shared.workers as f64)
+            .build(),
+    )
+}
+
+fn metrics_response(shared: &Arc<Shared>) -> Response {
+    let entries = shared.cache.lock().unwrap().len();
+    Response::json(
+        200,
+        &shared.metrics.to_json_value(
+            entries,
+            shared.cache_cap,
+            shared.workers,
+            shared.started.elapsed().as_secs_f64(),
+        ),
+    )
+}
+
+/// The shared serving discipline: cache, coalesce, or compute.
+fn serve_cached<F>(shared: &Arc<Shared>, key: u64, compute: F) -> Response
+where
+    F: FnOnce() -> Result<CachedResponse>,
+{
+    let hit = shared.cache.lock().unwrap().get(&key).cloned();
+    if let Some(c) = hit {
+        shared.metrics.cache_hit();
+        return c.to_response("hit");
+    }
+    match shared.inflight.claim(key) {
+        Claim::Follower(slot) => {
+            shared.metrics.coalesce();
+            slot.wait().to_response("coalesced")
+        }
+        Claim::Leader(slot) => {
+            // Double-check the cache now that we hold leadership: a
+            // previous leader for this key may have completed between
+            // our fast-path cache check and the claim. Without this a
+            // successfully cached request could be recomputed; with it,
+            // a successful simulation runs exactly once per key
+            // (errors are not cached, so those may legitimately rerun).
+            let raced = shared.cache.lock().unwrap().get(&key).cloned();
+            if let Some(c) = raced {
+                shared.metrics.cache_hit();
+                shared.inflight.complete(key, &slot, c.clone());
+                return c.to_response("hit");
+            }
+            shared.metrics.cache_miss();
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(compute),
+            );
+            let (resp, cacheable) = match outcome {
+                Ok(Ok(c)) => (c, true),
+                Ok(Err(e)) => (error_cached(500, &format!("{e:#}")), false),
+                Err(_) => (error_cached(500, "simulation panicked"), false),
+            };
+            if cacheable {
+                shared.cache.lock().unwrap().insert(key, resp.clone());
+            }
+            // Must always run, or followers would wait forever.
+            shared.inflight.complete(key, &slot, resp.clone());
+            resp.to_response("miss")
+        }
+    }
+}
+
+/// Strict query parsing, mirroring the strict body contract: the only
+/// recognized parameter is `stream` (and only where `allow_stream`),
+/// with an explicit boolean value — a typo like `steam=1` or
+/// `stream=yes` is a 400, never a silently ignored default.
+fn parse_query(req: &Request, allow_stream: bool) -> Result<bool, Response> {
+    let mut stream = false;
+    for (k, v) in &req.query {
+        if k == "stream" && allow_stream {
+            match v.as_str() {
+                "1" | "true" => stream = true,
+                "0" | "false" => stream = false,
+                other => {
+                    return Err(Response::error(
+                        400,
+                        &format!(
+                            "query parameter 'stream' must be \
+                             0|1|true|false, got '{other}'"
+                        ),
+                    ))
+                }
+            }
+        } else {
+            return Err(Response::error(
+                400,
+                &format!("unknown query parameter '{k}'"),
+            ));
+        }
+    }
+    Ok(stream)
+}
+
+fn handle_simulate(req: &Request, shared: &Arc<Shared>) -> Response {
+    let stream = match parse_query(req, true) {
+        Ok(s) => s,
+        Err(resp) => return resp,
+    };
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return Response::error(e.status, &e.msg),
+    };
+    let sim = match api::parse_sim_request(body, &shared.base) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let canon = api::canonical_sim_json(&sim.cfg, sim.sample_every, stream);
+    let key = api::request_fingerprint("simulate", &canon, &sim.cfg);
+    serve_cached(shared, key, move || compute_simulate(sim, stream))
+}
+
+fn compute_simulate(sim: api::SimRequest, stream: bool)
+                    -> Result<CachedResponse> {
+    let sample_every = sim.sample_every;
+    let mut driver = SimulationDriver::new(sim.cfg)?;
+    let kernel = driver.backend.kernel_name();
+    let res = driver.run(sample_every)?;
+    let cfg = &driver.cfg;
+    if stream {
+        Ok(CachedResponse {
+            status: 200,
+            content_type: "application/x-ndjson".into(),
+            body: Arc::new(api::trace_ndjson(cfg, kernel, sample_every, &res)),
+        })
+    } else {
+        Ok(CachedResponse {
+            status: 200,
+            content_type: "application/json".into(),
+            body: Arc::new(
+                api::simulate_summary_json(cfg, kernel, sample_every, &res)
+                    .to_string()
+                    .into_bytes(),
+            ),
+        })
+    }
+}
+
+fn handle_fleet(req: &Request, shared: &Arc<Shared>) -> Response {
+    if let Err(resp) = parse_query(req, false) {
+        return resp;
+    }
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return Response::error(e.status, &e.msg),
+    };
+    let fc = match api::parse_fleet_request(body, &shared.base) {
+        Ok(c) => c,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let canon = api::canonical_fleet_json(&fc);
+    let key = api::request_fingerprint("fleet", &canon, &fc.base);
+    serve_cached(shared, key, move || compute_fleet(fc))
+}
+
+fn compute_fleet(fc: crate::fleet::FleetConfig) -> Result<CachedResponse> {
+    let driver = FleetDriver::new(fc)?;
+    let run = driver.run()?;
+    Ok(CachedResponse {
+        status: 200,
+        content_type: "application/json".into(),
+        // Exactly the `idatacool fleet --json` document.
+        body: Arc::new(run.to_json(&driver.cfg).into_bytes()),
+    })
+}
+
+fn handle_sweep(req: &Request, shared: &Arc<Shared>) -> Response {
+    if let Err(resp) = parse_query(req, false) {
+        return resp;
+    }
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return Response::error(e.status, &e.msg),
+    };
+    let sr = match api::parse_sweep_request(body, &shared.base) {
+        Ok(r) => r,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let canon = api::canonical_sweep_json(&sr);
+    let key = api::request_fingerprint("sweep", &canon, &sr.cfg);
+    serve_cached(shared, key, move || compute_sweep(sr))
+}
+
+fn compute_sweep(sr: api::SweepRequest) -> Result<CachedResponse> {
+    let opts = sr.options();
+    let data =
+        sweep::run_sweep_sharded(&sr.cfg, &sr.setpoints, &opts, sr.shards)?;
+    let body = JsonBuilder::new()
+        .str("schema", "idatacool-sweep/1")
+        .bool("quick", sr.quick)
+        .arr(
+            "setpoints",
+            sr.setpoints.iter().map(|&s| crate::util::json::Json::Num(s)).collect(),
+        )
+        .set("data", data.to_json_value())
+        .build()
+        .to_string();
+    Ok(CachedResponse {
+        status: 200,
+        content_type: "application/json".into(),
+        body: Arc::new(body.into_bytes()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_resolution_matches_cli_discipline() {
+        assert!(resolve_workers(0).is_err());
+        assert_eq!(resolve_workers(1).unwrap(), 1);
+        assert_eq!(resolve_workers(MAX_WORKERS).unwrap(), MAX_WORKERS);
+        assert_eq!(resolve_workers(MAX_WORKERS + 100).unwrap(), MAX_WORKERS);
+    }
+
+    #[test]
+    fn bind_rejects_degenerate_options() {
+        let base = SimConfig::test_small();
+        let mut o = ServeOptions::new(base.clone());
+        o.cfg.addr = "127.0.0.1:0".into();
+        o.cfg.cache_cap = 0;
+        assert!(Server::bind(o).is_err());
+        let mut o = ServeOptions::new(base.clone());
+        o.cfg.addr = "127.0.0.1:0".into();
+        o.cfg.workers = 0;
+        assert!(Server::bind(o).is_err());
+        let mut o = ServeOptions::new(base);
+        o.cfg.addr = "127.0.0.1:0".into();
+        o.cfg.queue_cap = 0;
+        assert!(Server::bind(o).is_err());
+    }
+
+    #[test]
+    fn ephemeral_bind_resolves_port() {
+        let mut o = ServeOptions::new(SimConfig::test_small());
+        o.cfg.addr = "127.0.0.1:0".into();
+        o.cfg.workers = 1;
+        let s = Server::bind(o).unwrap();
+        assert_ne!(s.local_addr().port(), 0);
+    }
+
+    #[test]
+    fn error_responses_carry_the_cache_header() {
+        let c = error_cached(500, "boom");
+        let r = c.to_response("miss");
+        assert_eq!(r.status, 500);
+        assert!(r
+            .headers
+            .iter()
+            .any(|(k, v)| k == "x-cache" && v == "miss"));
+    }
+}

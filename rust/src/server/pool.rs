@@ -1,0 +1,191 @@
+//! Bounded job queue + `std::thread` worker pool.
+//!
+//! The accept loop pushes accepted connections; `push` is non-blocking
+//! and hands the job back when the queue is full, so the caller can shed
+//! load (503) instead of queueing unboundedly. Workers block in `pop`
+//! until a job arrives or the queue is closed *and* drained — closing is
+//! how the server performs a graceful shutdown: everything already
+//! accepted still gets an answer.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// A multi-producer multi-consumer FIFO with a hard capacity.
+pub struct JobQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "JobQueue capacity must be at least 1");
+        JobQueue {
+            state: Mutex::new(State { q: VecDeque::with_capacity(cap), closed: false }),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue without blocking. `Err(job)` hands the job back when the
+    /// queue is full or already closed.
+    pub fn push(&self, job: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.q.len() >= self.cap {
+            return Err(job);
+        }
+        s.q.push_back(job);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking until a job is available. `None` means the
+    /// queue is closed and fully drained — the worker should exit.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.q.pop_front() {
+                return Some(job);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: no further pushes succeed; poppers drain what is
+    /// left, then observe `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+/// A fixed-size pool of worker threads draining one shared `JobQueue`.
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers, each running `handler` on every popped job
+    /// until the queue closes.
+    pub fn spawn<T, F>(n: usize, queue: Arc<JobQueue<T>>, handler: F) -> WorkerPool
+    where
+        T: Send + 'static,
+        F: Fn(T) + Send + Sync + 'static,
+    {
+        let handler = Arc::new(handler);
+        let handles = (0..n)
+            .map(|i| {
+                let queue = queue.clone();
+                let handler = handler.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = queue.pop() {
+                            handler(job);
+                        }
+                    })
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Wait for every worker to exit (close the queue first).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_order_and_drain() {
+        let q: JobQueue<u32> = JobQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn full_queue_hands_job_back() {
+        let q: JobQueue<u32> = JobQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_but_drains() {
+        let q: JobQueue<u32> = JobQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(8));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn workers_process_every_job() {
+        let q = Arc::new(JobQueue::<usize>::new(64));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let sum = sum.clone();
+            WorkerPool::spawn(4, q.clone(), move |j| {
+                sum.fetch_add(j, Ordering::SeqCst);
+            })
+        };
+        let mut expect = 0usize;
+        for j in 1..=50 {
+            expect += j;
+            // Retry on transient fullness: workers are draining.
+            let mut job = j;
+            loop {
+                match q.push(job) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        job = back;
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        q.close();
+        pool.join();
+        assert_eq!(sum.load(Ordering::SeqCst), expect);
+    }
+}

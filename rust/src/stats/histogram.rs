@@ -70,6 +70,30 @@ impl Histogram {
             .collect()
     }
 
+    /// Nearest-rank quantile over the binned sample, reported as a bin
+    /// center (the serve layer's p50/p99 latency view). Underflow mass
+    /// maps to `lo`, overflow mass to `hi`; NaN when the histogram is
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut cum = self.underflow;
+        if cum >= target {
+            return self.lo;
+        }
+        let w = self.bin_width();
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return self.lo + (i as f64 + 0.5) * w;
+            }
+        }
+        self.hi
+    }
+
     /// The mode's bin center.
     pub fn mode(&self) -> f64 {
         let (i, _) = self
@@ -108,6 +132,37 @@ mod tests {
         let mass: f64 =
             h.densities().iter().map(|d| d * h.bin_width()).sum();
         assert!((mass - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_walk_the_cdf() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        // 90 samples in bin 0, 10 in bin 9: p50 sits in bin 0, p99 in
+        // bin 9 (bin centers 0.5 and 9.5).
+        for _ in 0..90 {
+            h.push(0.2);
+        }
+        for _ in 0..10 {
+            h.push(9.2);
+        }
+        assert_eq!(h.quantile(0.5), 0.5);
+        assert_eq!(h.quantile(0.9), 0.5);
+        assert_eq!(h.quantile(0.91), 9.5);
+        assert_eq!(h.quantile(0.99), 9.5);
+        assert_eq!(h.quantile(0.0), 0.5);
+        assert_eq!(h.quantile(1.0), 9.5);
+    }
+
+    #[test]
+    fn quantile_edges() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        assert!(h.quantile(0.5).is_nan());
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-5.0); // underflow maps to lo
+        assert_eq!(h.quantile(0.5), 0.0);
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(5.0); // overflow maps to hi
+        assert_eq!(h.quantile(0.5), 1.0);
     }
 
     #[test]

@@ -77,6 +77,38 @@ impl Args {
     }
 }
 
+/// Strict env-var counterpart of `Args::usize_strict`: an unset (or
+/// blank) variable is `None`, a present-yet-unparseable value is an
+/// error — env knobs like `IDATACOOL_SWEEP_SHARDS` and
+/// `IDATACOOL_SERVE_WORKERS` must not misbehave any more quietly than
+/// their CLI-flag twins.
+pub fn env_usize_strict(name: &str) -> anyhow::Result<Option<usize>> {
+    match std::env::var_os(name) {
+        None => Ok(None),
+        Some(os) => {
+            let v = os.to_str().ok_or_else(|| {
+                anyhow::anyhow!("{name} is not valid unicode")
+            })?;
+            parse_usize_env(name, v)
+        }
+    }
+}
+
+/// The parse half of `env_usize_strict`, split out so it is testable
+/// without mutating process-global environment state.
+pub fn parse_usize_env(name: &str, value: &str)
+                       -> anyhow::Result<Option<usize>> {
+    let t = value.trim();
+    if t.is_empty() {
+        return Ok(None);
+    }
+    t.parse::<usize>().map(Some).map_err(|_| {
+        anyhow::anyhow!(
+            "{name} expects a non-negative integer, got '{value}'"
+        )
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +154,17 @@ mod tests {
         let a = parse("--quick --fig 4a");
         assert!(a.has("quick"));
         assert_eq!(a.get("fig"), Some("4a"));
+    }
+
+    #[test]
+    fn env_parse_is_strict() {
+        assert_eq!(parse_usize_env("X", "4").unwrap(), Some(4));
+        assert_eq!(parse_usize_env("X", " 8 ").unwrap(), Some(8));
+        assert_eq!(parse_usize_env("X", "").unwrap(), None);
+        assert_eq!(parse_usize_env("X", "  ").unwrap(), None);
+        let err = parse_usize_env("X", "nope").unwrap_err().to_string();
+        assert!(err.contains('X') && err.contains("nope"), "{err}");
+        assert!(parse_usize_env("X", "-1").is_err());
+        assert!(parse_usize_env("X", "2.5").is_err());
     }
 }

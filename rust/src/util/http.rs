@@ -1,0 +1,486 @@
+//! Minimal HTTP/1.1 wire helpers (std::net only — the vendored crate set
+//! has no hyper): request parsing with hard size limits, response
+//! writing, and a tiny loopback client shared by the integration tests,
+//! the `serve` bench suite and local smoke checks.
+//!
+//! Scope is deliberately narrow: `Content-Length` framing only (chunked
+//! transfer is answered with 501), every response carries
+//! `connection: close`, header keys are lowercased on parse, and query
+//! strings split on `&`/`=` without percent-decoding (the only query the
+//! server understands is `stream=1`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::{BufRead, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Hard cap on the request line plus all headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Hard cap on a request body.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A wire-level failure paired with the HTTP status it should be
+/// answered with (400 malformed, 413 oversized body, ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "http {}: {}", self.status, self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+fn herr(status: u16, msg: impl Into<String>) -> HttpError {
+    HttpError { status, msg: msg.into() }
+}
+
+/// A parsed request: method, path, split query, lowercased headers, body.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Read one request from a buffered stream. `Ok(None)` means the
+    /// peer closed the connection before sending anything (a clean EOF,
+    /// e.g. the shutdown self-ping or a health prober dropping early).
+    pub fn read_from<R: BufRead>(r: &mut R) -> Result<Option<Request>, HttpError> {
+        let reqline = match read_line_limited(r, MAX_HEAD_BYTES)? {
+            None => return Ok(None),
+            Some(l) => l,
+        };
+        let mut head_bytes = reqline.len();
+        let reqline = reqline.trim_end();
+        let mut parts = reqline.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| herr(400, "empty request line"))?
+            .to_string();
+        let target = parts
+            .next()
+            .ok_or_else(|| herr(400, "request line missing target"))?;
+        let version = parts
+            .next()
+            .ok_or_else(|| herr(400, "request line missing version"))?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(herr(505, format!("unsupported version '{version}'")));
+        }
+        let (path, query) = split_target(target);
+
+        let mut headers = BTreeMap::new();
+        loop {
+            let line = read_line_limited(r, MAX_HEAD_BYTES)?
+                .ok_or_else(|| herr(400, "unexpected eof in headers"))?;
+            head_bytes += line.len();
+            if head_bytes > MAX_HEAD_BYTES {
+                return Err(herr(431, "headers too large"));
+            }
+            let h = line.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let (k, v) = h
+                .split_once(':')
+                .ok_or_else(|| herr(400, format!("malformed header '{h}'")))?;
+            headers.insert(
+                k.trim().to_ascii_lowercase(),
+                v.trim().to_string(),
+            );
+        }
+
+        if headers.contains_key("transfer-encoding") {
+            return Err(herr(501, "chunked requests not supported"));
+        }
+        let body = match headers.get("content-length") {
+            None => Vec::new(),
+            Some(cl) => {
+                let len: usize = cl.trim().parse().map_err(|_| {
+                    herr(400, format!("bad content-length '{cl}'"))
+                })?;
+                if len > MAX_BODY_BYTES {
+                    return Err(herr(413, format!(
+                        "body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
+                    )));
+                }
+                let mut body = vec![0u8; len];
+                r.read_exact(&mut body)
+                    .map_err(|e| herr(400, format!("read body: {e}")))?;
+                body
+            }
+        };
+
+        Ok(Some(Request { method, path, query, headers, body }))
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    /// The body as UTF-8, or a 400-grade error.
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| herr(400, "body is not valid utf-8"))
+    }
+}
+
+/// Read one LF-terminated line (CR kept for the caller's `trim_end`),
+/// enforcing `max` *as bytes are consumed* — unlike `read_line`, a peer
+/// that streams forever without a newline is cut off at the cap (431)
+/// instead of growing the buffer without bound. `Ok(None)` is a clean
+/// EOF before any byte; EOF mid-line returns the partial line (the
+/// caller's grammar then rejects it).
+fn read_line_limited<R: BufRead>(r: &mut R, max: usize)
+                                 -> Result<Option<String>, HttpError> {
+    let mut bytes: Vec<u8> = Vec::new();
+    loop {
+        let (found, used) = {
+            let buf = r
+                .fill_buf()
+                .map_err(|e| herr(400, format!("read request head: {e}")))?;
+            if buf.is_empty() {
+                if bytes.is_empty() {
+                    return Ok(None);
+                }
+                break;
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    bytes.extend_from_slice(&buf[..=i]);
+                    (true, i + 1)
+                }
+                None => {
+                    bytes.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        r.consume(used);
+        if bytes.len() > max {
+            return Err(herr(431, "request head line too long"));
+        }
+        if found {
+            break;
+        }
+    }
+    String::from_utf8(bytes)
+        .map(Some)
+        .map_err(|_| herr(400, "request head is not valid utf-8"))
+}
+
+/// Split a request target into path and query map (no percent-decoding).
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    match target.split_once('?') {
+        None => (target.to_string(), BTreeMap::new()),
+        Some((p, q)) => {
+            let mut map = BTreeMap::new();
+            for pair in q.split('&') {
+                if pair.is_empty() {
+                    continue;
+                }
+                match pair.split_once('=') {
+                    Some((k, v)) => map.insert(k.to_string(), v.to_string()),
+                    None => map.insert(pair.to_string(), String::new()),
+                };
+            }
+            (p.to_string(), map)
+        }
+    }
+}
+
+/// An outgoing response. `write_to` adds the `content-length` and
+/// `connection: close` framing headers.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16, content_type: &str, body: Vec<u8>) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), content_type.into())],
+            body,
+        }
+    }
+
+    pub fn json(status: u16, j: &Json) -> Response {
+        Response::new(status, "application/json", j.to_string().into_bytes())
+    }
+
+    pub fn ndjson(body: Vec<u8>) -> Response {
+        Response::new(200, "application/x-ndjson", body)
+    }
+
+    /// A JSON error envelope: `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".to_string(), Json::Str(msg.to_string()));
+        Response::json(status, &Json::Obj(m))
+    }
+
+    pub fn with_header(mut self, k: &str, v: &str) -> Response {
+        self.headers.push((k.into(), v.into()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "content-length: {}\r\n", self.body.len())?;
+        write!(w, "connection: close\r\n\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the status codes the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// A client-side view of one exchange.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        Ok(std::str::from_utf8(&self.body)?)
+    }
+}
+
+/// One blocking request/response exchange against `addr` (e.g.
+/// `127.0.0.1:8080`). Connection-close framing: the server ends the body
+/// by closing, so the client simply reads to EOF.
+pub fn http_roundtrip(
+    addr: &str,
+    method: &str,
+    target: &str,
+    body: Option<&[u8]>,
+) -> anyhow::Result<ClientResponse> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    // Generous: a full (non-quick) sweep request simulates for minutes.
+    s.set_read_timeout(Some(Duration::from_secs(600)))?;
+    s.set_write_timeout(Some(Duration::from_secs(60)))?;
+    let b = body.unwrap_or(&[]);
+    write!(
+        s,
+        "{method} {target} HTTP/1.1\r\nhost: {addr}\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        b.len()
+    )?;
+    s.write_all(b)?;
+    s.flush()?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw)?;
+    parse_client_response(&raw)
+}
+
+/// Parse a full raw response (head + body) read to EOF.
+pub fn parse_client_response(raw: &[u8]) -> anyhow::Result<ClientResponse> {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("response has no header terminator"))?;
+    let head = std::str::from_utf8(&raw[..split])?;
+    let body = raw[split + 4..].to_vec();
+    let mut lines = head.split("\r\n");
+    let status_line = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty response"))?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty status line"))?;
+    anyhow::ensure!(
+        version.starts_with("HTTP/1."),
+        "unexpected response version '{version}'"
+    );
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("status line missing code"))?
+        .parse()?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    // Sanity: with content-length present the body must not be shorter
+    // (connection-close reads can't truncate silently).
+    if let Some(cl) = headers.get("content-length") {
+        let want: usize = cl.parse()?;
+        anyhow::ensure!(
+            body.len() == want,
+            "body length {} != content-length {want}",
+            body.len()
+        );
+    }
+    Ok(ClientResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Option<Request>, HttpError> {
+        Request::read_from(&mut BufReader::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = parse("GET /simulate?stream=1&x=y HTTP/1.1\r\nHost: h\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/simulate");
+        assert_eq!(r.query.get("stream").map(String::as_str), Some("1"));
+        assert_eq!(r.query.get("x").map(String::as_str), Some("y"));
+        assert_eq!(r.header("host"), Some("h"));
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn newline_free_flood_is_cut_off_at_the_cap() {
+        // A peer streaming bytes with no '\n' must be rejected once the
+        // head cap is consumed — not buffered until OOM.
+        let raw = vec![b'A'; MAX_HEAD_BYTES + 64];
+        let err =
+            Request::read_from(&mut BufReader::new(raw.as_slice())).unwrap_err();
+        assert_eq!(err.status, 431);
+        // Same cap inside the header block.
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(vec![b'B'; MAX_HEAD_BYTES + 64]);
+        let err =
+            Request::read_from(&mut BufReader::new(raw.as_slice())).unwrap_err();
+        assert_eq!(err.status, 431);
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = parse(
+            "POST /fleet HTTP/1.1\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body_str().unwrap(), "{\"a\":1}");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_are_400s() {
+        assert_eq!(parse("GET\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(
+            parse("GET / HTTP/1.1\r\nbadheader\r\n\r\n").unwrap_err().status,
+            400
+        );
+        assert_eq!(
+            parse("GET / HTTP/1.1\r\ncontent-length: x\r\n\r\n")
+                .unwrap_err()
+                .status,
+            400
+        );
+        // body shorter than content-length
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nab")
+                .unwrap_err()
+                .status,
+            400
+        );
+    }
+
+    #[test]
+    fn oversize_body_is_413() {
+        let req = format!(
+            "POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert_eq!(parse(&req).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn chunked_is_501_and_http2_is_505() {
+        assert_eq!(
+            parse("POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n")
+                .unwrap_err()
+                .status,
+            501
+        );
+        assert_eq!(parse("GET / HTTP/2\r\n\r\n").unwrap_err().status, 505);
+    }
+
+    #[test]
+    fn response_round_trips_through_client_parser() {
+        let resp = Response::json(
+            200,
+            &Json::parse("{\"ok\":true}").unwrap(),
+        )
+        .with_header("x-cache", "hit");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let back = parse_client_response(&wire).unwrap();
+        assert_eq!(back.status, 200);
+        assert_eq!(back.header("x-cache"), Some("hit"));
+        assert_eq!(back.header("connection"), Some("close"));
+        assert_eq!(back.body_str().unwrap(), "{\"ok\":true}");
+    }
+
+    #[test]
+    fn error_envelope_is_json() {
+        let resp = Response::error(404, "no route for /nope");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let back = parse_client_response(&wire).unwrap();
+        assert_eq!(back.status, 404);
+        let j = Json::parse(back.body_str().unwrap()).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("no route for /nope"));
+    }
+
+    #[test]
+    fn truncated_client_body_detected() {
+        let raw = b"HTTP/1.1 200 OK\r\ncontent-length: 10\r\n\r\nabc";
+        assert!(parse_client_response(raw).is_err());
+    }
+}

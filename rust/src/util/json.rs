@@ -141,6 +141,54 @@ impl fmt::Display for Json {
     }
 }
 
+/// Consuming builder for `Json::Obj` values. Keys land in a `BTreeMap`,
+/// so the serialized key order is alphabetical regardless of insertion
+/// order — every byte of emitted output is stable across runs and
+/// platforms (the property the bench reports, the fleet `--json`
+/// document and the serve-layer cache all rely on).
+#[derive(Debug, Default)]
+pub struct JsonBuilder {
+    m: BTreeMap<String, Json>,
+}
+
+impl JsonBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(mut self, k: &str, v: Json) -> Self {
+        self.m.insert(k.to_string(), v);
+        self
+    }
+
+    pub fn num(self, k: &str, v: f64) -> Self {
+        self.set(k, Json::Num(v))
+    }
+
+    pub fn str(self, k: &str, v: &str) -> Self {
+        self.set(k, Json::Str(v.to_string()))
+    }
+
+    pub fn bool(self, k: &str, v: bool) -> Self {
+        self.set(k, Json::Bool(v))
+    }
+
+    /// u64 as a `0x`-prefixed hex string — JSON numbers are f64 and
+    /// cannot round-trip 64-bit ids (same convention as the
+    /// `bench/record.rs` fingerprints).
+    pub fn hex(self, k: &str, v: u64) -> Self {
+        self.set(k, Json::Str(format!("{v:#018x}")))
+    }
+
+    pub fn arr(self, k: &str, items: Vec<Json>) -> Self {
+        self.set(k, Json::Arr(items))
+    }
+
+    pub fn build(self) -> Json {
+        Json::Obj(self.m)
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -360,5 +408,23 @@ mod tests {
     fn ragged_matrix_rejected() {
         let v = Json::parse("[[1,2],[3]]").unwrap();
         assert!(v.as_mat_f64().is_none());
+    }
+
+    #[test]
+    fn builder_emits_stable_alphabetical_order() {
+        let j = JsonBuilder::new()
+            .num("zeta", 1.0)
+            .str("alpha", "x")
+            .bool("mid", true)
+            .hex("seed", 0xBEEF)
+            .arr("list", vec![Json::Num(1.0), Json::Num(2.0)])
+            .build();
+        assert_eq!(
+            j.to_string(),
+            "{\"alpha\":\"x\",\"list\":[1,2],\"mid\":true,\
+             \"seed\":\"0x000000000000beef\",\"zeta\":1}"
+        );
+        // and the emitted text re-parses to the same value
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 }

@@ -1,0 +1,178 @@
+//! Least-recently-used cache (std-only; the vendored crate set has no
+//! `lru` crate).
+//!
+//! Recency is tracked with a monotonic stamp per entry instead of a
+//! linked list: `get` and `insert` bump the stamp, eviction scans for the
+//! minimum. The scan makes `insert` O(len) at capacity, which is the
+//! right trade for the serve-layer response cache (a few hundred entries,
+//! values are `Arc`-shared response bodies) and keeps the structure
+//! trivially correct — no unsafe, no index juggling.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[derive(Debug, Clone)]
+struct Entry<V> {
+    value: V,
+    stamp: u64,
+}
+
+/// A bounded map that evicts the least-recently-used entry on overflow.
+#[derive(Debug, Clone)]
+pub struct Lru<K: Eq + Hash + Clone, V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, Entry<V>>,
+}
+
+impl<K: Eq + Hash + Clone, V> Lru<K, V> {
+    /// Create a cache holding at most `cap` entries.
+    ///
+    /// Panics when `cap == 0` (a zero-capacity LRU would evict every
+    /// insert; callers that want caching off should branch, not
+    /// construct a degenerate cache).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "Lru capacity must be at least 1");
+        Lru { cap, tick: 0, map: HashMap::with_capacity(cap.min(1024)) }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, k: &K) -> bool {
+        self.map.contains_key(k)
+    }
+
+    /// Look up `k` and mark it most recently used.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(k) {
+            Some(e) => {
+                e.stamp = tick;
+                Some(&e.value)
+            }
+            None => None,
+        }
+    }
+
+    /// Look up `k` without touching its recency.
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|e| &e.value)
+    }
+
+    /// Insert (or replace) `k`, evicting the least-recently-used entry
+    /// when at capacity. Returns the evicted key, if any. The freshly
+    /// inserted key always carries the newest stamp, so it can never be
+    /// the victim of its own insert.
+    pub fn insert(&mut self, k: K, v: V) -> Option<K> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.map.get_mut(&k) {
+            e.value = v;
+            e.stamp = tick;
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.cap {
+            // Stamps are unique (every op bumps the counter), so the
+            // minimum — and therefore the victim — is deterministic.
+            if let Some(old) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&old);
+                evicted = Some(old);
+            }
+        }
+        self.map.insert(k, Entry { value: v, stamp: tick });
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_get() {
+        let mut c: Lru<u32, &str> = Lru::new(2);
+        assert!(c.is_empty());
+        assert_eq!(c.insert(1, "a"), None);
+        assert_eq!(c.insert(2, "b"), None);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&3), None);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: Lru<u32, u32> = Lru::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.insert(3, 30), Some(2));
+        assert!(c.contains(&1) && c.contains(&3) && !c.contains(&2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn eviction_order_without_touches_is_insertion_order() {
+        let mut c: Lru<u32, u32> = Lru::new(3);
+        for k in 1..=3 {
+            c.insert(k, k);
+        }
+        assert_eq!(c.insert(4, 4), Some(1));
+        assert_eq!(c.insert(5, 5), Some(2));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn replace_updates_value_and_recency() {
+        let mut c: Lru<u32, u32> = Lru::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // Re-inserting 1 refreshes it; 2 is now the victim.
+        assert_eq!(c.insert(1, 11), None);
+        assert_eq!(c.insert(3, 30), Some(2));
+        assert_eq!(c.peek(&1), Some(&11));
+    }
+
+    #[test]
+    fn peek_does_not_touch() {
+        let mut c: Lru<u32, u32> = Lru::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // Peeking 1 must not save it: it stays the LRU entry.
+        assert_eq!(c.peek(&1), Some(&10));
+        assert_eq!(c.insert(3, 30), Some(1));
+    }
+
+    #[test]
+    fn capacity_one_always_keeps_latest() {
+        let mut c: Lru<u32, u32> = Lru::new(1);
+        assert_eq!(c.insert(1, 10), None);
+        assert_eq!(c.insert(2, 20), Some(1));
+        assert_eq!(c.insert(3, 30), Some(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.peek(&3), Some(&30));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        let _ = Lru::<u32, u32>::new(0);
+    }
+}

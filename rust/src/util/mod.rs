@@ -3,7 +3,9 @@
 
 pub mod bench;
 pub mod cli;
+pub mod http;
 pub mod json;
+pub mod lru;
 pub mod shard;
 
 /// Clamp helper for f32 (stable API, avoids float NaN surprises: NaN -> lo).

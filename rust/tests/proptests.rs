@@ -375,3 +375,34 @@ fn prop_pid_output_always_in_bounds() {
         }
     });
 }
+
+// -------------------------------------------------------------------- lru ---
+
+#[test]
+fn prop_lru_invariants() {
+    // Random insert/get workloads against util::lru: len never exceeds
+    // capacity, the most recently inserted key is always resident, and
+    // values never corrupt (get returns exactly what was inserted).
+    use idatacool::util::lru::Lru;
+    forall(50, |rng| {
+        let cap = 1 + rng.below(8);
+        let mut lru: Lru<u32, u64> = Lru::new(cap);
+        let mut last_inserted: Option<u32> = None;
+        for _ in 0..300 {
+            let k = rng.below(32) as u32;
+            if rng.uniform_in(0.0, 1.0) < 0.5 {
+                lru.insert(k, k as u64 * 3 + 1);
+                last_inserted = Some(k);
+            } else if let Some(&v) = lru.get(&k) {
+                assert_eq!(v, k as u64 * 3 + 1, "corrupted value for {k}");
+            }
+            assert!(lru.len() <= cap, "len {} > cap {cap}", lru.len());
+            if let Some(k) = last_inserted {
+                assert!(
+                    lru.peek(&k).is_some(),
+                    "most recently inserted key {k} missing (cap {cap})"
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,260 @@
+//! Integration tests for the sim-as-a-service layer: each test boots a
+//! real server on an ephemeral loopback port (`127.0.0.1:0`) and talks
+//! HTTP through `util::http::http_roundtrip` — the same code path curl
+//! exercises in CI's serve-smoke job.
+//!
+//! The acceptance gates live here:
+//!  * a repeated identical `POST /simulate` is served from the LRU with
+//!    `x-cache: hit` and a byte-identical body;
+//!  * the `POST /fleet` body is bitwise identical to the document a
+//!    one-shot CLI run (`idatacool fleet --json`) writes for the same
+//!    configuration — determinism survives the serving layer.
+
+use idatacool::config::SimConfig;
+use idatacool::fleet::FleetDriver;
+use idatacool::server::{api, ServeOptions, Server, ServerHandle};
+use idatacool::util::http::{http_roundtrip, ClientResponse};
+use idatacool::util::json::Json;
+
+/// A small, fast base config (native backend, 13 nodes, 60 s sim).
+fn base() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.duration_s = 60.0;
+    c
+}
+
+/// Boot a server with `workers` threads on an ephemeral port.
+fn boot(workers: usize) -> (ServerHandle, String) {
+    let mut opts = ServeOptions::new(base());
+    opts.cfg.addr = "127.0.0.1:0".into();
+    opts.cfg.workers = workers;
+    opts.cfg.cache_cap = 16;
+    opts.cfg.queue_cap = 32;
+    let server = Server::bind(opts).expect("bind ephemeral port");
+    let handle = server.spawn();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+fn get(addr: &str, target: &str) -> ClientResponse {
+    http_roundtrip(addr, "GET", target, None).expect("GET")
+}
+
+fn post(addr: &str, target: &str, body: &str) -> ClientResponse {
+    http_roundtrip(addr, "POST", target, Some(body.as_bytes())).expect("POST")
+}
+
+#[test]
+fn healthz_and_metrics_respond() {
+    let (h, addr) = boot(2);
+    let r = get(&addr, "/healthz");
+    assert_eq!(r.status, 200);
+    let j = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+
+    let r = get(&addr, "/metrics");
+    assert_eq!(r.status, 200);
+    let j = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("idatacool-serve/1"));
+    assert!(j.get("requests_total").unwrap().as_f64().unwrap() >= 1.0);
+    h.stop().unwrap();
+}
+
+#[test]
+fn simulate_repeat_is_a_bitwise_cache_hit() {
+    let (h, addr) = boot(2);
+    let body = r#"{"duration_s": 60, "seed": 7, "setpoint": 60}"#;
+
+    let first = post(&addr, "/simulate", body);
+    assert_eq!(first.status, 200, "{:?}", first.body_str());
+    assert_eq!(first.header("x-cache"), Some("miss"));
+    let j = Json::parse(first.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("idatacool-sim/1"));
+    assert_eq!(j.get("ticks").unwrap().as_f64(), Some(12.0));
+    assert!(j.get("final").unwrap().get("t_rack_out").is_some());
+
+    // The acceptance gate: x-cache hit + byte-identical body.
+    let second = post(&addr, "/simulate", body);
+    assert_eq!(second.status, 200);
+    assert_eq!(second.header("x-cache"), Some("hit"));
+    assert_eq!(second.body, first.body, "cache hit must be bitwise");
+
+    // Equivalent body (reordered fields, explicit float) hits too.
+    let third = post(
+        &addr,
+        "/simulate",
+        r#"{ "setpoint": 60.0, "seed": 7, "duration_s": 60.0 }"#,
+    );
+    assert_eq!(third.header("x-cache"), Some("hit"));
+    assert_eq!(third.body, first.body);
+
+    // A different seed is a different key.
+    let other = post(&addr, "/simulate", r#"{"duration_s": 60, "seed": 8, "setpoint": 60}"#);
+    assert_eq!(other.header("x-cache"), Some("miss"));
+    assert_ne!(other.body, first.body);
+
+    let m = Json::parse(get(&addr, "/metrics").body_str().unwrap()).unwrap();
+    let cache = m.get("cache").unwrap();
+    assert!(cache.get("hits").unwrap().as_f64().unwrap() >= 2.0);
+    assert!(cache.get("misses").unwrap().as_f64().unwrap() >= 2.0);
+    h.stop().unwrap();
+}
+
+#[test]
+fn stream_returns_per_tick_ndjson() {
+    let (h, addr) = boot(1);
+    let body: &[u8] = br#"{"duration_s": 60, "seed": 3}"#;
+    let r = http_roundtrip(&addr, "POST", "/simulate?stream=1", Some(body))
+        .unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("content-type"), Some("application/x-ndjson"));
+    let text = r.body_str().unwrap();
+    let lines: Vec<&str> = text.trim_end().lines().collect();
+    // 12 ticks sampled every tick + the closing summary line.
+    assert_eq!(lines.len(), 13, "{text}");
+    for l in &lines[..12] {
+        let s = Json::parse(l).unwrap();
+        assert!(s.get("t_rack_out").is_some());
+    }
+    let summary = Json::parse(lines[12]).unwrap();
+    assert_eq!(summary.get("schema").unwrap().as_str(), Some("idatacool-sim/1"));
+    // stream and non-stream responses cache under different keys
+    let r2 = post(&addr, "/simulate", r#"{"duration_s": 60, "seed": 3}"#);
+    assert_eq!(r2.header("x-cache"), Some("miss"));
+    h.stop().unwrap();
+}
+
+#[test]
+fn fleet_response_matches_one_shot_cli_document() {
+    let (h, addr) = boot(2);
+    let body = r#"{"plants": 3, "scenario": "mixed", "seed": 11}"#;
+    let served = post(&addr, "/fleet", body);
+    assert_eq!(served.status, 200, "{:?}", served.body_str());
+    assert_eq!(served.header("x-cache"), Some("miss"));
+
+    // The CLI path: parse the same request against the same base, run
+    // the fleet directly, serialize with the --json serializer.
+    let fc = api::parse_fleet_request(body, &base()).unwrap();
+    let driver = FleetDriver::new(fc).unwrap();
+    let run = driver.run().unwrap();
+    let cli_doc = run.to_json(&driver.cfg);
+    assert_eq!(
+        served.body_str().unwrap(),
+        cli_doc,
+        "served /fleet body must be bitwise identical to the CLI document"
+    );
+
+    let j = Json::parse(served.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("idatacool-fleet/1"));
+    assert_eq!(j.get("n_plants").unwrap().as_f64(), Some(3.0));
+    assert!(j.get("fingerprint").unwrap().as_str().unwrap().starts_with("0x"));
+    let credits = j
+        .get("facility")
+        .unwrap()
+        .get("plant_credit_j")
+        .unwrap()
+        .as_vec_f64()
+        .unwrap();
+    assert_eq!(credits.len(), 3);
+
+    // Repeat: served from cache, still bitwise.
+    let again = post(&addr, "/fleet", body);
+    assert_eq!(again.header("x-cache"), Some("hit"));
+    assert_eq!(again.body, served.body);
+    h.stop().unwrap();
+}
+
+#[test]
+fn sweep_endpoint_measures_setpoints() {
+    let (h, addr) = boot(2);
+    // Two setpoints, quick options, 2 shards — small but real.
+    let body = r#"{"setpoints": [50, 60], "shards": 2, "seed": 5}"#;
+    let r = post(&addr, "/sweep", body);
+    assert_eq!(r.status, 200, "{:?}", r.body_str());
+    let j = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("idatacool-sweep/1"));
+    let points = j.get("data").unwrap().get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2);
+    assert_eq!(points[0].get("setpoint").unwrap().as_f64(), Some(50.0));
+    let again = post(&addr, "/sweep", body);
+    assert_eq!(again.header("x-cache"), Some("hit"));
+    assert_eq!(again.body, r.body);
+    h.stop().unwrap();
+}
+
+#[test]
+fn concurrent_identical_requests_coalesce_to_one_run() {
+    let (h, addr) = boot(4);
+    let body = r#"{"duration_s": 60, "seed": 77}"#;
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || post(&addr, "/simulate", body)));
+    }
+    let responses: Vec<ClientResponse> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for r in &responses {
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, responses[0].body, "all bodies bitwise identical");
+    }
+    // However the four raced (leader + followers, or late arrivals that
+    // hit the cache), the simulation ran exactly once.
+    let m = Json::parse(get(&addr, "/metrics").body_str().unwrap()).unwrap();
+    let cache = m.get("cache").unwrap();
+    assert_eq!(cache.get("misses").unwrap().as_f64(), Some(1.0));
+    let hits = cache.get("hits").unwrap().as_f64().unwrap();
+    let coalesced = cache.get("coalesced").unwrap().as_f64().unwrap();
+    assert_eq!(hits + coalesced, 3.0, "hits {hits} + coalesced {coalesced}");
+    h.stop().unwrap();
+}
+
+#[test]
+fn error_paths_return_proper_statuses() {
+    let (h, addr) = boot(1);
+    // malformed JSON
+    let r = post(&addr, "/simulate", "{not json");
+    assert_eq!(r.status, 400);
+    // unknown field (strict parsing)
+    let r = post(&addr, "/simulate", r#"{"duration": 60}"#);
+    assert_eq!(r.status, 400);
+    let j = Json::parse(r.body_str().unwrap()).unwrap();
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("duration"));
+    // invalid config value
+    let r = post(&addr, "/simulate", r#"{"setpoint": 150}"#);
+    assert_eq!(r.status, 400);
+    // unknown route
+    let r = get(&addr, "/nope");
+    assert_eq!(r.status, 404);
+    // wrong method
+    let r = get(&addr, "/simulate");
+    assert_eq!(r.status, 405);
+    // query typos are 400s, not silently honored defaults
+    let r = post(&addr, "/simulate?steam=1", "{}");
+    assert_eq!(r.status, 400);
+    let r = post(&addr, "/simulate?stream=yes", "{}");
+    assert_eq!(r.status, 400);
+    let r = post(&addr, "/fleet?stream=1", "{}");
+    assert_eq!(r.status, 400, "/fleet does not stream");
+    // errors are never cached: a valid repeat of a failed key still runs
+    let r = post(&addr, "/fleet", r#"{"plants": 0}"#);
+    assert_eq!(r.status, 400);
+    h.stop().unwrap();
+}
+
+#[test]
+fn per_request_overrides_and_presets_work() {
+    let (h, addr) = boot(1);
+    // Override nodes + workload on top of the server base
+    // (stress_nodes must shrink with the cluster to stay valid).
+    let r = post(
+        &addr,
+        "/simulate",
+        r#"{"nodes": 8, "stress_nodes": 8, "workload": "idle",
+            "duration_s": 30}"#,
+    );
+    assert_eq!(r.status, 200, "{:?}", r.body_str());
+    let j = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("n_nodes").unwrap().as_f64(), Some(8.0));
+    assert_eq!(j.get("ticks").unwrap().as_f64(), Some(6.0));
+    h.stop().unwrap();
+}
