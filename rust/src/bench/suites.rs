@@ -136,10 +136,20 @@ fn fleet_fingerprint() -> u64 {
         (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
     }
     // Everything the fleet suite measures: the per-plant base config,
-    // the fleet shape, the sweep config and its timing knobs.
+    // the fleet shape, the sweep config and its timing knobs. The
+    // env-resolved megabatch flag changes what fleet_run measures, so
+    // an IDATACOOL_FLEET_MEGABATCH=0 run must not be gated against a
+    // megabatch-on baseline (results are bitwise identical, wall time
+    // is not).
     let mut h = config_fingerprint(&fleet_base());
     h = mix(h, config_fingerprint(&reference_config()));
     h = mix(h, FLEET_PLANTS as u64);
+    let megabatch = match crate::fleet::default_megabatch() {
+        Ok(true) => 1u64,
+        Ok(false) => 0u64,
+        Err(_) => 99u64,
+    };
+    h = mix(h, megabatch);
     let o = fleet_sweep_opts();
     for v in [o.settle_s, o.measure_s, o.settle_tol, o.max_extra_settle_s] {
         h = mix(h, v.to_bits());
@@ -252,6 +262,33 @@ fn hotpath(b: &mut Bench) -> Result<()> {
                     plant.tick(&controls, &util, &mut out);
                 });
         }
+
+        // Resident lanes (PR 5): `soa_plant_tick` above *is* the
+        // resident steady-state loop now — zero node-major transposes
+        // per tick. `resident_tick` registers that contract under its
+        // own id; `materialize_tick` adds a forced `node_state()` read
+        // per tick, so the resident/materialize delta prices exactly
+        // the transpose the resident contract removed (the PR 3 path
+        // paid it — plus a transpose-in — on every tick; compare
+        // soa_plant_tick against the PR 3 baseline for the full win).
+        {
+            let mut plant = NativePlant::with_kernel(
+                pp.clone(), ops.clone(), st.clone(), 20.0,
+                PlantKernel::Soa);
+            let mut out = TickOutput::new(npad);
+            let node_substeps = (n * plant.substeps) as f64;
+            b.run_with_units(
+                "resident_tick/n64", node_substeps, "node-substeps",
+                &mut || {
+                    plant.tick(&controls, &util, &mut out);
+                });
+            b.run_with_units(
+                "materialize_tick/n64", node_substeps, "node-substeps",
+                &mut || {
+                    plant.tick(&controls, &util, &mut out);
+                    std::hint::black_box(plant.node_state());
+                });
+        }
     }
 
     // Full coordinator tick around the plant, allocation-free path.
@@ -297,6 +334,10 @@ fn hotpath(b: &mut Bench) -> Result<()> {
 fn fleet(b: &mut Bench) -> Result<()> {
     let base = fleet_base();
     let scenario = Scenario::by_name("mixed")?;
+    // fleet_run follows the env-resolved megabatch flag (CI runs the
+    // suite under both values; the suite fingerprint mixes the flag so
+    // the two never gate against each other's baseline).
+    let megabatch = crate::fleet::default_megabatch()?;
     for shards in [1usize, 4] {
         let driver = FleetDriver::new(FleetConfig {
             n_plants: FLEET_PLANTS,
@@ -304,6 +345,7 @@ fn fleet(b: &mut Bench) -> Result<()> {
             base: base.clone(),
             fleet_seed: 0x1DA7,
             scenario,
+            megabatch,
         })?;
         b.run_with_units(
             &format!("fleet_run/p4s{shards}/n13"),
@@ -311,6 +353,45 @@ fn fleet(b: &mut Bench) -> Result<()> {
             "plant-sim-seconds", &mut || {
                 driver.run().unwrap();
             });
+    }
+
+    // One lockstep megabatch tick over the whole 4-plant bucket: the
+    // single arena sweep per substep that replaces 4 per-plant kernel
+    // calls — the megabatch primitive itself. Skipped (not a fatal
+    // error) when the env pins a configuration that cannot lockstep
+    // (IDATACOOL_KERNEL=reference): the fleet_run benches above remain
+    // measurable there, and the missing bench is a comparator warning,
+    // never a gate failure.
+    if crate::fleet::megabatch::precheck(&base) {
+        use crate::fleet::megabatch::{build_ctxs, LockstepFleet};
+        let driver = FleetDriver::new(FleetConfig {
+            n_plants: FLEET_PLANTS,
+            shards: 1,
+            base: base.clone(),
+            fleet_seed: 0x1DA7,
+            scenario,
+            megabatch: true,
+        })?;
+        let mut ls = LockstepFleet::new(build_ctxs(driver.specs())?)
+            .ok()
+            .ok_or_else(|| anyhow::anyhow!(
+                "fleet bench bucket must be lockstep-eligible"
+            ))?;
+        let tick_s = base.pp.dt_substep * base.pp.substeps_per_tick as f64;
+        b.run_with_units(
+            "fleet_megabatch_tick/p4/n13",
+            FLEET_PLANTS as f64 * tick_s,
+            "plant-sim-seconds", &mut || {
+                ls.tick();
+                // keep the bench loop memory-bounded; capacity is kept,
+                // so no reallocation lands in the timed window
+                ls.discard_history();
+            });
+    } else {
+        println!(
+            "fleet_megabatch_tick/p4/n13: skipped (base config cannot \
+             lockstep — non-SoA kernel or hlo backend)"
+        );
     }
 
     // The Fig. 4-7 setpoint sweep, serial vs sharded (the two must stay

@@ -285,6 +285,46 @@ impl ServeConfig {
     }
 }
 
+/// `[fleet]` launcher defaults for `idatacool fleet`. Execution shape
+/// only, like `[serve]`: the fleet determinism contract makes results
+/// bitwise identical across every plants/shards/megabatch combination,
+/// so none of these enter result documents or cache keys. Precedence in
+/// the CLI: TOML < `IDATACOOL_FLEET_MEGABATCH` env < flags.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetSettings {
+    /// Fleet size (`fleet.plants`); `None` leaves the CLI default.
+    pub plants: Option<usize>,
+    /// Shard (OS thread) count (`fleet.shards`).
+    pub shards: Option<usize>,
+    /// Lockstep lane-arena execution (`fleet.megabatch`).
+    pub megabatch: Option<bool>,
+}
+
+impl FleetSettings {
+    /// Parse the `[fleet]` section. Counts are strict positive
+    /// integers, `megabatch` a strict boolean — a present-yet-malformed
+    /// value is an error, matching the CLI-flag discipline.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let count_opt = |key: &str| -> anyhow::Result<Option<usize>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(_) => toml_count(doc, key, 1).map(Some),
+            }
+        };
+        let megabatch = match doc.get("fleet.megabatch") {
+            None => None,
+            Some(v) => Some(v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("fleet.megabatch must be a boolean")
+            })?),
+        };
+        Ok(FleetSettings {
+            plants: count_opt("fleet.plants")?,
+            shards: count_opt("fleet.shards")?,
+            megabatch,
+        })
+    }
+}
+
 /// A strictly-parsed positive integer TOML value.
 fn toml_count(doc: &TomlDoc, key: &str, default: usize)
               -> anyhow::Result<usize> {
@@ -373,6 +413,34 @@ mod tests {
             .apply_toml(&TomlDoc::parse("").unwrap())
             .unwrap();
         assert!(sc.workers >= 1 && sc.cache_cap >= 1);
+    }
+
+    #[test]
+    fn fleet_section_overrides() {
+        let doc = TomlDoc::parse(
+            "[fleet]\nplants = 8\nshards = 2\nmegabatch = false\n",
+        )
+        .unwrap();
+        let fs = FleetSettings::from_toml(&doc).unwrap();
+        assert_eq!(fs.plants, Some(8));
+        assert_eq!(fs.shards, Some(2));
+        assert_eq!(fs.megabatch, Some(false));
+        // absent section leaves everything to the CLI defaults
+        let fs = FleetSettings::from_toml(&TomlDoc::parse("").unwrap())
+            .unwrap();
+        assert_eq!(fs, FleetSettings::default());
+    }
+
+    #[test]
+    fn fleet_section_is_strict() {
+        for bad in ["plants = 0", "plants = 2.5", "shards = \"two\"",
+                    "megabatch = \"yes\"", "megabatch = 1"] {
+            let doc = TomlDoc::parse(&format!("[fleet]\n{bad}\n")).unwrap();
+            assert!(
+                FleetSettings::from_toml(&doc).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 
     #[test]

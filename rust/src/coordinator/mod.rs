@@ -186,18 +186,39 @@ impl SimulationDriver {
         self.run_ticks(ticks, sample_every)
     }
 
+    /// Like `run`, into a caller-owned `TickOutput` (hot-path variant:
+    /// the serve path keeps one buffer per worker and reuses it across
+    /// requests instead of allocating per request).
+    pub fn run_into(&mut self, sample_every: usize, out: &mut TickOutput)
+                    -> Result<RunResult> {
+        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
+        let ticks = (self.cfg.duration_s / tick_s).ceil() as u64;
+        self.run_ticks_into(ticks, sample_every, out)
+    }
+
     /// Run an explicit number of ticks.
     pub fn run_ticks(&mut self, ticks: u64, sample_every: usize)
                      -> Result<RunResult> {
-        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
         let mut out = TickOutput::new(self.backend.n_padded());
+        self.run_ticks_into(ticks, sample_every, &mut out)
+    }
+
+    /// `run_ticks` into a caller-owned `TickOutput`. The buffer is
+    /// reset first (sized + zeroed), so a reused buffer behaves exactly
+    /// like the fresh one `run_ticks` used to allocate — in particular
+    /// the supervisor sees zero scalars on the first tick of every run
+    /// segment.
+    pub fn run_ticks_into(&mut self, ticks: u64, sample_every: usize,
+                          out: &mut TickOutput) -> Result<RunResult> {
+        let tick_s = self.backend.tick_seconds(&self.cfg.pp);
+        out.reset(self.backend.n_padded());
         let mut trace = Vec::new();
         let mut energy = EnergyAccount::new();
         let mut plant_wall = 0.0f64;
         let start = std::time::Instant::now();
 
         for i in 0..ticks {
-            let sample = self.step(tick_s, &mut out, &mut plant_wall)?;
+            let sample = self.step(tick_s, out, &mut plant_wall)?;
             energy.push(&out.scalars, tick_s);
             if sample_every > 0 && (i as usize) % sample_every == 0 {
                 trace.push(sample);
@@ -217,8 +238,25 @@ impl SimulationDriver {
     }
 
     /// One tick of the control loop; returns the telemetry-noised sample.
+    ///
+    /// Split into `control_phase` → plant tick → `sample_phase` so the
+    /// fleet megabatch engine (`fleet::megabatch`) can interleave the
+    /// control and sample phases of many plants around one shared
+    /// arena sweep while reproducing this loop exactly.
     fn step(&mut self, tick_s: f64, out: &mut TickOutput,
             plant_wall: &mut f64) -> Result<TraceSample> {
+        self.control_phase(tick_s, out);
+        let t0 = std::time::Instant::now();
+        self.backend.tick(&self.controls, &self.plan.util, out)?;
+        *plant_wall += t0.elapsed().as_secs_f64();
+        Ok(self.sample_phase(tick_s, out))
+    }
+
+    /// Pre-plant phase: advance the workload, run the PID on the
+    /// measured rack outlet, let the supervisor set the control vector
+    /// (`prev` carries the previous tick's scalars for its
+    /// over-temperature checks).
+    pub(crate) fn control_phase(&mut self, tick_s: f64, prev: &TickOutput) {
         // 1. workload
         self.workload.advance(tick_s, &mut self.plan);
 
@@ -233,16 +271,17 @@ impl SimulationDriver {
         };
         self.supervisor.apply(
             self.now_s,
-            &out.scalars,
+            &prev.scalars,
             &mut self.controls,
             pid_valve,
             self.cfg.gpu_load,
         );
+    }
 
-        // 3. plant
-        let t0 = std::time::Instant::now();
-        self.backend.tick(&self.controls, &self.plan.util, out)?;
-        *plant_wall += t0.elapsed().as_secs_f64();
+    /// Post-plant phase: advance simulated time and build the
+    /// telemetry-noised trace sample from the plant outputs.
+    pub(crate) fn sample_phase(&mut self, tick_s: f64, out: &TickOutput)
+                               -> TraceSample {
         self.now_s += tick_s;
 
         // 4. telemetry view
@@ -253,7 +292,7 @@ impl SimulationDriver {
             (0..n).map(|i| self.plan.node_mean(i) as f64).sum::<f64>()
                 / n as f64
         };
-        Ok(TraceSample {
+        TraceSample {
             t_s: self.now_s,
             t_rack_in: self.telemetry.cluster_temp(sc[SC_T_RACK_IN] as f64),
             t_rack_out: self.telemetry.cluster_temp(sc[SC_T_RACK_OUT] as f64),
@@ -270,7 +309,13 @@ impl SimulationDriver {
             core_max: sc[SC_CORE_MAX] as f64,
             throttling: sc[SC_THROTTLE] as u32,
             utilization: util_mean,
-        })
+        }
+    }
+
+    /// The current control vector `[CT]` (the megabatch engine copies
+    /// it out between the control and plant phases).
+    pub(crate) fn controls(&self) -> &[f32] {
+        &self.controls
     }
 
     /// Per-node observation view with node-level sensor noise applied.

@@ -8,11 +8,12 @@
 //!
 //! Setpoints are independent simulations (each builds its own driver from
 //! the same config), so the sweep parallelizes with the fleet engine's
-//! sharding pattern: setpoint i goes to shard i % K
-//! (`util::shard::round_robin`), each shard runs its setpoints on its own
-//! OS thread, and the reduction walks results in setpoint order — a
-//! K-shard sweep is bitwise identical to the serial one
-//! (`tests/sweep_parallel.rs` is the gate).
+//! sharding pattern: setpoints are split into contiguous index blocks
+//! (`util::shard::blocks`, one block per OS thread — assignment is
+//! order-independent for results, see the module docs there), and the
+//! reduction walks results in setpoint order — a K-shard sweep is
+//! bitwise identical to the serial one (`tests/sweep_parallel.rs` is
+//! the gate).
 
 use std::collections::BTreeMap;
 
@@ -24,7 +25,7 @@ use crate::coordinator::SimulationDriver;
 use crate::plant::layout::*;
 use crate::plant::TickOutput;
 use crate::stats::Running;
-use crate::util::shard::round_robin;
+use crate::util::shard::blocks;
 
 /// Sweep timing knobs (short values for tests, long for real runs).
 #[derive(Debug, Clone)]
@@ -228,7 +229,7 @@ pub fn run_sweep_sharded(cfg: &SimConfig, setpoints: &[f64],
     } else {
         let indexed: Vec<(usize, f64)> =
             setpoints.iter().copied().enumerate().collect();
-        let buckets = round_robin(indexed, shards);
+        let buckets = blocks(indexed, shards);
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::with_capacity(buckets.len());
             for bucket in buckets {

@@ -16,6 +16,15 @@
 //! perturbs plant physics, so plant runs stay embarrassingly parallel and
 //! the facility pass is bitwise deterministic in plant-index order
 //! regardless of shard count.
+//!
+//! Two callers feed it, through one conversion (`fleet::plant_tick_of`):
+//! the post-hoc replay over finished traces (`fleet::run_facility`) and
+//! the per-tick stream of a 1-shard megabatch run
+//! (`fleet::megabatch::LockstepFleet::run`), where the whole fleet
+//! advances in tick lockstep and each tick's samples are pooled as they
+//! are produced. `pool_tick` is incremental either way — identical
+//! inputs in identical order, so both feeds produce bitwise-identical
+//! reports.
 
 use crate::config::constants::PlantParams;
 use crate::util::json::{Json, JsonBuilder};

@@ -1,0 +1,459 @@
+//! Fleet megabatch: tick-lockstep execution of a shard's plants over
+//! one shared SoA lane arena.
+//!
+//! The per-plant path (`run_bucket` with megabatch off) runs each plant
+//! to completion as its own kernel instance — N small working sets, N
+//! sets of loop/dispatch overhead per tick. The megabatch path packs
+//! every plant assigned to a shard into one `[slot][n_total]` lane
+//! arena (`SoaState::new_arena`; per-plant `LaneRange`s, tile-padded so
+//! each starts on a vector-width boundary) and advances all of them in
+//! tick lockstep: per substep, one `soa_substep_ranges` sweep over the
+//! whole contiguous working set replaces N kernel calls — amortizing
+//! dispatch, keeping small plants' lanes hot in cache, and letting a
+//! single-shard fleet feed the shared facility loop **per tick** instead
+//! of replaying traces post-hoc.
+//!
+//! Determinism: the engine reproduces `SimulationDriver::step` exactly —
+//! `control_phase` → plant physics → `sample_phase` per plant, in plant
+//! order — and the arena kernel is bitwise identical to per-plant SoA
+//! substeps (elementwise lane ops plus per-range reductions in node
+//! order; see `plant::soa`). A K-shard megabatch run therefore produces
+//! byte-identical `idatacool-fleet/1` output to the 1-shard, megabatch-
+//! off reference (`tests/fleet_integration.rs` gates it).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::constants::PlantParams;
+use crate::coordinator::energy::EnergyAccount;
+use crate::coordinator::{RunResult, SimulationDriver, TraceSample};
+use crate::plant::circuits;
+use crate::plant::layout::*;
+use crate::plant::soa::{self, SoaState};
+use crate::plant::{PlantKernel, TickOutput};
+
+use super::facility::{FacilityModel, FacilityReport};
+use super::scenario::PlantSpec;
+use super::{plant_tick_of, PlantRun};
+
+/// One plant's identity plus its ready-to-run driver (the unit the
+/// lockstep engine and the sequential fallback share).
+pub struct PlantCtx {
+    pub index: usize,
+    pub label: String,
+    pub seed: u64,
+    pub tick_s: f64,
+    pub driver: SimulationDriver,
+}
+
+/// Config-level lockstep eligibility, checkable **before** any driver
+/// exists: the base must resolve to the native backend with the SoA
+/// kernel. Callers use it to decide whether to construct a whole
+/// bucket's drivers up front for the arena (`build_ctxs` +
+/// `LockstepFleet::new`) or to keep the per-plant one-driver-at-a-time
+/// memory profile — a fleet with `kernel = "reference"` or a pinned
+/// `hlo` backend must not pay an all-drivers-resident peak just to
+/// discover it cannot lockstep. `LockstepFleet::new`'s deep per-plant
+/// check remains the authority; this is the cheap gate in front of it.
+pub fn precheck(base: &crate::config::SimConfig) -> bool {
+    use crate::runtime::BackendKind;
+    // `auto` resolves by artifact presence through the same shared rule
+    // PlantBackend::create_with_kernel applies.
+    let native = base
+        .backend
+        .parse::<BackendKind>()
+        .is_ok_and(|k| {
+            k.resolve_auto(&base.artifacts_dir) == BackendKind::Native
+        });
+    native
+        && PlantKernel::resolve(&base.kernel)
+            .is_ok_and(|k| k == PlantKernel::Soa)
+}
+
+/// Construct the drivers for a bucket of plant specs, in spec order.
+pub fn build_ctxs(bucket: Vec<PlantSpec>) -> Result<Vec<PlantCtx>> {
+    let mut ctxs = Vec::with_capacity(bucket.len());
+    for spec in bucket {
+        let PlantSpec { index, label, seed, cfg, faults } = spec;
+        let driver = SimulationDriver::from_prebuilt(cfg, seed, faults)?;
+        let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
+        ctxs.push(PlantCtx { index, label, seed, tick_s, driver });
+    }
+    Ok(ctxs)
+}
+
+/// Run a bucket the per-plant way (each plant's driver owns its full
+/// tick loop) — the megabatch-off path and the lockstep fallback.
+pub fn run_ctxs_sequential(ctxs: Vec<PlantCtx>) -> Result<Vec<PlantRun>> {
+    let mut out = Vec::with_capacity(ctxs.len());
+    for ctx in ctxs {
+        let PlantCtx { index, label, seed, tick_s, mut driver } = ctx;
+        // sample_every = 1: the facility pass needs every tick.
+        let result = driver.run(1)?;
+        out.push(PlantRun { index, label, seed, tick_s, result });
+    }
+    Ok(out)
+}
+
+/// The lockstep engine: a shard's plants resident in one lane arena.
+pub struct LockstepFleet {
+    ctxs: Vec<PlantCtx>,
+    soa: SoaState,
+    ranges: Vec<LaneRange>,
+    outs: Vec<TickOutput>,
+    ctrl: Vec<[f32; CT]>,
+    last_flow: Vec<Option<f32>>,
+    sums: Vec<(f64, f32)>,
+    traces: Vec<Vec<TraceSample>>,
+    energies: Vec<EnergyAccount>,
+    pp: PlantParams,
+    inv_c_w: f32,
+    substeps: usize,
+    tick_s: f64,
+    ticks_total: u64,
+    ticks_done: u64,
+    /// Wall-clock spent in the arena physics (substeps + epilogue),
+    /// the lockstep analogue of `RunResult::plant_wall_s`.
+    plant_wall_s: f64,
+}
+
+impl LockstepFleet {
+    /// Build the arena over a bucket of constructed plants.
+    ///
+    /// `Err` hands the contexts back untouched when the bucket is not
+    /// lockstep-eligible — any non-native backend, a non-SoA kernel, or
+    /// plants that disagree on plant constants / substep count / tick
+    /// length / tick count (scenarios never produce that, but a TOML
+    /// base config pinning `backend = "hlo"` or `kernel = "reference"`
+    /// legitimately does). The caller falls back to the per-plant path,
+    /// which is bitwise identical anyway.
+    pub fn new(mut ctxs: Vec<PlantCtx>)
+               -> std::result::Result<LockstepFleet, Vec<PlantCtx>> {
+        if ctxs.is_empty() {
+            return Err(ctxs);
+        }
+        let eligible = |ctx: &PlantCtx| -> bool {
+            ctx.driver
+                .backend
+                .native()
+                .is_some_and(|np| np.kernel == PlantKernel::Soa)
+        };
+        if !ctxs.iter().all(eligible) {
+            return Err(ctxs);
+        }
+        let (pp, substeps) = {
+            let np = ctxs[0].driver.backend.native().expect("checked");
+            (np.pp.clone(), np.substeps)
+        };
+        let tick_s = ctxs[0].tick_s;
+        let ticks_of = |ctx: &PlantCtx| -> u64 {
+            (ctx.driver.cfg.duration_s / ctx.tick_s).ceil() as u64
+        };
+        let ticks_total = ticks_of(&ctxs[0]);
+        let uniform = ctxs.iter().all(|ctx| {
+            let np = ctx.driver.backend.native().expect("checked");
+            np.pp == pp
+                && np.substeps == substeps
+                && ctx.tick_s == tick_s
+                && ticks_of(ctx) == ticks_total
+        });
+        if !uniform {
+            return Err(ctxs);
+        }
+
+        // One contiguous arena over every plant's statics, in plant
+        // order (identical ops: Operators::build is a pure function of
+        // the shared plant constants).
+        let (mut soa, ranges) = {
+            let statics: Vec<&crate::plant::PlantStatic> = ctxs
+                .iter()
+                .map(|c| &c.driver.backend.native().expect("checked").st)
+                .collect();
+            let ops = &ctxs[0].driver.backend.native().expect("checked").ops;
+            SoaState::new_arena(&statics, ops, &pp)
+        };
+        let inv_c_w = ctxs[0]
+            .driver
+            .backend
+            .native()
+            .expect("checked")
+            .ops
+            .inv_c[IDX_WATER];
+        // Warm-up load: each plant's node-major state enters its lane
+        // slice once; the lanes are resident for the rest of the run.
+        for (ctx, r) in ctxs.iter_mut().zip(&ranges) {
+            let np = ctx.driver.backend.native_mut().expect("checked");
+            soa.load_state_range(np.node_state(), *r);
+        }
+
+        let n = ctxs.len();
+        let outs = ctxs
+            .iter()
+            .map(|c| TickOutput::new(c.driver.backend.n_padded()))
+            .collect();
+        Ok(LockstepFleet {
+            soa,
+            ranges,
+            outs,
+            ctrl: vec![[0.0; CT]; n],
+            last_flow: vec![None; n],
+            sums: vec![(0.0, 0.0); n],
+            traces: vec![Vec::new(); n],
+            energies: (0..n).map(|_| EnergyAccount::new()).collect(),
+            pp,
+            inv_c_w,
+            substeps,
+            tick_s,
+            ticks_total,
+            ticks_done: 0,
+            plant_wall_s: 0.0,
+            ctxs,
+        })
+    }
+
+    /// Number of plants in the arena.
+    pub fn len(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    /// Drop the per-plant trace history accumulated so far. Bench
+    /// harnesses price `tick()` in a loop without ever building
+    /// `PlantRun`s; clearing between iterations (capacity is kept, so
+    /// no reallocation re-enters the timed window) bounds their memory.
+    /// Not meaningful around `run`, which needs the full history.
+    pub fn discard_history(&mut self) {
+        for trace in &mut self.traces {
+            trace.clear();
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ctxs.is_empty()
+    }
+
+    /// Advance every plant by one tick, in lockstep. Mirrors
+    /// `SimulationDriver::step` phase for phase; the plant physics of
+    /// all plants runs as one arena sweep per substep.
+    pub fn tick(&mut self) {
+        let tick_s = self.tick_s;
+        // Phase 1 (per plant, plant order): workload + control — the
+        // coordinator-side work SimulationDriver::step also excludes
+        // from its plant_wall_s.
+        for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            ctx.driver.control_phase(tick_s, &self.outs[p]);
+            self.ctrl[p].copy_from_slice(ctx.driver.controls());
+        }
+        // Everything from here through the observe epilogue is the
+        // lockstep analogue of `backend.tick`, which the sequential
+        // path's plant_wall_s times — including the per-tick
+        // utilization transpose-in and the flow-cached advection
+        // rescale, so the two execution modes report comparable plant
+        // wall clocks.
+        let t0 = Instant::now();
+        for (p, ctx) in self.ctxs.iter().enumerate() {
+            let r = self.ranges[p];
+            self.soa.load_util_range(&ctx.driver.plan.util, r);
+            // Shared definition with NativePlant::tick — the bitwise
+            // contract needs both paths to derive the flow identically.
+            let flow = crate::plant::native::effective_flow(&self.ctrl[p]);
+            if self.last_flow[p] != Some(flow) {
+                self.soa.set_flow_range(flow, r);
+                self.last_flow[p] = Some(flow);
+            }
+        }
+        // Phase 2: K fused substeps, one contiguous sweep each. The
+        // inlet forcing and the circuit step stay per plant (each plant
+        // owns its circuit state), exactly as NativePlant::tick orders
+        // them.
+        for _ in 0..self.substeps {
+            for (p, ctx) in self.ctxs.iter().enumerate() {
+                let t_in = ctx.driver.backend.circuit_state()[C_T_RACK_IN];
+                self.soa.set_inlet_range(t_in, self.inv_c_w, self.ranges[p]);
+            }
+            soa::soa_substep_ranges(&mut self.soa, &self.pp, &self.ranges,
+                                    &mut self.sums);
+            for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+                let (p_dc, t_out_sum) = self.sums[p];
+                let r = self.ranges[p];
+                let t_out_raw = t_out_sum / r.n_valid as f32;
+                let np =
+                    ctx.driver.backend.native_mut().expect("lockstep plant");
+                circuits::circuit_substep(&mut np.circuit_state,
+                                          &self.ctrl[p], t_out_raw, p_dc,
+                                          r.n_valid, &self.pp);
+            }
+        }
+        // Phase 3 (per plant): fused observe epilogue from the resident
+        // lanes + the scalar block — still plant physics, so it stays
+        // inside the plant_wall_s window.
+        for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            let r = self.ranges[p];
+            let (p_dc, throttling, core_max) = soa::soa_observe_range(
+                &mut self.soa, &self.pp, r, &mut self.outs[p].node_obs);
+            let np = ctx.driver.backend.native_mut().expect("lockstep plant");
+            np.fill_scalars(&self.ctrl[p], p_dc, throttling, core_max,
+                            &mut self.outs[p]);
+        }
+        self.plant_wall_s += t0.elapsed().as_secs_f64();
+        // Phase 4 (per plant): telemetry sample + accounting — the
+        // coordinator-side work SimulationDriver::step also excludes
+        // from its plant_wall_s.
+        for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            let sample = ctx.driver.sample_phase(tick_s, &self.outs[p]);
+            self.energies[p].push(&self.outs[p].scalars, tick_s);
+            self.traces[p].push(sample);
+        }
+        self.ticks_done += 1;
+    }
+
+    /// Run the configured duration. With `facility` set (the shard
+    /// covers the whole fleet, i.e. a 1-shard run), the shared facility
+    /// loop is fed per tick from the freshly sampled traces — same
+    /// inputs in the same plant order as the post-hoc replay
+    /// (`fleet::run_facility`), so the report is bitwise identical.
+    pub fn run(mut self, mut facility: Option<FacilityModel>)
+               -> Result<(Vec<PlantRun>, Option<FacilityReport>)> {
+        let start = Instant::now();
+        let mut inputs = Vec::with_capacity(self.ctxs.len());
+        // Ticks already advanced through `tick()` (e.g. by a bench
+        // harness) count toward the configured duration.
+        while self.ticks_done < self.ticks_total {
+            self.tick();
+            if let Some(model) = facility.as_mut() {
+                inputs.clear();
+                for trace in &self.traces {
+                    let s = trace.last().expect("tick just pushed a sample");
+                    inputs.push(plant_tick_of(s));
+                }
+                model.pool_tick(&inputs, self.tick_s);
+            }
+        }
+        let total_wall_s = start.elapsed().as_secs_f64();
+        let report = facility.map(FacilityModel::into_report);
+
+        // Hand each plant its final arena slice back: the lockstep run
+        // drove the shared arena, so the drivers' own node-major
+        // buffers still hold the warm-up fill — one transpose per plant
+        // at run end keeps any later consumer of a driver honest.
+        let mut node_scratch = Vec::new();
+        for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            let r = self.ranges[p];
+            node_scratch.resize(r.npad * S, 0.0);
+            self.soa.materialize_range(r, &mut node_scratch);
+            ctx.driver
+                .backend
+                .native_mut()
+                .expect("lockstep plant")
+                .adopt_node_state(&node_scratch);
+        }
+
+        let LockstepFleet {
+            ctxs, traces, energies, ticks_total, plant_wall_s, ..
+        } = self;
+        let mut plants = Vec::with_capacity(ctxs.len());
+        for ((ctx, trace), energy) in
+            ctxs.into_iter().zip(traces).zip(energies)
+        {
+            let PlantCtx { index, label, seed, tick_s, mut driver } = ctx;
+            let result = RunResult {
+                trace,
+                energy,
+                events: std::mem::take(&mut driver.supervisor.events),
+                workload_stats: driver.workload.stats(),
+                backend: driver.backend.kind_name(),
+                // Wall clocks are shared across the lockstep bucket
+                // (the plants ran together); they never enter result
+                // documents.
+                plant_wall_s,
+                total_wall_s,
+                ticks: ticks_total,
+            };
+            plants.push(PlantRun { index, label, seed, tick_s, result });
+        }
+        Ok((plants, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::fleet::scenario::Scenario;
+    use crate::fleet::plant_seed;
+
+    fn specs(n_plants: usize, scenario: &str, base: &SimConfig)
+             -> Vec<PlantSpec> {
+        let s = Scenario::by_name(scenario).unwrap();
+        (0..n_plants)
+            .map(|i| s.plant_spec(i, n_plants, base,
+                                  plant_seed(base.seed, i)))
+            .collect()
+    }
+
+    fn small_base() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.duration_s = 60.0;
+        c
+    }
+
+    #[test]
+    fn lockstep_matches_sequential_bitwise() {
+        let base = small_base();
+        let ctxs = build_ctxs(specs(3, "mixed", &base)).unwrap();
+        let ls = LockstepFleet::new(ctxs).ok().expect("eligible bucket");
+        assert_eq!(ls.len(), 3);
+        let (a, report) = ls.run(None).unwrap();
+        assert!(report.is_none());
+        let b = run_ctxs_sequential(
+            build_ctxs(specs(3, "mixed", &base)).unwrap()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.result.ticks, y.result.ticks);
+            assert_eq!(x.result.trace.len(), y.result.trace.len());
+            for (s, t) in x.result.trace.iter().zip(&y.result.trace) {
+                assert_eq!(s.t_rack_out.to_bits(), t.t_rack_out.to_bits());
+                assert_eq!(s.p_d.to_bits(), t.p_d.to_bits());
+                assert_eq!(s.p_ac.to_bits(), t.p_ac.to_bits());
+                assert_eq!(s.core_max.to_bits(), t.core_max.to_bits());
+                assert_eq!(s.throttling, t.throttling);
+            }
+            assert_eq!(x.result.energy.e_ac.to_bits(),
+                       y.result.energy.e_ac.to_bits());
+            assert_eq!(x.result.energy.e_drive.to_bits(),
+                       y.result.energy.e_drive.to_bits());
+        }
+    }
+
+    #[test]
+    fn precheck_follows_backend_and_kernel() {
+        // test_small pins the native backend; kernel "auto" resolves
+        // through the env, so only assert the positive case when the
+        // env leaves the SoA default in place.
+        if std::env::var_os("IDATACOOL_KERNEL").is_none() {
+            assert!(precheck(&small_base()));
+        }
+        let mut b = small_base();
+        b.kernel = "reference".into();
+        assert!(!precheck(&b));
+        let mut b = small_base();
+        b.backend = "hlo".into();
+        assert!(!precheck(&b));
+    }
+
+    #[test]
+    fn non_soa_bucket_is_handed_back() {
+        let mut base = small_base();
+        base.kernel = "reference".into();
+        let ctxs = build_ctxs(specs(2, "baseline", &base)).unwrap();
+        let back = match LockstepFleet::new(ctxs) {
+            Err(back) => back,
+            Ok(_) => panic!("reference-kernel bucket must not lockstep"),
+        };
+        assert_eq!(back.len(), 2);
+        // the handed-back contexts still run fine sequentially
+        let runs = run_ctxs_sequential(back).unwrap();
+        assert_eq!(runs.len(), 2);
+    }
+}

@@ -4,21 +4,34 @@
 //! The single-plant twin reproduces one iDataCool installation; the fleet
 //! engine scales it *out*: N independent `SimulationDriver` instances —
 //! one per plant, each with its own `PlantBackend`, workload, telemetry
-//! and fault schedule — sharded round-robin across OS threads
-//! (`std::thread::scope`, one shard per core by default). After the plant
-//! runs finish, the shared facility pass (`facility`) pools the per-tick
-//! recovered heat in plant-index order, drives the aggregate adsorption
-//! chiller, and feeds the cooling credit back into each plant's energy
-//! account; `aggregate` reduces the fleet to PUE/ERE distributions and the
+//! and fault schedule — sharded in contiguous index blocks across OS
+//! threads (`std::thread::scope`, one shard per core by default;
+//! `util::shard::blocks` — block assignment decorrelates shard load from
+//! the index-modulo patterns scenarios use, e.g. `mixed`'s
+//! stress/production/idle thirds, which round-robin sharding used to
+//! pile onto single shards). Within a shard, plants either run to
+//! completion one at a time, or — the **megabatch** default
+//! (`FleetConfig::megabatch`, `IDATACOOL_FLEET_MEGABATCH`) — advance in
+//! tick lockstep over one shared SoA lane arena (`megabatch`), one
+//! kernel sweep per substep for the whole shard. The shared facility
+//! pass (`facility`) pools the per-tick recovered heat in plant-index
+//! order, drives the aggregate adsorption chiller, and feeds the cooling
+//! credit back into each plant's energy account — per tick during the
+//! run for a 1-shard megabatch, by post-hoc trace replay otherwise
+//! (identical inputs in identical order, so bitwise the same report);
+//! `aggregate` reduces the fleet to PUE/ERE distributions and the
 //! facility energy-reuse headline.
 //!
 //! Determinism: per-plant seeds are a pure function of the fleet seed and
 //! the plant index (`plant_seed`), plant simulations are self-contained,
-//! and every cross-plant reduction runs in plant-index order — so a
-//! K-shard run is bitwise identical to a 1-shard run with the same seeds.
+//! every cross-plant reduction runs in plant-index order, and the
+//! megabatch arena is bitwise identical to per-plant stepping — so any
+//! (shard count, megabatch) combination produces byte-identical
+//! `idatacool-fleet/1` output (`tests/fleet_integration.rs`).
 
 pub mod aggregate;
 pub mod facility;
+pub mod megabatch;
 pub mod scenario;
 
 use std::time::Instant;
@@ -26,13 +39,14 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::SimConfig;
-use crate::coordinator::{RunResult, SimulationDriver};
+use crate::coordinator::{RunResult, SimulationDriver, TraceSample};
 use crate::util::json::{Json, JsonBuilder};
-use crate::util::shard::round_robin;
+use crate::util::shard::blocks;
 use crate::variability::rng::splitmix64;
 
 use aggregate::FleetAggregate;
 use facility::{FacilityModel, FacilityParams, FacilityReport, PlantTick};
+use megabatch::LockstepFleet;
 use scenario::{PlantSpec, Scenario};
 
 /// Fleet-level run configuration.
@@ -47,6 +61,23 @@ pub struct FleetConfig {
     /// Fleet seed; per-plant seeds derive from it via `plant_seed`.
     pub fleet_seed: u64,
     pub scenario: Scenario,
+    /// Advance each shard's plants in tick lockstep over one shared SoA
+    /// lane arena instead of running them as N independent kernel
+    /// instances. Execution shape only — results are bitwise identical
+    /// either way — so it never enters result documents or cache keys.
+    /// Default: `default_megabatch()` (on, unless
+    /// `IDATACOOL_FLEET_MEGABATCH=0`).
+    pub megabatch: bool,
+}
+
+/// Resolve the `IDATACOOL_FLEET_MEGABATCH` environment override
+/// (strictly `0|1|true|false`; garbage is an error, not a silent
+/// fall-back). Unset means **on**: the megabatch path is bitwise
+/// identical to per-plant stepping, so it is the default execution
+/// shape.
+pub fn default_megabatch() -> Result<bool> {
+    Ok(crate::util::cli::env_bool_strict("IDATACOOL_FLEET_MEGABATCH")?
+        .unwrap_or(true))
 }
 
 /// One plant's finished run plus its fleet identity.
@@ -140,17 +171,51 @@ impl FleetDriver {
         let specs = self.specs();
         let n_plants = specs.len();
         let shards = self.cfg.shards.clamp(1, n_plants);
+        let params =
+            FacilityParams::from_plant(&self.cfg.base.pp, self.cfg.n_plants);
+        // Config-level precheck: a base that cannot lockstep (pinned
+        // hlo backend / reference kernel) keeps the per-plant path's
+        // one-driver-at-a-time memory profile instead of constructing a
+        // whole bucket of drivers just to be handed them back.
+        let lockstep = self.cfg.megabatch && megabatch::precheck(&self.cfg.base);
 
-        // Round-robin shard assignment: plant i -> shard i % K (shared
-        // with the parallel setpoint sweep, util::shard).
-        let buckets = round_robin(specs, shards);
+        // Single-shard megabatch: the whole fleet advances in tick
+        // lockstep, so the shared facility loop is fed per tick instead
+        // of replaying traces post-hoc (same inputs, same plant order —
+        // bitwise the same report).
+        if lockstep && shards == 1 {
+            match LockstepFleet::new(megabatch::build_ctxs(specs)?) {
+                Ok(ls) => {
+                    let model = FacilityModel::new(params, n_plants);
+                    let (plants, facility) = ls.run(Some(model))?;
+                    let facility =
+                        facility.expect("streamed facility report");
+                    return Ok(assemble(plants, facility, shards, start));
+                }
+                // Not lockstep-eligible on the deep per-plant check:
+                // fall through to the per-plant path with the
+                // already-built drivers.
+                Err(ctxs) => {
+                    let plants = megabatch::run_ctxs_sequential(ctxs)?;
+                    let facility = run_facility(&plants, params);
+                    return Ok(assemble(plants, facility, shards, start));
+                }
+            }
+        }
+
+        // Contiguous block sharding: plant order inside a shard equals
+        // fleet order, and shard sizes differ by at most one for any
+        // n_plants % shards. Assignment is order-independent for
+        // results — every cross-plant reduction runs in plant-index
+        // order regardless of which shard ran a plant.
+        let buckets = blocks(specs, shards);
 
         let mut slots: Vec<Option<PlantRun>> =
             (0..n_plants).map(|_| None).collect();
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::with_capacity(buckets.len());
             for bucket in buckets {
-                handles.push(scope.spawn(move || run_bucket(bucket)));
+                handles.push(scope.spawn(move || run_bucket(bucket, lockstep)));
             }
             for h in handles {
                 let shard_runs = h
@@ -172,23 +237,39 @@ impl FleetDriver {
             .collect::<Result<_>>()?;
 
         // Facility pass + aggregation, both in plant-index order.
-        let params =
-            FacilityParams::from_plant(&self.cfg.base.pp, self.cfg.n_plants);
         let facility = run_facility(&plants, params);
-        let aggregate = FleetAggregate::build(&plants, &facility);
-
-        Ok(FleetRun {
-            plants,
-            facility,
-            aggregate,
-            shards,
-            wall_s: start.elapsed().as_secs_f64(),
-        })
+        Ok(assemble(plants, facility, shards, start))
     }
 }
 
-/// Run one shard's plants sequentially (each plant owns its full driver).
-fn run_bucket(bucket: Vec<PlantSpec>) -> Result<Vec<PlantRun>> {
+/// The one place a `FleetRun` is put together — every execution path
+/// (streamed-facility lockstep, lockstep fallback, sharded) funnels
+/// through here so the assembly cannot drift between them.
+fn assemble(plants: Vec<PlantRun>, facility: FacilityReport, shards: usize,
+            start: Instant) -> FleetRun {
+    let aggregate = FleetAggregate::build(&plants, &facility);
+    FleetRun {
+        plants,
+        facility,
+        aggregate,
+        shards,
+        wall_s: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run one shard's plants: in tick lockstep over one shared lane arena
+/// (megabatch, config-prechecked by the caller), or sequentially, each
+/// plant owning its full driver.
+fn run_bucket(bucket: Vec<PlantSpec>, lockstep: bool)
+              -> Result<Vec<PlantRun>> {
+    if lockstep {
+        return match LockstepFleet::new(megabatch::build_ctxs(bucket)?) {
+            Ok(ls) => ls.run(None).map(|(plants, _)| plants),
+            Err(ctxs) => megabatch::run_ctxs_sequential(ctxs),
+        };
+    }
+    // Megabatch off (or not lockstep-capable): one plant at a time —
+    // only one driver alive per shard at any moment.
     let mut out = Vec::with_capacity(bucket.len());
     for spec in bucket {
         let PlantSpec { index, label, seed, cfg, faults } = spec;
@@ -199,6 +280,18 @@ fn run_bucket(bucket: Vec<PlantSpec>) -> Result<Vec<PlantRun>> {
         out.push(PlantRun { index, label, seed, tick_s, result });
     }
     Ok(out)
+}
+
+/// One trace sample's contribution to the facility loop — the single
+/// conversion both facility feeds (post-hoc replay here, per-tick
+/// streaming in `megabatch::LockstepFleet::run`) share, so they cannot
+/// drift.
+pub(crate) fn plant_tick_of(s: &TraceSample) -> PlantTick {
+    PlantTick {
+        p_heat_w: s.p_d,
+        t_return: s.t_rack_out,
+        p_ac_w: s.p_ac,
+    }
 }
 
 /// Replay the finished plant traces through the shared facility loop,
@@ -216,12 +309,7 @@ pub fn run_facility(plants: &[PlantRun], params: FacilityParams)
     for t in 0..n_ticks {
         inputs.clear();
         for p in plants {
-            let s = &p.result.trace[t];
-            inputs.push(PlantTick {
-                p_heat_w: s.p_d,
-                t_return: s.t_rack_out,
-                p_ac_w: s.p_ac,
-            });
+            inputs.push(plant_tick_of(&p.result.trace[t]));
         }
         model.pool_tick(&inputs, dt);
     }
@@ -256,6 +344,7 @@ mod tests {
             base: base.clone(),
             fleet_seed: 1,
             scenario,
+            megabatch: true,
         };
         assert!(FleetDriver::new(bad).is_err());
         let bad = FleetConfig {
@@ -264,8 +353,18 @@ mod tests {
             base,
             fleet_seed: 1,
             scenario,
+            megabatch: true,
         };
         assert!(FleetDriver::new(bad).is_err());
+    }
+
+    #[test]
+    fn megabatch_defaults_on_without_env() {
+        // The parse half is covered by util::cli; here: the unset-env
+        // default is on (tests must not mutate process-global env).
+        if std::env::var_os("IDATACOOL_FLEET_MEGABATCH").is_none() {
+            assert!(default_megabatch().unwrap());
+        }
     }
 
     #[test]
@@ -277,6 +376,7 @@ mod tests {
             base,
             fleet_seed: 9,
             scenario: Scenario::by_name("mixed").unwrap(),
+            megabatch: true,
         };
         let d = FleetDriver::new(cfg).unwrap();
         let specs = d.specs();

@@ -123,6 +123,14 @@ impl Scenario {
     ///
     /// Overrides are deliberately conservative: every produced config must
     /// pass `SimConfig::validate` for any base config that does.
+    ///
+    /// Lockstep invariant (megabatch eligibility): scenarios override
+    /// workloads, setpoints, faults and environment — never the plant
+    /// constants (`pp`), the cluster size, the backend/kernel selection,
+    /// or the run duration. Every spec derived from one base therefore
+    /// shares the substep count, tick length and tick count, which is
+    /// what lets `fleet::megabatch` advance a whole shard over one lane
+    /// arena (`specs_stay_lockstep_uniform` pins this).
     pub fn plant_spec(
         &self,
         index: usize,
@@ -257,6 +265,26 @@ mod tests {
         assert_eq!(a.cfg.t_ambient, b.cfg.t_ambient);
         assert_eq!(a.label, b.label);
         assert_eq!(a.faults, b.faults);
+    }
+
+    #[test]
+    fn specs_stay_lockstep_uniform() {
+        // Megabatch eligibility: every catalog entry must keep the
+        // plant constants, cluster size, backend/kernel and duration of
+        // the base config, so a shard's plants share one arena and one
+        // tick grid (see plant_spec's lockstep invariant).
+        let base = SimConfig::test_small();
+        for name in Scenario::names() {
+            let s = Scenario::by_name(name).unwrap();
+            for i in 0..6 {
+                let spec = s.plant_spec(i, 6, &base, 7 + i as u64);
+                assert_eq!(spec.cfg.pp, base.pp, "{name} plant {i}: pp");
+                assert_eq!(spec.cfg.n_nodes, base.n_nodes, "{name}");
+                assert_eq!(spec.cfg.backend, base.backend, "{name}");
+                assert_eq!(spec.cfg.kernel, base.kernel, "{name}");
+                assert_eq!(spec.cfg.duration_s, base.duration_s, "{name}");
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!   idatacool run --preset full --duration 3600 --setpoint 67
 //!   idatacool fleet --plants 8 --scenario heatwave --shards 4
 //!   idatacool fleet --plants 8 --scenario heatwave --json fleet.json
+//!   idatacool fleet --plants 8 --megabatch 0   # per-plant reference path
 //!   idatacool serve --addr 127.0.0.1:8080 --workers 4 --cache-cap 64
 //!   idatacool figures --fig all --quick --out results
 //!   idatacool bench --suite hotpath --json BENCH_hotpath.json
@@ -71,16 +72,22 @@ common flags:
   --seed <n>
 fleet flags:
   --plants <n>           number of plants in the fleet (default 4)
-  --shards <k>           OS threads to shard plants over (default: cores)
+  --shards <k>           OS threads to shard plants over (default: cores;
+                         plants split into contiguous index blocks)
   --scenario <name>      baseline|heatwave|chiller-outage|pump-degradation|
                          load-surge|mixed (default baseline)
+  --megabatch <0|1>      tick-lockstep each shard's plants over one shared
+                         SoA lane arena (default on; env override
+                         IDATACOOL_FLEET_MEGABATCH, strict-parsed; bitwise
+                         identical to the per-plant path either way)
   --json <path>          also write the machine-readable fleet summary
                          (idatacool-fleet/1: PUE/ERE aggregates, per-plant
                          credits, determinism fingerprint — the same
                          document POST /fleet serves)
-  (common flags above configure the per-plant base; every scenario except
-   baseline sets the workload itself, and backend \"auto\" resolves to
-   native for fleet runs)
+  (common flags above configure the per-plant base; a --config file's
+   [fleet] section sets plants/shards/megabatch, flags win over env, env
+   wins over TOML; every scenario except baseline sets the workload
+   itself, and backend \"auto\" resolves to native for fleet runs)
 serve flags:
   --addr <host:port>     bind address (default 127.0.0.1:8080; :0 picks an
                          ephemeral port)
@@ -205,14 +212,23 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    let mut base = build_config(args)?;
+    use idatacool::config::FleetSettings;
+
+    // One read+parse of --config serves both consumers: the SimConfig
+    // base and the [fleet] section.
+    let doc = load_config_doc(args)?;
+    let mut base = build_config_with(args, doc.as_ref())?;
     // Fleet runs shard plant backends across threads; resolve the default
     // "auto" to the artifact-independent native backend, but respect a
     // backend pinned via --backend or a config file.
     if base.backend == "auto" {
         base.backend = "native".into();
     }
-    let n_plants = args.usize_strict("plants", 4)?;
+    let mut fs = FleetSettings::default();
+    if let Some(doc) = &doc {
+        fs = FleetSettings::from_toml(doc)?;
+    }
+    let n_plants = args.usize_strict("plants", fs.plants.unwrap_or(4))?;
     anyhow::ensure!(
         n_plants >= 1,
         "--plants must be at least 1 (a fleet needs at least one plant)"
@@ -220,7 +236,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    let shards_req = args.usize_strict("shards", cores.min(n_plants))?;
+    let shards_req = args
+        .usize_strict("shards", fs.shards.unwrap_or(cores.min(n_plants)))?;
     anyhow::ensure!(
         shards_req >= 1,
         "--shards must be at least 1 (use 1 for a serial run)"
@@ -236,14 +253,29 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     } else {
         shards_req
     };
+    // Precedence: TOML [fleet] < IDATACOOL_FLEET_MEGABATCH env < flag.
+    // The unset-everything default lives in fleet::default_megabatch —
+    // the single source the server and bench suites also resolve from.
+    let mut megabatch = match idatacool::util::cli::env_bool_strict(
+        "IDATACOOL_FLEET_MEGABATCH",
+    )? {
+        Some(b) => b,
+        None => match fs.megabatch {
+            Some(b) => b,
+            None => idatacool::fleet::default_megabatch()?,
+        },
+    };
+    megabatch = args.bool_strict("megabatch", megabatch)?;
     let scenario = Scenario::by_name(args.str_or("scenario", "baseline"))?;
     let kernel = idatacool::plant::PlantKernel::resolve(&base.kernel)?;
 
     println!(
         "fleet: {} plants x {} nodes ({} backend, {} kernel), \
-         scenario '{}' ({}), {} shards, {:.0}s sim, fleet seed {:#x}",
+         scenario '{}' ({}), {} shards, megabatch {}, {:.0}s sim, \
+         fleet seed {:#x}",
         n_plants, base.n_nodes, base.backend, kernel.name(), scenario.name(),
-        scenario.description(), shards, base.duration_s, base.seed,
+        scenario.description(), shards,
+        if megabatch { "on" } else { "off" }, base.duration_s, base.seed,
     );
 
     let fleet_seed = base.seed;
@@ -253,6 +285,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         base,
         fleet_seed,
         scenario,
+        megabatch,
     })?;
     let run = driver.run()?;
 

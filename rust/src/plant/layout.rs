@@ -77,27 +77,63 @@ pub const fn pad_nodes(n: usize, tile: usize) -> usize {
     n.div_ceil(tile) * tile
 }
 
+/// One plant's contiguous slice of a lane arena (`plant::soa`).
+///
+/// A lane arena packs several plants into shared `[slot][total]` lanes;
+/// plant `p` owns offsets `[offset, offset + npad)` of every lane, of
+/// which the first `n_valid` are real nodes (the rest is tile padding,
+/// so every range starts and ends on a vector-width boundary). A
+/// single-plant `SoaState` is the degenerate arena: one range at offset
+/// 0 spanning the whole lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneRange {
+    /// First lane offset of this plant.
+    pub offset: usize,
+    /// Valid (non-padding) node count.
+    pub n_valid: usize,
+    /// Padded width of the plant's slice (its `PlantStatic::n_padded`).
+    pub npad: usize,
+}
+
 /// Transpose a node-major `[n][w]` buffer into lane-major `[w][n]`
 /// (the SoA kernel's layout: one contiguous `n`-length lane per state /
 /// channel / core slot, so a scalar-broadcast FMA sweeps all nodes).
 pub fn transpose_to_lanes(src: &[f32], dst: &mut [f32], n: usize, w: usize) {
-    debug_assert_eq!(src.len(), n * w);
-    debug_assert_eq!(dst.len(), n * w);
-    for i in 0..n {
-        for s in 0..w {
-            dst[s * n + i] = src[i * w + s];
-        }
-    }
+    transpose_to_lanes_at(src, dst, n, w, n, 0);
 }
 
 /// Inverse of `transpose_to_lanes`: lane-major `[w][n]` back to
 /// node-major `[n][w]`.
 pub fn transpose_from_lanes(src: &[f32], dst: &mut [f32], n: usize, w: usize) {
+    transpose_from_lanes_at(src, dst, n, w, n, 0);
+}
+
+/// Transpose node-major `[n][w]` into a slice of an arena whose lanes
+/// are `stride` long: node `i`, slot `s` lands at
+/// `dst[s * stride + offset + i]`. With `stride == n`, `offset == 0`
+/// this is the plain single-plant transpose.
+pub fn transpose_to_lanes_at(src: &[f32], dst: &mut [f32], n: usize,
+                             w: usize, stride: usize, offset: usize) {
     debug_assert_eq!(src.len(), n * w);
-    debug_assert_eq!(dst.len(), n * w);
+    debug_assert_eq!(dst.len(), stride * w);
+    debug_assert!(offset + n <= stride);
     for i in 0..n {
         for s in 0..w {
-            dst[i * w + s] = src[s * n + i];
+            dst[s * stride + offset + i] = src[i * w + s];
+        }
+    }
+}
+
+/// Inverse of `transpose_to_lanes_at`: one plant's slice of an arena
+/// back to node-major `[n][w]`.
+pub fn transpose_from_lanes_at(src: &[f32], dst: &mut [f32], n: usize,
+                               w: usize, stride: usize, offset: usize) {
+    debug_assert_eq!(src.len(), stride * w);
+    debug_assert_eq!(dst.len(), n * w);
+    debug_assert!(offset + n <= stride);
+    for i in 0..n {
+        for s in 0..w {
+            dst[i * w + s] = src[s * stride + offset + i];
         }
     }
 }
@@ -131,5 +167,33 @@ mod tests {
         let mut back = vec![0.0; n * w];
         transpose_from_lanes(&lanes, &mut back, n, w);
         assert_eq!(back, src);
+    }
+
+    #[test]
+    fn strided_transpose_targets_the_arena_slice() {
+        // Two plants (n=3 and n=2) in one stride-5 arena, w=2 slots.
+        let (w, stride) = (2usize, 5usize);
+        let a: Vec<f32> = (0..3 * w).map(|x| x as f32).collect();
+        let b: Vec<f32> = (0..2 * w).map(|x| 100.0 + x as f32).collect();
+        let mut arena = vec![-1.0; stride * w];
+        transpose_to_lanes_at(&a, &mut arena, 3, w, stride, 0);
+        transpose_to_lanes_at(&b, &mut arena, 2, w, stride, 3);
+        for i in 0..3 {
+            for s in 0..w {
+                assert_eq!(arena[s * stride + i], a[i * w + s]);
+            }
+        }
+        for i in 0..2 {
+            for s in 0..w {
+                assert_eq!(arena[s * stride + 3 + i], b[i * w + s]);
+            }
+        }
+        // round-trip each slice independently
+        let mut back_a = vec![0.0; 3 * w];
+        let mut back_b = vec![0.0; 2 * w];
+        transpose_from_lanes_at(&arena, &mut back_a, 3, w, stride, 0);
+        transpose_from_lanes_at(&arena, &mut back_b, 2, w, stride, 3);
+        assert_eq!(back_a, a);
+        assert_eq!(back_b, b);
     }
 }

@@ -137,6 +137,15 @@ impl TickOutput {
         TickOutput { node_obs: vec![0.0; n_padded * OBS_N], scalars: [0.0; NS] }
     }
 
+    /// Re-arm a possibly reused buffer for a fresh run: size it for
+    /// `n_padded` and zero everything — equivalent to `TickOutput::new`
+    /// without the allocation (the serve path keeps one per worker).
+    pub fn reset(&mut self, n_padded: usize) {
+        self.node_obs.clear();
+        self.node_obs.resize(n_padded * OBS_N, 0.0);
+        self.scalars = [0.0; NS];
+    }
+
     #[inline]
     pub fn node(&self, i: usize) -> &[f32] {
         &self.node_obs[i * OBS_N..(i + 1) * OBS_N]

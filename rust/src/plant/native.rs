@@ -17,6 +17,34 @@ use super::soa::{self, SoaState};
 use super::{PlantKernel, PlantStatic, TickOutput};
 use crate::config::constants::PlantParams;
 
+/// Which copy of the node thermal state is current.
+///
+/// The reference kernel always keeps the node-major buffer
+/// authoritative (`NodeMajor`). The SoA kernel keeps its lanes
+/// **resident**: after a tick the lanes are authoritative and the
+/// node-major buffer is stale (`LanesDirty`) until a consumer calls
+/// `NativePlant::node_state()`, which materializes it lazily
+/// (`InSync`). Steady-state runs that never read node-major state do
+/// zero state transposes after warm-up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LaneSync {
+    /// node-major is authoritative; lanes must be loaded before a tick.
+    NodeMajor,
+    /// Lanes are authoritative; the node-major buffer is stale.
+    LanesDirty,
+    /// Lanes are authoritative and the node-major buffer matches them.
+    InSync,
+}
+
+/// Effective pump flow from the control vector: the nominal flow scale
+/// derated by pump failure, floored away from zero. The single
+/// definition shared by `NativePlant::tick` and the fleet megabatch
+/// engine — the megabatch bitwise-identity contract depends on the two
+/// paths computing this term-for-term identically.
+pub(crate) fn effective_flow(controls: &[f32]) -> f32 {
+    (controls[U_FLOW_SCALE] * (1.0 - controls[U_PUMP_FAIL])).max(1e-3)
+}
+
 /// Pure-Rust plant simulation state + stepper.
 #[derive(Debug)]
 pub struct NativePlant {
@@ -25,9 +53,12 @@ pub struct NativePlant {
     pub st: PlantStatic,
     pub substeps: usize,
     pub kernel: PlantKernel,
-    /// [npad * S] node thermal state (node-major, authoritative between
-    /// ticks for both kernels).
-    pub node_state: Vec<f32>,
+    /// [npad * S] node thermal state, node-major. Authoritative for the
+    /// reference kernel; for the SoA kernel it is a lazily-materialized
+    /// view of the resident lanes — read it through `node_state()`.
+    node_major: Vec<f32>,
+    /// Which buffer is current (see `LaneSync`).
+    sync: LaneSync,
     /// [CS] circuit state
     pub circuit_state: Vec<f32>,
     scratch: NodeScratch,
@@ -36,7 +67,9 @@ pub struct NativePlant {
     /// Effective flow of the last tick: the g_eff rebuild is skipped
     /// while the pump controls are unchanged.
     last_flow: Option<f32>,
-    /// Lane-major state (allocated only for the SoA kernel).
+    /// Resident lane state (SoA kernel only), allocated lazily on the
+    /// first tick — a plant driven externally through a megabatch arena
+    /// (`fleet::megabatch`) never carries its own lanes.
     soa: Option<SoaState>,
 }
 
@@ -54,8 +87,9 @@ impl NativePlant {
         let circuit_state = circuits::initial_circuit_state(t_water, &pp);
         // Each kernel owns its working set; the other's stays empty so
         // a fleet of SoA plants does not carry dead AoS buffers (and
-        // vice versa).
-        let (scratch, g_eff, q_base, soa) = match kernel {
+        // vice versa). The SoA lanes allocate lazily on the first tick
+        // (see the `soa` field).
+        let (scratch, g_eff, q_base) = match kernel {
             PlantKernel::Reference => {
                 // q_base has exactly two live entries per node: the
                 // advective inlet (updated every substep) and the sink
@@ -69,23 +103,21 @@ impl NativePlant {
                 for i in 0..n {
                     q_base[i * S + IDX_SINK] = q_sink_const;
                 }
-                (NodeScratch::new(npad), vec![0.0; npad * NG], q_base, None)
+                (NodeScratch::new(npad), vec![0.0; npad * NG], q_base)
             }
-            PlantKernel::Soa => (
-                NodeScratch::new(0),
-                Vec::new(),
-                Vec::new(),
-                Some(SoaState::new(&st, &ops, &pp)),
-            ),
+            PlantKernel::Soa => {
+                (NodeScratch::new(0), Vec::new(), Vec::new())
+            }
         };
         NativePlant {
             scratch,
             g_eff,
             q_base,
-            node_state: vec![t_water; npad * S],
+            node_major: vec![t_water; npad * S],
+            sync: LaneSync::NodeMajor,
             circuit_state,
             last_flow: None,
-            soa,
+            soa: None,
             kernel,
             pp,
             ops,
@@ -95,20 +127,56 @@ impl NativePlant {
     }
 
     pub fn reset(&mut self, t_water: f32) {
-        self.node_state.fill(t_water);
+        self.node_major.fill(t_water);
+        // The node-major buffer is the edited copy; lanes reload on the
+        // next tick.
+        self.sync = LaneSync::NodeMajor;
         self.circuit_state =
             circuits::initial_circuit_state(t_water, &self.pp);
         self.last_flow = None;
+    }
+
+    /// Node thermal state `[npad * S]`, node-major. For the SoA kernel
+    /// this is the **lazy** transpose of the resident lanes: the first
+    /// call after a tick pays one materialization, repeat calls are
+    /// free, and runs that never call it do zero state transposes.
+    pub fn node_state(&mut self) -> &[f32] {
+        self.sync_node_major();
+        &self.node_major
+    }
+
+    /// Materialize the node-major view if the lanes are newer.
+    fn sync_node_major(&mut self) {
+        if self.sync == LaneSync::LanesDirty {
+            let soa = self.soa.as_ref().expect("dirty lanes without state");
+            soa.materialize(&mut self.node_major);
+            self.sync = LaneSync::InSync;
+        }
+    }
+
+    /// Overwrite the node-major state from an external source — the
+    /// fleet megabatch engine hands each plant its final arena slice
+    /// back at run end, so a driver that was lockstep-driven reports
+    /// the real thermal state (not the warm-up fill) to any later
+    /// consumer. Invalidates the (untouched) internal lanes; a
+    /// subsequent tick reloads them from this buffer.
+    pub(crate) fn adopt_node_state(&mut self, state: &[f32]) {
+        self.node_major.copy_from_slice(state);
+        self.sync = LaneSync::NodeMajor;
     }
 
     /// Rebuild the kernel's derived state after an external edit to the
     /// static inputs (`st` is `pub`): the SoA lane mirrors and the
     /// flow-derived `g_eff` cache both copy from `st` and would
     /// otherwise keep serving stale values until the pump control
-    /// changes.
+    /// changes. The current thermal state is preserved (materialized
+    /// first if the lanes are newer); the lanes themselves are dropped
+    /// and rebuilt from the edited statics on the next tick.
     pub fn refresh_static(&mut self) {
+        self.sync_node_major();
         if self.kernel == PlantKernel::Soa {
-            self.soa = Some(SoaState::new(&self.st, &self.ops, &self.pp));
+            self.soa = None;
+            self.sync = LaneSync::NodeMajor;
         }
         self.last_flow = None;
     }
@@ -117,8 +185,7 @@ impl NativePlant {
     pub fn tick(&mut self, controls: &[f32], util: &[f32],
                 out: &mut TickOutput) {
         let n = self.st.n_nodes;
-        let flow = (controls[U_FLOW_SCALE] * (1.0 - controls[U_PUMP_FAIL]))
-            .max(1e-3);
+        let flow = effective_flow(controls);
         // g_eff depends only on the static conductances and the pump
         // flow; skip the rebuild while the controls keep it unchanged.
         let flow_changed = self.last_flow != Some(flow);
@@ -148,7 +215,7 @@ impl NativePlant {
                             self.g_eff[i * NG + G_ADV] * t_in * inv_c_w;
                     }
                     let p_dc = node::fused_substep(
-                        &mut self.node_state, &self.g_eff, util,
+                        &mut self.node_major, &self.g_eff, util,
                         &self.st.p_dyn, &self.st.p_idle, &self.st.active,
                         &self.q_base, &self.ops, &self.pp,
                         &mut self.scratch, n,
@@ -157,7 +224,7 @@ impl NativePlant {
                     // over the valid prefix.
                     let mut t_out_raw = 0.0f32;
                     for i in 0..n {
-                        t_out_raw += self.node_state[i * S + IDX_WATER];
+                        t_out_raw += self.node_major[i * S + IDX_WATER];
                     }
                     t_out_raw /= n as f32;
                     circuits::circuit_substep(
@@ -167,14 +234,30 @@ impl NativePlant {
                 self.observe(controls, util, out);
             }
             PlantKernel::Soa => {
-                let soa = self.soa.as_mut().expect("SoA kernel state");
-                if flow_changed {
-                    soa.set_flow(flow);
+                if self.soa.is_none() {
+                    self.soa =
+                        Some(SoaState::new(&self.st, &self.ops, &self.pp));
                 }
-                soa.load(&self.node_state, util);
+                let soa = self.soa.as_mut().expect("just allocated");
+                let r = LaneRange {
+                    offset: 0,
+                    n_valid: n,
+                    npad: self.st.n_padded,
+                };
+                if flow_changed {
+                    soa.set_flow_range(flow, r);
+                }
+                // Resident lanes: the state transpose-in runs only when
+                // the node-major buffer was edited (construction, reset,
+                // refresh_static) — not per tick. Utilization is a
+                // genuine per-tick input.
+                if self.sync == LaneSync::NodeMajor {
+                    soa.load_state_range(&self.node_major, r);
+                }
+                soa.load_util_range(util, r);
                 for _ in 0..self.substeps {
                     let t_in = self.circuit_state[C_T_RACK_IN];
-                    soa.set_inlet(t_in, inv_c_w);
+                    soa.set_inlet_range(t_in, inv_c_w, r);
                     let (p_dc, t_out_sum) =
                         soa::soa_substep(soa, &self.pp, n);
                     let t_out_raw = t_out_sum / n as f32;
@@ -182,11 +265,12 @@ impl NativePlant {
                         &mut self.circuit_state, controls, t_out_raw,
                         p_dc, n, &self.pp);
                 }
-                // Fused epilogue: observations + the node-major
-                // write-back come out of the lanes in one pass.
-                let (p_dc, throttling, core_max_all) = soa::soa_observe(
-                    soa, &self.pp, n, &mut self.node_state,
-                    &mut out.node_obs);
+                // Fused epilogue straight from the lanes; no node-major
+                // write-back — node_state() materializes lazily.
+                let (p_dc, throttling, core_max_all) =
+                    soa::soa_observe_range(soa, &self.pp, r,
+                                           &mut out.node_obs);
+                self.sync = LaneSync::LanesDirty;
                 self.fill_scalars(controls, p_dc, throttling,
                                   core_max_all, out);
             }
@@ -206,7 +290,7 @@ impl NativePlant {
         let mut core_max_all = f32::MIN;
 
         for i in 0..npad {
-            let ts = &self.node_state[i * S..(i + 1) * S];
+            let ts = &self.node_major[i * S..(i + 1) * S];
             let mut p_node = 0.0f32;
             let mut tsum = 0.0f32;
             let mut tmax = -1e9f32;
@@ -254,9 +338,11 @@ impl NativePlant {
         self.fill_scalars(controls, p_dc, throttling, core_max_all, out);
     }
 
-    /// Scalar block shared by both kernels' epilogues.
-    fn fill_scalars(&self, controls: &[f32], p_dc: f64, throttling: f32,
-                    core_max_all: f32, out: &mut TickOutput) {
+    /// Scalar block shared by both kernels' epilogues (and by the fleet
+    /// megabatch engine, which runs the SoA epilogue externally).
+    pub(crate) fn fill_scalars(&self, controls: &[f32], p_dc: f64,
+                               throttling: f32, core_max_all: f32,
+                               out: &mut TickOutput) {
         let pp = &self.pp;
         let cs = &self.circuit_state;
         let mcp = (pp.rack_mcp(self.st.n_nodes) as f32
@@ -358,7 +444,7 @@ mod tests {
             plant.tick(&controls, &util, &mut out);
         }
         plant.reset(20.0);
-        assert!(plant.node_state.iter().all(|&t| t == 20.0));
+        assert!(plant.node_state().iter().all(|&t| t == 20.0));
         assert_eq!(plant.circuit_state[C_T_RACK_IN], 20.0);
     }
 
@@ -374,7 +460,8 @@ mod tests {
             refp.tick(&controls, &util, &mut or);
             soap.tick(&controls, &util, &mut os);
         }
-        for (a, b) in refp.node_state.iter().zip(&soap.node_state) {
+        let ns_ref = refp.node_state().to_vec();
+        for (a, b) in ns_ref.iter().zip(soap.node_state()) {
             assert!((a - b).abs() < 1e-3, "state: ref {a} vs soa {b}");
         }
         for i in 0..NS {
@@ -446,20 +533,88 @@ mod tests {
     }
 
     #[test]
+    fn resident_lanes_materialize_lazily_and_exactly() {
+        // The resident-state contract: node_state() after a lazy
+        // materialization is bitwise equal to an eager twin that
+        // materializes after every tick, repeat reads are stable, and
+        // reading the view does not perturb the subsequent evolution.
+        let (mut lazy, controls, util) = make_with(13, PlantKernel::Soa);
+        let (mut eager, _, _) = make_with(13, PlantKernel::Soa);
+        let mut ol = TickOutput::new(lazy.st.n_padded);
+        let mut oe = TickOutput::new(eager.st.n_padded);
+        for _ in 0..30 {
+            lazy.tick(&controls, &util, &mut ol);
+            eager.tick(&controls, &util, &mut oe);
+            let _ = eager.node_state(); // eager per-tick write-back
+        }
+        let a = lazy.node_state().to_vec();
+        let b = eager.node_state().to_vec();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "lazy vs eager");
+        }
+        // repeat reads are free and identical (InSync)
+        assert_eq!(lazy.node_state(), &a[..]);
+        // the materialized view matches the lanes exactly
+        let mut direct = vec![0.0f32; lazy.st.n_padded * S];
+        lazy.soa.as_ref().unwrap().materialize(&mut direct);
+        assert_eq!(lazy.node_state(), &direct[..]);
+        // ticking on continues from the resident lanes, in lockstep
+        lazy.tick(&controls, &util, &mut ol);
+        eager.tick(&controls, &util, &mut oe);
+        let a = lazy.node_state().to_vec();
+        for (x, y) in a.iter().zip(eager.node_state()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "post-read divergence");
+        }
+    }
+
+    #[test]
+    fn adopted_state_is_served_and_reloaded() {
+        // The megabatch hand-back path: adopt_node_state must replace
+        // the node-major view immediately and the next tick must reload
+        // the lanes from it (not from the stale resident lanes).
+        let (mut plant, controls, util) = make_with(13, PlantKernel::Soa);
+        let mut out = TickOutput::new(plant.st.n_padded);
+        for _ in 0..5 {
+            plant.tick(&controls, &util, &mut out);
+        }
+        let external = vec![33.5f32; plant.st.n_padded * S];
+        plant.adopt_node_state(&external);
+        assert_eq!(plant.node_state(), &external[..]);
+        // the next tick evolves from the adopted state: a twin started
+        // from the same state + circuits must match bitwise
+        let (mut twin, _, _) = make_with(13, PlantKernel::Soa);
+        twin.adopt_node_state(&external);
+        twin.circuit_state.copy_from_slice(&plant.circuit_state);
+        plant.tick(&controls, &util, &mut out);
+        let mut out2 = TickOutput::new(twin.st.n_padded);
+        twin.tick(&controls, &util, &mut out2);
+        for (a, b) in out.scalars.iter().zip(&out2.scalars) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let a = plant.node_state().to_vec();
+        for (x, y) in a.iter().zip(twin.node_state()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
     fn energy_is_not_created() {
         // Node enthalpy cannot rise faster than electrical input allows.
         let (mut plant, controls, util) = make(13);
         let mut out = TickOutput::new(plant.st.n_padded);
         let c: Vec<f32> =
             plant.ops.inv_c.iter().map(|&ic| 1.0 / ic).collect();
+        let n_states = plant.st.n_nodes * S;
         for _ in 0..50 {
-            let before: f64 = (0..plant.st.n_nodes * S)
-                .map(|i| plant.node_state[i] as f64 * c[i % S] as f64)
-                .sum();
+            let before: f64 = {
+                let ns = plant.node_state();
+                (0..n_states).map(|i| ns[i] as f64 * c[i % S] as f64).sum()
+            };
             plant.tick(&controls, &util, &mut out);
-            let after: f64 = (0..plant.st.n_nodes * S)
-                .map(|i| plant.node_state[i] as f64 * c[i % S] as f64)
-                .sum();
+            let after: f64 = {
+                let ns = plant.node_state();
+                (0..n_states).map(|i| ns[i] as f64 * c[i % S] as f64).sum()
+            };
             let dt = plant.substeps as f64 * plant.pp.dt_substep;
             let de = (after - before) / dt;
             assert!(de < out.scalars[SC_P_DC] as f64 + 5_000.0,

@@ -1,24 +1,43 @@
-//! Lane-major (SoA) mirror of the fused thermal substep.
+//! Lane-major (SoA) mirror of the fused thermal substep — and, since
+//! PR 5, the **resident** authoritative node state plus the fleet
+//! megabatch **lane arena**.
 //!
 //! `node::fused_substep` walks nodes one at a time in node-major (AoS)
 //! layout and does 16-wide dot products per node. This module keeps the
-//! same physics but transposes everything to lane-major `[slot][n_padded]`
+//! same physics but transposes everything to lane-major `[slot][total]`
 //! buffers: each operator coefficient becomes a scalar broadcast over a
-//! contiguous `n_padded`-length lane, so LLVM auto-vectorizes the inner
-//! loops across nodes (8–16 lanes per instruction) instead of across the
-//! 16 per-node states. Zero operator coefficients are skipped entirely —
-//! the RC operators are sparse (`a0` has one live entry, `e1`/`e2` rows
-//! have at most three) — which is exact for finite inputs because adding
-//! `0.0 * x` never changes a finite accumulator.
+//! contiguous lane, so LLVM auto-vectorizes the inner loops across
+//! nodes (8–16 lanes per instruction) instead of across the 16 per-node
+//! states. Zero operator coefficients are skipped entirely — the RC
+//! operators are sparse (`a0` has one live entry, `e1`/`e2` rows have
+//! at most three) — which is exact for finite inputs because adding
+//! `0.0 * x` never changes a finite accumulator. The hot FMA loops are
+//! written as slice zips (or loops over re-sliced `[..len]` windows) so
+//! release builds elide every bounds check.
 //!
-//! The per-node accumulation order matches the reference kernel term for
-//! term, so the two kernels agree to f32 rounding (bitwise in practice;
-//! `tests/proptests.rs::prop_kernel_parity` pins the bound). The
-//! observation epilogue (`soa_observe`) is fused with the tick: it reads
-//! the freshly updated lanes, fills the node observations and scalar
-//! components, and writes the node-major `node_state` back in the same
-//! pass — one traversal of node state instead of the reference path's
-//! separate `observe()` sweep. See DESIGN.md §5 and EXPERIMENTS.md §Perf.
+//! **Residency.** The lanes are the authoritative plant state between
+//! ticks: `soa_observe_range` extracts everything a driver reads per
+//! tick straight from the lanes and performs **no** node-major
+//! write-back. The node-major view is materialized lazily
+//! (`materialize_range`, driven by `NativePlant::node_state()`'s dirty
+//! flag), so steady-state runs do zero state transposes after warm-up —
+//! PR 3 paid a full transpose-in + transpose-out every tick.
+//!
+//! **Arena.** `SoaState::new_arena` packs several plants into one
+//! shared `[slot][n_total]` working set; each plant owns a contiguous,
+//! tile-padded `LaneRange` of every lane. `soa_substep_ranges` advances
+//! all plants with a single sweep over the arena — the fleet megabatch
+//! path (`fleet::megabatch`). Every elementwise operation touches lane
+//! elements independently and every reduction (`P_dc`, the `t_out`
+//! water sum) runs per range over the same nodes in the same order as
+//! the single-plant kernel, so an arena substep is **bitwise
+//! identical** to per-plant substeps
+//! (`tests/proptests.rs::prop_kernel_parity_megabatch_arena`).
+//!
+//! The per-node accumulation order matches the reference kernel term
+//! for term, so the two kernels agree to f32 rounding (bitwise in
+//! practice; `tests/proptests.rs::prop_kernel_parity` pins the bound).
+//! See DESIGN.md §5 and EXPERIMENTS.md §Perf.
 
 use super::layout::*;
 use super::node::{FixedOps, PowerCoeffs};
@@ -28,21 +47,26 @@ use crate::config::constants::PlantParams;
 
 /// Lane-major plant state + scratch for the SoA kernel.
 ///
-/// Static inputs (`g`, `p_dyn`, `p_idle`, `active`) are transposed once
-/// at construction; `t` and `util` are reloaded from the node-major
-/// buffers at the start of every tick (`load`), so the node-major
-/// `NativePlant::node_state` stays the authoritative view between ticks.
+/// Holds one plant (`new`) or a whole megabatch arena (`new_arena`);
+/// `npad` is the total lane width either way. Static inputs (`g`,
+/// `p_dyn`, `p_idle`, `active`) are transposed once at construction.
+/// `t` is resident: loaded once from node-major state
+/// (`load_state_range`) and thereafter authoritative between ticks —
+/// consumers that need node-major call `materialize_range`. `util` is a
+/// per-tick input (`load_util_range`).
 #[derive(Debug)]
 pub struct SoaState {
+    /// Total lane width (single plant: its `n_padded`; arena: the sum
+    /// of every plant's `n_padded`).
     pub npad: usize,
-    /// [S][npad] node thermal state lanes.
+    /// [S][npad] node thermal state lanes (authoritative between ticks).
     pub t: Vec<f32>,
     /// [NG][npad] conductances, advection lane unscaled.
     g: Vec<f32>,
     /// [NG][npad] effective conductances (advection lane × pump flow).
     pub g_eff: Vec<f32>,
     /// [S][npad] forcing; the sink lane is set once at construction,
-    /// the water lane every substep (`set_inlet`).
+    /// the water lane every substep (`set_inlet_range`).
     pub q_base: Vec<f32>,
     /// [NC][npad] per-core utilization lanes (reloaded every tick).
     pub util: Vec<f32>,
@@ -64,60 +88,141 @@ pub struct SoaState {
 }
 
 impl SoaState {
+    /// Single-plant working set (an arena of one).
     pub fn new(st: &PlantStatic, ops: &Operators, pp: &PlantParams) -> Self {
-        let npad = st.n_padded;
-        let mut g = vec![0.0; npad * NG];
-        transpose_to_lanes(&st.g, &mut g, npad, NG);
-        let mut p_dyn = vec![0.0; npad * NC];
-        transpose_to_lanes(&st.p_dyn, &mut p_dyn, npad, NC);
-        let mut p_idle = vec![0.0; npad * NC];
-        transpose_to_lanes(&st.p_idle, &mut p_idle, npad, NC);
-        let mut active = vec![0.0; npad * NC];
-        transpose_to_lanes(&st.active, &mut active, npad, NC);
+        Self::new_arena(&[st], ops, pp).0
+    }
+
+    /// Pack `plants` into one shared lane arena. Every plant gets a
+    /// contiguous `LaneRange` (tile-padded, so each range starts on a
+    /// vector-width boundary) in the given order; statics are
+    /// transposed into their slices exactly as the single-plant
+    /// constructor would — lane element `offset + i` of plant `p` holds
+    /// the same value a standalone `SoaState` for `p` holds at `i`.
+    ///
+    /// All plants must share `ops`/`pp` (one operator set drives the
+    /// sweep); the fleet guarantees this — scenarios never touch plant
+    /// constants (`fleet::scenario` pins it with a test).
+    pub fn new_arena(plants: &[&PlantStatic], ops: &Operators,
+                     pp: &PlantParams) -> (Self, Vec<LaneRange>) {
+        let mut ranges = Vec::with_capacity(plants.len());
+        let mut total = 0usize;
+        for st in plants {
+            ranges.push(LaneRange {
+                offset: total,
+                n_valid: st.n_nodes,
+                npad: st.n_padded,
+            });
+            total += st.n_padded;
+        }
+        let mut g = vec![0.0; total * NG];
+        let mut p_dyn = vec![0.0; total * NC];
+        let mut p_idle = vec![0.0; total * NC];
+        let mut active = vec![0.0; total * NC];
         // Sink forcing constant, valid nodes only — exactly as the
         // reference path's `NativePlant::new` fills its q_base.
-        let mut q_base = vec![0.0; npad * S];
+        let mut q_base = vec![0.0; total * S];
         let q_sink = ((pp.p_node_base + pp.ua_node_air * pp.t_room)
             * ops.inv_c[IDX_SINK] as f64) as f32;
-        for i in 0..st.n_nodes {
-            q_base[IDX_SINK * npad + i] = q_sink;
+        for (st, r) in plants.iter().zip(&ranges) {
+            transpose_to_lanes_at(&st.g, &mut g, r.npad, NG, total, r.offset);
+            transpose_to_lanes_at(&st.p_dyn, &mut p_dyn, r.npad, NC, total,
+                                  r.offset);
+            transpose_to_lanes_at(&st.p_idle, &mut p_idle, r.npad, NC, total,
+                                  r.offset);
+            transpose_to_lanes_at(&st.active, &mut active, r.npad, NC, total,
+                                  r.offset);
+            for i in 0..st.n_nodes {
+                q_base[IDX_SINK * total + r.offset + i] = q_sink;
+            }
         }
-        SoaState {
-            npad,
-            t: vec![0.0; npad * S],
+        let state = SoaState {
+            npad: total,
+            t: vec![0.0; total * S],
             g_eff: g.clone(),
             g,
             q_base,
-            util: vec![0.0; npad * NC],
+            util: vec![0.0; total * NC],
             p_dyn,
             p_idle,
             active,
-            diffs: vec![0.0; npad * NG],
-            p_cores: vec![0.0; npad * NC],
-            t_next: vec![0.0; npad * S],
-            p_node: vec![0.0; npad],
-            obs_tsum: vec![0.0; npad],
-            obs_tmax: vec![0.0; npad],
-            obs_nact: vec![0.0; npad],
-            obs_thr: vec![0.0; npad],
+            diffs: vec![0.0; total * NG],
+            p_cores: vec![0.0; total * NC],
+            t_next: vec![0.0; total * S],
+            p_node: vec![0.0; total],
+            obs_tsum: vec![0.0; total],
+            obs_tmax: vec![0.0; total],
+            obs_nact: vec![0.0; total],
+            obs_thr: vec![0.0; total],
             fixed: FixedOps::from_ops(ops),
-        }
+        };
+        (state, ranges)
     }
 
-    /// Load node-major state and utilization for one tick.
+    /// The whole working set as one range (single-plant callers).
+    pub fn full_range(&self, n_valid: usize) -> LaneRange {
+        LaneRange { offset: 0, n_valid, npad: self.npad }
+    }
+
+    /// Every lane slot, padding included, as a well-formed range
+    /// (`n_valid == npad`). The load/materialize/flow/inlet helpers
+    /// operate on whole lanes and must not depend on a caller knowing
+    /// the valid prefix — nor on callees ignoring `n_valid`.
+    fn all_lanes(&self) -> LaneRange {
+        self.full_range(self.npad)
+    }
+
+    /// Load node-major state and utilization over the full lanes
+    /// (single-plant convenience).
     pub fn load(&mut self, node_state: &[f32], util: &[f32]) {
-        transpose_to_lanes(node_state, &mut self.t, self.npad, S);
-        transpose_to_lanes(util, &mut self.util, self.npad, NC);
+        let r = self.all_lanes();
+        self.load_state_range(node_state, r);
+        self.load_util_range(util, r);
+    }
+
+    /// Transpose one plant's node-major state `[npad][S]` into its lane
+    /// slice. Under residency this runs once per plant (warm-up, or
+    /// after an external `node_state` edit) — not per tick.
+    pub fn load_state_range(&mut self, node_state: &[f32], r: LaneRange) {
+        transpose_to_lanes_at(node_state, &mut self.t, r.npad, S, self.npad,
+                              r.offset);
+    }
+
+    /// Transpose one plant's node-major utilization `[npad][NC]` into
+    /// its lane slice (a genuine per-tick input — the workload changes
+    /// every tick).
+    pub fn load_util_range(&mut self, util: &[f32], r: LaneRange) {
+        transpose_to_lanes_at(util, &mut self.util, r.npad, NC, self.npad,
+                              r.offset);
+    }
+
+    /// Materialize one plant's lane slice back to node-major `[npad][S]`
+    /// (the lazy transpose behind `NativePlant::node_state()`).
+    pub fn materialize_range(&self, r: LaneRange, node_state: &mut [f32]) {
+        transpose_from_lanes_at(&self.t, node_state, r.npad, S, self.npad,
+                                r.offset);
+    }
+
+    /// `materialize_range` over the full lanes (single-plant callers).
+    pub fn materialize(&self, node_state: &mut [f32]) {
+        let r = self.all_lanes();
+        self.materialize_range(r, node_state);
     }
 
     /// Rescale the advection lane for a new pump flow (all other lanes
     /// of `g_eff` equal `g` and never change).
     pub fn set_flow(&mut self, flow: f32) {
+        let r = self.all_lanes();
+        self.set_flow_range(flow, r);
+    }
+
+    /// `set_flow` restricted to one plant's lane slice.
+    pub fn set_flow_range(&mut self, flow: f32, r: LaneRange) {
         let npad = self.npad;
-        let src = &self.g[G_ADV * npad..(G_ADV + 1) * npad];
-        let dst = &mut self.g_eff[G_ADV * npad..(G_ADV + 1) * npad];
-        for i in 0..npad {
-            dst[i] = src[i] * flow;
+        let src = &self.g[G_ADV * npad + r.offset..][..r.npad];
+        let dst = &mut self.g_eff[G_ADV * npad + r.offset..][..r.npad];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s * flow;
         }
     }
 
@@ -125,16 +230,23 @@ impl SoaState {
     /// `q_water = g_adv_eff * t_in / C_water` (g_eff already carries the
     /// pump flow, and f32 multiplication commutes bitwise).
     pub fn set_inlet(&mut self, t_in: f32, inv_c_w: f32) {
+        let r = self.all_lanes();
+        self.set_inlet_range(t_in, inv_c_w, r);
+    }
+
+    /// `set_inlet` restricted to one plant's lane slice (each plant in
+    /// an arena has its own circuit state, hence its own `t_in`).
+    pub fn set_inlet_range(&mut self, t_in: f32, inv_c_w: f32, r: LaneRange) {
         let npad = self.npad;
-        let g = &self.g_eff[G_ADV * npad..(G_ADV + 1) * npad];
-        let q = &mut self.q_base[IDX_WATER * npad..(IDX_WATER + 1) * npad];
-        for i in 0..npad {
-            q[i] = g[i] * t_in * inv_c_w;
+        let g = &self.g_eff[G_ADV * npad + r.offset..][..r.npad];
+        let q = &mut self.q_base[IDX_WATER * npad + r.offset..][..r.npad];
+        for (q_i, &g_i) in q.iter_mut().zip(g) {
+            *q_i = g_i * t_in * inv_c_w;
         }
     }
 }
 
-/// One fused substep over all lanes.
+/// One fused substep over the full lanes (single-plant path).
 ///
 /// Updates `s.t` in place. Returns the total node DC power of the valid
 /// prefix (cores + base, f64-accumulated in node order like the
@@ -146,6 +258,32 @@ pub fn soa_substep(
     pp: &PlantParams,
     n_valid: usize,
 ) -> (f64, f32) {
+    let ranges = [s.full_range(n_valid)];
+    let mut sums = [(0.0f64, 0.0f32)];
+    soa_substep_ranges(s, pp, &ranges, &mut sums);
+    sums[0]
+}
+
+/// One fused substep over a lane arena: a single sweep advances every
+/// plant (the megabatch path; `soa_substep` is the one-range special
+/// case).
+///
+/// The elementwise phases (power model, broadcast FMAs, Euler update)
+/// touch each lane element independently, and the per-plant reductions
+/// in `sums` — `(P_dc, t_out water sum)` per `LaneRange` — accumulate
+/// over exactly the range's valid nodes in node order, term for term as
+/// the single-plant kernel. An arena substep is therefore bitwise
+/// identical to per-plant substeps on the same inputs.
+pub fn soa_substep_ranges(
+    s: &mut SoaState,
+    pp: &PlantParams,
+    ranges: &[LaneRange],
+    sums: &mut [(f64, f32)],
+) {
+    // Hard assert: a short `sums` would silently leave trailing plants'
+    // reductions stale (the zips truncate), feeding old physics into
+    // their circuit steps — worth a branch outside the hot loops.
+    assert_eq!(ranges.len(), sums.len(), "one sums slot per lane range");
     let SoaState {
         npad,
         t,
@@ -176,15 +314,23 @@ pub fn soa_substep(
         let pi = &p_idle[c * npad..(c + 1) * npad];
         let av = &active[c * npad..(c + 1) * npad];
         let pc = &mut p_cores[c * npad..(c + 1) * npad];
-        for i in 0..npad {
-            let p = coeffs.core_power(tc[i], ui[i], di[i], pi[i], av[i]);
-            pc[i] = p;
-            p_node[i] += p;
+        let it = pc
+            .iter_mut()
+            .zip(p_node.iter_mut())
+            .zip(tc.iter().zip(ui))
+            .zip(di.iter().zip(pi).zip(av));
+        for (((pc_i, pn_i), (&t_i, &u_i)), ((&d_i, &pi_i), &a_i)) in it {
+            let p = coeffs.core_power(t_i, u_i, d_i, pi_i, a_i);
+            *pc_i = p;
+            *pn_i += p;
         }
     }
-    let mut p_total = 0.0f64;
-    for &p in p_node[..n_valid].iter() {
-        p_total += p as f64 + pp.p_node_base;
+    for (r, sum) in ranges.iter().zip(sums.iter_mut()) {
+        let mut p_total = 0.0f64;
+        for &p in &p_node[r.offset..r.offset + r.n_valid] {
+            p_total += p as f64 + pp.p_node_base;
+        }
+        sum.0 = p_total;
     }
 
     // --- diffs = (T E1^T) * g: one broadcast FMA per live coefficient ----
@@ -197,18 +343,17 @@ pub fn soa_substep(
                 continue;
             }
             let tk = &t[k * npad..(k + 1) * npad];
-            for i in 0..npad {
-                d[i] += tk[i] * w;
+            for (d_i, &t_i) in d.iter_mut().zip(tk) {
+                *d_i += t_i * w;
             }
         }
         let ga = &g_eff[ch * npad..(ch + 1) * npad];
-        for i in 0..npad {
-            d[i] *= ga[i];
+        for (d_i, &g_i) in d.iter_mut().zip(ga) {
+            *d_i *= g_i;
         }
     }
 
     // --- T' = T + dt * (q + T A0^T + diffs E2^T + P Ec^T) ----------------
-    let mut t_out_sum = 0.0f32;
     for row in 0..S {
         let tn = &mut t_next[row * npad..(row + 1) * npad];
         tn.copy_from_slice(&q_base[row * npad..(row + 1) * npad]);
@@ -218,8 +363,8 @@ pub fn soa_substep(
                 continue;
             }
             let tk = &t[k * npad..(k + 1) * npad];
-            for i in 0..npad {
-                tn[i] += tk[i] * w;
+            for (tn_i, &t_i) in tn.iter_mut().zip(tk) {
+                *tn_i += t_i * w;
             }
         }
         for ch in 0..NG {
@@ -228,8 +373,8 @@ pub fn soa_substep(
                 continue;
             }
             let dch = &diffs[ch * npad..(ch + 1) * npad];
-            for i in 0..npad {
-                tn[i] += dch[i] * w;
+            for (tn_i, &d_i) in tn.iter_mut().zip(dch) {
+                *tn_i += d_i * w;
             }
         }
         for c in 0..NC {
@@ -238,37 +383,44 @@ pub fn soa_substep(
                 continue;
             }
             let pcc = &p_cores[c * npad..(c + 1) * npad];
-            for i in 0..npad {
-                tn[i] += pcc[i] * w;
+            for (tn_i, &p_i) in tn.iter_mut().zip(pcc) {
+                *tn_i += p_i * w;
             }
         }
         let ts = &t[row * npad..(row + 1) * npad];
-        for i in 0..npad {
-            tn[i] = ts[i] + dt * tn[i];
+        for (tn_i, &t_i) in tn.iter_mut().zip(ts) {
+            *tn_i = t_i + dt * *tn_i;
         }
         if row == IDX_WATER {
-            for &x in tn[..n_valid].iter() {
-                t_out_sum += x;
+            for (r, sum) in ranges.iter().zip(sums.iter_mut()) {
+                let mut t_out_sum = 0.0f32;
+                for &x in &tn[r.offset..r.offset + r.n_valid] {
+                    t_out_sum += x;
+                }
+                sum.1 = t_out_sum;
             }
         }
     }
     t.copy_from_slice(t_next);
-    (p_total, t_out_sum)
 }
 
-/// Fused observation epilogue over the post-substep lanes.
+/// Fused observation epilogue over one plant's post-substep lane slice.
 ///
 /// Recomputes per-core power at the final temperatures (mirroring the
-/// reference `observe`), fills `node_obs` `[npad, OBS_N]`, writes the
-/// node-major `node_state` back (the tick's transpose-out, fused into
-/// the same pass), and returns `(p_dc, throttling, core_max_all)` for
-/// the scalar block. Nodes with zero active cores report the node water
-/// temperature for core max/mean instead of a sentinel.
-pub fn soa_observe(
+/// reference `observe`), fills the plant's `node_obs` `[npad, OBS_N]`,
+/// and returns `(p_dc, throttling, core_max_all)` for the scalar block.
+/// Nodes with zero active cores report the node water temperature for
+/// core max/mean instead of a sentinel.
+///
+/// Resident-lane contract: this does **not** write node-major state —
+/// the lanes stay authoritative and the node-major view is materialized
+/// lazily (`SoaState::materialize_range` via
+/// `NativePlant::node_state()`), so a steady-state tick does zero state
+/// transposes.
+pub fn soa_observe_range(
     s: &mut SoaState,
     pp: &PlantParams,
-    n_valid: usize,
-    node_state: &mut [f32],
+    r: LaneRange,
     node_obs: &mut [f32],
 ) -> (f64, f32, f32) {
     let SoaState {
@@ -285,22 +437,29 @@ pub fn soa_observe(
         obs_thr,
         ..
     } = s;
-    let npad = *npad;
+    let total = *npad;
+    let w = r.npad;
+    debug_assert!(node_obs.len() >= w * OBS_N);
     let coeffs = PowerCoeffs::new(pp);
     let thr_lo = (pp.t_throttle - pp.throttle_band) as f32;
 
+    let p_node = &mut p_node[r.offset..r.offset + w];
+    let obs_tsum = &mut obs_tsum[r.offset..r.offset + w];
+    let obs_tmax = &mut obs_tmax[r.offset..r.offset + w];
+    let obs_nact = &mut obs_nact[r.offset..r.offset + w];
+    let obs_thr = &mut obs_thr[r.offset..r.offset + w];
     p_node.fill(0.0);
     obs_tsum.fill(0.0);
     obs_tmax.fill(f32::MIN);
     obs_nact.fill(0.0);
     obs_thr.fill(0.0);
     for c in 0..NC {
-        let tc = &t[c * npad..(c + 1) * npad];
-        let ui = &util[c * npad..(c + 1) * npad];
-        let di = &p_dyn[c * npad..(c + 1) * npad];
-        let pi = &p_idle[c * npad..(c + 1) * npad];
-        let av = &active[c * npad..(c + 1) * npad];
-        for i in 0..npad {
+        let tc = &t[c * total + r.offset..][..w];
+        let ui = &util[c * total + r.offset..][..w];
+        let di = &p_dyn[c * total + r.offset..][..w];
+        let pi = &p_idle[c * total + r.offset..][..w];
+        let av = &active[c * total + r.offset..][..w];
+        for i in 0..w {
             p_node[i] += coeffs.core_power(tc[i], ui[i], di[i], pi[i], av[i]);
             let on = av[i] > 0.0;
             obs_tsum[i] += if on { tc[i] } else { 0.0 };
@@ -311,11 +470,11 @@ pub fn soa_observe(
         }
     }
 
-    let water = &t[IDX_WATER * npad..(IDX_WATER + 1) * npad];
+    let water = &t[IDX_WATER * total + r.offset..][..w];
     let mut p_dc = 0.0f64;
     let mut throttling = 0.0f32;
     let mut core_max_all = f32::MIN;
-    for i in 0..npad {
+    for i in 0..w {
         // Zero active cores: report the water temperature, not the
         // accumulator sentinels (see native::observe for the same fix).
         let (tmax, tmean) = if obs_nact[i] > 0.0 {
@@ -324,7 +483,7 @@ pub fn soa_observe(
             (water[i], water[i])
         };
         let mut p = p_node[i];
-        if i < n_valid {
+        if i < r.n_valid {
             p += pp.p_node_base as f32;
             p_dc += p as f64;
             if tmax > core_max_all {
@@ -337,12 +496,19 @@ pub fn soa_observe(
         o[O_CORE_MEAN] = tmean;
         o[O_CORE_MAX] = tmax;
         o[O_WATER_OUT] = water[i];
-        // fused transpose-out: node i's column of every lane
-        for row in 0..S {
-            node_state[i * S + row] = t[row * npad + i];
-        }
     }
     (p_dc, throttling, core_max_all)
+}
+
+/// `soa_observe_range` over the full lanes (single-plant path).
+pub fn soa_observe(
+    s: &mut SoaState,
+    pp: &PlantParams,
+    n_valid: usize,
+    node_obs: &mut [f32],
+) -> (f64, f32, f32) {
+    let r = s.full_range(n_valid);
+    soa_observe_range(s, pp, r, node_obs)
 }
 
 #[cfg(test)]
@@ -416,7 +582,7 @@ mod tests {
             p_soa = p;
         }
         let mut t_soa = vec![0.0f32; npad * S];
-        transpose_from_lanes(&soa.t, &mut t_soa, npad, S);
+        soa.materialize(&mut t_soa);
         for (a, b) in t_ref.iter().zip(&t_soa) {
             assert!((a - b).abs() < 1e-4,
                     "state diverged: ref {a} vs soa {b}");
@@ -439,10 +605,9 @@ mod tests {
         let (st, _ops, pp, _t0, _util, mut soa) = setup(13, 5);
         let npad = st.n_padded;
         soa_substep(&mut soa, &pp, st.n_nodes);
-        let mut node_state = vec![0.0f32; npad * S];
         let mut obs = vec![0.0f32; npad * OBS_N];
         let (p_dc, _thr, core_max) =
-            soa_observe(&mut soa, &pp, st.n_nodes, &mut node_state, &mut obs);
+            soa_observe(&mut soa, &pp, st.n_nodes, &mut obs);
         assert!(p_dc > 0.0);
         assert!(core_max > -1e8);
         // padded nodes have no active cores: max/mean == water, no sentinel
@@ -450,9 +615,83 @@ mod tests {
         let o = &obs[pad * OBS_N..(pad + 1) * OBS_N];
         assert_eq!(o[O_CORE_MAX], o[O_WATER_OUT]);
         assert_eq!(o[O_CORE_MEAN], o[O_WATER_OUT]);
-        // transpose-out round-trips the lanes
+        // the lazy materialization round-trips the resident lanes
+        let mut node_state = vec![0.0f32; npad * S];
+        soa.materialize(&mut node_state);
         let mut lanes = vec![0.0f32; npad * S];
         transpose_to_lanes(&node_state, &mut lanes, npad, S);
         assert_eq!(lanes, soa.t);
+    }
+
+    #[test]
+    fn arena_substeps_match_per_plant_bitwise() {
+        // Three differently-sized plants in one arena vs three
+        // standalone SoaStates: identical inputs must evolve bitwise
+        // identically and reduce to bitwise-identical per-plant sums
+        // (the megabatch determinism contract; the randomized version
+        // lives in proptests::prop_kernel_parity_megabatch_arena).
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let mut statics = Vec::new();
+        for (n, seed) in [(13usize, 1u64), (7, 2), (64, 3)] {
+            let lot = ChipLottery::draw(n, &pp, seed);
+            statics.push(PlantStatic::from_lottery(&lot, &pp, 64));
+        }
+        let refs: Vec<&PlantStatic> = statics.iter().collect();
+        let (mut arena, ranges) = SoaState::new_arena(&refs, &ops, &pp);
+        let mut singles: Vec<SoaState> =
+            statics.iter().map(|st| SoaState::new(st, &ops, &pp)).collect();
+        let mut rng = crate::variability::rng::Rng::new(0xA2E4A);
+        for (p, st) in statics.iter().enumerate() {
+            let npad = st.n_padded;
+            let t0: Vec<f32> = (0..npad * S)
+                .map(|_| rng.uniform_in(20.0, 90.0) as f32)
+                .collect();
+            let u0: Vec<f32> =
+                (0..npad * NC).map(|_| rng.uniform() as f32).collect();
+            singles[p].load(&t0, &u0);
+            arena.load_state_range(&t0, ranges[p]);
+            arena.load_util_range(&u0, ranges[p]);
+            let flow = 0.4 + 0.1 * p as f32;
+            singles[p].set_flow(flow);
+            arena.set_flow_range(flow, ranges[p]);
+        }
+        let mut sums = vec![(0.0f64, 0.0f32); statics.len()];
+        for step in 0..25 {
+            for (p, single) in singles.iter_mut().enumerate() {
+                let t_in = 40.0 + 5.0 * p as f32 + 0.1 * step as f32;
+                single.set_inlet(t_in, ops.inv_c[IDX_WATER]);
+                arena.set_inlet_range(t_in, ops.inv_c[IDX_WATER], ranges[p]);
+            }
+            let single_sums: Vec<(f64, f32)> = singles
+                .iter_mut()
+                .zip(&statics)
+                .map(|(s, st)| soa_substep(s, &pp, st.n_nodes))
+                .collect();
+            soa_substep_ranges(&mut arena, &pp, &ranges, &mut sums);
+            for (p, (a, b)) in single_sums.iter().zip(&sums).enumerate() {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "p_dc, plant {p}");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "t_out, plant {p}");
+            }
+        }
+        for (p, st) in statics.iter().enumerate() {
+            let mut a = vec![0.0f32; st.n_padded * S];
+            let mut b = vec![0.0f32; st.n_padded * S];
+            singles[p].materialize(&mut a);
+            arena.materialize_range(ranges[p], &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "state, plant {p}");
+            }
+            let mut oa = vec![0.0f32; st.n_padded * OBS_N];
+            let mut ob = vec![0.0f32; st.n_padded * OBS_N];
+            let ra = soa_observe(&mut singles[p], &pp, st.n_nodes, &mut oa);
+            let rb = soa_observe_range(&mut arena, &pp, ranges[p], &mut ob);
+            assert_eq!(ra.0.to_bits(), rb.0.to_bits(), "p_dc, plant {p}");
+            assert_eq!(ra.1.to_bits(), rb.1.to_bits(), "throttle, plant {p}");
+            assert_eq!(ra.2.to_bits(), rb.2.to_bits(), "core_max, plant {p}");
+            for (x, y) in oa.iter().zip(&ob) {
+                assert_eq!(x.to_bits(), y.to_bits(), "obs, plant {p}");
+            }
+        }
     }
 }

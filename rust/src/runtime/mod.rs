@@ -50,6 +50,25 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+impl BackendKind {
+    /// Resolve `Auto` by artifact presence — the single detection rule,
+    /// shared by backend construction (`PlantBackend::create_with_kernel`)
+    /// and the fleet megabatch eligibility precheck
+    /// (`fleet::megabatch::precheck`). Never returns `Auto`.
+    pub fn resolve_auto(self, artifacts_dir: &Path) -> BackendKind {
+        match self {
+            BackendKind::Auto => {
+                if artifacts_dir.join("manifest.json").exists() {
+                    BackendKind::Hlo
+                } else {
+                    BackendKind::Native
+                }
+            }
+            k => k,
+        }
+    }
+}
+
 /// The plant as seen by the coordinator.
 pub enum PlantBackend {
     Hlo(HloPlant),
@@ -94,17 +113,7 @@ impl PlantBackend {
         seed: u64,
         t_water: f32,
     ) -> Result<Self> {
-        let have_artifacts = artifacts_dir.join("manifest.json").exists();
-        let kind = match kind {
-            BackendKind::Auto => {
-                if have_artifacts {
-                    BackendKind::Hlo
-                } else {
-                    BackendKind::Native
-                }
-            }
-            k => k,
-        };
+        let kind = kind.resolve_auto(artifacts_dir);
         match kind {
             BackendKind::Hlo => {
                 let man = Manifest::load(artifacts_dir)?;
@@ -203,11 +212,32 @@ impl PlantBackend {
         }
     }
 
-    /// Full node thermal state [n_padded * S] (per-core temps for Fig. 4b).
-    pub fn node_state(&self) -> &[f32] {
+    /// Full node thermal state [n_padded * S] (per-core temps for
+    /// Fig. 4b). Takes `&mut self`: the native SoA kernel keeps its
+    /// lanes resident and materializes the node-major view lazily on
+    /// first read after a tick (`NativePlant::node_state`) — steady-state
+    /// runs that never call this do zero state transposes.
+    pub fn node_state(&mut self) -> &[f32] {
         match self {
             PlantBackend::Hlo(p) => &p.node_state,
-            PlantBackend::Native(p) => &p.node_state,
+            PlantBackend::Native(p) => p.node_state(),
+        }
+    }
+
+    /// The native plant, if this backend is native (the fleet megabatch
+    /// engine drives native plants' circuit state directly).
+    pub fn native(&self) -> Option<&NativePlant> {
+        match self {
+            PlantBackend::Native(p) => Some(p),
+            PlantBackend::Hlo(_) => None,
+        }
+    }
+
+    /// Mutable variant of `native`.
+    pub fn native_mut(&mut self) -> Option<&mut NativePlant> {
+        match self {
+            PlantBackend::Native(p) => Some(p),
+            PlantBackend::Hlo(_) => None,
         }
     }
 

@@ -263,17 +263,33 @@ pub fn parse_sim_request(body: &str, base: &SimConfig) -> Result<SimRequest> {
     Ok(SimRequest { cfg, sample_every })
 }
 
+/// Server-side sanity cap on `POST /fleet` fleet size. Fleet memory is
+/// O(n_plants) per request — every plant's trace is held for the
+/// facility pass, and the default megabatch path additionally keeps all
+/// drivers plus the lane arena resident — so an unbounded request could
+/// OOM the serve process. The CLI stays uncapped (the operator owns
+/// that machine); mirrors the `resolve_workers` clamp discipline.
+pub const MAX_REQUEST_PLANTS: usize = 1024;
+
 /// Parse a `POST /fleet` body. `shards` defaults to 1 — the server
 /// already parallelizes across requests, and a fixed default keeps the
-/// response (which records the shard count) host-independent. Shard
-/// count never changes results (the fleet determinism contract).
+/// per-request compute footprint host-independent. Shard count and
+/// `megabatch` (default: the server's env-resolved
+/// `fleet::default_megabatch`) never change results — both are
+/// execution shape under the fleet determinism contract, and neither
+/// appears in the response document (see `FleetRun::to_json_value`).
 pub fn parse_fleet_request(body: &str, base: &SimConfig)
                            -> Result<FleetConfig> {
     let m = obj_of(body)?;
     let mut cfg = base.clone();
-    apply_sim_overrides(&m, &mut cfg, &["plants", "shards", "scenario"])?;
+    apply_sim_overrides(&m, &mut cfg,
+                        &["plants", "shards", "scenario", "megabatch"])?;
     let n_plants = take_usize(&m, "plants")?.unwrap_or(4);
     anyhow::ensure!(n_plants >= 1, "plants must be at least 1");
+    anyhow::ensure!(
+        n_plants <= MAX_REQUEST_PLANTS,
+        "plants must be at most {MAX_REQUEST_PLANTS} per request"
+    );
     let shards = take_usize(&m, "shards")?.unwrap_or(1);
     anyhow::ensure!(shards >= 1, "shards must be at least 1");
     // Clamp here (as FleetDriver::run would) so over-asked shard counts
@@ -281,8 +297,19 @@ pub fn parse_fleet_request(body: &str, base: &SimConfig)
     let shards = shards.min(n_plants);
     let scenario =
         Scenario::by_name(take_str(&m, "scenario")?.unwrap_or("baseline"))?;
+    let megabatch = match take_bool(&m, "megabatch")? {
+        Some(b) => b,
+        None => crate::fleet::default_megabatch()?,
+    };
     let fleet_seed = cfg.seed;
-    Ok(FleetConfig { n_plants, shards, base: cfg, fleet_seed, scenario })
+    Ok(FleetConfig {
+        n_plants,
+        shards,
+        base: cfg,
+        fleet_seed,
+        scenario,
+        megabatch,
+    })
 }
 
 /// Parse a `POST /sweep` body. `quick` defaults to true (full sweeps
@@ -357,10 +384,12 @@ pub fn canonical_sim_json(cfg: &SimConfig, sample_every: usize,
         .build()
 }
 
-/// Canonical `/fleet` request document. `shards` is deliberately
-/// absent: the fleet determinism contract makes responses bitwise
-/// identical across shard counts, so requests differing only in shards
-/// must share one cache entry.
+/// Canonical `/fleet` request document. `shards` and `megabatch` are
+/// deliberately absent: the fleet determinism contract makes responses
+/// bitwise identical across shard counts and across the
+/// megabatch/per-plant execution paths (`tests/fleet_integration.rs`),
+/// so requests differing only in execution shape must share one cache
+/// entry.
 pub fn canonical_fleet_json(fc: &FleetConfig) -> Json {
     sim_config_builder(&fc.base)
         .hex("fleet_seed", fc.fleet_seed)
@@ -611,8 +640,30 @@ mod tests {
         assert_eq!(fc.shards, 2, "shards clamp to plants");
         assert_eq!(fc.scenario.name(), "heatwave");
         assert!(parse_fleet_request(r#"{"plants": 0}"#, &base()).is_err());
+        // per-request fleet size is sanity-capped (fleet memory is
+        // O(n_plants); an unbounded request could OOM the server)
+        assert!(
+            parse_fleet_request(r#"{"plants": 100000}"#, &base()).is_err()
+        );
+        assert!(
+            parse_fleet_request(
+                &format!("{{\"plants\": {MAX_REQUEST_PLANTS}}}"),
+                &base()
+            )
+            .is_ok()
+        );
         assert!(
             parse_fleet_request(r#"{"scenario": "nope"}"#, &base()).is_err()
+        );
+        // megabatch is a recognized (strict-boolean) execution knob
+        let fc = parse_fleet_request(r#"{"megabatch": false}"#, &base())
+            .unwrap();
+        assert!(!fc.megabatch);
+        let fc = parse_fleet_request(r#"{"megabatch": true}"#, &base())
+            .unwrap();
+        assert!(fc.megabatch);
+        assert!(
+            parse_fleet_request(r#"{"megabatch": 1}"#, &base()).is_err()
         );
     }
 
@@ -637,6 +688,12 @@ mod tests {
         let k2 = request_fingerprint(
             "sweep", &canonical_sweep_json(&s2), &s2.cfg);
         assert_eq!(k1, k2);
+        // megabatch is execution shape too: same cache key either way
+        let m = parse_fleet_request(
+            r#"{"plants": 4, "megabatch": false}"#, &base()).unwrap();
+        let km = request_fingerprint(
+            "fleet", &canonical_fleet_json(&m), &m.base);
+        assert_eq!(ka, km);
         // ...but real knobs still separate keys.
         let c = parse_fleet_request(r#"{"plants": 5}"#, &base()).unwrap();
         let kc = request_fingerprint(

@@ -47,6 +47,7 @@ use crate::config::{ServeConfig, SimConfig};
 use crate::coordinator::SimulationDriver;
 use crate::figures::sweep;
 use crate::fleet::FleetDriver;
+use crate::plant::TickOutput;
 use crate::util::http::{Request, Response};
 use crate::util::json::JsonBuilder;
 use crate::util::lru::Lru;
@@ -117,6 +118,27 @@ fn error_cached(status: u16, msg: &str) -> CachedResponse {
     }
 }
 
+/// Per-worker reusable simulation buffers: each worker thread owns one
+/// and hands it down to the compute path, so a `/simulate` request
+/// reuses the previous request's tick/observation buffer
+/// (`SimulationDriver::run_into` resets it) instead of allocating a
+/// fresh `TickOutput` per request.
+pub struct ServeScratch {
+    out: TickOutput,
+}
+
+impl ServeScratch {
+    pub fn new() -> Self {
+        ServeScratch { out: TickOutput::new(0) }
+    }
+}
+
+impl Default for ServeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// State shared between the accept loop and every worker.
 struct Shared {
     base: SimConfig,
@@ -178,9 +200,12 @@ impl Server {
         let queue = Arc::new(JobQueue::new(self.queue_cap));
         let pool = {
             let shared = self.shared.clone();
-            WorkerPool::spawn(self.shared.workers, queue.clone(), move |s| {
-                handle_connection(s, &shared)
-            })
+            WorkerPool::spawn_with(
+                self.shared.workers,
+                queue.clone(),
+                ServeScratch::new,
+                move |s, scratch| handle_connection(s, &shared, scratch),
+            )
         };
         for stream in self.listener.incoming() {
             if self.shared.shutdown.load(Ordering::SeqCst) {
@@ -248,7 +273,8 @@ fn shed(mut s: TcpStream) {
         .write_to(&mut s);
 }
 
-fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
+fn handle_connection(stream: TcpStream, shared: &Arc<Shared>,
+                     scratch: &mut ServeScratch) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_nodelay(true);
     let mut reader = BufReader::new(&stream);
@@ -263,9 +289,10 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
     let t0 = Instant::now();
     // Belt and suspenders: `serve_cached` already isolates simulation
     // panics (they must complete the coalescing slot); this outer catch
-    // keeps a routing bug from killing the worker thread.
+    // keeps a routing bug from killing the worker thread. The scratch
+    // is safe to reuse after an unwind: every run resets it first.
     let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        route(&req, shared)
+        route(&req, shared, scratch)
     }))
     .unwrap_or_else(|_| Response::error(500, "internal panic in handler"));
     shared.metrics.record(
@@ -281,7 +308,8 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
     }
 }
 
-fn route(req: &Request, shared: &Arc<Shared>) -> Response {
+fn route(req: &Request, shared: &Arc<Shared>, scratch: &mut ServeScratch)
+         -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(shared),
         ("GET", "/metrics") => metrics_response(shared),
@@ -292,7 +320,7 @@ fn route(req: &Request, shared: &Arc<Shared>) -> Response {
                 &JsonBuilder::new().str("status", "shutting-down").build(),
             )
         }
-        ("POST", "/simulate") => handle_simulate(req, shared),
+        ("POST", "/simulate") => handle_simulate(req, shared, scratch),
         ("POST", "/fleet") => handle_fleet(req, shared),
         ("POST", "/sweep") => handle_sweep(req, shared),
         (
@@ -410,7 +438,8 @@ fn parse_query(req: &Request, allow_stream: bool) -> Result<bool, Response> {
     Ok(stream)
 }
 
-fn handle_simulate(req: &Request, shared: &Arc<Shared>) -> Response {
+fn handle_simulate(req: &Request, shared: &Arc<Shared>,
+                   scratch: &mut ServeScratch) -> Response {
     let stream = match parse_query(req, true) {
         Ok(s) => s,
         Err(resp) => return resp,
@@ -425,15 +454,18 @@ fn handle_simulate(req: &Request, shared: &Arc<Shared>) -> Response {
     };
     let canon = api::canonical_sim_json(&sim.cfg, sim.sample_every, stream);
     let key = api::request_fingerprint("simulate", &canon, &sim.cfg);
-    serve_cached(shared, key, move || compute_simulate(sim, stream))
+    serve_cached(shared, key, move || compute_simulate(sim, stream, scratch))
 }
 
-fn compute_simulate(sim: api::SimRequest, stream: bool)
-                    -> Result<CachedResponse> {
+fn compute_simulate(sim: api::SimRequest, stream: bool,
+                    scratch: &mut ServeScratch) -> Result<CachedResponse> {
     let sample_every = sim.sample_every;
     let mut driver = SimulationDriver::new(sim.cfg)?;
     let kernel = driver.backend.kernel_name();
-    let res = driver.run(sample_every)?;
+    // The worker's reusable tick/observation buffer: `run_into` resets
+    // it (size + zero) so a reused buffer behaves exactly like a fresh
+    // allocation — responses stay bitwise identical across workers.
+    let res = driver.run_into(sample_every, &mut scratch.out)?;
     let cfg = &driver.cfg;
     if stream {
         Ok(CachedResponse {

@@ -94,16 +94,35 @@ impl WorkerPool {
         T: Send + 'static,
         F: Fn(T) + Send + Sync + 'static,
     {
+        Self::spawn_with(n, queue, || (), move |job, _state| handler(job))
+    }
+
+    /// `spawn` with per-worker state: `init` runs once on each worker
+    /// thread (so the state type need not be `Send`) and the resulting
+    /// value is handed mutably to every job that worker processes. This
+    /// is how the serve path keeps one reusable simulation scratch
+    /// buffer per worker instead of allocating per request.
+    pub fn spawn_with<T, S, I, F>(n: usize, queue: Arc<JobQueue<T>>,
+                                  init: I, handler: F) -> WorkerPool
+    where
+        T: Send + 'static,
+        S: 'static,
+        I: Fn() -> S + Send + Sync + 'static,
+        F: Fn(T, &mut S) + Send + Sync + 'static,
+    {
+        let init = Arc::new(init);
         let handler = Arc::new(handler);
         let handles = (0..n)
             .map(|i| {
                 let queue = queue.clone();
+                let init = init.clone();
                 let handler = handler.clone();
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
                     .spawn(move || {
+                        let mut state = init();
                         while let Some(job) = queue.pop() {
-                            handler(job);
+                            handler(job, &mut state);
                         }
                     })
                     .expect("spawn worker thread")
@@ -157,6 +176,36 @@ mod tests {
         assert_eq!(q.push(8), Err(8));
         assert_eq!(q.pop(), Some(7));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn per_worker_state_persists_across_jobs() {
+        // Each worker's state is created once and mutated by every job
+        // it handles: the per-job counters must sum to the job count.
+        let q = Arc::new(JobQueue::<usize>::new(64));
+        let handled = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let handled = handled.clone();
+            WorkerPool::spawn_with(
+                3,
+                q.clone(),
+                || 0usize, // per-worker scratch (not Send-required)
+                move |_j, seen| {
+                    *seen += 1;
+                    handled.fetch_add(1, Ordering::SeqCst);
+                },
+            )
+        };
+        for j in 0..30 {
+            let mut job = j;
+            while let Err(back) = q.push(job) {
+                job = back;
+                std::thread::yield_now();
+            }
+        }
+        q.close();
+        pool.join();
+        assert_eq!(handled.load(Ordering::SeqCst), 30);
     }
 
     #[test]

@@ -75,6 +75,31 @@ impl Args {
             }),
         }
     }
+
+    /// Strict boolean flag: absent uses the default, a bare `--key`
+    /// means true, and `--key <0|1|true|false>` parses strictly — any
+    /// other value is an error, never a silent fall-back.
+    pub fn bool_strict(&self, key: &str, default: bool)
+                       -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => {
+                // `has` also sees bare boolean flags (`--megabatch`).
+                Ok(if self.has(key) { true } else { default })
+            }
+            Some(v) => parse_bool(v).ok_or_else(|| {
+                anyhow::anyhow!("--{key} expects 0|1|true|false, got '{v}'")
+            }),
+        }
+    }
+}
+
+/// The shared strict-bool vocabulary of CLI flags and env knobs.
+fn parse_bool(v: &str) -> Option<bool> {
+    match v {
+        "1" | "true" => Some(true),
+        "0" | "false" => Some(false),
+        _ => None,
+    }
 }
 
 /// Strict env-var counterpart of `Args::usize_strict`: an unset (or
@@ -106,6 +131,34 @@ pub fn parse_usize_env(name: &str, value: &str)
         anyhow::anyhow!(
             "{name} expects a non-negative integer, got '{value}'"
         )
+    })
+}
+
+/// Strict boolean env knob (`IDATACOOL_FLEET_MEGABATCH=0|1|true|false`):
+/// unset or blank is `None`, anything else must parse — garbage is an
+/// error, matching `env_usize_strict`.
+pub fn env_bool_strict(name: &str) -> anyhow::Result<Option<bool>> {
+    match std::env::var_os(name) {
+        None => Ok(None),
+        Some(os) => {
+            let v = os.to_str().ok_or_else(|| {
+                anyhow::anyhow!("{name} is not valid unicode")
+            })?;
+            parse_bool_env(name, v)
+        }
+    }
+}
+
+/// The parse half of `env_bool_strict`, split out so it is testable
+/// without mutating process-global environment state.
+pub fn parse_bool_env(name: &str, value: &str)
+                      -> anyhow::Result<Option<bool>> {
+    let t = value.trim();
+    if t.is_empty() {
+        return Ok(None);
+    }
+    parse_bool(t).map(Some).ok_or_else(|| {
+        anyhow::anyhow!("{name} expects 0|1|true|false, got '{value}'")
     })
 }
 
@@ -154,6 +207,37 @@ mod tests {
         let a = parse("--quick --fig 4a");
         assert!(a.has("quick"));
         assert_eq!(a.get("fig"), Some("4a"));
+    }
+
+    #[test]
+    fn bool_flag_is_strict() {
+        let a = parse("--megabatch 0 --other");
+        assert!(!a.bool_strict("megabatch", true).unwrap());
+        assert!(a.bool_strict("missing", true).unwrap());
+        assert!(!a.bool_strict("missing", false).unwrap());
+        // bare boolean flag means true
+        let a = parse("--megabatch");
+        assert!(a.bool_strict("megabatch", false).unwrap());
+        for (v, want) in [("1", true), ("true", true), ("0", false),
+                          ("false", false)] {
+            let a = parse(&format!("--megabatch {v}"));
+            assert_eq!(a.bool_strict("megabatch", !want).unwrap(), want);
+        }
+        let a = parse("--megabatch yes");
+        let err = a.bool_strict("megabatch", true).unwrap_err().to_string();
+        assert!(err.contains("--megabatch") && err.contains("yes"), "{err}");
+    }
+
+    #[test]
+    fn env_bool_parse_is_strict() {
+        assert_eq!(parse_bool_env("X", "1").unwrap(), Some(true));
+        assert_eq!(parse_bool_env("X", "true").unwrap(), Some(true));
+        assert_eq!(parse_bool_env("X", " 0 ").unwrap(), Some(false));
+        assert_eq!(parse_bool_env("X", "false").unwrap(), Some(false));
+        assert_eq!(parse_bool_env("X", "").unwrap(), None);
+        assert_eq!(parse_bool_env("X", "  ").unwrap(), None);
+        let err = parse_bool_env("X", "on").unwrap_err().to_string();
+        assert!(err.contains('X') && err.contains("on"), "{err}");
     }
 
     #[test]

@@ -1,21 +1,39 @@
-//! Round-robin shard assignment shared by the fleet engine and the
-//! parallel setpoint sweep.
+//! Shard assignment shared by the fleet engine and the parallel
+//! setpoint sweep.
 //!
-//! Work item `i` lands in bucket `i % shards`. Assignment depends only on
-//! the item order and the shard count — never on thread timing — which is
-//! half of the determinism contract (the other half: reduce results in
-//! item order, not completion order).
+//! Assignment depends only on the item order and the shard count —
+//! never on thread timing — which is half of the determinism contract
+//! (the other half: reduce results in item order, not completion
+//! order). Because reductions run in item order, the choice of
+//! assignment is **order-independent for results**: any function of
+//! (items, shards) produces bitwise-identical output, so it can be
+//! picked purely for load balance.
+//!
+//! Contiguous blocks replaced the earlier round-robin assignment
+//! (`i % shards`) in PR 5: both keep bucket sizes within one item of
+//! each other, but round-robin correlates with the index-modulo
+//! patterns workloads are built from — the fleet's `mixed` scenario
+//! cycles stress/production/idle by `index % 3`, so a 3-shard
+//! round-robin run put *every* expensive stress plant on shard 0 while
+//! shard 2 idled. Contiguous blocks interleave such patterns across
+//! shards instead, and keep in-shard order equal to fleet order (which
+//! the megabatch arena also relies on for its plant ranges).
 
-/// Distribute `items` over `shards` buckets round-robin (shards is
-/// clamped to at least 1; trailing buckets may be empty when there are
-/// fewer items than shards).
-pub fn round_robin<T>(items: Vec<T>, shards: usize) -> Vec<Vec<T>> {
+/// Distribute `items` over `shards` contiguous blocks in order; sizes
+/// differ by at most one (earlier buckets take the remainder). Shards
+/// is clamped to at least 1; trailing buckets may be empty when there
+/// are fewer items than shards.
+pub fn blocks<T>(items: Vec<T>, shards: usize) -> Vec<Vec<T>> {
     let shards = shards.max(1);
-    let mut buckets: Vec<Vec<T>> = (0..shards).map(|_| Vec::new()).collect();
-    for (i, item) in items.into_iter().enumerate() {
-        buckets[i % shards].push(item);
-    }
-    buckets
+    let n = items.len();
+    let (q, r) = (n / shards, n % shards);
+    let mut it = items.into_iter();
+    (0..shards)
+        .map(|b| {
+            let take = q + usize::from(b < r);
+            it.by_ref().take(take).collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -23,22 +41,50 @@ mod tests {
     use super::*;
 
     #[test]
-    fn assignment_is_by_index() {
-        let buckets = round_robin((0..7).collect(), 3);
-        assert_eq!(buckets, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
-    }
-
-    #[test]
     fn zero_shards_clamped_to_one() {
-        let buckets = round_robin(vec!["a", "b"], 0);
+        let buckets = blocks(vec!["a", "b"], 0);
         assert_eq!(buckets, vec![vec!["a", "b"]]);
     }
 
     #[test]
     fn more_shards_than_items_leaves_empties() {
-        let buckets = round_robin(vec![1], 3);
+        let buckets = blocks(vec![1], 3);
         assert_eq!(buckets.len(), 3);
         assert_eq!(buckets[0], vec![1]);
         assert!(buckets[1].is_empty() && buckets[2].is_empty());
+    }
+
+    #[test]
+    fn blocks_are_contiguous_and_balanced() {
+        let buckets = blocks((0..7).collect(), 3);
+        assert_eq!(buckets, vec![vec![0, 1, 2], vec![3, 4], vec![5, 6]]);
+        // every n % shards: sizes within one of each other, order kept
+        for n in 0..20usize {
+            for k in 1..6usize {
+                let buckets = blocks((0..n).collect(), k);
+                assert_eq!(buckets.len(), k);
+                let flat: Vec<usize> =
+                    buckets.iter().flatten().copied().collect();
+                assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} k={k}");
+                let sizes: Vec<usize> =
+                    buckets.iter().map(Vec::len).collect();
+                let (lo, hi) = (sizes.iter().min().unwrap(),
+                                sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "imbalance at n={n} k={k}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_decorrelate_index_modulo_patterns() {
+        // The motivating fix: items expensive at index % 3 == 0 (the
+        // mixed scenario's stress plants) all landed in round-robin
+        // bucket 0 (i % shards puts indices 0, 3, 6 on shard 0), but
+        // spread one-per-bucket across contiguous blocks.
+        let bl = blocks((0..9).collect::<Vec<usize>>(), 3);
+        for bucket in &bl {
+            let heavy = bucket.iter().filter(|i| *i % 3 == 0).count();
+            assert_eq!(heavy, 1, "each block gets exactly one heavy item");
+        }
     }
 }

@@ -15,16 +15,30 @@ fn base() -> SimConfig {
     c
 }
 
-fn fleet(n_plants: usize, shards: usize, scenario: &str) -> FleetRun {
+fn fleet_cfg(n_plants: usize, shards: usize, scenario: &str,
+             megabatch: bool) -> FleetConfig {
     let base = base();
-    let cfg = FleetConfig {
+    FleetConfig {
         n_plants,
         shards,
         fleet_seed: base.seed,
         scenario: Scenario::by_name(scenario).unwrap(),
         base,
-    };
-    FleetDriver::new(cfg).unwrap().run().unwrap()
+        megabatch,
+    }
+}
+
+fn fleet_with(n_plants: usize, shards: usize, scenario: &str,
+              megabatch: bool) -> (FleetRun, FleetConfig) {
+    let cfg = fleet_cfg(n_plants, shards, scenario, megabatch);
+    let run = FleetDriver::new(cfg.clone()).unwrap().run().unwrap();
+    (run, cfg)
+}
+
+fn fleet(n_plants: usize, shards: usize, scenario: &str) -> FleetRun {
+    // The legacy per-plant path: the megabatch identity gate below
+    // compares against exactly this.
+    fleet_with(n_plants, shards, scenario, false).0
 }
 
 #[test]
@@ -53,6 +67,61 @@ fn repeated_runs_are_bitwise_identical() {
     let a = fleet(4, 2, "baseline");
     let b = fleet(4, 2, "baseline");
     assert_eq!(a.aggregate.fingerprint(), b.aggregate.fingerprint());
+}
+
+#[test]
+fn megabatch_is_byte_identical_to_the_reference_run() {
+    // The PR 5 acceptance gate: for baseline/heatwave/mixed, a
+    // megabatch run at any shard count produces the same
+    // idatacool-fleet/1 fingerprint and byte-identical --json output as
+    // the 1-shard, megabatch-off reference. 5 plants over 3 shards also
+    // exercises contiguous block sharding with n_plants % shards != 0.
+    for scenario in ["baseline", "heatwave", "mixed"] {
+        let (reference, ref_cfg) = fleet_with(5, 1, scenario, false);
+        let ref_json = reference.to_json(&ref_cfg);
+        for shards in [1usize, 3] {
+            let (mb, mb_cfg) = fleet_with(5, shards, scenario, true);
+            assert_eq!(
+                reference.aggregate.fingerprint(),
+                mb.aggregate.fingerprint(),
+                "{scenario}: fingerprint diverged at {shards} shards"
+            );
+            assert_eq!(
+                ref_json,
+                mb.to_json(&mb_cfg),
+                "{scenario}: JSON bytes diverged at {shards} shards"
+            );
+            // the per-tick facility stream (1-shard megabatch) and the
+            // post-hoc replay must agree exactly
+            assert_eq!(
+                reference.facility.e_chilled.to_bits(),
+                mb.facility.e_chilled.to_bits(),
+                "{scenario}: facility diverged at {shards} shards"
+            );
+        }
+    }
+}
+
+#[test]
+fn megabatch_and_per_plant_traces_match_bitwise() {
+    // Beyond the aggregate fingerprint: every per-plant trace sample the
+    // facility consumes must match bitwise between the two paths.
+    let a = fleet_with(3, 1, "mixed", true).0;
+    let b = fleet_with(3, 1, "mixed", false).0;
+    for (x, y) in a.plants.iter().zip(&b.plants) {
+        assert_eq!(x.index, y.index);
+        assert_eq!(x.result.trace.len(), y.result.trace.len());
+        for (s, t) in x.result.trace.iter().zip(&y.result.trace) {
+            assert_eq!(s.t_rack_out.to_bits(), t.t_rack_out.to_bits());
+            assert_eq!(s.t_rack_in.to_bits(), t.t_rack_in.to_bits());
+            assert_eq!(s.p_d.to_bits(), t.p_d.to_bits());
+            assert_eq!(s.p_ac.to_bits(), t.p_ac.to_bits());
+            assert_eq!(s.p_dc.to_bits(), t.p_dc.to_bits());
+            assert_eq!(s.core_max.to_bits(), t.core_max.to_bits());
+            assert_eq!(s.throttling, t.throttling);
+            assert_eq!(s.utilization.to_bits(), t.utilization.to_bits());
+        }
+    }
 }
 
 #[test]

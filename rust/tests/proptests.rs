@@ -177,7 +177,8 @@ fn prop_kernel_parity() {
             refp.tick(&controls, &util, &mut or);
             soap.tick(&controls, &util, &mut os);
         }
-        for (a, b) in refp.node_state.iter().zip(&soap.node_state) {
+        let ns_ref = refp.node_state().to_vec();
+        for (a, b) in ns_ref.iter().zip(soap.node_state()) {
             assert!((a - b).abs() < 1e-3, "node state: {a} vs {b}");
         }
         for i in 0..npad * OBS_N {
@@ -195,6 +196,152 @@ fn prop_kernel_parity() {
             let denom = a.abs().max(1.0);
             assert!((a - b).abs() / denom < 1e-3,
                     "scalar {i}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_parity_megabatch_arena() {
+    // The megabatch arm of the kernel-parity family: random plant
+    // counts (1–5, random sizes) packed into one lane arena vs the same
+    // plants as standalone SoA states, driven with identical flow /
+    // inlet / utilization trajectories. The parity tolerances of
+    // prop_kernel_parity apply trivially: the arena is *bitwise*
+    // identical by construction (elementwise lane ops + per-range
+    // reductions in node order), so the assertion here is exact.
+    use idatacool::plant::soa::{
+        soa_observe, soa_observe_range, soa_substep, soa_substep_ranges,
+        SoaState,
+    };
+
+    let pp = PlantParams::default();
+    let ops = Operators::build(&pp);
+    forall(6, |rng| {
+        let k = 1 + rng.below(5); // 1..=5 plants
+        let mut statics = Vec::new();
+        for _ in 0..k {
+            let n = 3 + rng.below(14);
+            let lot = idatacool::variability::ChipLottery::draw(
+                n, &pp, rng.next_u64());
+            statics.push(PlantStatic::from_lottery(&lot, &pp, 64));
+        }
+        let refs: Vec<&PlantStatic> = statics.iter().collect();
+        let (mut arena, ranges) = SoaState::new_arena(&refs, &ops, &pp);
+        let mut singles: Vec<SoaState> =
+            statics.iter().map(|st| SoaState::new(st, &ops, &pp)).collect();
+        for (p, st) in statics.iter().enumerate() {
+            let npad = st.n_padded;
+            let t0: Vec<f32> = (0..npad * S)
+                .map(|_| rng.uniform_in(20.0, 90.0) as f32)
+                .collect();
+            let u0: Vec<f32> =
+                (0..npad * NC).map(|_| rng.uniform() as f32).collect();
+            singles[p].load(&t0, &u0);
+            arena.load_state_range(&t0, ranges[p]);
+            arena.load_util_range(&u0, ranges[p]);
+        }
+        let mut sums = vec![(0.0f64, 0.0f32); k];
+        for step in 0..30 {
+            if step % 7 == 0 {
+                for (p, single) in singles.iter_mut().enumerate() {
+                    let flow = rng.uniform_in(0.3, 1.0) as f32;
+                    single.set_flow(flow);
+                    arena.set_flow_range(flow, ranges[p]);
+                }
+            }
+            for (p, single) in singles.iter_mut().enumerate() {
+                let t_in = rng.uniform_in(30.0, 70.0) as f32;
+                single.set_inlet(t_in, ops.inv_c[IDX_WATER]);
+                arena.set_inlet_range(t_in, ops.inv_c[IDX_WATER],
+                                      ranges[p]);
+            }
+            let single_sums: Vec<(f64, f32)> = singles
+                .iter_mut()
+                .zip(&statics)
+                .map(|(s, st)| soa_substep(s, &pp, st.n_nodes))
+                .collect();
+            soa_substep_ranges(&mut arena, &pp, &ranges, &mut sums);
+            for (p, (a, b)) in single_sums.iter().zip(&sums).enumerate() {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(),
+                           "p_dc diverged: plant {p} step {step}");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(),
+                           "t_out diverged: plant {p} step {step}");
+            }
+        }
+        for (p, st) in statics.iter().enumerate() {
+            let mut a = vec![0.0f32; st.n_padded * S];
+            let mut b = vec![0.0f32; st.n_padded * S];
+            singles[p].materialize(&mut a);
+            arena.materialize_range(ranges[p], &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "state, plant {p}");
+            }
+            let mut oa = vec![0.0f32; st.n_padded * OBS_N];
+            let mut ob = vec![0.0f32; st.n_padded * OBS_N];
+            let ra = soa_observe(&mut singles[p], &pp, st.n_nodes, &mut oa);
+            let rb = soa_observe_range(&mut arena, &pp, ranges[p], &mut ob);
+            assert_eq!(ra.0.to_bits(), rb.0.to_bits(), "p_dc, plant {p}");
+            assert_eq!(ra.1.to_bits(), rb.1.to_bits(),
+                       "throttle, plant {p}");
+            assert_eq!(ra.2.to_bits(), rb.2.to_bits(),
+                       "core_max, plant {p}");
+            for (x, y) in oa.iter().zip(&ob) {
+                assert_eq!(x.to_bits(), y.to_bits(), "obs, plant {p}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_resident_lazy_matches_eager_writeback() {
+    // Resident-state contract across random trajectories: node_state()
+    // after one lazy materialization is bitwise equal to a twin that
+    // eagerly materializes after every tick, and the read never
+    // perturbs the subsequent evolution.
+    let pp = PlantParams::default();
+    forall(4, |rng| {
+        let n = 3 + rng.below(14);
+        let seed = rng.next_u64();
+        let lot = idatacool::variability::ChipLottery::draw(n, &pp, seed);
+        let st = PlantStatic::from_lottery(&lot, &pp, 64);
+        let ops = Operators::build(&pp);
+        let mut lazy = NativePlant::with_kernel(
+            pp.clone(), ops.clone(), st.clone(), 20.0, PlantKernel::Soa);
+        let mut eager = NativePlant::with_kernel(
+            pp.clone(), ops, st.clone(), 20.0, PlantKernel::Soa);
+        let npad = st.n_padded;
+        let mut ol = TickOutput::new(npad);
+        let mut oe = TickOutput::new(npad);
+        let mut controls = vec![0.0f32; CT];
+        controls[U_CHILLER_EN] = 1.0;
+        controls[U_T_AMBIENT] = 18.0;
+        controls[U_T_CENTRAL] = 8.0;
+        controls[U_GPU_LOAD] = 9000.0;
+        let mut util = vec![0.0f32; npad * NC];
+        for tick in 0..40 {
+            if tick % 8 == 0 {
+                controls[U_FLOW_SCALE] = rng.uniform_in(0.3, 1.0) as f32;
+                controls[U_VALVE] = rng.uniform() as f32;
+            }
+            for u in util.iter_mut() {
+                *u = rng.uniform() as f32;
+            }
+            lazy.tick(&controls, &util, &mut ol);
+            eager.tick(&controls, &util, &mut oe);
+            let _ = eager.node_state(); // eager per-tick write-back
+        }
+        let a = lazy.node_state().to_vec();
+        for (x, y) in a.iter().zip(eager.node_state()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "lazy vs eager");
+        }
+        // repeat reads are stable
+        assert_eq!(lazy.node_state(), &a[..]);
+        // observations were never affected by the materialization
+        for (x, y) in ol.node_obs.iter().zip(&oe.node_obs) {
+            assert_eq!(x.to_bits(), y.to_bits(), "node obs");
+        }
+        for (x, y) in ol.scalars.iter().zip(&oe.scalars) {
+            assert_eq!(x.to_bits(), y.to_bits(), "scalars");
         }
     });
 }
