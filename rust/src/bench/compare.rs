@@ -204,6 +204,7 @@ mod tests {
                     units_per_sec: 0.0,
                     unit: String::new(),
                     max_regress_pct: *thr,
+                    phases: vec![],
                 })
                 .collect(),
         }

@@ -34,6 +34,10 @@ pub struct BenchResult {
     /// Work units per iteration (for throughput reporting).
     pub units_per_iter: f64,
     pub unit_name: String,
+    /// Per-phase attribution, `(span name, ns/iter)`, captured from the
+    /// flight recorder's cumulative phase totals when tracing is enabled
+    /// during the measurement loop; empty otherwise. Name-sorted.
+    pub phases: Vec<(String, f64)>,
 }
 
 impl BenchResult {
@@ -153,12 +157,40 @@ impl Bench {
         for _ in 0..self.warmup_iters {
             f();
         }
+        // Phase attribution: the recorder's cumulative per-name totals
+        // are never evicted (unlike the event ring), so deltas around
+        // the measurement loop stay exact even when the ring wraps.
+        let phases_before = if crate::obs::enabled() {
+            Some(crate::obs::trace::phase_totals())
+        } else {
+            None
+        };
         let mut times = Vec::with_capacity(self.measure_iters);
         for _ in 0..self.measure_iters {
             let t0 = Instant::now();
             f();
             times.push(t0.elapsed().as_secs_f64());
         }
+        let phases = match phases_before {
+            Some(before) if crate::obs::enabled() => {
+                let after = crate::obs::trace::phase_totals();
+                let iters = self.measure_iters.max(1) as f64;
+                after
+                    .into_iter()
+                    .filter_map(|(name, (count, total_us))| {
+                        let (c0, us0) =
+                            before.get(&name).copied().unwrap_or((0, 0.0));
+                        if count > c0 {
+                            // µs summed over the loop -> ns per iteration.
+                            Some((name, (total_us - us0) * 1e3 / iters))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
+            }
+            _ => Vec::new(),
+        };
         times.sort_by(|a, b| a.total_cmp(b));
         // Trimmed mean: drop the slowest ~5 % of samples — at least one
         // once there are >= 5 — to damp OS scheduling spikes (min/p50/p95
@@ -182,6 +214,7 @@ impl Bench {
             p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
             units_per_iter,
             unit_name: unit_name.to_string(),
+            phases,
         };
         println!("{}", res.report());
         self.results.push(res);

@@ -37,6 +37,10 @@ pub struct BenchRecord {
     /// Per-bench regression threshold override for the comparator
     /// (baselines only; `None` uses the gate's `--max-regress` default).
     pub max_regress_pct: Option<f64>,
+    /// Optional per-phase breakdown, `(span name, ns/iter)`, emitted as
+    /// the `phase_ns_per_iter` object when the run was traced; empty
+    /// records omit the field. Name-sorted (it rides a `BTreeMap`).
+    pub phases: Vec<(String, f64)>,
 }
 
 impl BenchRecord {
@@ -51,6 +55,7 @@ impl BenchRecord {
             units_per_sec: r.throughput(),
             unit: r.unit_name.clone(),
             max_regress_pct: None,
+            phases: r.phases.clone(),
         }
     }
 }
@@ -124,6 +129,17 @@ impl BenchReport {
                 if let Some(t) = b.max_regress_pct {
                     e.insert("max_regress_pct".into(), Json::Num(t));
                 }
+                if !b.phases.is_empty() {
+                    let phases: BTreeMap<String, Json> = b
+                        .phases
+                        .iter()
+                        .map(|(name, ns)| (name.clone(), Json::Num(*ns)))
+                        .collect();
+                    e.insert(
+                        "phase_ns_per_iter".into(),
+                        Json::Obj(phases),
+                    );
+                }
                 Json::Obj(e)
             })
             .collect();
@@ -178,6 +194,15 @@ impl BenchReport {
                     .unwrap_or("")
                     .to_string(),
                 max_regress_pct: e.get("max_regress_pct").and_then(Json::as_f64),
+                phases: match e.get("phase_ns_per_iter") {
+                    Some(Json::Obj(m)) => m
+                        .iter()
+                        .filter_map(|(name, v)| {
+                            v.as_f64().map(|ns| (name.clone(), ns))
+                        })
+                        .collect(),
+                    _ => Vec::new(),
+                },
             });
         }
         Ok(BenchReport {
@@ -300,6 +325,10 @@ mod tests {
                     units_per_sec: 4320.0,
                     unit: "node-substeps".into(),
                     max_regress_pct: None,
+                    phases: vec![
+                        ("control".into(), 1500.25),
+                        ("soa_substep".into(), 98000.5),
+                    ],
                 },
                 BenchRecord {
                     id: "manifold_solve/72-branches".into(),
@@ -311,6 +340,7 @@ mod tests {
                     units_per_sec: 0.0,
                     unit: "".into(),
                     max_regress_pct: Some(40.0),
+                    phases: vec![],
                 },
             ],
         }
@@ -319,7 +349,11 @@ mod tests {
     #[test]
     fn report_round_trips_exactly() {
         let r = sample_report();
-        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        let text = r.to_json();
+        // Traced record carries the breakdown; untraced one omits it.
+        assert!(text.contains("phase_ns_per_iter"));
+        assert_eq!(text.matches("phase_ns_per_iter").count(), 1);
+        let back = BenchReport::from_json(&text).unwrap();
         assert_eq!(r, back);
         // f64 Display emits the shortest round-trip representation, so
         // numeric fields survive bit-exactly.
@@ -377,11 +411,13 @@ mod tests {
             p95_s: 2.4e-6,
             units_per_iter: 10.0,
             unit_name: "items".into(),
+            phases: vec![("tick".into(), 1800.0)],
         };
         let rep = BenchReport::from_results("s", "native", 7, false, &[r]);
         assert_eq!(rep.suite, "s");
         assert!((rep.benches[0].ns_per_iter - 2000.0).abs() < 1e-9);
         assert!((rep.benches[0].units_per_sec - 5e6).abs() < 1.0);
         assert!(rep.config_fingerprint.starts_with("0x"));
+        assert_eq!(rep.benches[0].phases, vec![("tick".to_string(), 1800.0)]);
     }
 }

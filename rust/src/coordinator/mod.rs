@@ -47,6 +47,9 @@ pub struct TraceSample {
     pub p_add: f64,
     pub valve: f64,
     pub chiller_on: bool,
+    /// True while the supervisor holds the pump in a failure window
+    /// (`Fault::PumpFailure`); the fleet aggregate counts these ticks.
+    pub pump_fail: bool,
     pub core_max: f64,
     pub throttling: u32,
     pub utilization: f64,
@@ -245,6 +248,7 @@ impl SimulationDriver {
     /// arena sweep while reproducing this loop exactly.
     fn step(&mut self, tick_s: f64, out: &mut TickOutput,
             plant_wall: &mut f64) -> Result<TraceSample> {
+        let _tick_span = crate::obs::span("tick");
         self.control_phase(tick_s, out);
         let t0 = std::time::Instant::now();
         self.backend.tick(&self.controls, &self.plan.util, out)?;
@@ -257,6 +261,7 @@ impl SimulationDriver {
     /// (`prev` carries the previous tick's scalars for its
     /// over-temperature checks).
     pub(crate) fn control_phase(&mut self, tick_s: f64, prev: &TickOutput) {
+        let _span = crate::obs::span("control");
         // 1. workload
         self.workload.advance(tick_s, &mut self.plan);
 
@@ -282,6 +287,7 @@ impl SimulationDriver {
     /// telemetry-noised trace sample from the plant outputs.
     pub(crate) fn sample_phase(&mut self, tick_s: f64, out: &TickOutput)
                                -> TraceSample {
+        let _span = crate::obs::span("sample");
         self.now_s += tick_s;
 
         // 4. telemetry view
@@ -292,7 +298,7 @@ impl SimulationDriver {
             (0..n).map(|i| self.plan.node_mean(i) as f64).sum::<f64>()
                 / n as f64
         };
-        TraceSample {
+        let sample = TraceSample {
             t_s: self.now_s,
             t_rack_in: self.telemetry.cluster_temp(sc[SC_T_RACK_IN] as f64),
             t_rack_out: self.telemetry.cluster_temp(sc[SC_T_RACK_OUT] as f64),
@@ -306,10 +312,15 @@ impl SimulationDriver {
             p_add: sc[SC_P_ADD] as f64,
             valve: self.controls[U_VALVE] as f64,
             chiller_on: sc[SC_CHILLER_ON] > 0.5,
+            pump_fail: self.controls[U_PUMP_FAIL] > 0.5,
             core_max: sc[SC_CORE_MAX] as f64,
             throttling: sc[SC_THROTTLE] as u32,
             utilization: util_mean,
+        };
+        if crate::obs::enabled() && sample.throttling > 0 {
+            crate::obs::metrics::throttle_events().inc();
         }
+        sample
     }
 
     /// The current control vector `[CT]` (the megabatch engine copies

@@ -35,6 +35,10 @@ pub struct PlantMetrics {
     pub credit_frac: f64,
     /// Ticks with at least one core in the throttle band.
     pub throttle_ticks: u64,
+    /// Ticks with the adsorption chiller off (outage windows included).
+    pub chiller_off_ticks: u64,
+    /// Ticks inside a supervisor pump-failure window.
+    pub pump_fail_ticks: u64,
     pub t_out_mean: f64,
     pub mean_p_ac_w: f64,
 }
@@ -52,6 +56,11 @@ pub struct FleetAggregate {
     pub facility_reuse_fraction: f64,
     pub worst_throttle_plant: Option<usize>,
     pub worst_throttle_ticks: u64,
+    /// Fleet-wide domain-event totals (sums of the per-plant tick
+    /// counts) — deterministic, derived from sim state, never wall-clock.
+    pub fleet_throttle_ticks: u64,
+    pub fleet_chiller_off_ticks: u64,
+    pub fleet_pump_fail_ticks: u64,
     pub fleet_e_ac: f64,
     pub fleet_e_dc: f64,
 }
@@ -92,6 +101,18 @@ impl FleetAggregate {
                 .iter()
                 .filter(|s| s.throttling > 0)
                 .count() as u64;
+            let chiller_off_ticks = p
+                .result
+                .trace
+                .iter()
+                .filter(|s| !s.chiller_on)
+                .count() as u64;
+            let pump_fail_ticks = p
+                .result
+                .trace
+                .iter()
+                .filter(|s| s.pump_fail)
+                .count() as u64;
             let is_worse = match worst {
                 None => true,
                 Some((_, w)) => throttle_ticks > w,
@@ -114,12 +135,23 @@ impl FleetAggregate {
                 reuse_local: e.reuse_fraction(),
                 credit_frac: safe_div(credit_j, e.e_ac),
                 throttle_ticks,
+                chiller_off_ticks,
+                pump_fail_ticks,
                 t_out_mean: t_out.mean(),
                 mean_p_ac_w: e.mean_p_ac(),
             });
         }
 
+        let fleet_throttle_ticks =
+            per_plant.iter().map(|m| m.throttle_ticks).sum();
+        let fleet_chiller_off_ticks =
+            per_plant.iter().map(|m| m.chiller_off_ticks).sum();
+        let fleet_pump_fail_ticks =
+            per_plant.iter().map(|m| m.pump_fail_ticks).sum();
         FleetAggregate {
+            fleet_throttle_ticks,
+            fleet_chiller_off_ticks,
+            fleet_pump_fail_ticks,
             per_plant,
             pue_stats,
             ere_stats,
@@ -207,6 +239,8 @@ impl FleetAggregate {
                     .num("reuse_local", m.reuse_local)
                     .num("credit_frac", m.credit_frac)
                     .num("throttle_ticks", m.throttle_ticks as f64)
+                    .num("chiller_off_ticks", m.chiller_off_ticks as f64)
+                    .num("pump_fail_ticks", m.pump_fail_ticks as f64)
                     .num("t_out_mean", m.t_out_mean)
                     .num("mean_p_ac_w", m.mean_p_ac_w)
                     .build()
@@ -232,6 +266,20 @@ impl FleetAggregate {
                     .unwrap_or(Json::Null),
             )
             .num("worst_throttle_ticks", self.worst_throttle_ticks as f64)
+            .set(
+                "domain_events",
+                JsonBuilder::new()
+                    .num("throttle_ticks", self.fleet_throttle_ticks as f64)
+                    .num(
+                        "chiller_outage_ticks",
+                        self.fleet_chiller_off_ticks as f64,
+                    )
+                    .num(
+                        "pump_degradation_ticks",
+                        self.fleet_pump_fail_ticks as f64,
+                    )
+                    .build(),
+            )
             .num("fleet_e_ac_j", self.fleet_e_ac)
             .num("fleet_e_dc_j", self.fleet_e_dc)
             .build()
@@ -273,6 +321,8 @@ impl FleetAggregate {
             h = mix(h, m.reuse_local);
             h = mix(h, m.credit_frac);
             h = mix(h, m.throttle_ticks as f64);
+            h = mix(h, m.chiller_off_ticks as f64);
+            h = mix(h, m.pump_fail_ticks as f64);
             h = mix(h, m.t_out_mean);
             h = mix(h, m.mean_p_ac_w);
         }

@@ -116,6 +116,9 @@ pub struct LockstepFleet {
     /// Wall-clock spent in the arena physics (substeps + epilogue),
     /// the lockstep analogue of `RunResult::plant_wall_s`.
     plant_wall_s: f64,
+    /// Span label for the arena physics window, carrying the shard
+    /// index (`megabatch_sweep/shard=K`) — see `set_shard`.
+    sweep_label: std::sync::Arc<str>,
 }
 
 impl LockstepFleet {
@@ -208,8 +211,16 @@ impl LockstepFleet {
             ticks_total,
             ticks_done: 0,
             plant_wall_s: 0.0,
+            sweep_label: std::sync::Arc::from("megabatch_sweep/shard=0"),
             ctxs,
         })
+    }
+
+    /// Tag this arena's trace spans with its shard index. Purely an
+    /// observability label; never enters results.
+    pub fn set_shard(&mut self, shard: usize) {
+        self.sweep_label =
+            std::sync::Arc::from(format!("megabatch_sweep/shard={shard}").as_str());
     }
 
     /// Number of plants in the arena.
@@ -251,6 +262,7 @@ impl LockstepFleet {
         // rescale, so the two execution modes report comparable plant
         // wall clocks.
         let t0 = Instant::now();
+        let _sweep_span = crate::obs::span_dyn(&self.sweep_label);
         for (p, ctx) in self.ctxs.iter().enumerate() {
             let r = self.ranges[p];
             self.soa.load_util_range(&ctx.driver.plan.util, r);
@@ -266,6 +278,7 @@ impl LockstepFleet {
         // inlet forcing and the circuit step stay per plant (each plant
         // owns its circuit state), exactly as NativePlant::tick orders
         // them.
+        let _substep_span = crate::obs::span("soa_substep");
         for _ in 0..self.substeps {
             for (p, ctx) in self.ctxs.iter().enumerate() {
                 let t_in = ctx.driver.backend.circuit_state()[C_T_RACK_IN];
@@ -284,9 +297,11 @@ impl LockstepFleet {
                                           r.n_valid, &self.pp);
             }
         }
+        drop(_substep_span);
         // Phase 3 (per plant): fused observe epilogue from the resident
         // lanes + the scalar block — still plant physics, so it stays
         // inside the plant_wall_s window.
+        let obs_span = crate::obs::span("observe");
         for (p, ctx) in self.ctxs.iter_mut().enumerate() {
             let r = self.ranges[p];
             let (p_dc, throttling, core_max) = soa::soa_observe_range(
@@ -295,6 +310,8 @@ impl LockstepFleet {
             np.fill_scalars(&self.ctrl[p], p_dc, throttling, core_max,
                             &mut self.outs[p]);
         }
+        drop(obs_span);
+        drop(_sweep_span);
         self.plant_wall_s += t0.elapsed().as_secs_f64();
         // Phase 4 (per plant): telemetry sample + accounting — the
         // coordinator-side work SimulationDriver::step also excludes
@@ -321,6 +338,7 @@ impl LockstepFleet {
         while self.ticks_done < self.ticks_total {
             self.tick();
             if let Some(model) = facility.as_mut() {
+                let _span = crate::obs::span("facility");
                 inputs.clear();
                 for trace in &self.traces {
                     let s = trace.last().expect("tick just pushed a sample");

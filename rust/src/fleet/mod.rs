@@ -185,7 +185,8 @@ impl FleetDriver {
         // bitwise the same report).
         if lockstep && shards == 1 {
             match LockstepFleet::new(megabatch::build_ctxs(specs)?) {
-                Ok(ls) => {
+                Ok(mut ls) => {
+                    ls.set_shard(0);
                     let model = FacilityModel::new(params, n_plants);
                     let (plants, facility) = ls.run(Some(model))?;
                     let facility =
@@ -214,8 +215,10 @@ impl FleetDriver {
             (0..n_plants).map(|_| None).collect();
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::with_capacity(buckets.len());
-            for bucket in buckets {
-                handles.push(scope.spawn(move || run_bucket(bucket, lockstep)));
+            for (shard, bucket) in buckets.into_iter().enumerate() {
+                handles.push(
+                    scope.spawn(move || run_bucket(bucket, lockstep, shard)),
+                );
             }
             for h in handles {
                 let shard_runs = h
@@ -260,11 +263,14 @@ fn assemble(plants: Vec<PlantRun>, facility: FacilityReport, shards: usize,
 /// Run one shard's plants: in tick lockstep over one shared lane arena
 /// (megabatch, config-prechecked by the caller), or sequentially, each
 /// plant owning its full driver.
-fn run_bucket(bucket: Vec<PlantSpec>, lockstep: bool)
+fn run_bucket(bucket: Vec<PlantSpec>, lockstep: bool, shard: usize)
               -> Result<Vec<PlantRun>> {
     if lockstep {
         return match LockstepFleet::new(megabatch::build_ctxs(bucket)?) {
-            Ok(ls) => ls.run(None).map(|(plants, _)| plants),
+            Ok(mut ls) => {
+                ls.set_shard(shard);
+                ls.run(None).map(|(plants, _)| plants)
+            }
             Err(ctxs) => megabatch::run_ctxs_sequential(ctxs),
         };
     }
@@ -298,6 +304,7 @@ pub(crate) fn plant_tick_of(s: &TraceSample) -> PlantTick {
 /// tick-aligned and in plant-index order.
 pub fn run_facility(plants: &[PlantRun], params: FacilityParams)
                     -> FacilityReport {
+    let _span = crate::obs::span("facility");
     let mut model = FacilityModel::new(params, plants.len());
     let n_ticks = plants
         .iter()

@@ -17,6 +17,9 @@
 //!  * **Serve** (`server`): the twin as a resident service — a std-only
 //!    HTTP/1.1 server with a worker pool, in-flight request coalescing
 //!    and a fingerprint-keyed LRU response cache (`idatacool serve`).
+//!  * **Obs** (`obs`): the flight recorder — crate-wide tracing spans
+//!    flushed to Chrome `trace_event` JSON, plus a Prometheus-ready
+//!    metrics registry; zero-cost when disabled (the default).
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-figure reproductions.
@@ -27,6 +30,7 @@ pub mod coordinator;
 pub mod economics;
 pub mod figures;
 pub mod fleet;
+pub mod obs;
 pub mod plant;
 pub mod report;
 pub mod runtime;

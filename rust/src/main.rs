@@ -70,6 +70,10 @@ common flags:
   --setpoint <degC>      rack-outlet setpoint
   --workload <stress|production|idle>
   --seed <n>
+  --trace-out <path>     (run|fleet|bench) record tick/request phase spans
+                         and write a Chrome trace_event JSON (load in
+                         Perfetto / chrome://tracing); tracing never
+                         changes simulation results
 fleet flags:
   --plants <n>           number of plants in the fleet (default 4)
   --shards <k>           OS threads to shard plants over (default: cores;
@@ -119,6 +123,25 @@ validate flags:
   --faults               include fault-injection scenarios
   --ticks <n>            trajectory length for backend comparison
 ";
+
+/// Arm the flight recorder when `--trace-out` is present: enable span
+/// recording and clear any prior rings. Returns the output path so the
+/// caller can flush once the work completes.
+fn trace_out_arm(args: &Args) -> Option<PathBuf> {
+    let path = args.get("trace-out").map(PathBuf::from)?;
+    idatacool::obs::trace::reset();
+    idatacool::obs::enable();
+    Some(path)
+}
+
+/// Flush the recorder's rings to `path` as Chrome `trace_event` JSON and
+/// disarm it.
+fn trace_out_flush(path: &std::path::Path) -> Result<()> {
+    idatacool::obs::disable();
+    idatacool::obs::trace::write_chrome_trace(path)?;
+    println!("wrote trace {}", path.display());
+    Ok(())
+}
 
 /// Read and parse `--config` once; `None` when the flag is absent.
 fn load_config_doc(args: &Args)
@@ -178,10 +201,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         "run '{}': {} nodes, backend={}, workload={:?}, {}s sim",
         cfg.name, cfg.n_nodes, cfg.backend, cfg.workload, cfg.duration_s
     );
+    let trace_out = trace_out_arm(args);
     let mut driver = SimulationDriver::new(cfg)?;
     let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
     let kernel = driver.backend.kernel_name();
     let res = driver.run(12)?;
+    if let Some(path) = &trace_out {
+        trace_out_flush(path)?;
+    }
     println!("backend: {} (kernel: {})", res.backend, kernel);
     println!("{}", res.energy.summary());
     println!("workload: {}", res.workload_stats);
@@ -279,6 +306,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     );
 
     let fleet_seed = base.seed;
+    let trace_out = trace_out_arm(args);
     let driver = FleetDriver::new(FleetConfig {
         n_plants,
         shards,
@@ -288,6 +316,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         megabatch,
     })?;
     let run = driver.run()?;
+    if let Some(path) = &trace_out {
+        trace_out_flush(path)?;
+    }
 
     for s in run.aggregate.series() {
         println!("{}", s.to_table());
@@ -432,6 +463,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         None => None,
     };
 
+    // Armed before the suites run so every BenchResult (and therefore
+    // every BENCH_*.json record) carries its per-phase breakdown.
+    let trace_out = trace_out_arm(args);
     let mut reports = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     for name in &names {
@@ -476,6 +510,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         std::fs::write(path, BaselineFile { reports }.to_json())?;
         println!("baseline written to {out}");
+    }
+
+    // Flush before the gate so a regression failure still leaves the
+    // trace on disk for diagnosis.
+    if let Some(path) = &trace_out {
+        trace_out_flush(path)?;
     }
 
     anyhow::ensure!(

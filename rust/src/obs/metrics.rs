@@ -1,0 +1,436 @@
+//! Named counters / gauges / histograms with Prometheus text exposition.
+//!
+//! Everything here is lock-free on the update path: counters and gauges
+//! are single `AtomicU64`s, histograms are per-shard `AtomicU64` bin
+//! arrays (one shard per server worker) that are only merged into a
+//! [`crate::stats::Histogram`] at scrape time. Registries hand out
+//! `Arc`s so hot paths hold direct references and never touch the
+//! registry lock after setup.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::stats::histogram::Histogram;
+
+/// Monotonic event counter.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value; `record_max` keeps a high-water mark.
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_max(&self, v: u64) {
+        self.v.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Counter family over one label dimension with a fixed value catalog
+/// (e.g. per-endpoint request counts).
+pub struct CounterVec {
+    name: &'static str,
+    help: &'static str,
+    label: &'static str,
+    labels: &'static [&'static str],
+    values: Vec<AtomicU64>,
+}
+
+impl CounterVec {
+    #[inline]
+    pub fn inc(&self, i: usize) {
+        self.values[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, i: usize) -> u64 {
+        self.values[i].load(Ordering::Relaxed)
+    }
+
+    pub fn labels(&self) -> &'static [&'static str] {
+        self.labels
+    }
+}
+
+struct AtomicBins {
+    bins: Vec<AtomicU64>,
+    underflow: AtomicU64,
+    overflow: AtomicU64,
+}
+
+/// Histogram sharded into independent atomic-bin arrays — one shard per
+/// writer (server worker) — so pushes never contend. Shards are summed
+/// into a plain [`Histogram`] only at scrape time.
+pub struct ShardedHistogram {
+    name: &'static str,
+    help: &'static str,
+    lo: f64,
+    hi: f64,
+    /// When true, stored values are log10 and exposition quantiles are
+    /// mapped back through `10^q` (the server records log10-milliseconds).
+    log10: bool,
+    shards: Vec<AtomicBins>,
+}
+
+impl ShardedHistogram {
+    /// Record `x` into shard `shard % n_shards`. Lock-free.
+    #[inline]
+    pub fn push(&self, shard: usize, x: f64) {
+        let s = &self.shards[shard % self.shards.len()];
+        if !x.is_finite() || x < self.lo {
+            s.underflow.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if x >= self.hi {
+            s.overflow.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let n = s.bins.len();
+        let idx = (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize;
+        s.bins[idx.min(n - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sum every shard into one [`Histogram`] snapshot.
+    pub fn merged(&self) -> Histogram {
+        let bins = self.shards[0].bins.len();
+        let mut h = Histogram::new(self.lo, self.hi, bins);
+        for s in &self.shards {
+            for (i, b) in s.bins.iter().enumerate() {
+                let n = b.load(Ordering::Relaxed);
+                h.counts[i] += n;
+                h.total += n;
+            }
+            let u = s.underflow.load(Ordering::Relaxed);
+            let o = s.overflow.load(Ordering::Relaxed);
+            h.underflow += u;
+            h.overflow += o;
+            h.total += u + o;
+        }
+        h
+    }
+
+    fn expo_quantile(&self, h: &Histogram, q: f64) -> f64 {
+        let v = h.quantile(q);
+        if v.is_nan() {
+            return 0.0;
+        }
+        if self.log10 { 10f64.powf(v) } else { v }
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    CounterVec(Arc<CounterVec>),
+    Histogram(Arc<ShardedHistogram>),
+}
+
+impl Metric {
+    fn name(&self) -> &'static str {
+        match self {
+            Metric::Counter(c) => c.name,
+            Metric::Gauge(g) => g.name,
+            Metric::CounterVec(c) => c.name,
+            Metric::Histogram(h) => h.name,
+        }
+    }
+
+    fn render(&self, out: &mut String) {
+        match self {
+            Metric::Counter(c) => {
+                header(out, c.name, c.help, "counter");
+                out.push_str(&format!("{} {}\n", c.name, c.get()));
+            }
+            Metric::Gauge(g) => {
+                header(out, g.name, g.help, "gauge");
+                out.push_str(&format!("{} {}\n", g.name, g.get()));
+            }
+            Metric::CounterVec(c) => {
+                header(out, c.name, c.help, "counter");
+                for (i, l) in c.labels.iter().enumerate() {
+                    out.push_str(&format!("{}{{{}=\"{}\"}} {}\n", c.name, c.label, l, c.get(i)));
+                }
+            }
+            Metric::Histogram(hist) => {
+                header(out, hist.name, hist.help, "summary");
+                let h = hist.merged();
+                for q in [0.5, 0.9, 0.99] {
+                    out.push_str(&format!(
+                        "{}{{quantile=\"{}\"}} {}\n",
+                        hist.name,
+                        q,
+                        hist.expo_quantile(&h, q)
+                    ));
+                }
+                out.push_str(&format!("{}_count {}\n", hist.name, h.total));
+            }
+        }
+    }
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// A set of named metrics rendered together. The server owns one per
+/// instance; sim-domain counters live in the process-wide [`global`]
+/// registry.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<Vec<Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &'static str, help: &'static str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        for existing in m.iter() {
+            if existing.name() == name {
+                match existing {
+                    Metric::Counter(c) => return c.clone(),
+                    _ => panic!("metric {name} already registered with a different kind"),
+                }
+            }
+        }
+        let c = Arc::new(Counter { name, help, v: AtomicU64::new(0) });
+        m.push(Metric::Counter(c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &'static str, help: &'static str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        for existing in m.iter() {
+            if existing.name() == name {
+                match existing {
+                    Metric::Gauge(g) => return g.clone(),
+                    _ => panic!("metric {name} already registered with a different kind"),
+                }
+            }
+        }
+        let g = Arc::new(Gauge { name, help, v: AtomicU64::new(0) });
+        m.push(Metric::Gauge(g.clone()));
+        g
+    }
+
+    pub fn counter_vec(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        label: &'static str,
+        labels: &'static [&'static str],
+    ) -> Arc<CounterVec> {
+        assert!(!labels.is_empty(), "counter_vec needs at least one label value");
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        for existing in m.iter() {
+            if existing.name() == name {
+                match existing {
+                    Metric::CounterVec(c) => return c.clone(),
+                    _ => panic!("metric {name} already registered with a different kind"),
+                }
+            }
+        }
+        let values = (0..labels.len()).map(|_| AtomicU64::new(0)).collect();
+        let c = Arc::new(CounterVec { name, help, label, labels, values });
+        m.push(Metric::CounterVec(c.clone()));
+        c
+    }
+
+    /// Register a sharded histogram over `[lo, hi)` with `bins` bins and
+    /// `shards` independent writer slots. `log10` marks the stored
+    /// values as log10 for exposition (quantiles mapped through `10^q`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        lo: f64,
+        hi: f64,
+        bins: usize,
+        shards: usize,
+        log10: bool,
+    ) -> Arc<ShardedHistogram> {
+        assert!(hi > lo && bins > 0 && shards > 0, "degenerate histogram spec");
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        for existing in m.iter() {
+            if existing.name() == name {
+                match existing {
+                    Metric::Histogram(h) => return h.clone(),
+                    _ => panic!("metric {name} already registered with a different kind"),
+                }
+            }
+        }
+        let mk = || AtomicBins {
+            bins: (0..bins).map(|_| AtomicU64::new(0)).collect(),
+            underflow: AtomicU64::new(0),
+            overflow: AtomicU64::new(0),
+        };
+        let h = Arc::new(ShardedHistogram {
+            name,
+            help,
+            lo,
+            hi,
+            log10,
+            shards: (0..shards).map(|_| mk()).collect(),
+        });
+        m.push(Metric::Histogram(h.clone()));
+        h
+    }
+
+    /// Prometheus text exposition (format version 0.0.4) of every
+    /// registered metric, sorted by metric name.
+    pub fn to_prometheus(&self) -> String {
+        let m = self.metrics.lock().expect("metrics registry poisoned");
+        let mut order: Vec<&Metric> = m.iter().collect();
+        order.sort_by_key(|x| x.name());
+        let mut out = String::new();
+        for metric in order {
+            metric.render(&mut out);
+        }
+        out
+    }
+}
+
+/// Process-wide registry for sim-domain counters. Updates are gated on
+/// [`crate::obs::enabled`] at the call sites, so disabled runs never
+/// touch these.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Ticks observed with at least one throttling node (counted once per
+/// sampled tick, per plant).
+pub fn throttle_events() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_throttle_events_total",
+            "Sim ticks observed with at least one throttling node",
+        )
+    })
+}
+
+/// Lane-state synchronizations in the SoA plant backend: node-major
+/// loads into lanes plus lane-major materializations back out.
+pub fn lane_sync_transitions() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_lane_sync_transitions_total",
+            "SoA lane-state loads and node-major materializations",
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_prometheus() {
+        let r = Registry::new();
+        let c = r.counter("t_requests_total", "requests");
+        let g = r.gauge("t_queue_hwm", "queue high-water");
+        c.add(3);
+        g.record_max(7);
+        g.record_max(4);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE t_queue_hwm gauge"));
+        assert!(text.contains("# TYPE t_requests_total counter"));
+        assert!(text.contains("t_requests_total 3\n"));
+        assert!(text.contains("t_queue_hwm 7\n"));
+    }
+
+    #[test]
+    fn counter_vec_renders_labels() {
+        let r = Registry::new();
+        let v = r.counter_vec("t_by_endpoint_total", "per endpoint", "endpoint", &["a", "b"]);
+        v.inc(1);
+        v.inc(1);
+        let text = r.to_prometheus();
+        assert!(text.contains("t_by_endpoint_total{endpoint=\"a\"} 0\n"));
+        assert!(text.contains("t_by_endpoint_total{endpoint=\"b\"} 2\n"));
+    }
+
+    #[test]
+    fn sharded_histogram_merges_and_maps_log_quantiles() {
+        let r = Registry::new();
+        let h = r.histogram("t_latency_ms", "latency", -3.0, 5.0, 160, 4, true);
+        // Push the same value from every shard; the merged median must
+        // land on it after the 10^q mapping.
+        for shard in 0..4 {
+            for _ in 0..10 {
+                h.push(shard, 1.0); // log10(10 ms)
+            }
+        }
+        let merged = h.merged();
+        assert_eq!(merged.total, 40);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE t_latency_ms summary"));
+        assert!(text.contains("t_latency_ms_count 40\n"));
+        // quantile lines are in ms-space, near 10.0
+        let q50 = 10f64.powf(merged.quantile(0.5));
+        assert!((q50 - 10.0).abs() / 10.0 < 0.1, "q50 = {q50}");
+    }
+
+    #[test]
+    fn empty_histogram_exposes_zero_quantiles() {
+        let r = Registry::new();
+        let h = r.histogram("t_empty_ms", "latency", -3.0, 5.0, 160, 2, true);
+        let _ = h; // registered but never pushed
+        let text = r.to_prometheus();
+        assert!(text.contains("t_empty_ms{quantile=\"0.5\"} 0\n"));
+        assert!(text.contains("t_empty_ms_count 0\n"));
+    }
+
+    #[test]
+    fn registry_dedups_by_name() {
+        let r = Registry::new();
+        let a = r.counter("t_dedup_total", "x");
+        let b = r.counter("t_dedup_total", "x");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+    }
+
+    #[test]
+    fn global_domain_counters_are_stable() {
+        let c1 = throttle_events() as *const _;
+        let c2 = throttle_events() as *const _;
+        assert_eq!(c1, c2);
+        let _ = lane_sync_transitions();
+    }
+}

@@ -1,0 +1,86 @@
+//! Flight recorder: crate-wide tracing spans and a metrics registry.
+//!
+//! The subsystem is built around one invariant: **when disabled (the
+//! default), instrumented code pays a single relaxed atomic load** — no
+//! locks, no allocations, no clock reads. Every `span()` call site first
+//! checks the global flag; a disabled guard carries `None` and its `Drop`
+//! is a no-op. Wall-clock time therefore only ever flows into trace and
+//! metrics *output*, never into simulation results — the determinism
+//! contract checked by `prop_tracing_is_invisible`.
+//!
+//! Two halves:
+//!
+//! * [`trace`] — thread-local ring-buffer span recorders flushed into
+//!   Chrome `trace_event` JSON (loadable in Perfetto / `chrome://tracing`).
+//! * [`metrics`] — named counters / gauges / sharded histograms with
+//!   Prometheus text exposition, used by the HTTP server and for
+//!   sim-domain event counters.
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Global master switch. All span recording and domain-counter updates
+/// are gated on this flag; server request metrics are always on (they
+/// are part of the serving contract, not the sim hot path).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// One relaxed load. This is the entire disabled-path cost of a span.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the flight recorder on. Typically paired with
+/// [`trace::reset`] so the capture starts from a clean buffer.
+pub fn enable() {
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the flight recorder off. Buffered events stay readable until
+/// the next [`trace::reset`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// RAII span: records one complete (`ph: "X"`) trace event on drop.
+///
+/// Obtained from [`span`] (static name) or [`span_dyn`] (owned name,
+/// e.g. `megabatch_sweep/shard=3`). When the recorder is disabled the
+/// guard holds `None` and dropping it does nothing.
+pub struct SpanGuard {
+    start: Option<Instant>,
+    name: trace::Name,
+}
+
+/// Open a span with a `&'static` name. Disabled cost: one relaxed load.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if enabled() {
+        SpanGuard { start: Some(Instant::now()), name: trace::Name::Static(name) }
+    } else {
+        SpanGuard { start: None, name: trace::Name::Static("") }
+    }
+}
+
+/// Open a span with a dynamic name. The `Arc` is only cloned when the
+/// recorder is enabled, so disabled callers pay no refcount traffic.
+#[inline]
+pub fn span_dyn(name: &std::sync::Arc<str>) -> SpanGuard {
+    if enabled() {
+        SpanGuard { start: Some(Instant::now()), name: trace::Name::Owned(name.clone()) }
+    } else {
+        SpanGuard { start: None, name: trace::Name::Static("") }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let name = std::mem::replace(&mut self.name, trace::Name::Static(""));
+            trace::record(name, t0);
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Thread-local span recorders and the Chrome `trace_event` writer.
+//!
+//! Each thread that records a span lazily allocates one ring buffer and
+//! registers it (once) in a global list. Recording locks only the
+//! thread's own buffer — uncontended except during a flush — and the
+//! buffer is bounded: when full, the oldest event is dropped and
+//! counted, so a long capture keeps the most recent window instead of
+//! growing without bound. A parallel cumulative per-name aggregate is
+//! kept outside the ring, so phase totals (used for bench breakdowns)
+//! are exact even after eviction.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread event capacity. At roughly five spans per plant-tick this
+/// holds on the order of an hour of simulated time per thread; beyond
+/// that the oldest events are evicted (and counted in `dropped`).
+const RING_CAP: usize = 1 << 18;
+
+/// Span name: either a `&'static` phase label or an owned label built
+/// at runtime (e.g. `megabatch_sweep/shard=3`).
+#[derive(Clone, Debug)]
+pub enum Name {
+    Static(&'static str),
+    Owned(Arc<str>),
+}
+
+impl Name {
+    pub fn as_str(&self) -> &str {
+        match self {
+            Name::Static(s) => s,
+            Name::Owned(s) => s,
+        }
+    }
+}
+
+/// One completed span, timestamped in microseconds since the process
+/// trace epoch.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: Name,
+    pub ts_us: f64,
+    pub dur_us: f64,
+}
+
+struct RingBuf {
+    tid: u64,
+    events: VecDeque<Event>,
+    dropped: u64,
+    /// Cumulative per-name (count, total µs), never evicted.
+    totals: BTreeMap<String, (u64, f64)>,
+}
+
+impl RingBuf {
+    fn new(tid: u64) -> Self {
+        RingBuf { tid, events: VecDeque::new(), dropped: 0, totals: BTreeMap::new() }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<RingBuf>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<RingBuf>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<Mutex<RingBuf>>>> = const { RefCell::new(None) };
+}
+
+fn local_ring() -> Arc<Mutex<RingBuf>> {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(ring) = slot.as_ref() {
+            return ring.clone();
+        }
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let ring = Arc::new(Mutex::new(RingBuf::new(tid)));
+        registry()
+            .lock()
+            .expect("trace registry poisoned")
+            .push(ring.clone());
+        *slot = Some(ring.clone());
+        ring
+    })
+}
+
+/// Record one completed span. Only called from an enabled `SpanGuard`
+/// drop, so the disabled path never reaches here.
+pub(crate) fn record(name: Name, start: Instant) {
+    let end = Instant::now();
+    let e = epoch();
+    let ts_us = start.duration_since(e).as_secs_f64() * 1e6;
+    let dur_us = end.duration_since(start).as_secs_f64() * 1e6;
+    let ring = local_ring();
+    let mut buf = ring.lock().expect("trace ring poisoned");
+    let t = buf.totals.entry(name.as_str().to_string()).or_insert((0, 0.0));
+    t.0 += 1;
+    t.1 += dur_us;
+    if buf.events.len() >= RING_CAP {
+        buf.events.pop_front();
+        buf.dropped += 1;
+    }
+    buf.events.push_back(Event { name, ts_us, dur_us });
+}
+
+/// Clear every registered buffer (events, drop counts, and cumulative
+/// totals). Call before starting a fresh capture.
+pub fn reset() {
+    let rings = registry().lock().expect("trace registry poisoned").clone();
+    for ring in rings {
+        let mut buf = ring.lock().expect("trace ring poisoned");
+        buf.events.clear();
+        buf.dropped = 0;
+        buf.totals.clear();
+    }
+}
+
+/// Copy out every thread's buffered events: `(tid, events, dropped)`.
+pub fn snapshot() -> Vec<(u64, Vec<Event>, u64)> {
+    let rings = registry().lock().expect("trace registry poisoned").clone();
+    let mut out = Vec::with_capacity(rings.len());
+    for ring in rings {
+        let buf = ring.lock().expect("trace ring poisoned");
+        out.push((buf.tid, buf.events.iter().cloned().collect(), buf.dropped));
+    }
+    out.sort_by_key(|(tid, _, _)| *tid);
+    out
+}
+
+/// Cumulative per-span-name `(count, total µs)` across all threads,
+/// summed from the eviction-proof aggregates. Deltas of two calls give
+/// an exact phase attribution for the interval between them.
+pub fn phase_totals() -> BTreeMap<String, (u64, f64)> {
+    let rings = registry().lock().expect("trace registry poisoned").clone();
+    let mut out: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+    for ring in rings {
+        let buf = ring.lock().expect("trace ring poisoned");
+        for (name, (n, us)) in &buf.totals {
+            let t = out.entry(name.clone()).or_insert((0, 0.0));
+            t.0 += *n;
+            t.1 += *us;
+        }
+    }
+    out
+}
+
+/// Render every buffered span as Chrome `trace_event` JSON — the
+/// `{"traceEvents": [...]}` object format that Perfetto and
+/// `chrome://tracing` load directly. Events are complete (`"ph": "X"`)
+/// spans sorted by `(tid, ts, -dur)` so parents precede children.
+pub fn chrome_trace_json() -> String {
+    let mut all: Vec<(u64, Event)> = Vec::new();
+    let mut dropped_total = 0u64;
+    for (tid, events, dropped) in snapshot() {
+        dropped_total += dropped;
+        for e in events {
+            all.push((tid, e));
+        }
+    }
+    all.sort_by(|a, b| {
+        a.0.cmp(&b.0)
+            .then(a.1.ts_us.total_cmp(&b.1.ts_us))
+            .then(b.1.dur_us.total_cmp(&a.1.dur_us))
+    });
+    let mut out = String::with_capacity(64 + all.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"droppedEvents\":");
+    out.push_str(&dropped_total.to_string());
+    out.push_str(",\"traceEvents\":[");
+    for (i, (tid, e)) in all.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"cat\":\"idatacool\",\"dur\":{},\"name\":{:?},\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{}}}",
+            e.dur_us,
+            e.name.as_str(),
+            tid,
+            e.ts_us
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+        .map_err(|e| anyhow::anyhow!("writing trace to {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The enable flag is process-global and unit tests run in parallel,
+    // so tests that toggle it serialize on this lock.
+    fn flag_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = flag_lock();
+        crate::obs::disable();
+        reset();
+        {
+            let _s = crate::obs::span("unit_test_disabled");
+        }
+        let totals = phase_totals();
+        assert!(!totals.contains_key("unit_test_disabled"));
+    }
+
+    #[test]
+    fn enabled_span_lands_in_ring_and_totals() {
+        let _g = flag_lock();
+        crate::obs::enable();
+        reset();
+        {
+            let _s = crate::obs::span("unit_test_enabled");
+        }
+        crate::obs::disable();
+        let totals = phase_totals();
+        let (n, us) = totals.get("unit_test_enabled").copied().expect("span recorded");
+        assert_eq!(n, 1);
+        assert!(us >= 0.0);
+        let json = chrome_trace_json();
+        assert!(json.contains("\"unit_test_enabled\""));
+        assert!(json.contains("\"ph\":\"X\""));
+    }
+
+    #[test]
+    fn dyn_span_uses_owned_name() {
+        let _g = flag_lock();
+        crate::obs::enable();
+        reset();
+        let label: Arc<str> = Arc::from("unit_test_dyn/shard=7");
+        {
+            let _s = crate::obs::span_dyn(&label);
+        }
+        crate::obs::disable();
+        assert!(phase_totals().contains_key("unit_test_dyn/shard=7"));
+    }
+}

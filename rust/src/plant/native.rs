@@ -148,6 +148,10 @@ impl NativePlant {
     /// Materialize the node-major view if the lanes are newer.
     fn sync_node_major(&mut self) {
         if self.sync == LaneSync::LanesDirty {
+            let _span = crate::obs::span("transpose");
+            if crate::obs::enabled() {
+                crate::obs::metrics::lane_sync_transitions().inc();
+            }
             let soa = self.soa.as_ref().expect("dirty lanes without state");
             soa.materialize(&mut self.node_major);
             self.sync = LaneSync::InSync;
@@ -202,6 +206,7 @@ impl NativePlant {
                         self.g_eff[i * NG + G_ADV] *= flow;
                     }
                 }
+                let _substep_span = crate::obs::span("ref_substep");
                 for _ in 0..self.substeps {
                     // q_base: only the advective-inlet entry varies
                     // within a tick; the sink constant and the zero
@@ -231,6 +236,8 @@ impl NativePlant {
                         &mut self.circuit_state, controls, t_out_raw,
                         p_dc, n, &self.pp);
                 }
+                drop(_substep_span);
+                let _obs_span = crate::obs::span("observe");
                 self.observe(controls, util, out);
             }
             PlantKernel::Soa => {
@@ -252,9 +259,14 @@ impl NativePlant {
                 // refresh_static) — not per tick. Utilization is a
                 // genuine per-tick input.
                 if self.sync == LaneSync::NodeMajor {
+                    let _span = crate::obs::span("transpose");
+                    if crate::obs::enabled() {
+                        crate::obs::metrics::lane_sync_transitions().inc();
+                    }
                     soa.load_state_range(&self.node_major, r);
                 }
                 soa.load_util_range(util, r);
+                let _substep_span = crate::obs::span("soa_substep");
                 for _ in 0..self.substeps {
                     let t_in = self.circuit_state[C_T_RACK_IN];
                     soa.set_inlet_range(t_in, inv_c_w, r);
@@ -265,8 +277,10 @@ impl NativePlant {
                         &mut self.circuit_state, controls, t_out_raw,
                         p_dc, n, &self.pp);
                 }
+                drop(_substep_span);
                 // Fused epilogue straight from the lanes; no node-major
                 // write-back — node_state() materializes lazily.
+                let _obs_span = crate::obs::span("observe");
                 let (p_dc, throttling, core_max_all) =
                     soa::soa_observe_range(soa, &self.pp, r,
                                            &mut out.node_obs);

@@ -1,16 +1,19 @@
 //! Serving metrics: request/status/cache counters plus a latency
-//! histogram, rendered as the `GET /metrics` JSON document.
+//! histogram, rendered as the `GET /metrics` JSON document and as
+//! Prometheus text exposition (`GET /metrics?format=prometheus`).
 //!
-//! Latency is recorded as log10(milliseconds) into a fixed-bin
-//! `stats::histogram::Histogram` spanning 1 us .. 100 s — uniform bins
-//! in log space resolve both a 40 us cache hit and a 4 s fleet run; the
-//! p50/p99 the endpoint reports come from `Histogram::quantile`, mapped
-//! back to milliseconds.
+//! Built on the `obs::metrics` registry: every counter is a lock-free
+//! atomic, and latency is recorded into **per-worker** histogram shards
+//! (`ShardedHistogram`) merged only at scrape time — the request hot
+//! path never takes a lock. Latency is stored as log10(milliseconds)
+//! over 1 us .. 100 s: uniform bins in log space resolve both a 40 us
+//! cache hit and a 4 s fleet run; the p50/p99 the endpoint reports come
+//! from `Histogram::quantile`, mapped back to milliseconds.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
+use crate::obs::metrics::{Counter, CounterVec, Gauge, Registry, ShardedHistogram};
 use crate::stats::histogram::Histogram;
 use crate::util::json::{Json, JsonBuilder};
 
@@ -19,87 +22,154 @@ pub const ENDPOINTS: &[&str] =
     &["simulate", "fleet", "sweep", "healthz", "metrics", "shutdown", "other"];
 
 /// Map a request path to its counter index (`other` catches the rest).
+/// The match returns the index directly — no catalog scan per request.
 pub fn endpoint_index(path: &str) -> usize {
-    let name = match path {
-        "/simulate" => "simulate",
-        "/fleet" => "fleet",
-        "/sweep" => "sweep",
-        "/healthz" => "healthz",
-        "/metrics" => "metrics",
-        "/shutdown" => "shutdown",
-        _ => "other",
-    };
-    ENDPOINTS.iter().position(|e| *e == name).unwrap()
+    match path {
+        "/simulate" => 0,
+        "/fleet" => 1,
+        "/sweep" => 2,
+        "/healthz" => 3,
+        "/metrics" => 4,
+        "/shutdown" => 5,
+        _ => 6,
+    }
 }
 
 pub struct Metrics {
-    requests: AtomicU64,
-    by_endpoint: Vec<AtomicU64>,
-    status_2xx: AtomicU64,
-    status_4xx: AtomicU64,
-    status_5xx: AtomicU64,
-    cache_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    coalesced: AtomicU64,
-    /// log10(latency [ms]) over [-3, 5): 1 us .. 100 s, 160 bins.
-    latency_log_ms: Mutex<Histogram>,
-}
-
-impl Default for Metrics {
-    fn default() -> Self {
-        Self::new()
-    }
+    registry: Registry,
+    requests: Arc<Counter>,
+    by_endpoint: Arc<CounterVec>,
+    status_2xx: Arc<Counter>,
+    status_4xx: Arc<Counter>,
+    status_5xx: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    coalesced: Arc<Counter>,
+    cache_evictions: Arc<Counter>,
+    shed: Arc<Counter>,
+    queue_high_water: Arc<Gauge>,
+    /// log10(latency [ms]) over [-3, 5): 1 us .. 100 s, 160 bins,
+    /// one shard per worker.
+    latency_log_ms: Arc<ShardedHistogram>,
 }
 
 impl Metrics {
-    pub fn new() -> Self {
+    /// `workers` sizes the latency histogram's shard set (one lock-free
+    /// shard per worker thread).
+    pub fn new(workers: usize) -> Self {
+        let r = Registry::new();
+        let requests =
+            r.counter("idatacool_requests_total", "Requests handled");
+        let by_endpoint = r.counter_vec(
+            "idatacool_requests_by_endpoint_total",
+            "Requests handled, by endpoint",
+            "endpoint",
+            ENDPOINTS,
+        );
+        let status_2xx =
+            r.counter("idatacool_status_2xx_total", "2xx responses");
+        let status_4xx =
+            r.counter("idatacool_status_4xx_total", "4xx responses");
+        let status_5xx =
+            r.counter("idatacool_status_5xx_total", "5xx responses");
+        let cache_hits =
+            r.counter("idatacool_cache_hits_total", "Response cache hits");
+        let cache_misses =
+            r.counter("idatacool_cache_misses_total", "Response cache misses");
+        let coalesced = r.counter(
+            "idatacool_coalesced_total",
+            "Requests served by waiting on an identical in-flight compute",
+        );
+        let cache_evictions = r.counter(
+            "idatacool_cache_evictions_total",
+            "LRU response-cache evictions",
+        );
+        let shed = r.counter(
+            "idatacool_shed_total",
+            "Connections shed with 503 (job queue full)",
+        );
+        let queue_high_water = r.gauge(
+            "idatacool_queue_depth_high_water",
+            "Deepest the job queue has ever been",
+        );
+        let latency_log_ms = r.histogram(
+            "idatacool_request_latency_ms",
+            "Request latency [ms] (log10-binned, per-worker shards)",
+            -3.0,
+            5.0,
+            160,
+            workers.max(1),
+            true,
+        );
+        // Touch the process-global sim-domain counters so a scrape
+        // renders them (at zero) even before any traced run.
+        let _ = crate::obs::metrics::throttle_events();
+        let _ = crate::obs::metrics::lane_sync_transitions();
         Metrics {
-            requests: AtomicU64::new(0),
-            by_endpoint: (0..ENDPOINTS.len()).map(|_| AtomicU64::new(0)).collect(),
-            status_2xx: AtomicU64::new(0),
-            status_4xx: AtomicU64::new(0),
-            status_5xx: AtomicU64::new(0),
-            cache_hits: AtomicU64::new(0),
-            cache_misses: AtomicU64::new(0),
-            coalesced: AtomicU64::new(0),
-            latency_log_ms: Mutex::new(Histogram::new(-3.0, 5.0, 160)),
+            registry: r,
+            requests,
+            by_endpoint,
+            status_2xx,
+            status_4xx,
+            status_5xx,
+            cache_hits,
+            cache_misses,
+            coalesced,
+            cache_evictions,
+            shed,
+            queue_high_water,
+            latency_log_ms,
         }
     }
 
-    /// Record one finished request.
-    pub fn record(&self, endpoint: usize, status: u16, latency_s: f64) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.by_endpoint[endpoint].fetch_add(1, Ordering::Relaxed);
+    /// Record one finished request on `worker`'s histogram shard.
+    pub fn record(&self, endpoint: usize, status: u16, latency_s: f64,
+                  worker: usize) {
+        self.requests.inc();
+        self.by_endpoint.inc(endpoint);
         match status {
-            200..=299 => self.status_2xx.fetch_add(1, Ordering::Relaxed),
-            400..=499 => self.status_4xx.fetch_add(1, Ordering::Relaxed),
-            _ => self.status_5xx.fetch_add(1, Ordering::Relaxed),
+            200..=299 => self.status_2xx.inc(),
+            400..=499 => self.status_4xx.inc(),
+            _ => self.status_5xx.inc(),
         };
         let ms = (latency_s * 1e3).max(1e-9);
-        self.latency_log_ms.lock().unwrap().push(ms.log10());
+        self.latency_log_ms.push(worker, ms.log10());
     }
 
     pub fn cache_hit(&self) {
-        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.cache_hits.inc();
     }
 
     pub fn cache_miss(&self) {
-        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        self.cache_misses.inc();
     }
 
     pub fn coalesce(&self) {
-        self.coalesced.fetch_add(1, Ordering::Relaxed);
+        self.coalesced.inc();
+    }
+
+    pub fn cache_evicted(&self) {
+        self.cache_evictions.inc();
+    }
+
+    pub fn shed(&self) {
+        self.shed.inc();
+    }
+
+    /// Refresh the queue-depth high-water gauge (called at scrape).
+    pub fn set_queue_high_water(&self, v: u64) {
+        self.queue_high_water.record_max(v);
     }
 
     pub fn cache_hit_count(&self) -> u64 {
-        self.cache_hits.load(Ordering::Relaxed)
+        self.cache_hits.get()
     }
 
     pub fn cache_miss_count(&self) -> u64 {
-        self.cache_misses.load(Ordering::Relaxed)
+        self.cache_misses.get()
     }
 
-    /// The `GET /metrics` document.
+    /// The `GET /metrics` JSON document.
     pub fn to_json_value(
         &self,
         cache_entries: usize,
@@ -107,37 +177,45 @@ impl Metrics {
         workers: usize,
         uptime_s: f64,
     ) -> Json {
-        let h = self.latency_log_ms.lock().unwrap();
+        let h = self.latency_log_ms.merged();
         let by: BTreeMap<String, Json> = ENDPOINTS
             .iter()
             .enumerate()
             .map(|(i, n)| {
-                (
-                    n.to_string(),
-                    Json::Num(self.by_endpoint[i].load(Ordering::Relaxed) as f64),
-                )
+                (n.to_string(), Json::Num(self.by_endpoint.get(i) as f64))
             })
             .collect();
         JsonBuilder::new()
             .str("schema", "idatacool-serve/1")
-            .num("requests_total", self.requests.load(Ordering::Relaxed) as f64)
+            .num("requests_total", self.requests.get() as f64)
             .set("by_endpoint", Json::Obj(by))
             .set(
                 "status",
                 JsonBuilder::new()
-                    .num("s2xx", self.status_2xx.load(Ordering::Relaxed) as f64)
-                    .num("s4xx", self.status_4xx.load(Ordering::Relaxed) as f64)
-                    .num("s5xx", self.status_5xx.load(Ordering::Relaxed) as f64)
+                    .num("s2xx", self.status_2xx.get() as f64)
+                    .num("s4xx", self.status_4xx.get() as f64)
+                    .num("s5xx", self.status_5xx.get() as f64)
                     .build(),
             )
             .set(
                 "cache",
                 JsonBuilder::new()
-                    .num("hits", self.cache_hits.load(Ordering::Relaxed) as f64)
-                    .num("misses", self.cache_misses.load(Ordering::Relaxed) as f64)
-                    .num("coalesced", self.coalesced.load(Ordering::Relaxed) as f64)
+                    .num("hits", self.cache_hits.get() as f64)
+                    .num("misses", self.cache_misses.get() as f64)
+                    .num("coalesced", self.coalesced.get() as f64)
+                    .num("evictions", self.cache_evictions.get() as f64)
                     .num("entries", cache_entries as f64)
                     .num("capacity", cache_cap as f64)
+                    .build(),
+            )
+            .set(
+                "queue",
+                JsonBuilder::new()
+                    .num("shed", self.shed.get() as f64)
+                    .num(
+                        "depth_high_water",
+                        self.queue_high_water.get() as f64,
+                    )
                     .build(),
             )
             .set(
@@ -151,6 +229,34 @@ impl Metrics {
             .num("workers", workers as f64)
             .num("uptime_s", uptime_s)
             .build()
+    }
+
+    /// Prometheus text exposition: every registered serving metric,
+    /// scrape-time gauges (cache occupancy, workers, uptime), and the
+    /// process-global sim-domain counters.
+    pub fn to_prometheus(
+        &self,
+        cache_entries: usize,
+        cache_cap: usize,
+        workers: usize,
+        uptime_s: f64,
+    ) -> String {
+        let mut out = self.registry.to_prometheus();
+        let gauge = |out: &mut String, name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        };
+        gauge(&mut out, "idatacool_cache_entries",
+              "Response cache occupancy", cache_entries as f64);
+        gauge(&mut out, "idatacool_cache_capacity",
+              "Response cache capacity", cache_cap as f64);
+        gauge(&mut out, "idatacool_workers", "Worker threads",
+              workers as f64);
+        gauge(&mut out, "idatacool_uptime_seconds",
+              "Seconds since the server started", uptime_s);
+        out.push_str(&crate::obs::metrics::global().to_prometheus());
+        out
     }
 }
 
@@ -172,19 +278,25 @@ mod tests {
     fn endpoint_indices_cover_catalog() {
         assert_eq!(ENDPOINTS[endpoint_index("/simulate")], "simulate");
         assert_eq!(ENDPOINTS[endpoint_index("/fleet")], "fleet");
+        assert_eq!(ENDPOINTS[endpoint_index("/sweep")], "sweep");
         assert_eq!(ENDPOINTS[endpoint_index("/healthz")], "healthz");
+        assert_eq!(ENDPOINTS[endpoint_index("/metrics")], "metrics");
+        assert_eq!(ENDPOINTS[endpoint_index("/shutdown")], "shutdown");
         assert_eq!(ENDPOINTS[endpoint_index("/nope")], "other");
     }
 
     #[test]
     fn counters_render() {
-        let m = Metrics::new();
-        m.record(endpoint_index("/simulate"), 200, 0.010);
-        m.record(endpoint_index("/simulate"), 200, 0.012);
-        m.record(endpoint_index("/fleet"), 400, 0.001);
+        let m = Metrics::new(4);
+        m.record(endpoint_index("/simulate"), 200, 0.010, 0);
+        m.record(endpoint_index("/simulate"), 200, 0.012, 1);
+        m.record(endpoint_index("/fleet"), 400, 0.001, 2);
         m.cache_hit();
         m.cache_miss();
         m.coalesce();
+        m.cache_evicted();
+        m.shed();
+        m.set_queue_high_water(5);
         let j = m.to_json_value(3, 64, 4, 1.5);
         assert_eq!(j.get("requests_total").unwrap().as_f64(), Some(3.0));
         let by = j.get("by_endpoint").unwrap();
@@ -195,7 +307,11 @@ mod tests {
         assert_eq!(st.get("s4xx").unwrap().as_f64(), Some(1.0));
         let c = j.get("cache").unwrap();
         assert_eq!(c.get("hits").unwrap().as_f64(), Some(1.0));
+        assert_eq!(c.get("evictions").unwrap().as_f64(), Some(1.0));
         assert_eq!(c.get("capacity").unwrap().as_f64(), Some(64.0));
+        let q = j.get("queue").unwrap();
+        assert_eq!(q.get("shed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(q.get("depth_high_water").unwrap().as_f64(), Some(5.0));
         let lat = j.get("latency_ms").unwrap();
         assert_eq!(lat.get("count").unwrap().as_f64(), Some(3.0));
         // ~10 ms requests dominate: p50 lands near 10 ms in log space.
@@ -205,10 +321,45 @@ mod tests {
 
     #[test]
     fn empty_latency_is_zero_not_nan() {
-        let m = Metrics::new();
+        let m = Metrics::new(1);
         let j = m.to_json_value(0, 1, 1, 0.0);
         let lat = j.get("latency_ms").unwrap();
         assert_eq!(lat.get("p50").unwrap().as_f64(), Some(0.0));
         assert_eq!(lat.get("p99").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn prometheus_covers_every_json_counter() {
+        let m = Metrics::new(2);
+        m.record(endpoint_index("/simulate"), 200, 0.010, 0);
+        m.cache_hit();
+        let text = m.to_prometheus(1, 64, 2, 3.0);
+        for name in [
+            "idatacool_requests_total",
+            "idatacool_requests_by_endpoint_total",
+            "idatacool_status_2xx_total",
+            "idatacool_status_4xx_total",
+            "idatacool_status_5xx_total",
+            "idatacool_cache_hits_total",
+            "idatacool_cache_misses_total",
+            "idatacool_coalesced_total",
+            "idatacool_cache_evictions_total",
+            "idatacool_shed_total",
+            "idatacool_queue_depth_high_water",
+            "idatacool_request_latency_ms",
+            "idatacool_cache_entries",
+            "idatacool_cache_capacity",
+            "idatacool_workers",
+            "idatacool_uptime_seconds",
+            "idatacool_throttle_events_total",
+            "idatacool_lane_sync_transitions_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} ")),
+                    "missing TYPE line for {name}:\n{text}");
+        }
+        assert!(text.contains("idatacool_requests_total 1\n"));
+        assert!(text.contains(
+            "idatacool_requests_by_endpoint_total{endpoint=\"simulate\"} 1\n"
+        ));
     }
 }

@@ -125,17 +125,19 @@ fn error_cached(status: u16, msg: &str) -> CachedResponse {
 /// fresh `TickOutput` per request.
 pub struct ServeScratch {
     out: TickOutput,
+    /// This worker's index — addresses its latency-histogram shard.
+    worker: usize,
 }
 
 impl ServeScratch {
-    pub fn new() -> Self {
-        ServeScratch { out: TickOutput::new(0) }
+    pub fn new(worker: usize) -> Self {
+        ServeScratch { out: TickOutput::new(0), worker }
     }
 }
 
 impl Default for ServeScratch {
     fn default() -> Self {
-        Self::new()
+        Self::new(0)
     }
 }
 
@@ -150,13 +152,15 @@ struct Shared {
     workers: usize,
     cache_cap: usize,
     started: Instant,
+    /// The accept-loop job queue — held here so a metrics scrape can
+    /// read its depth high-water mark.
+    queue: Arc<JobQueue<TcpStream>>,
 }
 
 /// The bound-but-not-yet-running server.
 pub struct Server {
     listener: TcpListener,
     shared: Arc<Shared>,
-    queue_cap: usize,
 }
 
 impl Server {
@@ -179,14 +183,15 @@ impl Server {
             base,
             cache: Mutex::new(Lru::new(sc.cache_cap)),
             inflight: Coalescer::new(),
-            metrics: Metrics::new(),
+            metrics: Metrics::new(workers),
             shutdown: AtomicBool::new(false),
             local_addr,
             workers,
             cache_cap: sc.cache_cap,
             started: Instant::now(),
+            queue: Arc::new(JobQueue::new(sc.queue_cap)),
         });
-        Ok(Server { listener, shared, queue_cap: sc.queue_cap })
+        Ok(Server { listener, shared })
     }
 
     /// The bound address (resolves `:0` ephemeral ports).
@@ -197,7 +202,7 @@ impl Server {
     /// Blocking accept loop; returns after `POST /shutdown` (every
     /// already-accepted connection still gets an answer).
     pub fn run(self) -> Result<()> {
-        let queue = Arc::new(JobQueue::new(self.queue_cap));
+        let queue = self.shared.queue.clone();
         let pool = {
             let shared = self.shared.clone();
             WorkerPool::spawn_with(
@@ -214,6 +219,7 @@ impl Server {
             match stream {
                 Ok(s) => {
                     if let Err(s) = queue.push(s) {
+                        self.shared.metrics.shed();
                         shed(s);
                     }
                 }
@@ -277,13 +283,18 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>,
                      scratch: &mut ServeScratch) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_nodelay(true);
+    let _req_span = crate::obs::span("request");
     let mut reader = BufReader::new(&stream);
-    let req = match Request::read_from(&mut reader) {
-        Ok(Some(req)) => req,
-        Ok(None) => return, // clean EOF (health probe, shutdown ping)
-        Err(e) => {
-            let _ = Response::error(e.status, &e.msg).write_to(&mut &stream);
-            return;
+    let req = {
+        let _parse_span = crate::obs::span("parse");
+        match Request::read_from(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean EOF (health probe, shutdown ping)
+            Err(e) => {
+                let _ =
+                    Response::error(e.status, &e.msg).write_to(&mut &stream);
+                return;
+            }
         }
     };
     let t0 = Instant::now();
@@ -295,11 +306,17 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>,
         route(&req, shared, scratch)
     }))
     .unwrap_or_else(|_| Response::error(500, "internal panic in handler"));
+    let elapsed_s = t0.elapsed().as_secs_f64();
     shared.metrics.record(
         metrics::endpoint_index(&req.path),
         resp.status,
-        t0.elapsed().as_secs_f64(),
+        elapsed_s,
+        scratch.worker,
     );
+    // Wall-clock lives in headers only — response *bodies* stay a pure
+    // function of the request (cache hits are compared bitwise on body).
+    let resp = resp
+        .with_header("x-timing", &format!("total={:.3}ms", elapsed_s * 1e3));
     let _ = resp.write_to(&mut &stream);
     if req.method == "POST" && req.path == "/shutdown" {
         // Wake the accept loop (it is blocked in accept) so it observes
@@ -312,7 +329,7 @@ fn route(req: &Request, shared: &Arc<Shared>, scratch: &mut ServeScratch)
          -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(shared),
-        ("GET", "/metrics") => metrics_response(shared),
+        ("GET", "/metrics") => metrics_response(req, shared),
         ("POST", "/shutdown") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             Response::json(
@@ -347,15 +364,58 @@ fn healthz(shared: &Arc<Shared>) -> Response {
     )
 }
 
-fn metrics_response(shared: &Arc<Shared>) -> Response {
+/// `GET /metrics[?format=json|prometheus]`. Strict query contract like
+/// every other endpoint: an unknown parameter or format value is a 400,
+/// never a silently ignored default.
+fn metrics_response(req: &Request, shared: &Arc<Shared>) -> Response {
+    let mut prometheus = false;
+    for (k, v) in &req.query {
+        if k == "format" {
+            match v.as_str() {
+                "json" => prometheus = false,
+                "prometheus" => prometheus = true,
+                other => {
+                    return Response::error(
+                        400,
+                        &format!(
+                            "query parameter 'format' must be \
+                             json|prometheus, got '{other}'"
+                        ),
+                    )
+                }
+            }
+        } else {
+            return Response::error(
+                400,
+                &format!("unknown query parameter '{k}'"),
+            );
+        }
+    }
     let entries = shared.cache.lock().unwrap().len();
+    shared
+        .metrics
+        .set_queue_high_water(shared.queue.high_water() as u64);
+    let uptime_s = shared.started.elapsed().as_secs_f64();
+    if prometheus {
+        let body = shared.metrics.to_prometheus(
+            entries,
+            shared.cache_cap,
+            shared.workers,
+            uptime_s,
+        );
+        return Response::new(
+            200,
+            "text/plain; version=0.0.4",
+            body.into_bytes(),
+        );
+    }
     Response::json(
         200,
         &shared.metrics.to_json_value(
             entries,
             shared.cache_cap,
             shared.workers,
-            shared.started.elapsed().as_secs_f64(),
+            uptime_s,
         ),
     )
 }
@@ -365,7 +425,9 @@ fn serve_cached<F>(shared: &Arc<Shared>, key: u64, compute: F) -> Response
 where
     F: FnOnce() -> Result<CachedResponse>,
 {
+    let lookup_span = crate::obs::span("cache_lookup");
     let hit = shared.cache.lock().unwrap().get(&key).cloned();
+    drop(lookup_span);
     if let Some(c) = hit {
         shared.metrics.cache_hit();
         return c.to_response("hit");
@@ -373,6 +435,7 @@ where
     match shared.inflight.claim(key) {
         Claim::Follower(slot) => {
             shared.metrics.coalesce();
+            let _wait_span = crate::obs::span("coalesce_wait");
             slot.wait().to_response("coalesced")
         }
         Claim::Leader(slot) => {
@@ -389,16 +452,22 @@ where
                 return c.to_response("hit");
             }
             shared.metrics.cache_miss();
+            let compute_span = crate::obs::span("compute");
             let outcome = std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(compute),
             );
+            drop(compute_span);
             let (resp, cacheable) = match outcome {
                 Ok(Ok(c)) => (c, true),
                 Ok(Err(e)) => (error_cached(500, &format!("{e:#}")), false),
                 Err(_) => (error_cached(500, "simulation panicked"), false),
             };
             if cacheable {
-                shared.cache.lock().unwrap().insert(key, resp.clone());
+                let evicted =
+                    shared.cache.lock().unwrap().insert(key, resp.clone());
+                if evicted.is_some() {
+                    shared.metrics.cache_evicted();
+                }
             }
             // Must always run, or followers would wait forever.
             shared.inflight.complete(key, &slot, resp.clone());
@@ -467,6 +536,7 @@ fn compute_simulate(sim: api::SimRequest, stream: bool,
     // allocation — responses stay bitwise identical across workers.
     let res = driver.run_into(sample_every, &mut scratch.out)?;
     let cfg = &driver.cfg;
+    let _ser_span = crate::obs::span("serialize");
     if stream {
         Ok(CachedResponse {
             status: 200,
@@ -506,6 +576,7 @@ fn handle_fleet(req: &Request, shared: &Arc<Shared>) -> Response {
 fn compute_fleet(fc: crate::fleet::FleetConfig) -> Result<CachedResponse> {
     let driver = FleetDriver::new(fc)?;
     let run = driver.run()?;
+    let _ser_span = crate::obs::span("serialize");
     Ok(CachedResponse {
         status: 200,
         content_type: "application/json".into(),
@@ -535,6 +606,7 @@ fn compute_sweep(sr: api::SweepRequest) -> Result<CachedResponse> {
     let opts = sr.options();
     let data =
         sweep::run_sweep_sharded(&sr.cfg, &sr.setpoints, &opts, sr.shards)?;
+    let _ser_span = crate::obs::span("serialize");
     let body = JsonBuilder::new()
         .str("schema", "idatacool-sweep/1")
         .bool("quick", sr.quick)

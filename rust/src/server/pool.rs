@@ -14,6 +14,9 @@ use std::thread::JoinHandle;
 struct State<T> {
     q: VecDeque<T>,
     closed: bool,
+    /// Deepest the queue has ever been (tracked under the existing
+    /// lock, so the high-water mark costs no extra synchronization).
+    high_water: usize,
 }
 
 /// A multi-producer multi-consumer FIFO with a hard capacity.
@@ -27,7 +30,11 @@ impl<T> JobQueue<T> {
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0, "JobQueue capacity must be at least 1");
         JobQueue {
-            state: Mutex::new(State { q: VecDeque::with_capacity(cap), closed: false }),
+            state: Mutex::new(State {
+                q: VecDeque::with_capacity(cap),
+                closed: false,
+                high_water: 0,
+            }),
             not_empty: Condvar::new(),
             cap,
         }
@@ -53,9 +60,15 @@ impl<T> JobQueue<T> {
             return Err(job);
         }
         s.q.push_back(job);
+        s.high_water = s.high_water.max(s.q.len());
         drop(s);
         self.not_empty.notify_one();
         Ok(())
+    }
+
+    /// Deepest the queue has ever been (a scrape-time gauge).
+    pub fn high_water(&self) -> usize {
+        self.state.lock().unwrap().high_water
     }
 
     /// Dequeue, blocking until a job is available. `None` means the
@@ -94,20 +107,22 @@ impl WorkerPool {
         T: Send + 'static,
         F: Fn(T) + Send + Sync + 'static,
     {
-        Self::spawn_with(n, queue, || (), move |job, _state| handler(job))
+        Self::spawn_with(n, queue, |_| (), move |job, _state| handler(job))
     }
 
     /// `spawn` with per-worker state: `init` runs once on each worker
-    /// thread (so the state type need not be `Send`) and the resulting
-    /// value is handed mutably to every job that worker processes. This
-    /// is how the serve path keeps one reusable simulation scratch
-    /// buffer per worker instead of allocating per request.
+    /// thread (so the state type need not be `Send`), receives the
+    /// worker's index `0..n` (the serve path uses it to address a
+    /// per-worker histogram shard), and the resulting value is handed
+    /// mutably to every job that worker processes. This is how the
+    /// serve path keeps one reusable simulation scratch buffer per
+    /// worker instead of allocating per request.
     pub fn spawn_with<T, S, I, F>(n: usize, queue: Arc<JobQueue<T>>,
                                   init: I, handler: F) -> WorkerPool
     where
         T: Send + 'static,
         S: 'static,
-        I: Fn() -> S + Send + Sync + 'static,
+        I: Fn(usize) -> S + Send + Sync + 'static,
         F: Fn(T, &mut S) + Send + Sync + 'static,
     {
         let init = Arc::new(init);
@@ -120,7 +135,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
                     .spawn(move || {
-                        let mut state = init();
+                        let mut state = init(i);
                         while let Some(job) = queue.pop() {
                             handler(job, &mut state);
                         }
@@ -169,6 +184,22 @@ mod tests {
     }
 
     #[test]
+    fn high_water_tracks_deepest_fill() {
+        let q: JobQueue<u32> = JobQueue::new(8);
+        assert_eq!(q.high_water(), 0);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.high_water(), 3);
+        // draining does not lower the mark
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.high_water(), 3);
+        q.push(4).unwrap();
+        assert_eq!(q.high_water(), 3);
+    }
+
+    #[test]
     fn closed_queue_rejects_pushes_but_drains() {
         let q: JobQueue<u32> = JobQueue::new(4);
         q.push(7).unwrap();
@@ -189,7 +220,7 @@ mod tests {
             WorkerPool::spawn_with(
                 3,
                 q.clone(),
-                || 0usize, // per-worker scratch (not Send-required)
+                |_worker| 0usize, // per-worker scratch (not Send-required)
                 move |_j, seen| {
                     *seen += 1;
                     handled.fetch_add(1, Ordering::SeqCst);

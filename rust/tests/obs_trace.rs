@@ -1,0 +1,152 @@
+//! Flight-recorder integration tests: a traced run must emit valid,
+//! properly nested Chrome `trace_event` JSON, and tracing must be
+//! invisible — enabling the recorder cannot change a single byte of any
+//! simulation or server output (the determinism contract; the
+//! properties in `proptests.rs` cover the sim side in depth).
+
+use std::sync::Mutex;
+
+use idatacool::config::SimConfig;
+use idatacool::coordinator::SimulationDriver;
+use idatacool::obs;
+use idatacool::server::{ServeOptions, Server, ServerHandle};
+use idatacool::util::http::{http_roundtrip, ClientResponse};
+use idatacool::util::json::Json;
+
+/// The enable flag is process-global and tests run in parallel, so every
+/// test that toggles it serializes on this lock.
+fn flag_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn base() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.duration_s = 120.0;
+    c
+}
+
+fn boot(workers: usize) -> (ServerHandle, String) {
+    let mut opts = ServeOptions::new(base());
+    opts.cfg.addr = "127.0.0.1:0".into();
+    opts.cfg.workers = workers;
+    opts.cfg.cache_cap = 16;
+    opts.cfg.queue_cap = 32;
+    let server = Server::bind(opts).expect("bind ephemeral port");
+    let handle = server.spawn();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+fn post(addr: &str, target: &str, body: &str) -> ClientResponse {
+    http_roundtrip(addr, "POST", target, Some(body.as_bytes())).expect("POST")
+}
+
+#[test]
+fn traced_run_emits_valid_nested_chrome_trace() {
+    let _g = flag_lock();
+    obs::trace::reset();
+    obs::enable();
+    let mut driver = SimulationDriver::new(base()).unwrap();
+    driver.run(12).unwrap();
+    obs::disable();
+
+    let text = obs::trace::chrome_trace_json();
+    let j = Json::parse(&text).expect("trace must be valid JSON");
+    let events = j
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "a traced run must record spans");
+
+    // The stable tick-phase names land in the capture.
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for expected in ["tick", "control", "sample"] {
+        assert!(
+            names.contains(&expected),
+            "span '{expected}' missing from {names:?}"
+        );
+    }
+
+    // Per thread: timestamps monotonically ordered, and spans properly
+    // nested — sorted by (ts, -dur), a stack of open end-times never
+    // sees a span outlive its parent (half-microsecond slack for f64
+    // rounding of the clock math).
+    let mut last_tid = u64::MAX;
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut open_ends: Vec<f64> = Vec::new();
+    for e in events {
+        let tid = e.get("tid").and_then(Json::as_f64).unwrap() as u64;
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(dur >= 0.0);
+        if tid != last_tid {
+            last_tid = tid;
+            last_ts = f64::NEG_INFINITY;
+            open_ends.clear();
+        }
+        assert!(ts >= last_ts, "timestamps must be ordered per thread");
+        last_ts = ts;
+        while let Some(&end) = open_ends.last() {
+            if ts >= end - 0.5 {
+                open_ends.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&end) = open_ends.last() {
+            assert!(
+                ts + dur <= end + 0.5,
+                "span [{ts}, {}] escapes its parent (ends {end})",
+                ts + dur
+            );
+        }
+        open_ends.push(ts + dur);
+    }
+}
+
+#[test]
+fn tracing_is_invisible_to_server_bodies() {
+    let _g = flag_lock();
+    let sim = r#"{"duration_s": 120, "seed": 11, "setpoint": 62}"#;
+    let fleet = r#"{"plants": 2, "duration_s": 120, "scenario": "baseline"}"#;
+
+    obs::disable();
+    let (h, addr) = boot(2);
+    let plain_sim = post(&addr, "/simulate", sim);
+    let plain_fleet = post(&addr, "/fleet", fleet);
+    h.stop().unwrap();
+    assert_eq!(plain_sim.status, 200, "{:?}", plain_sim.body_str());
+    assert_eq!(plain_fleet.status, 200, "{:?}", plain_fleet.body_str());
+
+    obs::trace::reset();
+    obs::enable();
+    let (h, addr) = boot(2);
+    let traced_sim = post(&addr, "/simulate", sim);
+    let traced_fleet = post(&addr, "/fleet", fleet);
+    h.stop().unwrap();
+    obs::disable();
+
+    assert_eq!(
+        traced_sim.body, plain_sim.body,
+        "tracing must not change a /simulate body"
+    );
+    assert_eq!(
+        traced_fleet.body, plain_fleet.body,
+        "tracing must not change a /fleet body"
+    );
+
+    // The traced server run captured the request lifecycle spans.
+    let totals = obs::trace::phase_totals();
+    for expected in ["request", "parse", "compute", "serialize"] {
+        assert!(
+            totals.contains_key(expected),
+            "span '{expected}' missing from {:?}",
+            totals.keys().collect::<Vec<_>>()
+        );
+    }
+}

@@ -553,3 +553,70 @@ fn prop_lru_invariants() {
         }
     });
 }
+
+// -------------------------------------------------------------------- obs ---
+
+#[test]
+fn prop_tracing_is_invisible() {
+    // The flight recorder's determinism contract: enabling span
+    // recording must not change a single bit of any simulation or fleet
+    // output — wall-clock flows into trace/metrics output only, never
+    // into results. No other test in this binary toggles the global
+    // flag, so the property owns it for its duration.
+    use idatacool::config::SimConfig;
+    use idatacool::coordinator::SimulationDriver;
+    use idatacool::fleet::{scenario::Scenario, FleetConfig, FleetDriver};
+
+    let run_sim = |cfg: &SimConfig| {
+        SimulationDriver::new(cfg.clone()).unwrap().run(3).unwrap()
+    };
+    let run_fleet = |base: &SimConfig| {
+        FleetDriver::new(FleetConfig {
+            n_plants: 3,
+            shards: 2,
+            fleet_seed: base.seed,
+            scenario: Scenario::by_name("mixed").unwrap(),
+            base: base.clone(),
+            megabatch: true,
+        })
+        .unwrap()
+        .run()
+        .unwrap()
+    };
+
+    forall(3, |rng| {
+        let mut cfg = SimConfig::test_small();
+        cfg.duration_s = 300.0;
+        cfg.seed = rng.next_u64();
+        cfg.sensor_noise = true;
+
+        idatacool::obs::disable();
+        let plain = run_sim(&cfg);
+        let plain_fleet = run_fleet(&cfg);
+
+        idatacool::obs::trace::reset();
+        idatacool::obs::enable();
+        let traced = run_sim(&cfg);
+        let traced_fleet = run_fleet(&cfg);
+        idatacool::obs::disable();
+
+        assert!(
+            !idatacool::obs::trace::phase_totals().is_empty(),
+            "the traced leg must actually have recorded spans"
+        );
+        assert_eq!(plain.trace.len(), traced.trace.len());
+        for (a, b) in plain.trace.iter().zip(&traced.trace) {
+            assert_eq!(a.t_rack_out.to_bits(), b.t_rack_out.to_bits());
+            assert_eq!(a.p_ac.to_bits(), b.p_ac.to_bits());
+            assert_eq!(a.t_tank.to_bits(), b.t_tank.to_bits());
+            assert_eq!(a.throttling, b.throttling);
+        }
+        assert_eq!(plain.energy.e_ac.to_bits(), traced.energy.e_ac.to_bits());
+        assert_eq!(plain.energy.e_dc.to_bits(), traced.energy.e_dc.to_bits());
+        assert_eq!(
+            plain_fleet.aggregate.fingerprint(),
+            traced_fleet.aggregate.fingerprint(),
+            "fleet aggregate must be identical with tracing on"
+        );
+    });
+}

@@ -61,6 +61,30 @@ fn healthz_and_metrics_respond() {
 }
 
 #[test]
+fn metrics_prometheus_exposition_and_timing_header() {
+    let (h, addr) = boot(2);
+    let r = get(&addr, "/metrics?format=prometheus");
+    assert_eq!(r.status, 200, "{:?}", r.body_str());
+    assert_eq!(r.header("content-type"), Some("text/plain; version=0.0.4"));
+    // Every response carries wall-clock timing in a header — never in
+    // the body (bodies stay a pure function of the request).
+    assert!(r.header("x-timing").is_some());
+    let text = r.body_str().unwrap();
+    assert!(text.contains("# TYPE idatacool_requests_total counter"));
+    assert!(text.contains("# TYPE idatacool_request_latency_ms summary"));
+    assert!(text.contains("idatacool_workers 2\n"));
+    assert!(text.contains("idatacool_throttle_events_total"));
+
+    // Explicit json still answers, and an unknown format is a 400.
+    let r = get(&addr, "/metrics?format=json");
+    assert_eq!(r.status, 200);
+    assert!(Json::parse(r.body_str().unwrap()).is_ok());
+    let r = get(&addr, "/metrics?format=csv");
+    assert_eq!(r.status, 400);
+    h.stop().unwrap();
+}
+
+#[test]
 fn simulate_repeat_is_a_bitwise_cache_hit() {
     let (h, addr) = boot(2);
     let body = r#"{"duration_s": 60, "seed": 7, "setpoint": 60}"#;

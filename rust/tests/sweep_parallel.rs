@@ -121,6 +121,7 @@ fn bench_report_round_trips_through_json() {
             p95_s: 1.34e-3,
             units_per_iter: 4320.0,
             unit_name: "node-substeps".into(),
+            phases: vec![("soa_substep".into(), 1.1e6)],
         },
         BenchResult {
             name: "manifold_solve/72-branches".into(),
@@ -132,6 +133,7 @@ fn bench_report_round_trips_through_json() {
             p95_s: 7.0e-5,
             units_per_iter: 0.0,
             unit_name: String::new(),
+            phases: vec![],
         },
     ];
     let report =
@@ -164,6 +166,7 @@ fn regression_gate_end_to_end() {
         p95_s: 1e-4,
         units_per_iter: 0.0,
         unit_name: String::new(),
+        phases: vec![],
     }];
     let mut slow = fast.clone();
     slow[0].mean_s = 1.4e-4; // +40 %
