@@ -65,6 +65,14 @@ pub const SUITES: &[SuiteEntry] = &[
         runner: serve,
         fingerprint: serve_fingerprint,
     },
+    SuiteEntry {
+        name: "serve_batched",
+        description: "continuous request batching: concurrent \
+                      heterogeneous misses through one shared lane \
+                      arena vs the same load with batching off",
+        runner: serve_batched,
+        fingerprint: serve_batched_fingerprint,
+    },
 ];
 
 pub fn by_name(name: &str) -> Result<&'static SuiteEntry> {
@@ -485,5 +493,78 @@ fn serve_fingerprint() -> u64 {
     // and the serving shape (worker count).
     let mut h = config_fingerprint(&serve_base());
     h = mix(h, SERVE_WORKERS as u64);
+    h
+}
+
+const BATCH_CONCURRENCY: usize = 4;
+const BATCH_WINDOW_MS: usize = 4;
+
+/// Continuous-batching benchmarks. Both benches push the same load —
+/// `BATCH_CONCURRENCY` concurrent unique-seed `/v1/simulate` misses per
+/// iteration — through two servers that differ only in the admission
+/// window, so the pair prices exactly what batching buys: one arena
+/// sweep per round instead of one full simulation per request.
+fn serve_batched(b: &mut Bench) -> Result<()> {
+    use crate::server::{ServeOptions, Server};
+    use crate::util::http::http_roundtrip;
+
+    let boot = |window_ms: usize| -> Result<_> {
+        let mut opts = ServeOptions::new(serve_base());
+        opts.cfg.addr = "127.0.0.1:0".into();
+        opts.cfg.workers = BATCH_CONCURRENCY;
+        opts.cfg.cache_cap = 64;
+        opts.cfg.queue_cap = 32;
+        opts.cfg.batch_window_ms = window_ms;
+        opts.cfg.batch_max_plants = 16;
+        Ok(Server::bind(opts)?.spawn())
+    };
+
+    // Unique seeds per iteration keep every request a genuine miss; the
+    // counter continues across benches so the two legs never share keys.
+    let mut seed = 0u64;
+    let volley = |addr: &str, seed: &mut u64| {
+        let joins: Vec<_> = (0..BATCH_CONCURRENCY)
+            .map(|_| {
+                *seed += 1;
+                let body = format!("{{\"seed\": {seed}}}");
+                let addr = addr.to_string();
+                std::thread::spawn(move || {
+                    http_roundtrip(
+                        &addr, "POST", "/v1/simulate",
+                        Some(body.as_bytes()),
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        for j in joins {
+            let r = j.join().unwrap();
+            assert_eq!(r.status, 200);
+            std::hint::black_box(r);
+        }
+    };
+
+    for (id, window_ms) in [
+        ("serve_batched/concurrent4/window_on", BATCH_WINDOW_MS),
+        ("serve_batched/concurrent4/window_off", 0),
+    ] {
+        let handle = boot(window_ms)?;
+        let addr = handle.addr.to_string();
+        b.run_with_units(
+            id, BATCH_CONCURRENCY as f64, "requests", &mut || {
+                volley(&addr, &mut seed);
+            });
+        handle.stop()?;
+    }
+    Ok(())
+}
+
+fn serve_batched_fingerprint() -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    let mut h = config_fingerprint(&serve_base());
+    h = mix(h, BATCH_CONCURRENCY as u64);
+    h = mix(h, BATCH_WINDOW_MS as u64);
     h
 }

@@ -256,6 +256,15 @@ pub struct ServeConfig {
     /// Bounded job-queue capacity (`serve.queue_cap`); overflow sheds
     /// load with a 503.
     pub queue_cap: usize,
+    /// Continuous-batching admission window in milliseconds
+    /// (`serve.batch_window_ms`). `0` disables batching — every request
+    /// computes solo. Execution shape only: batched responses are
+    /// bitwise identical to solo runs, so this never enters a cache key
+    /// or a response document.
+    pub batch_window_ms: usize,
+    /// Most plants one batched lane arena packs (`serve.batch_max_plants`);
+    /// a round with more pending plants sweeps as several chunks.
+    pub batch_max_plants: usize,
 }
 
 impl Default for ServeConfig {
@@ -268,6 +277,8 @@ impl Default for ServeConfig {
             workers,
             cache_cap: 64,
             queue_cap: 4 * workers,
+            batch_window_ms: 2,
+            batch_max_plants: 16,
         }
     }
 }
@@ -275,12 +286,20 @@ impl Default for ServeConfig {
 impl ServeConfig {
     /// Apply `[serve]` overrides from a TOML doc. Counts are strict:
     /// a present-yet-non-integer (or zero) value is an error, matching
-    /// the CLI-flag discipline.
+    /// the CLI-flag discipline. `batch_window_ms` alone admits zero —
+    /// zero is its off switch, not a degenerate value.
     pub fn apply_toml(mut self, doc: &TomlDoc) -> anyhow::Result<Self> {
         self.addr = doc.str_or("serve.addr", &self.addr).to_string();
         self.workers = toml_count(doc, "serve.workers", self.workers)?;
         self.cache_cap = toml_count(doc, "serve.cache_cap", self.cache_cap)?;
         self.queue_cap = toml_count(doc, "serve.queue_cap", self.queue_cap)?;
+        self.batch_window_ms =
+            toml_count0(doc, "serve.batch_window_ms", self.batch_window_ms)?;
+        self.batch_max_plants = toml_count(
+            doc,
+            "serve.batch_max_plants",
+            self.batch_max_plants,
+        )?;
         Ok(self)
     }
 }
@@ -337,6 +356,25 @@ fn toml_count(doc: &TomlDoc, key: &str, default: usize)
             anyhow::ensure!(
                 x >= 1.0 && x.fract() == 0.0,
                 "{key} must be a positive integer, got {x}"
+            );
+            Ok(x as usize)
+        }
+    }
+}
+
+/// A strictly-parsed non-negative integer TOML value (zero allowed —
+/// for knobs where zero means "off").
+fn toml_count0(doc: &TomlDoc, key: &str, default: usize)
+               -> anyhow::Result<usize> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("{key} must be a non-negative integer")
+            })?;
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0,
+                "{key} must be a non-negative integer, got {x}"
             );
             Ok(x as usize)
         }
@@ -400,7 +438,8 @@ mod tests {
     fn serve_section_overrides() {
         let doc = TomlDoc::parse(
             "[serve]\naddr = \"0.0.0.0:9000\"\nworkers = 3\n\
-             cache_cap = 16\nqueue_cap = 12\n",
+             cache_cap = 16\nqueue_cap = 12\n\
+             batch_window_ms = 5\nbatch_max_plants = 32\n",
         )
         .unwrap();
         let sc = ServeConfig::default().apply_toml(&doc).unwrap();
@@ -408,11 +447,20 @@ mod tests {
         assert_eq!(sc.workers, 3);
         assert_eq!(sc.cache_cap, 16);
         assert_eq!(sc.queue_cap, 12);
+        assert_eq!(sc.batch_window_ms, 5);
+        assert_eq!(sc.batch_max_plants, 32);
+        // zero is the batching off switch, not an error
+        let doc =
+            TomlDoc::parse("[serve]\nbatch_window_ms = 0\n").unwrap();
+        let sc = ServeConfig::default().apply_toml(&doc).unwrap();
+        assert_eq!(sc.batch_window_ms, 0);
         // defaults survive an empty doc
         let sc = ServeConfig::default()
             .apply_toml(&TomlDoc::parse("").unwrap())
             .unwrap();
         assert!(sc.workers >= 1 && sc.cache_cap >= 1);
+        assert_eq!(sc.batch_window_ms, 2);
+        assert_eq!(sc.batch_max_plants, 16);
     }
 
     #[test]
@@ -446,7 +494,9 @@ mod tests {
     #[test]
     fn serve_section_counts_are_strict() {
         for bad in ["workers = 0", "workers = 2.5", "workers = \"four\"",
-                    "cache_cap = 0", "queue_cap = -1"] {
+                    "cache_cap = 0", "queue_cap = -1",
+                    "batch_max_plants = 0", "batch_window_ms = -1",
+                    "batch_window_ms = 1.5"] {
             let doc = TomlDoc::parse(&format!("[serve]\n{bad}\n")).unwrap();
             assert!(
                 ServeConfig::default().apply_toml(&doc).is_err(),

@@ -15,8 +15,10 @@
 //!    shared facility loop (pooled heat recovery + aggregate adsorption
 //!    chiller), with a declarative scenario catalog.
 //!  * **Serve** (`server`): the twin as a resident service — a std-only
-//!    HTTP/1.1 server with a worker pool, in-flight request coalescing
-//!    and a fingerprint-keyed LRU response cache (`idatacool serve`).
+//!    HTTP/1.1 server (versioned `/v1` API, keep-alive) with a worker
+//!    pool, in-flight request coalescing, continuous request batching
+//!    into shared lane arenas, and a sharded fingerprint-keyed LRU
+//!    response cache (`idatacool serve`).
 //!  * **Obs** (`obs`): the flight recorder — crate-wide tracing spans
 //!    flushed to Chrome `trace_event` JSON, plus a Prometheus-ready
 //!    metrics registry; zero-cost when disabled (the default).

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run         simulate a configuration and print the run report
 //!   fleet       sharded multi-plant fleet + shared facility loop
-//!   serve       sim-as-a-service HTTP server (worker pool + LRU cache)
+//!   serve       sim-as-a-service HTTP server (v1 API, request batching)
 //!   figures     regenerate the paper's figures (CSV + ASCII)
 //!   equilibrium the Sect.-3 cold-start narrative (alias: figures --fig s3)
 //!   bench       registered benchmark suites + perf-regression gate
@@ -15,7 +15,7 @@
 //!   idatacool fleet --plants 8 --scenario heatwave --shards 4
 //!   idatacool fleet --plants 8 --scenario heatwave --json fleet.json
 //!   idatacool fleet --plants 8 --megabatch 0   # per-plant reference path
-//!   idatacool serve --addr 127.0.0.1:8080 --workers 4 --cache-cap 64
+//!   idatacool serve --addr 127.0.0.1:8080 --workers 4 --batch-window-ms 2
 //!   idatacool figures --fig all --quick --out results
 //!   idatacool bench --suite hotpath --json BENCH_hotpath.json
 //!   idatacool bench --suite all --json . --compare bench/baseline.json
@@ -99,9 +99,15 @@ serve flags:
                          IDATACOOL_SERVE_WORKERS, strict-parsed)
   --cache-cap <n>        LRU response-cache entries (default 64)
   --queue-cap <n>        bounded job queue; overflow answers 503
+  --batch-window-ms <ms> continuous-batching admission window (default 2;
+                         0 disables batching; env override
+                         IDATACOOL_SERVE_BATCH_WINDOW_MS)
+  --batch-max-plants <n> most plants per batched arena sweep (default 16)
   (a --config file's [serve] section sets the same knobs; flags win over
-   env, env wins over TOML. Endpoints: POST /simulate [?stream=1],
-   POST /fleet, POST /sweep, GET /healthz, GET /metrics, POST /shutdown)
+   env, env wins over TOML. Endpoints under /v1 — POST /v1/simulate
+   [?stream=1], POST /v1/fleet, POST /v1/sweep, GET /v1/healthz,
+   GET /v1/metrics, POST /v1/shutdown; unprefixed paths still answer but
+   carry a Deprecation header)
 figures flags:
   --fig <id|all|sweep>   4a 4b 5a 5b 6a 6b 7a 7b r1 s3 r2 manifold binning econ
   --out <dir>            write CSVs here (default: results)
@@ -373,22 +379,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     {
         sc.workers = k;
     }
+    if let Some(ms) = idatacool::util::cli::env_usize_strict(
+        "IDATACOOL_SERVE_BATCH_WINDOW_MS",
+    )? {
+        sc.batch_window_ms = ms;
+    }
     sc.workers = resolve_workers(args.usize_strict("workers", sc.workers)?)?;
     sc.addr = args.str_or("addr", &sc.addr).to_string();
     sc.cache_cap = args.usize_strict("cache-cap", sc.cache_cap)?;
     sc.queue_cap = args.usize_strict("queue-cap", sc.queue_cap)?;
+    sc.batch_window_ms =
+        args.usize_strict("batch-window-ms", sc.batch_window_ms)?;
+    sc.batch_max_plants =
+        args.usize_strict("batch-max-plants", sc.batch_max_plants)?;
 
     let (workers, cache_cap, queue_cap) =
         (sc.workers, sc.cache_cap, sc.queue_cap);
+    let batching = if sc.batch_window_ms > 0 {
+        format!(
+            "batching {}ms/{} plants",
+            sc.batch_window_ms, sc.batch_max_plants
+        )
+    } else {
+        "batching off".to_string()
+    };
     let server = Server::bind(ServeOptions { cfg: sc, base })?;
     println!(
-        "serving http://{} — {} workers, cache {} entries, queue {} \
-         (POST /simulate | /fleet | /sweep, GET /healthz | /metrics, \
-         POST /shutdown to stop)",
+        "serving http://{} — {} workers, cache {} entries, queue {}, {} \
+         (POST /v1/simulate | /v1/fleet | /v1/sweep, GET /v1/healthz | \
+         /v1/metrics, POST /v1/shutdown to stop)",
         server.local_addr(),
         workers,
         cache_cap,
         queue_cap,
+        batching,
     );
     server.run()
 }

@@ -355,6 +355,47 @@ pub fn lane_sync_transitions() -> &'static Counter {
     })
 }
 
+/// Writer shards for the serve-layer batch histograms below: their
+/// writers are batch-round leaders (one push per round), so a small
+/// fixed shard count is plenty — callers pass `worker % BATCH_SHARDS`.
+pub const BATCH_SHARDS: usize = 8;
+
+/// Plants packed per batched arena sweep (1 = a request that found no
+/// companions in its admission window). Unlike the sim-domain counters
+/// above, the serving layer records this unconditionally — it is
+/// operational telemetry, not tracing.
+pub fn batch_occupancy() -> &'static ShardedHistogram {
+    static H: OnceLock<Arc<ShardedHistogram>> = OnceLock::new();
+    H.get_or_init(|| {
+        global().histogram(
+            "idatacool_batch_occupancy",
+            "Plants packed per batched lane-arena sweep",
+            0.0,
+            65.0,
+            65,
+            BATCH_SHARDS,
+            false,
+        )
+    })
+}
+
+/// Milliseconds a request waited in the batch admission window before
+/// its sweep started (log10 ms, like the request-latency histogram).
+pub fn batch_window_wait_ms() -> &'static ShardedHistogram {
+    static H: OnceLock<Arc<ShardedHistogram>> = OnceLock::new();
+    H.get_or_init(|| {
+        global().histogram(
+            "idatacool_batch_window_wait_ms",
+            "Batch admission-window wait per request (ms)",
+            -3.0,
+            5.0,
+            160,
+            BATCH_SHARDS,
+            true,
+        )
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -49,6 +49,86 @@ pub struct SweepRequest {
     pub shards: usize,
 }
 
+/// Which typed parser a registry row selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EndpointKind {
+    Simulate,
+    Fleet,
+    Sweep,
+}
+
+impl EndpointKind {
+    /// The endpoint's fingerprint/metrics name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EndpointKind::Simulate => "simulate",
+            EndpointKind::Fleet => "fleet",
+            EndpointKind::Sweep => "sweep",
+        }
+    }
+}
+
+/// The typed form of any simulation request — what the server's
+/// `Endpoint` registry parses bodies into. Consolidating the three
+/// endpoint parsers behind one enum keeps unknown-field strictness and
+/// fingerprint canonicalization on a single code path instead of three
+/// copies.
+pub enum ApiRequest {
+    Simulate { sim: SimRequest, stream: bool },
+    Fleet(FleetConfig),
+    Sweep(SweepRequest),
+}
+
+impl ApiRequest {
+    /// Parse a request body for `kind` (strict; unknown fields are
+    /// errors, surfaced to clients as a 400 envelope).
+    pub fn parse(kind: EndpointKind, body: &str, stream: bool,
+                 base: &SimConfig) -> Result<ApiRequest> {
+        Ok(match kind {
+            EndpointKind::Simulate => ApiRequest::Simulate {
+                sim: parse_sim_request(body, base)?,
+                stream,
+            },
+            EndpointKind::Fleet => {
+                ApiRequest::Fleet(parse_fleet_request(body, base)?)
+            }
+            EndpointKind::Sweep => {
+                ApiRequest::Sweep(parse_sweep_request(body, base)?)
+            }
+        })
+    }
+
+    pub fn kind(&self) -> EndpointKind {
+        match self {
+            ApiRequest::Simulate { .. } => EndpointKind::Simulate,
+            ApiRequest::Fleet(_) => EndpointKind::Fleet,
+            ApiRequest::Sweep(_) => EndpointKind::Sweep,
+        }
+    }
+
+    /// The canonical request document (cache-key input; see module doc).
+    pub fn canonical(&self) -> Json {
+        match self {
+            ApiRequest::Simulate { sim, stream } => {
+                canonical_sim_json(&sim.cfg, sim.sample_every, *stream)
+            }
+            ApiRequest::Fleet(fc) => canonical_fleet_json(fc),
+            ApiRequest::Sweep(sr) => canonical_sweep_json(sr),
+        }
+    }
+
+    /// The shared cache/coalesce key: one fingerprint rule for every
+    /// endpoint.
+    pub fn fingerprint(&self) -> u64 {
+        let cfg = match self {
+            ApiRequest::Simulate { sim, .. } => &sim.cfg,
+            ApiRequest::Fleet(fc) => &fc.base,
+            ApiRequest::Sweep(sr) => &sr.cfg,
+        };
+        request_fingerprint(self.kind().name(), &self.canonical(), cfg)
+    }
+}
+
 /// SimConfig fields a request may override.
 const SIM_KEYS: &[&str] = &[
     "preset",
@@ -624,6 +704,41 @@ mod tests {
         let kf = request_fingerprint(
             "fleet", &canonical_sim_json(&r1.cfg, 1, false), &r1.cfg);
         assert_ne!(k1, kf);
+    }
+
+    #[test]
+    fn typed_requests_share_the_fingerprint_rule() {
+        let b = base();
+        // The registry path (ApiRequest) and the explicit per-endpoint
+        // path must produce the same key for the same body.
+        let body = r#"{"seed": 5, "duration_s": 60}"#;
+        let typed = ApiRequest::parse(EndpointKind::Simulate, body, false, &b)
+            .unwrap();
+        let r = parse_sim_request(body, &b).unwrap();
+        let explicit = request_fingerprint(
+            "simulate", &canonical_sim_json(&r.cfg, 1, false), &r.cfg);
+        assert_eq!(typed.fingerprint(), explicit);
+        assert_eq!(typed.kind(), EndpointKind::Simulate);
+        // Fleet and sweep parse through the same entry point.
+        let fleet = ApiRequest::parse(EndpointKind::Fleet, "", false, &b)
+            .unwrap();
+        let sweep = ApiRequest::parse(EndpointKind::Sweep, "", false, &b)
+            .unwrap();
+        assert_eq!(fleet.kind(), EndpointKind::Fleet);
+        assert_eq!(sweep.kind(), EndpointKind::Sweep);
+        assert_ne!(fleet.fingerprint(), sweep.fingerprint());
+        // Strictness is shared: the unknown-field error reaches every
+        // kind through the one parser.
+        for kind in
+            [EndpointKind::Simulate, EndpointKind::Fleet, EndpointKind::Sweep]
+        {
+            let err = format!(
+                "{:#}",
+                ApiRequest::parse(kind, r#"{"bogus_field": 1}"#, false, &b)
+                    .unwrap_err()
+            );
+            assert!(err.contains("unknown field 'bogus_field'"), "{err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Continuous request batching: concurrent `/v1/simulate` and
+//! `/v1/fleet` requests admitted into one shared SoA lane arena.
+//!
+//! PR 4's coalescer only merges *identical* requests and PR 5's
+//! megabatch only batches plants inside one fleet run; heterogeneous
+//! concurrent traffic still paid one full kernel sweep per request.
+//! This scheduler closes that gap with the classic continuous-batching
+//! shape: an admission window collects in-flight jobs, groups them by
+//! compatible tick grid, packs every plant into one `LockstepFleet`
+//! arena (`fleet/megabatch.rs`), advances the whole batch in tick
+//! lockstep — one `soa_substep_ranges` sweep per substep for all
+//! plants of all requests — and demultiplexes per-request responses.
+//!
+//! # Round protocol (leader-based, no dedicated thread)
+//!
+//! The first worker to submit while no round is collecting becomes the
+//! round *leader*: it enqueues its job, sleeps `batch_window_ms`, then
+//! swaps out everything that accumulated and runs the round. The
+//! collecting flag is cleared at swap time, so while one round
+//! computes, the next is already admitting — worker parallelism across
+//! rounds is preserved. Followers just park on their job's slot (the
+//! same condvar primitive the coalescer uses). With `batch_window_ms =
+//! 0` the server never constructs a `Batcher` and every request runs
+//! solo, exactly as before this scheduler existed.
+//!
+//! # Determinism
+//!
+//! Batched responses are bitwise identical to solo runs, and the mix
+//! of concurrently admitted requests can never leak into a response:
+//!
+//! * `tests/fleet_integration.rs` pins lockstep-vs-sequential bitwise
+//!   parity per plant; the arena adds plants side by side in
+//!   independent SoA lanes, never across lanes.
+//! * Jobs are grouped by tick count and only lockstep when
+//!   `LockstepFleet::new` accepts the bucket (uniform plant constants /
+//!   substeps / tick grid); any refused bucket is handed back and run
+//!   per plant — the bitwise-identical fallback.
+//! * `/simulate` with `sample_every = k` is admitted by recording every
+//!   tick in the arena and keeping indices `i % k == 0` afterwards —
+//!   the exact set of ticks `run_ticks_into` pushes when sampling
+//!   solo, carrying bitwise-identical samples.
+//! * Response documents contain no wall-clock fields (`server/api.rs`
+//!   keeps them out deliberately), so serialization is a pure function
+//!   of the per-plant results.
+//!
+//! Gated end to end by the parity tests in
+//! `tests/serve_integration.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::coordinator::SimulationDriver;
+use crate::fleet::aggregate::FleetAggregate;
+use crate::fleet::facility::FacilityParams;
+use crate::fleet::megabatch::{self, LockstepFleet, PlantCtx};
+use crate::fleet::{run_facility, FleetConfig, FleetDriver, FleetRun, PlantRun};
+use crate::obs::metrics::{batch_occupancy, batch_window_wait_ms, BATCH_SHARDS};
+
+use super::api::{self, SimRequest};
+use super::coalesce::Slot;
+use super::CachedResponse;
+
+/// How a batched job's response is serialized after the shared sweep.
+pub enum JobKind {
+    Sim {
+        /// The driver's post-construction config (what solo
+        /// serialization uses too).
+        cfg: SimConfig,
+        kernel: &'static str,
+        sample_every: usize,
+        stream: bool,
+    },
+    Fleet { fc: FleetConfig },
+}
+
+/// One admitted request: its ready-to-run plant contexts (1 for
+/// `/simulate`, `n_plants` for `/fleet`) plus serialization intent.
+pub struct BatchJob {
+    /// Tick-grid group key: jobs lockstep only with equal tick counts.
+    ticks: u64,
+    ctxs: Vec<PlantCtx>,
+    kind: JobKind,
+}
+
+impl BatchJob {
+    /// A `/simulate` job: one plant, driver built exactly as the solo
+    /// path builds it. Callers must have passed `megabatch::precheck`.
+    pub fn sim(sim: SimRequest, stream: bool) -> Result<BatchJob> {
+        let sample_every = sim.sample_every;
+        let driver = SimulationDriver::new(sim.cfg)?;
+        let cfg = driver.cfg.clone();
+        let kernel = driver.backend.kernel_name();
+        let tick_s = driver.backend.tick_seconds(&cfg.pp);
+        let ticks = (cfg.duration_s / tick_s).ceil() as u64;
+        let ctx = PlantCtx {
+            index: 0,
+            label: cfg.name.clone(),
+            seed: cfg.seed,
+            tick_s,
+            driver,
+        };
+        Ok(BatchJob {
+            ticks,
+            ctxs: vec![ctx],
+            kind: JobKind::Sim { cfg, kernel, sample_every, stream },
+        })
+    }
+
+    /// A `/fleet` job: every plant of the fleet, in plant-index order
+    /// (indices are fleet-local, which is what the facility replay and
+    /// the aggregate expect).
+    pub fn fleet(fc: FleetConfig) -> Result<BatchJob> {
+        let driver = FleetDriver::new(fc)?;
+        let ctxs = megabatch::build_ctxs(driver.specs())?;
+        let fc = driver.cfg;
+        let first = ctxs.first().expect("FleetDriver guarantees n_plants > 0");
+        let ticks =
+            (first.driver.cfg.duration_s / first.tick_s).ceil() as u64;
+        Ok(BatchJob { ticks, ctxs, kind: JobKind::Fleet { fc } })
+    }
+
+    /// Number of SoA lanes this job occupies in an arena.
+    pub fn plants(&self) -> usize {
+        self.ctxs.len()
+    }
+}
+
+/// `(response-or-error, batch occupancy)` published to each job's slot.
+/// The error side is a `String` so the payload stays `Clone`; `submit`
+/// rehydrates it into `anyhow::Error` for the caller.
+type Verdict = (std::result::Result<CachedResponse, String>, usize);
+
+struct Pending {
+    job: BatchJob,
+    slot: Arc<Slot<Verdict>>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct RoundState {
+    jobs: Vec<Pending>,
+    /// A leader is currently inside its admission window.
+    collecting: bool,
+}
+
+/// The admission-window scheduler. One per server, behind
+/// `[serve] batch_window_ms > 0`.
+pub struct Batcher {
+    window: Duration,
+    max_plants: usize,
+    round: Mutex<RoundState>,
+    /// Rotates metric pushes across histogram shards; rounds run on
+    /// whichever worker led them, so there is no stable worker index.
+    shard: AtomicUsize,
+}
+
+impl Batcher {
+    pub fn new(window: Duration, max_plants: usize) -> Self {
+        assert!(max_plants >= 1, "batch_max_plants must be at least 1");
+        Batcher {
+            window,
+            max_plants,
+            round: Mutex::new(RoundState::default()),
+            shard: AtomicUsize::new(0),
+        }
+    }
+
+    /// Admit `job` and block until its round has run. Returns the
+    /// response plus the occupancy (total plants) of the arena chunk
+    /// that carried it — surfaced to clients as the `x-batch` header.
+    pub fn submit(&self, job: BatchJob) -> Result<(CachedResponse, usize)> {
+        let admit_span = crate::obs::span("batch_admit");
+        let slot = Arc::new(Slot::new());
+        let lead = {
+            let mut g = self.round.lock().unwrap();
+            let lead = !g.collecting;
+            if lead {
+                g.collecting = true;
+            }
+            g.jobs.push(Pending {
+                job,
+                slot: slot.clone(),
+                enqueued: Instant::now(),
+            });
+            lead
+        };
+        if lead {
+            std::thread::sleep(self.window);
+            let jobs = {
+                let mut g = self.round.lock().unwrap();
+                // Clear before computing so the next arrival starts a
+                // new round while this one sweeps.
+                g.collecting = false;
+                std::mem::take(&mut g.jobs)
+            };
+            self.run_round(jobs);
+        }
+        drop(admit_span);
+        let (result, occupancy) = slot.wait();
+        match result {
+            Ok(resp) => Ok((resp, occupancy)),
+            Err(msg) => Err(anyhow::anyhow!(msg)),
+        }
+    }
+
+    /// Group a round's jobs by tick grid, chunk each group by the
+    /// plant budget, and run every chunk. Publishes every slot exactly
+    /// once — the leader's own slot included.
+    fn run_round(&self, jobs: Vec<Pending>) {
+        let mut groups: std::collections::BTreeMap<u64, Vec<Pending>> =
+            std::collections::BTreeMap::new();
+        for p in jobs {
+            groups.entry(p.job.ticks).or_default().push(p);
+        }
+        for (_, group) in groups {
+            // Greedy packing; a job's plants never split across chunks,
+            // so an oversized fleet simply forms its own chunk.
+            let mut chunk: Vec<Pending> = Vec::new();
+            let mut plants = 0usize;
+            for p in group {
+                let n = p.job.plants();
+                if !chunk.is_empty() && plants + n > self.max_plants {
+                    self.run_chunk(std::mem::take(&mut chunk));
+                    plants = 0;
+                }
+                plants += n;
+                chunk.push(p);
+            }
+            if !chunk.is_empty() {
+                self.run_chunk(chunk);
+            }
+        }
+    }
+
+    /// Sweep one chunk and publish a verdict to every job's slot. A
+    /// panic inside the sweep publishes an error to all of them, so
+    /// followers can never hang (mirror of the coalescer's
+    /// complete-exactly-once contract).
+    fn run_chunk(&self, chunk: Vec<Pending>) {
+        let occupancy: usize = chunk.iter().map(|p| p.job.plants()).sum();
+        let shard =
+            self.shard.fetch_add(1, Ordering::Relaxed) % BATCH_SHARDS;
+        batch_occupancy().push(shard, occupancy as f64);
+        for p in &chunk {
+            let ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            batch_window_wait_ms().push(shard, ms.max(1e-9).log10());
+        }
+
+        let n = chunk.len();
+        let (slots, jobs): (Vec<_>, Vec<_>) =
+            chunk.into_iter().map(|p| (p.slot, p.job)).unzip();
+        let results = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| sweep(jobs)),
+        )
+        .unwrap_or_else(|_| {
+            vec![Err("batched sweep panicked".to_string()); n]
+        });
+        debug_assert_eq!(results.len(), n);
+        for (slot, result) in slots.into_iter().zip(results) {
+            slot.publish((result, occupancy));
+        }
+    }
+}
+
+/// Run one chunk's plants through a shared arena (or the per-plant
+/// fallback when the bucket refuses lockstep) and serialize one
+/// response per job.
+fn sweep(
+    jobs: Vec<BatchJob>,
+) -> Vec<std::result::Result<CachedResponse, String>> {
+    let mut counts = Vec::with_capacity(jobs.len());
+    let mut kinds = Vec::with_capacity(jobs.len());
+    let mut all: Vec<PlantCtx> = Vec::new();
+    for job in jobs {
+        counts.push(job.ctxs.len());
+        kinds.push(job.kind);
+        all.extend(job.ctxs);
+    }
+
+    let runs = {
+        let _span = crate::obs::span("batch_sweep");
+        match LockstepFleet::new(all) {
+            Ok(arena) => arena.run(None).map(|(plants, _)| plants),
+            // Mixed tick lengths / plant constants across requests:
+            // hand the drivers back and run them one by one — bitwise
+            // identical, just without the shared sweep.
+            Err(ctxs) => megabatch::run_ctxs_sequential(ctxs),
+        }
+    };
+    let runs = match runs {
+        Ok(runs) => runs,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            return kinds.iter().map(|_| Err(msg.clone())).collect();
+        }
+    };
+
+    // Demux: lanes were packed in job order, so split by plant counts.
+    debug_assert_eq!(runs.len(), counts.iter().sum::<usize>());
+    let mut runs = runs.into_iter();
+    kinds
+        .into_iter()
+        .zip(counts)
+        .map(|(kind, n)| {
+            let slice: Vec<PlantRun> = runs.by_ref().take(n).collect();
+            respond(kind, slice).map_err(|e| format!("{e:#}"))
+        })
+        .collect()
+}
+
+/// Serialize one job's response from its demuxed plant runs — byte
+/// identical to what the solo compute path produces.
+fn respond(kind: JobKind, mut runs: Vec<PlantRun>) -> Result<CachedResponse> {
+    let _span = crate::obs::span("serialize");
+    match kind {
+        JobKind::Sim { cfg, kernel, sample_every, stream } => {
+            anyhow::ensure!(runs.len() == 1, "sim job demuxed {} plants",
+                            runs.len());
+            let mut res = runs.pop().expect("checked").result;
+            if sample_every > 1 {
+                // The arena recorded every tick; keep the ticks the
+                // solo sampler would have kept (`i % sample_every == 0`
+                // in `run_ticks_into`).
+                let mut i = 0usize;
+                res.trace.retain(|_| {
+                    let keep = i % sample_every == 0;
+                    i += 1;
+                    keep
+                });
+            }
+            let (content_type, body) = if stream {
+                ("application/x-ndjson",
+                 api::trace_ndjson(&cfg, kernel, sample_every, &res))
+            } else {
+                ("application/json",
+                 api::simulate_summary_json(&cfg, kernel, sample_every, &res)
+                     .to_string()
+                     .into_bytes())
+            };
+            Ok(CachedResponse {
+                status: 200,
+                content_type: content_type.to_string(),
+                body: Arc::new(body),
+            })
+        }
+        JobKind::Fleet { fc } => {
+            // Same post-hoc facility replay + aggregation the sharded
+            // CLI path performs; the document carries no shard or wall
+            // fields, so the assembled run serializes byte-equal to
+            // `idatacool fleet --json`.
+            let facility = run_facility(
+                &runs,
+                FacilityParams::from_plant(&fc.base.pp, fc.n_plants),
+            );
+            let aggregate = FleetAggregate::build(&runs, &facility);
+            let run = FleetRun {
+                plants: runs,
+                facility,
+                aggregate,
+                shards: fc.shards,
+                wall_s: 0.0,
+            };
+            Ok(CachedResponse {
+                status: 200,
+                content_type: "application/json".to_string(),
+                body: Arc::new(run.to_json(&fc).into_bytes()),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn base() -> SimConfig {
+        let mut cfg = SimConfig::test_small();
+        cfg.duration_s = 60.0;
+        cfg.backend = "native".into();
+        cfg
+    }
+
+    fn sim_job(seed: u64) -> BatchJob {
+        let mut cfg = base();
+        cfg.seed = seed;
+        BatchJob::sim(SimRequest { cfg, sample_every: 1 }, false).unwrap()
+    }
+
+    #[test]
+    fn jobs_group_by_tick_grid_and_chunk_by_plant_budget() {
+        let b = Batcher::new(Duration::from_millis(0), 2);
+        // 3 one-plant jobs with a budget of 2: the round must answer
+        // all of them, as one chunk of 2 and one of 1.
+        let pending: Vec<Pending> = (1..=3u64)
+            .map(|seed| Pending {
+                job: sim_job(seed),
+                slot: Arc::new(Slot::new()),
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let slots: Vec<_> = pending.iter().map(|p| p.slot.clone()).collect();
+        b.run_round(pending);
+        let mut occupancies: Vec<usize> =
+            slots.iter().map(|s| s.wait().1).collect();
+        occupancies.sort_unstable();
+        assert_eq!(occupancies, vec![1, 2, 2]);
+        for slot in &slots {
+            assert_eq!(slot.wait().0.unwrap().status, 200);
+        }
+    }
+
+    #[test]
+    fn oversized_job_forms_its_own_chunk() {
+        let b = Batcher::new(Duration::from_millis(0), 1);
+        let fc = FleetConfig {
+            n_plants: 3,
+            shards: 1,
+            base: base(),
+            fleet_seed: 7,
+            scenario: crate::fleet::scenario::Scenario::by_name("baseline")
+                .unwrap(),
+            megabatch: false,
+        };
+        let job = BatchJob::fleet(fc).unwrap();
+        assert_eq!(job.plants(), 3);
+        let slot = Arc::new(Slot::new());
+        b.run_round(vec![Pending {
+            job,
+            slot: slot.clone(),
+            enqueued: Instant::now(),
+        }]);
+        let (result, occupancy) = slot.wait();
+        assert_eq!(occupancy, 3);
+        assert_eq!(result.unwrap().status, 200);
+    }
+
+    #[test]
+    fn submit_window_collects_concurrent_jobs() {
+        let b = Arc::new(Batcher::new(Duration::from_millis(150), 16));
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for seed in 1..=3u64 {
+                let b = b.clone();
+                joins.push(s.spawn(move || {
+                    b.submit(sim_job(seed)).unwrap()
+                }));
+            }
+            let results: Vec<(CachedResponse, usize)> =
+                joins.into_iter().map(|j| j.join().unwrap()).collect();
+            // All three landed inside one 150 ms window on one arena.
+            for (resp, occupancy) in &results {
+                assert_eq!(resp.status, 200);
+                assert_eq!(*occupancy, 3);
+            }
+            // Distinct seeds ⇒ distinct bodies.
+            assert_ne!(results[0].0.body, results[1].0.body);
+        });
+    }
+
+    #[test]
+    fn mixed_tick_grids_fall_back_per_group() {
+        // 60 s and 120 s jobs must not lockstep together; both still
+        // answer correctly via separate groups.
+        let b = Batcher::new(Duration::from_millis(0), 16);
+        let mut long = base();
+        long.duration_s = 120.0;
+        long.seed = 9;
+        let jobs = vec![
+            sim_job(1),
+            BatchJob::sim(SimRequest { cfg: long, sample_every: 1 }, false)
+                .unwrap(),
+        ];
+        let ticks: Vec<u64> = jobs.iter().map(|j| j.ticks).collect();
+        assert_ne!(ticks[0], ticks[1]);
+        let pending: Vec<Pending> = jobs
+            .into_iter()
+            .map(|job| Pending {
+                job,
+                slot: Arc::new(Slot::new()),
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let slots: Vec<_> = pending.iter().map(|p| p.slot.clone()).collect();
+        b.run_round(pending);
+        for slot in &slots {
+            let (result, occupancy) = slot.wait();
+            assert_eq!(occupancy, 1);
+            assert_eq!(result.unwrap().status, 200);
+        }
+    }
+}

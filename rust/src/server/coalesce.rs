@@ -23,7 +23,9 @@ pub struct Slot<V> {
 }
 
 impl<V: Clone> Slot<V> {
-    fn new() -> Self {
+    /// Crate-visible so the batch scheduler (`server/batch.rs`) can use
+    /// the same park/publish primitive for per-job round slots.
+    pub(crate) fn new() -> Self {
         Slot { result: Mutex::new(None), ready: Condvar::new() }
     }
 
@@ -36,7 +38,7 @@ impl<V: Clone> Slot<V> {
         g.as_ref().cloned().unwrap()
     }
 
-    fn publish(&self, v: V) {
+    pub(crate) fn publish(&self, v: V) {
         *self.result.lock().unwrap() = Some(v);
         self.ready.notify_all();
     }

@@ -23,7 +23,13 @@ pub const ENDPOINTS: &[&str] =
 
 /// Map a request path to its counter index (`other` catches the rest).
 /// The match returns the index directly — no catalog scan per request.
+/// `/v1/...` and the deprecated unprefixed aliases count into the same
+/// bucket: the version prefix is routing surface, not traffic shape.
 pub fn endpoint_index(path: &str) -> usize {
+    let path = match path.strip_prefix("/v1") {
+        Some(rest) if rest.starts_with('/') => rest,
+        _ => path,
+    };
     match path {
         "/simulate" => 0,
         "/fleet" => 1,
@@ -101,10 +107,13 @@ impl Metrics {
             workers.max(1),
             true,
         );
-        // Touch the process-global sim-domain counters so a scrape
-        // renders them (at zero) even before any traced run.
+        // Touch the process-global sim-domain counters and the batching
+        // histograms so a scrape renders them (at zero) even before any
+        // traced run or batched sweep.
         let _ = crate::obs::metrics::throttle_events();
         let _ = crate::obs::metrics::lane_sync_transitions();
+        let _ = crate::obs::metrics::batch_occupancy();
+        let _ = crate::obs::metrics::batch_window_wait_ms();
         Metrics {
             registry: r,
             requests,
@@ -226,6 +235,7 @@ impl Metrics {
                     .num("p99", quantile_ms(&h, 0.99))
                     .build(),
             )
+            .set("batch", batch_json())
             .num("workers", workers as f64)
             .num("uptime_s", uptime_s)
             .build()
@@ -270,6 +280,33 @@ fn quantile_ms(h: &Histogram, q: f64) -> f64 {
     }
 }
 
+/// A quantile of a linear histogram (0 when nothing recorded).
+fn quantile_or_zero(h: &Histogram, q: f64) -> f64 {
+    let v = h.quantile(q);
+    if v.is_nan() {
+        0.0
+    } else {
+        v
+    }
+}
+
+/// The `batch` section of the JSON document — continuous-batching
+/// occupancy and admission-window wait, read from the process-global
+/// histograms the `Batcher` pushes into (`obs::metrics`). They also
+/// reach the Prometheus exposition via the global-registry append in
+/// `to_prometheus`.
+fn batch_json() -> Json {
+    let occ = crate::obs::metrics::batch_occupancy().merged();
+    let wait = crate::obs::metrics::batch_window_wait_ms().merged();
+    JsonBuilder::new()
+        .num("sweeps", occ.total as f64)
+        .num("occupancy_p50", quantile_or_zero(&occ, 0.50))
+        .num("occupancy_p99", quantile_or_zero(&occ, 0.99))
+        .num("window_wait_ms_p50", quantile_ms(&wait, 0.50))
+        .num("window_wait_ms_p99", quantile_ms(&wait, 0.99))
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +320,12 @@ mod tests {
         assert_eq!(ENDPOINTS[endpoint_index("/metrics")], "metrics");
         assert_eq!(ENDPOINTS[endpoint_index("/shutdown")], "shutdown");
         assert_eq!(ENDPOINTS[endpoint_index("/nope")], "other");
+        // The v1 prefix maps to the same buckets as the legacy alias.
+        assert_eq!(ENDPOINTS[endpoint_index("/v1/simulate")], "simulate");
+        assert_eq!(ENDPOINTS[endpoint_index("/v1/metrics")], "metrics");
+        assert_eq!(ENDPOINTS[endpoint_index("/v1/nope")], "other");
+        // "/v12" is not a version prefix.
+        assert_eq!(ENDPOINTS[endpoint_index("/v12/simulate")], "other");
     }
 
     #[test]
@@ -317,6 +360,18 @@ mod tests {
         // ~10 ms requests dominate: p50 lands near 10 ms in log space.
         let p50 = lat.get("p50").unwrap().as_f64().unwrap();
         assert!(p50 > 5.0 && p50 < 20.0, "p50 {p50}");
+        // The batch section renders (values come from the process-global
+        // histograms, so only shape is asserted here).
+        let b = j.get("batch").unwrap();
+        for field in [
+            "sweeps",
+            "occupancy_p50",
+            "occupancy_p99",
+            "window_wait_ms_p50",
+            "window_wait_ms_p99",
+        ] {
+            assert!(b.get(field).unwrap().as_f64().unwrap() >= 0.0);
+        }
     }
 
     #[test]
@@ -353,6 +408,8 @@ mod tests {
             "idatacool_uptime_seconds",
             "idatacool_throttle_events_total",
             "idatacool_lane_sync_transitions_total",
+            "idatacool_batch_occupancy",
+            "idatacool_batch_window_wait_ms",
         ] {
             assert!(text.contains(&format!("# TYPE {name} ")),
                     "missing TYPE line for {name}:\n{text}");

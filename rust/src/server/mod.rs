@@ -1,18 +1,28 @@
 //! Sim-as-a-service: a dependency-free (std::net, hand-rolled HTTP/1.1)
 //! simulation server — `idatacool serve`.
 //!
-//! Architecture: a single accept loop feeds accepted connections into a
-//! bounded `pool::JobQueue` drained by a `std::thread` worker pool. Each
-//! worker parses one request (`util::http`), routes it, and answers with
-//! `connection: close`. The three simulation endpoints share one serving
-//! discipline (`serve_cached`):
+//! Architecture: a single **nonblocking readiness loop** accepts
+//! connections and polls them (plus keep-alive connections handed back
+//! by workers) for readable bytes; ready connections are dispatched
+//! through a bounded `pool::JobQueue` to a `std::thread` worker pool.
+//! Each worker parses one request (`util::http`), routes it through the
+//! `ENDPOINTS` registry, answers, and — under HTTP/1.1 keep-alive —
+//! parks the connection back with the loop, carrying any pipelined
+//! bytes it over-read.
 //!
-//!  1. **LRU response cache** (`util::lru`), keyed by the request
-//!     fingerprint (`api::request_fingerprint` — the bench subsystem's
-//!     config fingerprint extended over the canonical request document).
-//!     A repeat of an identical request is answered with the *stored
+//! Routing is **versioned**: every endpoint lives under `/v1/...`;
+//! the legacy unprefixed paths remain as aliases for one release and
+//! answer with a `Deprecation: true` header. Every error body is the
+//! single `idatacool-error/1` JSON envelope (`util::http::error_envelope`).
+//!
+//! The three simulation endpoints share one serving discipline
+//! (`serve_cached`):
+//!
+//!  1. **Sharded LRU response cache** (`util::lru::ShardedLru`), keyed
+//!     by the request fingerprint (`api::request_fingerprint`). A
+//!     repeat of an identical request is answered with the *stored
 //!     bytes* — `x-cache: hit`, body bitwise identical to the first
-//!     answer.
+//!     answer — and lookups on different shards never serialize.
 //!  2. **In-flight coalescing** (`coalesce`): concurrent identical
 //!     requests share one simulation; followers get `x-cache:
 //!     coalesced`.
@@ -20,22 +30,34 @@
 //!     publishes to followers. Error responses are published but never
 //!     cached.
 //!
+//! Computes for *heterogeneous* concurrent `/simulate` and `/fleet`
+//! requests additionally pass through the continuous-batching
+//! scheduler (`batch`, gated by `[serve] batch_window_ms`): an
+//! admission window packs all pending jobs' plants into one shared SoA
+//! lane arena and advances them in tick lockstep — one kernel sweep
+//! per substep for the whole batch. Batched responses carry an
+//! `x-batch: <occupancy>` header and are bitwise identical to solo
+//! runs (see `batch` for the determinism argument).
+//!
 //! Determinism: a response body is a pure function of the request (no
 //! wall-clock fields — see `api`), simulations are seeded, and the
 //! `/fleet` body reuses the exact `idatacool fleet --json` serializer —
 //! so a K-worker server answers bitwise identically to a one-shot CLI
 //! run, and cache hits are indistinguishable from recomputation.
 //!
-//! Endpoints: `POST /simulate` (`?stream=1` for per-tick NDJSON),
-//! `POST /fleet`, `POST /sweep`, `GET /healthz`, `GET /metrics`,
-//! `POST /shutdown`.
+//! Endpoints: `POST /v1/simulate` (`?stream=1` for per-tick NDJSON),
+//! `POST /v1/fleet`, `POST /v1/sweep`, `GET /v1/healthz`,
+//! `GET /v1/metrics`, `POST /v1/shutdown` (all also reachable
+//! unprefixed, deprecated).
 
 pub mod api;
+pub mod batch;
 pub mod coalesce;
 pub mod metrics;
 pub mod pool;
 
-use std::io::BufReader;
+use std::cell::Cell;
+use std::io::{BufReader, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -46,18 +68,35 @@ use anyhow::{Context, Result};
 use crate::config::{ServeConfig, SimConfig};
 use crate::coordinator::SimulationDriver;
 use crate::figures::sweep;
-use crate::fleet::FleetDriver;
+use crate::fleet::{megabatch, FleetDriver};
 use crate::plant::TickOutput;
-use crate::util::http::{Request, Response};
+use crate::util::http::{error_envelope, Request, Response};
 use crate::util::json::JsonBuilder;
-use crate::util::lru::Lru;
+use crate::util::lru::ShardedLru;
 
+use api::{ApiRequest, EndpointKind};
+use batch::{BatchJob, Batcher};
 use coalesce::{Claim, Coalescer};
 use metrics::Metrics;
 use pool::{JobQueue, WorkerPool};
 
 /// Upper clamp on the worker-thread count.
 pub const MAX_WORKERS: usize = 256;
+
+/// Lock shards for the response cache.
+const CACHE_SHARDS: usize = 8;
+
+/// Most connections the readiness loop will hold open at once; beyond
+/// this, new arrivals are shed with a 503.
+const MAX_PARKED: usize = 1024;
+
+/// An idle (no bytes readable) connection is dropped after this long.
+/// Clients mid-request get the worker-side 30 s read timeout instead —
+/// a connection only counts as idle *between* requests.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Readiness-loop sleep when nothing was accepted, ready, or closed.
+const POLL_SLEEP: Duration = Duration::from_millis(1);
 
 /// Validate a requested worker count the way the fleet CLI validates
 /// `--shards`: zero is an error, an excessive value clamps with a
@@ -109,8 +148,10 @@ impl CachedResponse {
     }
 }
 
+/// An error in `CachedResponse` form — same `idatacool-error/1`
+/// envelope every other error path emits.
 fn error_cached(status: u16, msg: &str) -> CachedResponse {
-    let body = JsonBuilder::new().str("error", msg).build().to_string();
+    let body = error_envelope(status, msg, None).to_string();
     CachedResponse {
         status,
         content_type: "application/json".into(),
@@ -141,20 +182,32 @@ impl Default for ServeScratch {
     }
 }
 
-/// State shared between the accept loop and every worker.
+/// One client connection plus any pipelined bytes a worker already
+/// read past the previous request (HTTP/1.1 keep-alive carry).
+pub struct Conn {
+    stream: TcpStream,
+    leftover: Vec<u8>,
+}
+
+/// State shared between the readiness loop and every worker.
 struct Shared {
     base: SimConfig,
-    cache: Mutex<Lru<u64, CachedResponse>>,
+    cache: ShardedLru<CachedResponse>,
     inflight: Coalescer<CachedResponse>,
+    /// The continuous-batching scheduler; `None` when
+    /// `batch_window_ms = 0` (every request computes solo).
+    batch: Option<Batcher>,
     metrics: Metrics,
     shutdown: AtomicBool,
     local_addr: SocketAddr,
     workers: usize,
     cache_cap: usize,
     started: Instant,
-    /// The accept-loop job queue — held here so a metrics scrape can
+    /// The readiness-loop job queue — held here so a metrics scrape can
     /// read its depth high-water mark.
-    queue: Arc<JobQueue<TcpStream>>,
+    queue: Arc<JobQueue<Conn>>,
+    /// Keep-alive connections workers hand back for further polling.
+    parked: Mutex<Vec<Conn>>,
 }
 
 /// The bound-but-not-yet-running server.
@@ -169,6 +222,10 @@ impl Server {
         let workers = resolve_workers(sc.workers)?;
         anyhow::ensure!(sc.cache_cap >= 1, "cache-cap must be at least 1");
         anyhow::ensure!(sc.queue_cap >= 1, "queue-cap must be at least 1");
+        anyhow::ensure!(
+            sc.batch_max_plants >= 1,
+            "batch-max-plants must be at least 1"
+        );
         let mut base = opts.base;
         // "auto" resolves to the artifact-independent native backend
         // (mirrors fleet runs); requests may still pin "hlo".
@@ -179,10 +236,17 @@ impl Server {
         let listener = TcpListener::bind(&sc.addr)
             .with_context(|| format!("bind {}", sc.addr))?;
         let local_addr = listener.local_addr()?;
+        let batch = (sc.batch_window_ms > 0).then(|| {
+            Batcher::new(
+                Duration::from_millis(sc.batch_window_ms as u64),
+                sc.batch_max_plants,
+            )
+        });
         let shared = Arc::new(Shared {
             base,
-            cache: Mutex::new(Lru::new(sc.cache_cap)),
+            cache: ShardedLru::new(sc.cache_cap, CACHE_SHARDS),
             inflight: Coalescer::new(),
+            batch,
             metrics: Metrics::new(workers),
             shutdown: AtomicBool::new(false),
             local_addr,
@@ -190,6 +254,7 @@ impl Server {
             cache_cap: sc.cache_cap,
             started: Instant::now(),
             queue: Arc::new(JobQueue::new(sc.queue_cap)),
+            parked: Mutex::new(Vec::new()),
         });
         Ok(Server { listener, shared })
     }
@@ -199,8 +264,15 @@ impl Server {
         self.shared.local_addr
     }
 
-    /// Blocking accept loop; returns after `POST /shutdown` (every
-    /// already-accepted connection still gets an answer).
+    /// The readiness loop; returns after `POST /shutdown` (every
+    /// already-dispatched connection still gets an answer).
+    ///
+    /// Everything here is std-only: the listener and parked sockets run
+    /// nonblocking, readiness is a 1-byte `peek`, and the loop sleeps
+    /// `POLL_SLEEP` only when a pass found no work. A connection with a
+    /// non-empty keep-alive carry is ready by definition — its next
+    /// request (or part of it) is already in user space, where `peek`
+    /// cannot see it.
     pub fn run(self) -> Result<()> {
         let queue = self.shared.queue.clone();
         let pool = {
@@ -209,21 +281,79 @@ impl Server {
                 self.shared.workers,
                 queue.clone(),
                 ServeScratch::new,
-                move |s, scratch| handle_connection(s, &shared, scratch),
+                move |conn, scratch| handle_connection(conn, &shared, scratch),
             )
         };
-        for stream in self.listener.incoming() {
-            if self.shared.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
-                Ok(s) => {
-                    if let Err(s) = queue.push(s) {
-                        self.shared.metrics.shed();
-                        shed(s);
+        self.listener
+            .set_nonblocking(true)
+            .context("set listener nonblocking")?;
+        let mut parked: Vec<(Conn, Instant)> = Vec::new();
+        while !self.shared.shutdown.load(Ordering::SeqCst) {
+            let mut active = false;
+            // 1. Drain the accept backlog.
+            loop {
+                match self.listener.accept() {
+                    Ok((s, _)) => {
+                        active = true;
+                        if parked.len() >= MAX_PARKED {
+                            self.shared.metrics.shed();
+                            shed(s);
+                            continue;
+                        }
+                        let _ = s.set_nonblocking(true);
+                        let conn = Conn { stream: s, leftover: Vec::new() };
+                        parked.push((conn, Instant::now()));
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                        break;
                     }
                 }
-                Err(e) => eprintln!("accept error: {e}"),
+            }
+            // 2. Reclaim keep-alive connections handed back by workers.
+            for conn in self.shared.parked.lock().unwrap().drain(..) {
+                let _ = conn.stream.set_nonblocking(true);
+                parked.push((conn, Instant::now()));
+            }
+            // 3. Poll for readable connections and dispatch them.
+            let mut i = 0;
+            while i < parked.len() {
+                let state = if parked[i].0.leftover.is_empty() {
+                    probe(&parked[i].0.stream)
+                } else {
+                    ConnState::Ready
+                };
+                match state {
+                    ConnState::Ready => {
+                        active = true;
+                        let (conn, _) = parked.swap_remove(i);
+                        // Workers read/write blocking (with timeouts).
+                        let _ = conn.stream.set_nonblocking(false);
+                        if let Err(conn) = queue.push(conn) {
+                            self.shared.metrics.shed();
+                            shed(conn.stream);
+                        }
+                    }
+                    ConnState::Closed => {
+                        active = true;
+                        parked.swap_remove(i);
+                    }
+                    ConnState::Idle => {
+                        if parked[i].1.elapsed() > IDLE_TIMEOUT {
+                            parked.swap_remove(i);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            if !active {
+                std::thread::sleep(POLL_SLEEP);
             }
         }
         queue.close();
@@ -244,6 +374,25 @@ impl Server {
     }
 }
 
+/// What a 1-byte `peek` says about a parked connection.
+enum ConnState {
+    Ready,
+    Idle,
+    Closed,
+}
+
+fn probe(s: &TcpStream) -> ConnState {
+    let mut b = [0u8; 1];
+    match s.peek(&mut b) {
+        Ok(0) => ConnState::Closed, // orderly EOF
+        Ok(_) => ConnState::Ready,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            ConnState::Idle
+        }
+        Err(_) => ConnState::Closed,
+    }
+}
+
 /// Handle to a background server.
 pub struct ServerHandle {
     pub addr: SocketAddr,
@@ -252,16 +401,14 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Shut the server down and join the accept loop. The flag is set
-    /// directly (not via `POST /shutdown`), so stopping cannot be
-    /// defeated by a full job queue shedding the wire request; the
-    /// connect ping only wakes the blocked accept call.
+    /// Shut the server down and join the readiness loop. The flag is
+    /// set directly (not via `POST /shutdown`), so stopping cannot be
+    /// defeated by a full job queue shedding the wire request; the loop
+    /// observes the flag on its next pass (≤ `POLL_SLEEP`).
     pub fn stop(self) -> Result<()> {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         for _ in 0..50 {
-            if self.join.is_finished()
-                || TcpStream::connect(self.addr).is_ok()
-            {
+            if self.join.is_finished() {
                 break;
             }
             std::thread::sleep(Duration::from_millis(10));
@@ -273,26 +420,35 @@ impl ServerHandle {
     }
 }
 
-/// Reject an accepted connection when the job queue is full.
+/// Reject a connection when the job queue or the parked set is full.
 fn shed(mut s: TcpStream) {
+    let _ = s.set_nonblocking(false);
     let _ = Response::error(503, "job queue full; retry later")
         .write_to(&mut s);
 }
 
-fn handle_connection(stream: TcpStream, shared: &Arc<Shared>,
+/// Serve **one** request from `conn`, then either drop it or park it
+/// back with the readiness loop (HTTP/1.1 keep-alive). Any bytes read
+/// past the request's end — pipelined follow-ups — ride along in
+/// `Conn::leftover` and are replayed ahead of the socket next time.
+fn handle_connection(mut conn: Conn, shared: &Arc<Shared>,
                      scratch: &mut ServeScratch) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let _ = stream.set_nodelay(true);
+    let _ = conn.stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = conn.stream.set_nodelay(true);
     let _req_span = crate::obs::span("request");
-    let mut reader = BufReader::new(&stream);
+    let carry = std::mem::take(&mut conn.leftover);
+    let mut reader =
+        BufReader::new(std::io::Cursor::new(carry).chain(&conn.stream));
     let req = {
         let _parse_span = crate::obs::span("parse");
         match Request::read_from(&mut reader) {
             Ok(Some(req)) => req,
-            Ok(None) => return, // clean EOF (health probe, shutdown ping)
+            Ok(None) => return, // clean EOF (probe or keep-alive close)
             Err(e) => {
-                let _ =
-                    Response::error(e.status, &e.msg).write_to(&mut &stream);
+                // Wire-level error: answer and close — framing is no
+                // longer trustworthy, so never keep the connection.
+                let _ = Response::error(e.status, &e.msg)
+                    .write_to(&mut &conn.stream);
                 return;
             }
         }
@@ -313,46 +469,138 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>,
         elapsed_s,
         scratch.worker,
     );
+    let keep = !shared.shutdown.load(Ordering::SeqCst)
+        && !req
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"));
     // Wall-clock lives in headers only — response *bodies* stay a pure
     // function of the request (cache hits are compared bitwise on body).
-    let resp = resp
+    let mut resp = resp
         .with_header("x-timing", &format!("total={:.3}ms", elapsed_s * 1e3));
-    let _ = resp.write_to(&mut &stream);
-    if req.method == "POST" && req.path == "/shutdown" {
-        // Wake the accept loop (it is blocked in accept) so it observes
-        // the shutdown flag set by `route`.
-        let _ = TcpStream::connect(shared.local_addr);
+    if keep {
+        resp = resp.keep_alive();
+    }
+    let wrote = resp.write_to(&mut &conn.stream).is_ok();
+    if !(keep && wrote) {
+        return;
+    }
+    // Reassemble the unconsumed tail in stream order: the BufReader's
+    // buffer holds the earliest over-read bytes, then whatever is left
+    // of the previous carry.
+    let mut leftover = reader.buffer().to_vec();
+    let (cursor, _stream) = reader.into_inner().into_inner();
+    let pos = (cursor.position() as usize).min(cursor.get_ref().len());
+    leftover.extend_from_slice(&cursor.get_ref()[pos..]);
+    conn.leftover = leftover;
+    let mut parked = shared.parked.lock().unwrap();
+    if parked.len() < MAX_PARKED {
+        parked.push(conn);
+    }
+}
+
+/// One routable endpoint. The table is the routing authority — method,
+/// path, parser (`api`), query contract, and cache policy all live
+/// here; there is no hand-rolled per-path dispatch.
+struct Endpoint {
+    method: &'static str,
+    path: &'static str,
+    /// `Some(kind)`: a simulation endpoint parsed into a typed
+    /// [`ApiRequest`]. `None`: infrastructure (no body parsing).
+    api: Option<EndpointKind>,
+    /// Whether `?stream=` is a recognized query parameter.
+    allow_stream: bool,
+    /// Whether responses enter the LRU + coalescer (`serve_cached`).
+    cached: bool,
+    handler: fn(&Endpoint, &Request, &Arc<Shared>, &mut ServeScratch)
+        -> Response,
+}
+
+/// The registry. Paths are version-stripped (`/v1/simulate` and the
+/// deprecated `/simulate` both match the `/simulate` row).
+const ENDPOINTS: &[Endpoint] = &[
+    Endpoint {
+        method: "GET",
+        path: "/healthz",
+        api: None,
+        allow_stream: false,
+        cached: false,
+        handler: ep_healthz,
+    },
+    Endpoint {
+        method: "GET",
+        path: "/metrics",
+        api: None,
+        allow_stream: false,
+        cached: false,
+        handler: ep_metrics,
+    },
+    Endpoint {
+        method: "POST",
+        path: "/shutdown",
+        api: None,
+        allow_stream: false,
+        cached: false,
+        handler: ep_shutdown,
+    },
+    Endpoint {
+        method: "POST",
+        path: "/simulate",
+        api: Some(EndpointKind::Simulate),
+        allow_stream: true,
+        cached: true,
+        handler: ep_api,
+    },
+    Endpoint {
+        method: "POST",
+        path: "/fleet",
+        api: Some(EndpointKind::Fleet),
+        allow_stream: false,
+        cached: true,
+        handler: ep_api,
+    },
+    Endpoint {
+        method: "POST",
+        path: "/sweep",
+        api: Some(EndpointKind::Sweep),
+        allow_stream: false,
+        cached: true,
+        handler: ep_api,
+    },
+];
+
+/// Split the API version off a request path. Unprefixed paths still
+/// resolve (legacy aliases) but are flagged so the response can carry
+/// the `Deprecation` header.
+fn split_version(path: &str) -> (&str, bool) {
+    match path.strip_prefix("/v1") {
+        Some(rest) if rest.starts_with('/') => (rest, true),
+        _ => (path, false),
     }
 }
 
 fn route(req: &Request, shared: &Arc<Shared>, scratch: &mut ServeScratch)
          -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => healthz(shared),
-        ("GET", "/metrics") => metrics_response(req, shared),
-        ("POST", "/shutdown") => {
-            shared.shutdown.store(true, Ordering::SeqCst);
-            Response::json(
-                200,
-                &JsonBuilder::new().str("status", "shutting-down").build(),
-            )
-        }
-        ("POST", "/simulate") => handle_simulate(req, shared, scratch),
-        ("POST", "/fleet") => handle_fleet(req, shared),
-        ("POST", "/sweep") => handle_sweep(req, shared),
-        (
-            _,
-            "/healthz" | "/metrics" | "/shutdown" | "/simulate" | "/fleet"
-            | "/sweep",
-        ) => Response::error(
+    let (path, versioned) = split_version(&req.path);
+    let Some(ep) = ENDPOINTS.iter().find(|e| e.path == path) else {
+        return Response::error(404, &format!("no route for {}", req.path));
+    };
+    let resp = if ep.method == req.method {
+        (ep.handler)(ep, req, shared, scratch)
+    } else {
+        Response::error(
             405,
             &format!("method {} not allowed for {}", req.method, req.path),
-        ),
-        _ => Response::error(404, &format!("no route for {}", req.path)),
+        )
+    };
+    if versioned {
+        resp
+    } else {
+        resp.with_header("deprecation", "true")
     }
 }
 
-fn healthz(shared: &Arc<Shared>) -> Response {
+fn ep_healthz(_: &Endpoint, _: &Request, shared: &Arc<Shared>,
+              _: &mut ServeScratch) -> Response {
     Response::json(
         200,
         &JsonBuilder::new()
@@ -364,10 +612,11 @@ fn healthz(shared: &Arc<Shared>) -> Response {
     )
 }
 
-/// `GET /metrics[?format=json|prometheus]`. Strict query contract like
-/// every other endpoint: an unknown parameter or format value is a 400,
-/// never a silently ignored default.
-fn metrics_response(req: &Request, shared: &Arc<Shared>) -> Response {
+/// `GET /v1/metrics[?format=json|prometheus]`. Strict query contract
+/// like every other endpoint: an unknown parameter or format value is a
+/// 400, never a silently ignored default.
+fn ep_metrics(_: &Endpoint, req: &Request, shared: &Arc<Shared>,
+              _: &mut ServeScratch) -> Response {
     let mut prometheus = false;
     for (k, v) in &req.query {
         if k == "format" {
@@ -391,7 +640,7 @@ fn metrics_response(req: &Request, shared: &Arc<Shared>) -> Response {
             );
         }
     }
-    let entries = shared.cache.lock().unwrap().len();
+    let entries = shared.cache.len();
     shared
         .metrics
         .set_queue_high_water(shared.queue.high_water() as u64);
@@ -420,13 +669,60 @@ fn metrics_response(req: &Request, shared: &Arc<Shared>) -> Response {
     )
 }
 
+fn ep_shutdown(_: &Endpoint, _: &Request, shared: &Arc<Shared>,
+               _: &mut ServeScratch) -> Response {
+    shared.shutdown.store(true, Ordering::SeqCst);
+    Response::json(
+        200,
+        &JsonBuilder::new().str("status", "shutting-down").build(),
+    )
+}
+
+/// The one handler behind every simulation endpoint: strict query
+/// parse, typed body parse ([`ApiRequest::parse`]), shared fingerprint,
+/// then the registry's cache policy. Batched computes surface their
+/// arena occupancy as `x-batch` (cache hits and coalesced followers
+/// never carry it — they did not sweep).
+fn ep_api(ep: &Endpoint, req: &Request, shared: &Arc<Shared>,
+          scratch: &mut ServeScratch) -> Response {
+    let kind = ep.api.expect("registry row is a typed api endpoint");
+    let stream = match parse_query(req, ep.allow_stream) {
+        Ok(s) => s,
+        Err(resp) => return resp,
+    };
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return Response::error(e.status, &e.msg),
+    };
+    let areq = match ApiRequest::parse(kind, body, stream, &shared.base) {
+        Ok(a) => a,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let key = areq.fingerprint();
+    let occupancy: Cell<Option<usize>> = Cell::new(None);
+    let resp = if ep.cached {
+        serve_cached(shared, key, || {
+            compute_api(areq, shared, scratch, &occupancy)
+        })
+    } else {
+        match compute_api(areq, shared, scratch, &occupancy) {
+            Ok(c) => c.to_response("bypass"),
+            Err(e) => Response::error(500, &format!("{e:#}")),
+        }
+    };
+    match occupancy.get() {
+        Some(n) => resp.with_header("x-batch", &n.to_string()),
+        None => resp,
+    }
+}
+
 /// The shared serving discipline: cache, coalesce, or compute.
 fn serve_cached<F>(shared: &Arc<Shared>, key: u64, compute: F) -> Response
 where
     F: FnOnce() -> Result<CachedResponse>,
 {
     let lookup_span = crate::obs::span("cache_lookup");
-    let hit = shared.cache.lock().unwrap().get(&key).cloned();
+    let hit = shared.cache.get(key);
     drop(lookup_span);
     if let Some(c) = hit {
         shared.metrics.cache_hit();
@@ -445,8 +741,7 @@ where
             // successfully cached request could be recomputed; with it,
             // a successful simulation runs exactly once per key
             // (errors are not cached, so those may legitimately rerun).
-            let raced = shared.cache.lock().unwrap().get(&key).cloned();
-            if let Some(c) = raced {
+            if let Some(c) = shared.cache.get(key) {
                 shared.metrics.cache_hit();
                 shared.inflight.complete(key, &slot, c.clone());
                 return c.to_response("hit");
@@ -462,12 +757,10 @@ where
                 Ok(Err(e)) => (error_cached(500, &format!("{e:#}")), false),
                 Err(_) => (error_cached(500, "simulation panicked"), false),
             };
-            if cacheable {
-                let evicted =
-                    shared.cache.lock().unwrap().insert(key, resp.clone());
-                if evicted.is_some() {
-                    shared.metrics.cache_evicted();
-                }
+            if cacheable
+                && shared.cache.insert(key, resp.clone()).is_some()
+            {
+                shared.metrics.cache_evicted();
             }
             // Must always run, or followers would wait forever.
             shared.inflight.complete(key, &slot, resp.clone());
@@ -507,23 +800,38 @@ fn parse_query(req: &Request, allow_stream: bool) -> Result<bool, Response> {
     Ok(stream)
 }
 
-fn handle_simulate(req: &Request, shared: &Arc<Shared>,
-                   scratch: &mut ServeScratch) -> Response {
-    let stream = match parse_query(req, true) {
-        Ok(s) => s,
-        Err(resp) => return resp,
-    };
-    let body = match req.body_str() {
-        Ok(b) => b,
-        Err(e) => return Response::error(e.status, &e.msg),
-    };
-    let sim = match api::parse_sim_request(body, &shared.base) {
-        Ok(s) => s,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
-    };
-    let canon = api::canonical_sim_json(&sim.cfg, sim.sample_every, stream);
-    let key = api::request_fingerprint("simulate", &canon, &sim.cfg);
-    serve_cached(shared, key, move || compute_simulate(sim, stream, scratch))
+/// Compute one typed request. SoA-native `/simulate` and `/fleet` jobs
+/// go through the continuous-batching admission window when the server
+/// has one; everything else (sweeps, pinned backends/kernels, fleet
+/// requests with `megabatch: false`) computes solo exactly as before.
+/// Either way the response bytes are identical — batching is an
+/// execution shape, not a result shape.
+fn compute_api(areq: ApiRequest, shared: &Arc<Shared>,
+               scratch: &mut ServeScratch,
+               occupancy: &Cell<Option<usize>>) -> Result<CachedResponse> {
+    match areq {
+        ApiRequest::Simulate { sim, stream } => {
+            if let Some(b) = &shared.batch {
+                if megabatch::precheck(&sim.cfg) {
+                    let (resp, n) = b.submit(BatchJob::sim(sim, stream)?)?;
+                    occupancy.set(Some(n));
+                    return Ok(resp);
+                }
+            }
+            compute_simulate(sim, stream, scratch)
+        }
+        ApiRequest::Fleet(fc) => {
+            if let Some(b) = &shared.batch {
+                if fc.megabatch && megabatch::precheck(&fc.base) {
+                    let (resp, n) = b.submit(BatchJob::fleet(fc)?)?;
+                    occupancy.set(Some(n));
+                    return Ok(resp);
+                }
+            }
+            compute_fleet(fc)
+        }
+        ApiRequest::Sweep(sr) => compute_sweep(sr),
+    }
 }
 
 fn compute_simulate(sim: api::SimRequest, stream: bool,
@@ -556,23 +864,6 @@ fn compute_simulate(sim: api::SimRequest, stream: bool,
     }
 }
 
-fn handle_fleet(req: &Request, shared: &Arc<Shared>) -> Response {
-    if let Err(resp) = parse_query(req, false) {
-        return resp;
-    }
-    let body = match req.body_str() {
-        Ok(b) => b,
-        Err(e) => return Response::error(e.status, &e.msg),
-    };
-    let fc = match api::parse_fleet_request(body, &shared.base) {
-        Ok(c) => c,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
-    };
-    let canon = api::canonical_fleet_json(&fc);
-    let key = api::request_fingerprint("fleet", &canon, &fc.base);
-    serve_cached(shared, key, move || compute_fleet(fc))
-}
-
 fn compute_fleet(fc: crate::fleet::FleetConfig) -> Result<CachedResponse> {
     let driver = FleetDriver::new(fc)?;
     let run = driver.run()?;
@@ -583,23 +874,6 @@ fn compute_fleet(fc: crate::fleet::FleetConfig) -> Result<CachedResponse> {
         // Exactly the `idatacool fleet --json` document.
         body: Arc::new(run.to_json(&driver.cfg).into_bytes()),
     })
-}
-
-fn handle_sweep(req: &Request, shared: &Arc<Shared>) -> Response {
-    if let Err(resp) = parse_query(req, false) {
-        return resp;
-    }
-    let body = match req.body_str() {
-        Ok(b) => b,
-        Err(e) => return Response::error(e.status, &e.msg),
-    };
-    let sr = match api::parse_sweep_request(body, &shared.base) {
-        Ok(r) => r,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
-    };
-    let canon = api::canonical_sweep_json(&sr);
-    let key = api::request_fingerprint("sweep", &canon, &sr.cfg);
-    serve_cached(shared, key, move || compute_sweep(sr))
 }
 
 fn compute_sweep(sr: api::SweepRequest) -> Result<CachedResponse> {
@@ -647,9 +921,13 @@ mod tests {
         o.cfg.addr = "127.0.0.1:0".into();
         o.cfg.workers = 0;
         assert!(Server::bind(o).is_err());
-        let mut o = ServeOptions::new(base);
+        let mut o = ServeOptions::new(base.clone());
         o.cfg.addr = "127.0.0.1:0".into();
         o.cfg.queue_cap = 0;
+        assert!(Server::bind(o).is_err());
+        let mut o = ServeOptions::new(base);
+        o.cfg.addr = "127.0.0.1:0".into();
+        o.cfg.batch_max_plants = 0;
         assert!(Server::bind(o).is_err());
     }
 
@@ -671,5 +949,40 @@ mod tests {
             .headers
             .iter()
             .any(|(k, v)| k == "x-cache" && v == "miss"));
+        // And the body is the structured envelope, like every other
+        // error path.
+        let s = String::from_utf8((*c.body).clone()).unwrap();
+        assert!(s.contains("\"idatacool-error/1\""));
+        assert!(s.contains("\"internal_error\""));
+    }
+
+    #[test]
+    fn version_prefix_splits_and_legacy_paths_resolve() {
+        assert_eq!(split_version("/v1/simulate"), ("/simulate", true));
+        assert_eq!(split_version("/simulate"), ("/simulate", false));
+        assert_eq!(split_version("/v1/"), ("/", true));
+        // Not a version segment: "/v12" must not strip.
+        assert_eq!(split_version("/v12/simulate"), ("/v12/simulate", false));
+        assert_eq!(split_version("/v1"), ("/v1", false));
+        // Every registry path resolves both ways to the same row.
+        for ep in ENDPOINTS {
+            let v1 = format!("/v1{}", ep.path);
+            assert_eq!(split_version(&v1), (ep.path, true));
+        }
+    }
+
+    #[test]
+    fn registry_rows_are_unique_and_typed_rows_are_cached() {
+        for (i, a) in ENDPOINTS.iter().enumerate() {
+            for b in &ENDPOINTS[i + 1..] {
+                assert_ne!(a.path, b.path, "duplicate registry path");
+            }
+            // Cache policy: exactly the typed endpoints are cached.
+            assert_eq!(a.api.is_some(), a.cached);
+            // `?stream=` only where the endpoint supports NDJSON.
+            if a.allow_stream {
+                assert_eq!(a.path, "/simulate");
+            }
+        }
     }
 }

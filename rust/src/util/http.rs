@@ -4,10 +4,16 @@
 //! the `serve` bench suite and local smoke checks.
 //!
 //! Scope is deliberately narrow: `Content-Length` framing only (chunked
-//! transfer is answered with 501), every response carries
-//! `connection: close`, header keys are lowercased on parse, and query
-//! strings split on `&`/`=` without percent-decoding (the only query the
-//! server understands is `stream=1`).
+//! transfer is answered with 501), responses carry an explicit
+//! `connection: close` or `connection: keep-alive` (the server reuses
+//! connections; one-shot tools close), header keys are lowercased on
+//! parse, and query strings split on `&`/`=` without percent-decoding
+//! (the only query the server understands is `stream=1`).
+//!
+//! Every error body in the crate is the `idatacool-error/1` envelope
+//! built by [`error_envelope`] — `{"schema": "idatacool-error/1",
+//! "error": {"code", "message", "field?"}}` — so clients can branch on
+//! a stable machine-readable `code` instead of scraping prose.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -199,13 +205,62 @@ fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
     }
 }
 
-/// An outgoing response. `write_to` adds the `content-length` and
-/// `connection: close` framing headers.
+/// Stable machine-readable error code for a status (the `error.code`
+/// field of the `idatacool-error/1` envelope).
+pub fn error_code(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        413 => "payload_too_large",
+        431 => "headers_too_large",
+        500 => "internal_error",
+        501 => "not_implemented",
+        503 => "overloaded",
+        505 => "http_version_unsupported",
+        _ => "error",
+    }
+}
+
+/// Build the `idatacool-error/1` envelope document — the single source
+/// of every error body the crate emits (`Response::error`, the server's
+/// cached error path). `field` names the offending request field when
+/// the caller knows it (e.g. a bad query parameter).
+pub fn error_envelope(status: u16, msg: &str, field: Option<&str>) -> Json {
+    let mut e = std::collections::BTreeMap::new();
+    e.insert("code".to_string(), Json::Str(error_code(status).to_string()));
+    e.insert("message".to_string(), Json::Str(msg.to_string()));
+    if let Some(f) = field.or_else(|| infer_field(msg)) {
+        e.insert("field".to_string(), Json::Str(f.to_string()));
+    }
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("schema".to_string(),
+             Json::Str("idatacool-error/1".to_string()));
+    m.insert("error".to_string(), Json::Obj(e));
+    Json::Obj(m)
+}
+
+/// Pull the offending field name out of the crate's own strict-parse
+/// messages ("unknown field 'durationn'", "field 'plants' must be
+/// ..."), so the envelope's `field` is populated for the common 400s
+/// without threading a side-channel through every `anyhow` error.
+fn infer_field(msg: &str) -> Option<&str> {
+    let at = msg.find("field '")?;
+    let rest = &msg[at + "field '".len()..];
+    let end = rest.find('\'')?;
+    (end > 0).then_some(&rest[..end])
+}
+
+/// An outgoing response. `write_to` adds the `content-length` framing
+/// header plus `connection: close` or `connection: keep-alive`
+/// according to the `close` flag (constructors default to close; the
+/// server flips it for reusable connections).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    pub close: bool,
 }
 
 impl Response {
@@ -214,6 +269,7 @@ impl Response {
             status,
             headers: vec![("content-type".into(), content_type.into())],
             body,
+            close: true,
         }
     }
 
@@ -225,15 +281,26 @@ impl Response {
         Response::new(200, "application/x-ndjson", body)
     }
 
-    /// A JSON error envelope: `{"error": msg}`.
+    /// An `idatacool-error/1` JSON envelope response.
     pub fn error(status: u16, msg: &str) -> Response {
-        let mut m = std::collections::BTreeMap::new();
-        m.insert("error".to_string(), Json::Str(msg.to_string()));
-        Response::json(status, &Json::Obj(m))
+        Response::error_in(status, msg, None)
+    }
+
+    /// Like `error`, naming the offending request field.
+    pub fn error_in(status: u16, msg: &str, field: Option<&str>)
+                    -> Response {
+        Response::json(status, &error_envelope(status, msg, field))
     }
 
     pub fn with_header(mut self, k: &str, v: &str) -> Response {
         self.headers.push((k.into(), v.into()));
+        self
+    }
+
+    /// Mark the connection reusable: `write_to` emits
+    /// `connection: keep-alive` instead of `close`.
+    pub fn keep_alive(mut self) -> Response {
+        self.close = false;
         self
     }
 
@@ -243,7 +310,8 @@ impl Response {
             write!(w, "{k}: {v}\r\n")?;
         }
         write!(w, "content-length: {}\r\n", self.body.len())?;
-        write!(w, "connection: close\r\n\r\n")?;
+        let conn = if self.close { "close" } else { "keep-alive" };
+        write!(w, "connection: {conn}\r\n\r\n")?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -353,6 +421,95 @@ pub fn parse_client_response(raw: &[u8]) -> anyhow::Result<ClientResponse> {
         );
     }
     Ok(ClientResponse { status, headers, body })
+}
+
+/// Read one response from a buffered stream, framed by
+/// `content-length` (the keep-alive counterpart of
+/// `parse_client_response`, which frames by EOF). `Ok(None)` means the
+/// server closed before a status line.
+pub fn read_client_response<R: BufRead>(r: &mut R)
+                                        -> anyhow::Result<Option<ClientResponse>> {
+    let mut head = Vec::new();
+    // Accumulate lines until the blank separator; server responses are
+    // trusted, so a simple unbounded read_until is fine here.
+    loop {
+        let start = head.len();
+        let n = r.read_until(b'\n', &mut head)?;
+        if n == 0 {
+            if head.is_empty() {
+                return Ok(None);
+            }
+            anyhow::bail!("eof inside response head");
+        }
+        if head[start..] == *b"\r\n" || head[start..] == *b"\n" {
+            break;
+        }
+    }
+    let head = std::str::from_utf8(&head)?;
+    let mut lines = head.lines();
+    let status_line =
+        lines.next().ok_or_else(|| anyhow::anyhow!("empty response"))?;
+    let mut parts = status_line.split_whitespace();
+    let version =
+        parts.next().ok_or_else(|| anyhow::anyhow!("empty status line"))?;
+    anyhow::ensure!(
+        version.starts_with("HTTP/1."),
+        "unexpected response version '{version}'"
+    );
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("status line missing code"))?
+        .parse()?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .ok_or_else(|| anyhow::anyhow!("response has no content-length"))?
+        .parse()?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(ClientResponse { status, headers, body }))
+}
+
+/// Fire every request down ONE connection back-to-back (HTTP/1.1
+/// pipelining over keep-alive), then read the responses in order,
+/// framed by `content-length`. Each request is
+/// `(method, target, body)`; the last one asks the server to close.
+pub fn http_pipeline(
+    addr: &str,
+    reqs: &[(&str, &str, Option<&[u8]>)],
+) -> anyhow::Result<Vec<ClientResponse>> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    s.set_read_timeout(Some(Duration::from_secs(600)))?;
+    s.set_write_timeout(Some(Duration::from_secs(60)))?;
+    for (i, (method, target, body)) in reqs.iter().enumerate() {
+        let b = body.unwrap_or(&[]);
+        let conn =
+            if i + 1 == reqs.len() { "close" } else { "keep-alive" };
+        write!(
+            s,
+            "{method} {target} HTTP/1.1\r\nhost: {addr}\r\n\
+             content-length: {}\r\nconnection: {conn}\r\n\r\n",
+            b.len()
+        )?;
+        s.write_all(b)?;
+    }
+    s.flush()?;
+    let mut r = std::io::BufReader::new(s);
+    let mut out = Vec::with_capacity(reqs.len());
+    for i in 0..reqs.len() {
+        let resp = read_client_response(&mut r)?.ok_or_else(|| {
+            anyhow::anyhow!("connection closed after {i} of {} responses",
+                            reqs.len())
+        })?;
+        out.push(resp);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -468,14 +625,69 @@ mod tests {
     }
 
     #[test]
-    fn error_envelope_is_json() {
+    fn error_envelope_is_structured() {
         let resp = Response::error(404, "no route for /nope");
         let mut wire = Vec::new();
         resp.write_to(&mut wire).unwrap();
         let back = parse_client_response(&wire).unwrap();
         assert_eq!(back.status, 404);
         let j = Json::parse(back.body_str().unwrap()).unwrap();
-        assert_eq!(j.get("error").unwrap().as_str(), Some("no route for /nope"));
+        assert_eq!(j.get("schema").unwrap().as_str(),
+                   Some("idatacool-error/1"));
+        let e = j.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str(), Some("not_found"));
+        assert_eq!(e.get("message").unwrap().as_str(),
+                   Some("no route for /nope"));
+        assert!(e.get("field").is_none());
+    }
+
+    #[test]
+    fn envelope_field_explicit_and_inferred() {
+        // Explicit field name wins.
+        let j = error_envelope(400, "expects 0|1", Some("stream"));
+        assert_eq!(j.get("error").unwrap().get("field").unwrap().as_str(),
+                   Some("stream"));
+        // The strict-parser message convention is recognized...
+        let j = error_envelope(400, "unknown field 'durationn'", None);
+        let e = j.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str(), Some("bad_request"));
+        assert_eq!(e.get("field").unwrap().as_str(), Some("durationn"));
+        // ...and prose without the marker yields no field at all.
+        let j = error_envelope(500, "worker panicked", None);
+        assert!(j.get("error").unwrap().get("field").is_none());
+    }
+
+    #[test]
+    fn keep_alive_flag_switches_the_connection_header() {
+        let resp = Response::json(200, &Json::parse("{}").unwrap());
+        let mut wire = Vec::new();
+        resp.clone().keep_alive().write_to(&mut wire).unwrap();
+        let back = parse_client_response(&wire).unwrap();
+        assert_eq!(back.header("connection"), Some("keep-alive"));
+        wire.clear();
+        resp.write_to(&mut wire).unwrap();
+        let back = parse_client_response(&wire).unwrap();
+        assert_eq!(back.header("connection"), Some("close"));
+    }
+
+    #[test]
+    fn client_reader_frames_by_content_length() {
+        // Two responses on one "connection": the reader must split them
+        // on content-length, not EOF.
+        let mut wire = Vec::new();
+        Response::json(200, &Json::parse("{\"n\":1}").unwrap())
+            .keep_alive()
+            .write_to(&mut wire)
+            .unwrap();
+        Response::json(200, &Json::parse("{\"n\":22}").unwrap())
+            .write_to(&mut wire)
+            .unwrap();
+        let mut r = BufReader::new(wire.as_slice());
+        let a = read_client_response(&mut r).unwrap().unwrap();
+        let b = read_client_response(&mut r).unwrap().unwrap();
+        assert_eq!(a.body_str().unwrap(), "{\"n\":1}");
+        assert_eq!(b.body_str().unwrap(), "{\"n\":22}");
+        assert!(read_client_response(&mut r).unwrap().is_none());
     }
 
     #[test]

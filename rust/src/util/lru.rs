@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 use std::hash::Hash;
+use std::sync::Mutex;
 
 #[derive(Debug, Clone)]
 struct Entry<V> {
@@ -101,6 +102,78 @@ impl<K: Eq + Hash + Clone, V> Lru<K, V> {
     }
 }
 
+/// A sharded LRU over `u64` keys: N independent `Mutex<Lru>` shards
+/// selected by `key % N`, so concurrent lookups on different shards
+/// never serialize on one lock. Keys are already-mixed fingerprints
+/// (FNV output), so the low bits are uniform enough for modulo
+/// selection.
+///
+/// The total capacity is distributed across shards (first `cap % N`
+/// shards get one extra slot) so `cap()` still reports exactly the
+/// configured bound. Because eviction is per-shard, a pathological key
+/// distribution can evict earlier than a single LRU would — acceptable
+/// for a response cache, where eviction only costs a recompute.
+#[derive(Debug)]
+pub struct ShardedLru<V> {
+    shards: Vec<Mutex<Lru<u64, V>>>,
+}
+
+impl<V: Clone> ShardedLru<V> {
+    /// Create a cache of total capacity `cap` split over `shards`
+    /// locks. `shards` is clamped to `[1, cap]` so every shard holds
+    /// at least one entry. Panics when `cap == 0`, like `Lru::new`.
+    pub fn new(cap: usize, shards: usize) -> Self {
+        assert!(cap > 0, "ShardedLru capacity must be at least 1");
+        let n = shards.clamp(1, cap);
+        let (base, extra) = (cap / n, cap % n);
+        let shards = (0..n)
+            .map(|i| Mutex::new(Lru::new(base + usize::from(i < extra))))
+            .collect();
+        ShardedLru { shards }
+    }
+
+    fn shard(&self, k: u64) -> &Mutex<Lru<u64, V>> {
+        &self.shards[(k % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up `k` (cloning the value out) and mark it most recently
+    /// used within its shard.
+    pub fn get(&self, k: u64) -> Option<V> {
+        self.shard(k).lock().unwrap().get(&k).cloned()
+    }
+
+    /// Insert (or replace) `k`; at shard capacity the shard's
+    /// least-recently-used entry is evicted. Returns the evicted key,
+    /// if any, so callers can count evictions.
+    pub fn insert(&self, k: u64, v: V) -> Option<u64> {
+        self.shard(k).lock().unwrap().insert(k, v)
+    }
+
+    pub fn contains(&self, k: u64) -> bool {
+        self.shard(k).lock().unwrap().contains(&k)
+    }
+
+    /// Total live entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total configured capacity (sum of per-shard capacities — exactly
+    /// the `cap` passed to `new`).
+    pub fn cap(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().cap()).sum()
+    }
+
+    /// Number of lock shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +247,65 @@ mod tests {
     #[should_panic]
     fn zero_capacity_rejected() {
         let _ = Lru::<u32, u32>::new(0);
+    }
+
+    #[test]
+    fn sharded_capacity_distributes_exactly() {
+        // 10 slots over 4 shards: 3+3+2+2, cap() reports 10.
+        let c: ShardedLru<u32> = ShardedLru::new(10, 4);
+        assert_eq!(c.cap(), 10);
+        assert_eq!(c.n_shards(), 4);
+        // Shard count is clamped to the capacity.
+        let c: ShardedLru<u32> = ShardedLru::new(3, 8);
+        assert_eq!(c.n_shards(), 3);
+        assert_eq!(c.cap(), 3);
+        let c: ShardedLru<u32> = ShardedLru::new(5, 0);
+        assert_eq!(c.n_shards(), 1);
+        assert_eq!(c.cap(), 5);
+    }
+
+    #[test]
+    fn sharded_roundtrip_and_replace() {
+        let c: ShardedLru<u32> = ShardedLru::new(8, 4);
+        for k in 0..8u64 {
+            c.insert(k, k as u32 * 10);
+        }
+        for k in 0..8u64 {
+            assert_eq!(c.get(k), Some(k as u32 * 10));
+        }
+        c.insert(3, 99);
+        assert_eq!(c.get(3), Some(99));
+        assert_eq!(c.get(1000), None);
+    }
+
+    #[test]
+    fn sharded_len_never_exceeds_cap() {
+        let c: ShardedLru<u32> = ShardedLru::new(6, 3);
+        for k in 0..100u64 {
+            c.insert(k, k as u32);
+            assert!(c.len() <= c.cap());
+        }
+        // Each shard is full (keys were uniform mod 3), so the cache
+        // sits exactly at capacity.
+        assert_eq!(c.len(), 6);
+    }
+
+    #[test]
+    fn sharded_eviction_is_per_shard_lru() {
+        // 2 shards x 2 slots; keys 0,2,4 hit shard 0, keys 1,3 shard 1.
+        let c: ShardedLru<u32> = ShardedLru::new(4, 2);
+        c.insert(0, 0);
+        c.insert(2, 2);
+        c.insert(1, 1);
+        assert_eq!(c.get(0), Some(0)); // 2 is now shard 0's LRU entry
+        c.insert(4, 4);
+        assert!(c.contains(0) && c.contains(4) && !c.contains(2));
+        assert!(c.contains(1)); // the other shard is untouched
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_zero_capacity_rejected() {
+        let _ = ShardedLru::<u32>::new(0, 4);
     }
 }

@@ -620,3 +620,60 @@ fn prop_tracing_is_invisible() {
         );
     });
 }
+
+// ----------------------------------------------------------------- lru ---
+
+#[test]
+fn prop_sharded_lru_tracks_a_functional_model() {
+    // The sharded response cache against a flat reference model: every
+    // key ever inserted is either live (get returns its latest value)
+    // or was reported evicted exactly once; occupancy never exceeds the
+    // configured capacity, and an insert never evicts the key it just
+    // inserted.
+    use idatacool::util::lru::ShardedLru;
+    use std::collections::HashMap;
+
+    forall(40, |rng| {
+        let cap = 1 + rng.below(24);
+        let shards = 1 + rng.below(12);
+        let lru: ShardedLru<u64> = ShardedLru::new(cap, shards);
+        assert_eq!(lru.cap(), cap, "shard capacities must sum to cap");
+        assert_eq!(lru.n_shards(), shards.clamp(1, cap));
+        assert!(lru.is_empty());
+
+        let mut live: HashMap<u64, u64> = HashMap::new();
+        for step in 0..400u64 {
+            // Small key space so inserts, replacements, hits and misses
+            // all actually occur.
+            let k = rng.below(cap * 3) as u64;
+            if rng.uniform() < 0.3 {
+                match (lru.get(k), live.get(&k)) {
+                    (Some(got), Some(&want)) => assert_eq!(got, want),
+                    (None, None) => {}
+                    (got, want) => {
+                        panic!("get({k}) = {got:?}, model says {want:?}")
+                    }
+                }
+            } else {
+                let v = step;
+                let evicted = lru.insert(k, v);
+                live.insert(k, v);
+                if let Some(e) = evicted {
+                    assert_ne!(e, k, "insert must never evict its own key");
+                    assert!(
+                        live.remove(&e).is_some(),
+                        "evicted key {e} was not live"
+                    );
+                    assert!(!lru.contains(e));
+                }
+                assert_eq!(lru.get(k), Some(v), "inserted key must be live");
+            }
+            assert_eq!(lru.len(), live.len(), "cache and model disagree");
+            assert!(lru.len() <= cap, "occupancy above capacity");
+        }
+        // Everything the model believes live is actually retrievable.
+        for (&k, &v) in &live {
+            assert_eq!(lru.get(k), Some(v));
+        }
+    });
+}

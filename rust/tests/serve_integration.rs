@@ -6,14 +6,18 @@
 //! The acceptance gates live here:
 //!  * a repeated identical `POST /simulate` is served from the LRU with
 //!    `x-cache: hit` and a byte-identical body;
-//!  * the `POST /fleet` body is bitwise identical to the document a
+//!  * the `POST /v1/fleet` body is bitwise identical to the document a
 //!    one-shot CLI run (`idatacool fleet --json`) writes for the same
-//!    configuration — determinism survives the serving layer.
+//!    configuration — determinism survives the serving layer;
+//!  * concurrent heterogeneous requests admitted into one shared lane
+//!    arena (`x-batch`) answer bitwise identically to solo runs;
+//!  * every error body is the `idatacool-error/1` envelope, and legacy
+//!    unversioned paths answer with a `Deprecation` header.
 
 use idatacool::config::SimConfig;
 use idatacool::fleet::FleetDriver;
 use idatacool::server::{api, ServeOptions, Server, ServerHandle};
-use idatacool::util::http::{http_roundtrip, ClientResponse};
+use idatacool::util::http::{http_pipeline, http_roundtrip, ClientResponse};
 use idatacool::util::json::Json;
 
 /// A small, fast base config (native backend, 13 nodes, 60 s sim).
@@ -23,17 +27,37 @@ fn base() -> SimConfig {
     c
 }
 
-/// Boot a server with `workers` threads on an ephemeral port.
-fn boot(workers: usize) -> (ServerHandle, String) {
+/// Boot a server with `workers` threads on an ephemeral port, with an
+/// explicit continuous-batching admission window (0 = batching off).
+fn boot_with(workers: usize, batch_window_ms: usize)
+             -> (ServerHandle, String) {
     let mut opts = ServeOptions::new(base());
     opts.cfg.addr = "127.0.0.1:0".into();
     opts.cfg.workers = workers;
     opts.cfg.cache_cap = 16;
     opts.cfg.queue_cap = 32;
+    opts.cfg.batch_window_ms = batch_window_ms;
     let server = Server::bind(opts).expect("bind ephemeral port");
     let handle = server.spawn();
     let addr = handle.addr.to_string();
     (handle, addr)
+}
+
+/// Boot with the default admission window (2 ms — batching on, as in
+/// production).
+fn boot(workers: usize) -> (ServerHandle, String) {
+    boot_with(workers, 2)
+}
+
+/// Assert `r` carries the one-and-only error envelope with this code.
+fn assert_envelope(r: &ClientResponse, code: &str) {
+    let j = Json::parse(r.body_str().unwrap())
+        .unwrap_or_else(|e| panic!("error body must be JSON: {e} in {:?}",
+                                   r.body_str()));
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("idatacool-error/1"));
+    let e = j.get("error").unwrap();
+    assert_eq!(e.get("code").unwrap().as_str(), Some(code));
+    assert!(!e.get("message").unwrap().as_str().unwrap().is_empty());
 }
 
 fn get(addr: &str, target: &str) -> ClientResponse {
@@ -152,7 +176,7 @@ fn stream_returns_per_tick_ndjson() {
 fn fleet_response_matches_one_shot_cli_document() {
     let (h, addr) = boot(2);
     let body = r#"{"plants": 3, "scenario": "mixed", "seed": 11}"#;
-    let served = post(&addr, "/fleet", body);
+    let served = post(&addr, "/v1/fleet", body);
     assert_eq!(served.status, 200, "{:?}", served.body_str());
     assert_eq!(served.header("x-cache"), Some("miss"));
 
@@ -181,7 +205,8 @@ fn fleet_response_matches_one_shot_cli_document() {
         .unwrap();
     assert_eq!(credits.len(), 3);
 
-    // Repeat: served from cache, still bitwise.
+    // Repeat: served from cache, still bitwise — and the legacy
+    // unversioned path shares the cache key.
     let again = post(&addr, "/fleet", body);
     assert_eq!(again.header("x-cache"), Some("hit"));
     assert_eq!(again.body, served.body);
@@ -233,35 +258,188 @@ fn concurrent_identical_requests_coalesce_to_one_run() {
 }
 
 #[test]
-fn error_paths_return_proper_statuses() {
+fn error_paths_return_the_envelope_on_every_4xx() {
     let (h, addr) = boot(1);
     // malformed JSON
-    let r = post(&addr, "/simulate", "{not json");
+    let r = post(&addr, "/v1/simulate", "{not json");
     assert_eq!(r.status, 400);
-    // unknown field (strict parsing)
-    let r = post(&addr, "/simulate", r#"{"duration": 60}"#);
+    assert_envelope(&r, "bad_request");
+    // unknown field (strict parsing) — the envelope names the field
+    let r = post(&addr, "/v1/simulate", r#"{"duration": 60}"#);
     assert_eq!(r.status, 400);
+    assert_envelope(&r, "bad_request");
     let j = Json::parse(r.body_str().unwrap()).unwrap();
-    assert!(j.get("error").unwrap().as_str().unwrap().contains("duration"));
+    let e = j.get("error").unwrap();
+    assert!(e.get("message").unwrap().as_str().unwrap().contains("duration"));
+    assert_eq!(e.get("field").unwrap().as_str(), Some("duration"));
     // invalid config value
-    let r = post(&addr, "/simulate", r#"{"setpoint": 150}"#);
+    let r = post(&addr, "/v1/simulate", r#"{"setpoint": 150}"#);
     assert_eq!(r.status, 400);
-    // unknown route
+    assert_envelope(&r, "bad_request");
+    // unknown route — versioned or not
     let r = get(&addr, "/nope");
     assert_eq!(r.status, 404);
+    assert_envelope(&r, "not_found");
+    let r = get(&addr, "/v1/nope");
+    assert_eq!(r.status, 404);
+    assert_envelope(&r, "not_found");
     // wrong method
-    let r = get(&addr, "/simulate");
+    let r = get(&addr, "/v1/simulate");
     assert_eq!(r.status, 405);
+    assert_envelope(&r, "method_not_allowed");
     // query typos are 400s, not silently honored defaults
-    let r = post(&addr, "/simulate?steam=1", "{}");
+    let r = post(&addr, "/v1/simulate?steam=1", "{}");
     assert_eq!(r.status, 400);
-    let r = post(&addr, "/simulate?stream=yes", "{}");
+    assert_envelope(&r, "bad_request");
+    let r = post(&addr, "/v1/simulate?stream=yes", "{}");
     assert_eq!(r.status, 400);
-    let r = post(&addr, "/fleet?stream=1", "{}");
+    assert_envelope(&r, "bad_request");
+    let r = post(&addr, "/v1/fleet?stream=1", "{}");
     assert_eq!(r.status, 400, "/fleet does not stream");
+    assert_envelope(&r, "bad_request");
     // errors are never cached: a valid repeat of a failed key still runs
-    let r = post(&addr, "/fleet", r#"{"plants": 0}"#);
+    let r = post(&addr, "/v1/fleet", r#"{"plants": 0}"#);
     assert_eq!(r.status, 400);
+    assert_envelope(&r, "bad_request");
+    h.stop().unwrap();
+}
+
+#[test]
+fn batched_concurrent_requests_match_solo_bitwise() {
+    // The tentpole acceptance gate: heterogeneous concurrent requests
+    // admitted into ONE shared lane arena answer bitwise identically to
+    // solo (batching-off) runs of the same requests.
+    let (hb, batched) = boot_with(4, 250); // long window: co-admission
+    let (hs, solo) = boot_with(1, 0); // batching off: reference bodies
+    let bodies: Vec<String> = (0..4)
+        .map(|i| {
+            format!(
+                r#"{{"duration_s": 60, "seed": {}, "setpoint": {}}}"#,
+                40 + i,
+                55 + 2 * i
+            )
+        })
+        .collect();
+
+    let mut joins = Vec::new();
+    for body in bodies.clone() {
+        let addr = batched.clone();
+        joins.push(std::thread::spawn(move || {
+            post(&addr, "/v1/simulate", &body)
+        }));
+    }
+    let responses: Vec<ClientResponse> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    let mut max_occupancy = 0usize;
+    for (r, body) in responses.iter().zip(&bodies) {
+        assert_eq!(r.status, 200, "{:?}", r.body_str());
+        // Every computed response reports the arena occupancy it ran in.
+        let occ: usize = r
+            .header("x-batch")
+            .expect("batched compute must carry x-batch")
+            .parse()
+            .unwrap();
+        assert!(occ >= 1);
+        max_occupancy = max_occupancy.max(occ);
+
+        let reference = post(&solo, "/v1/simulate", body);
+        assert_eq!(reference.status, 200);
+        assert_eq!(
+            reference.header("x-batch"),
+            None,
+            "batching off must not report occupancy"
+        );
+        assert_eq!(
+            r.body, reference.body,
+            "batched body must be bitwise identical to the solo run"
+        );
+    }
+    // With a 250 ms admission window and four concurrent submitters, at
+    // least one sweep packed multiple plants.
+    assert!(max_occupancy >= 2, "max occupancy {max_occupancy}");
+
+    // Occupancy histograms surfaced through /metrics.
+    let m =
+        Json::parse(get(&batched, "/v1/metrics").body_str().unwrap()).unwrap();
+    let batch = m.get("batch").unwrap();
+    assert!(batch.get("sweeps").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(batch.get("occupancy_p99").unwrap().as_f64().unwrap() >= 1.0);
+    hb.stop().unwrap();
+    hs.stop().unwrap();
+}
+
+#[test]
+fn batched_fleet_matches_cli_document() {
+    // A /v1/fleet request through the batched path stays byte-equal to
+    // the one-shot CLI serializer.
+    let (h, addr) = boot_with(2, 50);
+    let body = r#"{"plants": 2, "scenario": "baseline", "seed": 21}"#;
+    let served = post(&addr, "/v1/fleet", body);
+    assert_eq!(served.status, 200, "{:?}", served.body_str());
+
+    let fc = api::parse_fleet_request(body, &base()).unwrap();
+    let driver = FleetDriver::new(fc).unwrap();
+    let run = driver.run().unwrap();
+    assert_eq!(served.body_str().unwrap(), run.to_json(&driver.cfg));
+    h.stop().unwrap();
+}
+
+#[test]
+fn keep_alive_pipelines_requests_on_one_connection() {
+    let (h, addr) = boot(2);
+    let sim: &[u8] = br#"{"duration_s": 60, "seed": 19}"#;
+    let responses = http_pipeline(
+        &addr,
+        &[
+            ("GET", "/v1/healthz", None),
+            ("POST", "/v1/simulate", Some(sim)),
+            ("POST", "/v1/simulate", Some(sim)),
+            ("GET", "/v1/healthz", None),
+        ],
+    )
+    .expect("pipelined exchange");
+    assert_eq!(responses.len(), 4);
+    for r in &responses {
+        assert_eq!(r.status, 200, "{:?}", r.body_str());
+    }
+    // Kept-alive responses advertise it; the last (connection: close)
+    // response does not.
+    assert_eq!(responses[0].header("connection"), Some("keep-alive"));
+    assert_eq!(responses[3].header("connection"), Some("close"));
+    // The repeat on the same connection is the usual bitwise cache hit.
+    assert_eq!(responses[2].header("x-cache"), Some("hit"));
+    assert_eq!(responses[2].body, responses[1].body);
+    assert_eq!(responses[0].body, responses[3].body);
+    h.stop().unwrap();
+}
+
+#[test]
+fn legacy_paths_answer_with_deprecation_header() {
+    let (h, addr) = boot(1);
+    // v1 is the contract: no deprecation marker.
+    let r = get(&addr, "/v1/healthz");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("deprecation"), None);
+    // The unprefixed alias still answers — flagged as deprecated.
+    let r = get(&addr, "/healthz");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.header("deprecation"), Some("true"));
+
+    // Same request through both routes: one compute, byte-equal bodies.
+    let body = r#"{"duration_s": 60, "seed": 33}"#;
+    let v1 = post(&addr, "/v1/simulate", body);
+    assert_eq!(v1.status, 200);
+    assert_eq!(v1.header("deprecation"), None);
+    let legacy = post(&addr, "/simulate", body);
+    assert_eq!(legacy.status, 200);
+    assert_eq!(legacy.header("deprecation"), Some("true"));
+    assert_eq!(legacy.header("x-cache"), Some("hit"));
+    assert_eq!(legacy.body, v1.body);
+    // Unknown legacy paths are plain 404s, not deprecation candidates.
+    let r = get(&addr, "/bogus");
+    assert_eq!(r.status, 404);
+    assert_eq!(r.header("deprecation"), None);
     h.stop().unwrap();
 }
 
