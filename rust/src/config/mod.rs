@@ -265,6 +265,13 @@ pub struct ServeConfig {
     /// Most plants one batched lane arena packs (`serve.batch_max_plants`);
     /// a round with more pending plants sweeps as several chunks.
     pub batch_max_plants: usize,
+    /// Per-request compute budget in milliseconds (`serve.deadline_ms`).
+    /// A request that cannot be answered inside the budget gets a 504
+    /// `idatacool-error/1` envelope with `Retry-After` instead of
+    /// holding the connection. `0` disables the deadline (requests wait
+    /// as long as the compute takes) — zero is the off switch, not a
+    /// degenerate value, same convention as `batch_window_ms`.
+    pub deadline_ms: usize,
 }
 
 impl Default for ServeConfig {
@@ -279,6 +286,7 @@ impl Default for ServeConfig {
             queue_cap: 4 * workers,
             batch_window_ms: 2,
             batch_max_plants: 16,
+            deadline_ms: 0,
         }
     }
 }
@@ -300,7 +308,62 @@ impl ServeConfig {
             "serve.batch_max_plants",
             self.batch_max_plants,
         )?;
+        self.deadline_ms =
+            toml_count0(doc, "serve.deadline_ms", self.deadline_ms)?;
         Ok(self)
+    }
+}
+
+/// `[chaos]` fault-injection settings — the TOML face of
+/// `resilience::inject`. Off unless a plan is present; precedence in
+/// the CLI is TOML < `IDATACOOL_CHAOS` env < `--chaos` flag. Execution
+/// shape in the ugliest sense (injected faults), so, like `[serve]`,
+/// never part of result documents or cache keys — but a run that
+/// quarantines plants marks its output via the aggregate's
+/// `quarantined` section.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosSettings {
+    /// Deterministic tick-derivation seed (`chaos.seed`); rules without
+    /// an explicit `tick=` fire at a tick derived from this seed — same
+    /// seed, same fire ticks, every run.
+    pub seed: Option<u64>,
+    /// Fault plan (`chaos.plan`), `resilience::inject` grammar:
+    /// semicolon-separated `site=…,kind=…[,plant=N][,tick=N][,arg=N]`.
+    pub plan: Option<String>,
+}
+
+impl ChaosSettings {
+    /// Parse the `[chaos]` section. A seed without a plan is an error —
+    /// it would silently arm nothing.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let seed = match doc.get("chaos.seed") {
+            None => None,
+            Some(v) => {
+                let x = v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("chaos.seed must be an integer")
+                })?;
+                anyhow::ensure!(
+                    x >= 0.0 && x.fract() == 0.0,
+                    "chaos.seed must be a non-negative integer, got {x}"
+                );
+                Some(x as u64)
+            }
+        };
+        let plan = match doc.get("chaos.plan") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("chaos.plan must be a string")
+                    })?
+                    .to_string(),
+            ),
+        };
+        anyhow::ensure!(
+            seed.is_none() || plan.is_some(),
+            "chaos.seed without chaos.plan arms nothing; add a plan"
+        );
+        Ok(ChaosSettings { seed, plan })
     }
 }
 
@@ -461,6 +524,39 @@ mod tests {
         assert!(sc.workers >= 1 && sc.cache_cap >= 1);
         assert_eq!(sc.batch_window_ms, 2);
         assert_eq!(sc.batch_max_plants, 16);
+        assert_eq!(sc.deadline_ms, 0);
+        // deadline: zero = off, positive = budget, garbage rejected
+        let doc = TomlDoc::parse("[serve]\ndeadline_ms = 250\n").unwrap();
+        let sc = ServeConfig::default().apply_toml(&doc).unwrap();
+        assert_eq!(sc.deadline_ms, 250);
+        let doc = TomlDoc::parse("[serve]\ndeadline_ms = -5\n").unwrap();
+        assert!(ServeConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn chaos_section_parses_and_is_strict() {
+        let doc = TomlDoc::parse(
+            "[chaos]\nseed = 7\nplan = \"site=plant_tick,kind=panic\"\n",
+        )
+        .unwrap();
+        let cs = ChaosSettings::from_toml(&doc).unwrap();
+        assert_eq!(cs.seed, Some(7));
+        assert_eq!(cs.plan.as_deref(), Some("site=plant_tick,kind=panic"));
+        // absent section: chaos stays off
+        let cs = ChaosSettings::from_toml(&TomlDoc::parse("").unwrap())
+            .unwrap();
+        assert_eq!(cs, ChaosSettings::default());
+        // seed without a plan arms nothing — rejected
+        let doc = TomlDoc::parse("[chaos]\nseed = 7\n").unwrap();
+        assert!(ChaosSettings::from_toml(&doc).is_err());
+        // malformed values rejected
+        for bad in ["seed = -1", "seed = 1.5", "plan = 3"] {
+            let doc = TomlDoc::parse(&format!("[chaos]\n{bad}\n")).unwrap();
+            assert!(
+                ChaosSettings::from_toml(&doc).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 
     #[test]

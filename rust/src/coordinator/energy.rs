@@ -45,6 +45,38 @@ impl EnergyAccount {
         self.ticks += 1;
     }
 
+    /// Checkpoint encoding (field order is the `idatacool-ckpt/1`
+    /// contract; see DESIGN.md §8).
+    pub fn save(&self, w: &mut crate::resilience::checkpoint::SnapWriter) {
+        w.f64(self.e_ac);
+        w.f64(self.e_dc);
+        w.f64(self.e_water);
+        w.f64(self.e_drive);
+        w.f64(self.e_chilled);
+        w.f64(self.e_add);
+        w.f64(self.e_loss_plumbing);
+        w.f64(self.e_central);
+        w.f64(self.seconds);
+        w.u64(self.ticks);
+    }
+
+    /// Decode an account written by [`EnergyAccount::save`].
+    pub fn load(r: &mut crate::resilience::checkpoint::SnapReader)
+                -> anyhow::Result<EnergyAccount> {
+        Ok(EnergyAccount {
+            e_ac: r.f64()?,
+            e_dc: r.f64()?,
+            e_water: r.f64()?,
+            e_drive: r.f64()?,
+            e_chilled: r.f64()?,
+            e_add: r.f64()?,
+            e_loss_plumbing: r.f64()?,
+            e_central: r.f64()?,
+            seconds: r.f64()?,
+            ticks: r.u64()?,
+        })
+    }
+
     /// Heat-in-water fraction (Fig. 7a).
     pub fn heat_in_water_fraction(&self) -> f64 {
         safe_div(self.e_water, self.e_ac)

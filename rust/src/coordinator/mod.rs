@@ -55,6 +55,54 @@ pub struct TraceSample {
     pub utilization: f64,
 }
 
+impl TraceSample {
+    /// Checkpoint encoding (field order is the `idatacool-ckpt/1`
+    /// contract; see DESIGN.md §8).
+    pub fn save(&self, w: &mut crate::resilience::checkpoint::SnapWriter) {
+        w.f64(self.t_s);
+        w.f64(self.t_rack_in);
+        w.f64(self.t_rack_out);
+        w.f64(self.t_tank);
+        w.f64(self.t_primary);
+        w.f64(self.p_ac);
+        w.f64(self.p_dc);
+        w.f64(self.p_r);
+        w.f64(self.p_d);
+        w.f64(self.p_c);
+        w.f64(self.p_add);
+        w.f64(self.valve);
+        w.bool(self.chiller_on);
+        w.bool(self.pump_fail);
+        w.f64(self.core_max);
+        w.u32(self.throttling);
+        w.f64(self.utilization);
+    }
+
+    /// Decode a sample written by [`TraceSample::save`].
+    pub fn load(r: &mut crate::resilience::checkpoint::SnapReader)
+                -> Result<TraceSample> {
+        Ok(TraceSample {
+            t_s: r.f64()?,
+            t_rack_in: r.f64()?,
+            t_rack_out: r.f64()?,
+            t_tank: r.f64()?,
+            t_primary: r.f64()?,
+            p_ac: r.f64()?,
+            p_dc: r.f64()?,
+            p_r: r.f64()?,
+            p_d: r.f64()?,
+            p_c: r.f64()?,
+            p_add: r.f64()?,
+            valve: r.f64()?,
+            chiller_on: r.bool()?,
+            pump_fail: r.bool()?,
+            core_max: r.f64()?,
+            throttling: r.u32()?,
+            utilization: r.f64()?,
+        })
+    }
+}
+
 /// Result of a full simulation run.
 pub struct RunResult {
     pub trace: Vec<TraceSample>,
@@ -89,6 +137,9 @@ pub struct SimulationDriver {
     pub pid: Pid,
     pub supervisor: Supervisor,
     pub plan: UtilPlan,
+    /// Fleet plant index for chaos-injection targeting (`None` outside
+    /// a fleet run); see `resilience::inject`.
+    pub chaos_plant: Option<usize>,
     controls: Vec<f32>,
     now_s: f64,
 }
@@ -170,6 +221,7 @@ impl SimulationDriver {
             workload,
             backend,
             lottery,
+            chaos_plant: None,
             controls,
             cfg,
             now_s: 0.0,
@@ -250,6 +302,19 @@ impl SimulationDriver {
             plant_wall: &mut f64) -> Result<TraceSample> {
         let _tick_span = crate::obs::span("tick");
         self.control_phase(tick_s, out);
+        // Chaos site `plant_tick` (sequential path; the lockstep engine
+        // fires it per plant in its control phase). One relaxed load
+        // when unarmed.
+        if crate::resilience::inject::armed() {
+            use crate::resilience::inject::{fire, Action, Site};
+            if let Some(Action::PoisonNan) =
+                fire(Site::PlantTick, self.chaos_plant)
+            {
+                if let Some(np) = self.backend.native_mut() {
+                    np.poison_state();
+                }
+            }
+        }
         let t0 = std::time::Instant::now();
         self.backend.tick(&self.controls, &self.plan.util, out)?;
         *plant_wall += t0.elapsed().as_secs_f64();
@@ -399,6 +464,73 @@ impl SimulationDriver {
         let mut out = TickOutput::new(self.backend.n_padded());
         let sample = self.tick_into(&mut out)?;
         Ok((out, sample))
+    }
+
+    /// Serialize the coordinator's cross-tick state for a checkpoint:
+    /// clock, control vector, PID, supervisor state machine + event
+    /// log, telemetry RNG stream, and the workload source. Plant state
+    /// (node lanes, circuit) is serialized separately by the fleet
+    /// engine, which owns the arena.
+    pub fn save_state(&self,
+                      w: &mut crate::resilience::checkpoint::SnapWriter) {
+        w.f64(self.now_s);
+        w.f32s(&self.controls);
+        let (integral, last_error) = self.pid.state();
+        w.f64(integral);
+        w.opt_f64(last_error);
+        w.u8(match self.supervisor.state {
+            supervisor::SupervisorState::Normal => 0,
+            supervisor::SupervisorState::OverTemp => 1,
+            supervisor::SupervisorState::ChillerDown => 2,
+            supervisor::SupervisorState::PumpDown => 3,
+        });
+        w.u64(self.supervisor.events.len() as u64);
+        for e in &self.supervisor.events {
+            w.f64(e.t_s);
+            w.str(&e.msg);
+        }
+        let (rng_state, cached) = self.telemetry.rng_state();
+        w.u64(rng_state);
+        w.opt_f64(cached);
+        self.workload.save_state(w);
+    }
+
+    /// Restore state written by [`SimulationDriver::save_state`] onto a
+    /// driver freshly built from the same config (the resume path).
+    pub fn restore_state(&mut self,
+                         r: &mut crate::resilience::checkpoint::SnapReader)
+                         -> Result<()> {
+        self.now_s = r.f64()?;
+        let controls = r.f32s()?;
+        if controls.len() != self.controls.len() {
+            anyhow::bail!("checkpointed control vector has {} entries, \
+                           expected {}", controls.len(),
+                          self.controls.len());
+        }
+        self.controls = controls;
+        let integral = r.f64()?;
+        let last_error = r.opt_f64()?;
+        self.pid.restore(integral, last_error);
+        self.supervisor.state = match r.u8()? {
+            0 => supervisor::SupervisorState::Normal,
+            1 => supervisor::SupervisorState::OverTemp,
+            2 => supervisor::SupervisorState::ChillerDown,
+            3 => supervisor::SupervisorState::PumpDown,
+            t => anyhow::bail!("unknown supervisor state tag {t}"),
+        };
+        self.supervisor.events.clear();
+        for _ in 0..r.usize()? {
+            let t_s = r.f64()?;
+            let msg = r.str()?;
+            self.supervisor
+                .events
+                .push(supervisor::SupervisorEvent { t_s, msg });
+        }
+        let rng_state = r.u64()?;
+        let cached = r.opt_f64()?;
+        self.telemetry.restore_rng(rng_state, cached);
+        self.workload.load_state(r)?;
+        Ok(())
     }
 }
 

@@ -64,6 +64,18 @@ impl Pid {
     pub fn integral(&self) -> f64 {
         self.integral
     }
+
+    /// Full controller state (integral + previous error) for
+    /// checkpointing; gains are configuration, not state.
+    pub fn state(&self) -> (f64, Option<f64>) {
+        (self.integral, self.last_error)
+    }
+
+    /// Restore a state captured by [`Pid::state`].
+    pub fn restore(&mut self, integral: f64, last_error: Option<f64>) {
+        self.integral = integral;
+        self.last_error = last_error;
+    }
 }
 
 #[cfg(test)]

@@ -60,6 +60,16 @@ impl Telemetry {
         Telemetry { spec, rng: Rng::new(seed ^ 0x7E1E_4E7E) }
     }
 
+    /// Sampler RNG state for checkpointing (see `resilience`).
+    pub fn rng_state(&self) -> (u64, Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore a state captured by [`Telemetry::rng_state`].
+    pub fn restore_rng(&mut self, state: u64, cached_normal: Option<f64>) {
+        self.rng.restore(state, cached_normal);
+    }
+
     /// Core temperature as reported by the chip-internal sensor via BMC:
     /// Gaussian noise + integer quantization.
     pub fn core_temp(&mut self, true_t: f64) -> f64 {

@@ -19,7 +19,7 @@ use crate::stats::Running;
 use crate::util::json::{Json, JsonBuilder};
 
 use super::facility::FacilityReport;
-use super::PlantRun;
+use super::{PlantRun, QuarantineEntry};
 
 /// Per-plant derived metrics.
 #[derive(Debug, Clone)]
@@ -63,6 +63,12 @@ pub struct FleetAggregate {
     pub fleet_pump_fail_ticks: u64,
     pub fleet_e_ac: f64,
     pub fleet_e_dc: f64,
+    /// Plants evicted by fault containment, in index order. A non-empty
+    /// list marks the document as a degraded run: the per-plant metrics
+    /// above cover the survivors only, and the entries are mixed into
+    /// the fingerprint so a degraded fingerprint can never collide with
+    /// the clean run's.
+    pub quarantined: Vec<QuarantineEntry>,
 }
 
 fn safe_div(a: f64, b: f64) -> f64 {
@@ -75,8 +81,12 @@ fn safe_div(a: f64, b: f64) -> f64 {
 
 impl FleetAggregate {
     /// Reduce finished plant runs + the facility report (plants must be in
-    /// index order; the fleet driver guarantees it).
-    pub fn build(plants: &[PlantRun], facility: &FacilityReport) -> Self {
+    /// index order; the fleet driver guarantees it). `quarantined` is
+    /// re-sorted by plant index so the document is independent of
+    /// eviction order (which shard finished first is execution shape).
+    pub fn build(plants: &[PlantRun], facility: &FacilityReport,
+                 mut quarantined: Vec<QuarantineEntry>) -> Self {
+        quarantined.sort_by_key(|q| q.index);
         let mut per_plant = Vec::with_capacity(plants.len());
         let mut pue_stats = Running::new();
         let mut ere_stats = Running::new();
@@ -162,6 +172,7 @@ impl FleetAggregate {
             worst_throttle_ticks: worst.map(|(_, w)| w).unwrap_or(0),
             fleet_e_ac,
             fleet_e_dc,
+            quarantined,
         }
     }
 
@@ -282,16 +293,35 @@ impl FleetAggregate {
             )
             .num("fleet_e_ac_j", self.fleet_e_ac)
             .num("fleet_e_dc_j", self.fleet_e_dc)
+            .set(
+                "quarantined",
+                Json::Arr(
+                    self.quarantined
+                        .iter()
+                        .map(|q| {
+                            JsonBuilder::new()
+                                .num("index", q.index as f64)
+                                .str("reason", &q.reason)
+                                .build()
+                        })
+                        .collect(),
+                ),
+            )
             .build()
     }
 
     /// One-paragraph headline for the CLI.
     pub fn summary(&self) -> String {
+        let degraded = if self.quarantined.is_empty() {
+            String::new()
+        } else {
+            format!("; {} plant(s) QUARANTINED", self.quarantined.len())
+        };
         format!(
             "fleet aggregate: {} plants; PUE {:.4} +- {:.4} \
              [{:.4}..{:.4}]; ERE {:.4} +- {:.4}; worst throttling {} ticks \
              (plant {}); fleet E_AC {:.1} kWh; facility energy-reuse \
-             fraction {:.1}%",
+             fraction {:.1}%{degraded}",
             self.per_plant.len(),
             self.pue_stats.mean(),
             self.pue_stats.std(),
@@ -329,6 +359,15 @@ impl FleetAggregate {
         h = mix(h, self.facility_reuse_fraction);
         h = mix(h, self.fleet_e_ac);
         h = mix(h, self.fleet_e_dc);
+        // Quarantine is part of the result identity: a degraded run must
+        // never fingerprint-collide with the clean run, and two degraded
+        // runs differing in *why* a plant left must differ too.
+        for q in &self.quarantined {
+            h = mix(h, q.index as f64);
+            for &b in q.reason.as_bytes() {
+                h = mix(h, b as f64);
+            }
+        }
         h
     }
 }

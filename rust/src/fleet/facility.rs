@@ -26,6 +26,8 @@
 //! inputs in identical order, so both feeds produce bitwise-identical
 //! reports.
 
+use anyhow::{bail, Result};
+
 use crate::config::constants::PlantParams;
 use crate::util::json::{Json, JsonBuilder};
 
@@ -251,6 +253,46 @@ impl FacilityModel {
         FacilityTick { pooled_w: pooled, t_drive, cop, p_chilled_w: p_chilled, credits_w }
     }
 
+    /// Checkpoint encoding of the streamed integrals (field order is
+    /// the `idatacool-ckpt/1` contract; DESIGN.md §8). `params` is
+    /// configuration — the resume path reconstructs it and overlays
+    /// this state. The `f64::MIN` peak sentinel round-trips bit-exactly
+    /// (`to_bits` codec).
+    pub fn save_state(&self,
+                      w: &mut crate::resilience::checkpoint::SnapWriter) {
+        w.f64(self.e_pooled);
+        w.f64(self.e_driven);
+        w.f64(self.e_chilled);
+        w.f64(self.e_ac);
+        w.f64(self.seconds);
+        w.u64(self.ticks);
+        w.f64(self.peak_pooled_w);
+        w.f64(self.t_drive_sum);
+        w.f64s(&self.plant_credit_j);
+    }
+
+    /// Restore state written by [`FacilityModel::save_state`] onto a
+    /// model freshly built for the same fleet shape.
+    pub fn restore_state(&mut self,
+                         r: &mut crate::resilience::checkpoint::SnapReader)
+                         -> Result<()> {
+        self.e_pooled = r.f64()?;
+        self.e_driven = r.f64()?;
+        self.e_chilled = r.f64()?;
+        self.e_ac = r.f64()?;
+        self.seconds = r.f64()?;
+        self.ticks = r.u64()?;
+        self.peak_pooled_w = r.f64()?;
+        self.t_drive_sum = r.f64()?;
+        let credits = r.f64s()?;
+        if credits.len() != self.plant_credit_j.len() {
+            bail!("checkpointed facility has {} plant credits, fleet has {}",
+                  credits.len(), self.plant_credit_j.len());
+        }
+        self.plant_credit_j = credits;
+        Ok(())
+    }
+
     pub fn into_report(self) -> FacilityReport {
         FacilityReport {
             e_pooled: self.e_pooled,
@@ -356,6 +398,45 @@ mod tests {
         let text = j.to_string();
         assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);
         assert!(text.starts_with("{\"e_ac_j\":"), "{text}");
+    }
+
+    #[test]
+    fn facility_state_round_trips_bit_exact() {
+        use crate::resilience::checkpoint::{SnapReader, SnapWriter};
+        let mut a = FacilityModel::new(params(2), 2);
+        for _ in 0..7 {
+            a.pool_tick(&[tick(12_000.0, 66.0), tick(8_000.0, 64.0)], 5.0);
+        }
+        let mut w = SnapWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = FacilityModel::new(params(2), 2);
+        let mut r = SnapReader::new(&bytes).unwrap();
+        b.restore_state(&mut r).unwrap();
+        assert!(r.done());
+        // wrong fleet shape is rejected
+        let mut c = FacilityModel::new(params(3), 3);
+        let mut r = SnapReader::new(&bytes).unwrap();
+        assert!(c.restore_state(&mut r).is_err());
+        // continue both in lockstep; the reports must match bitwise
+        for m in [&mut a, &mut b] {
+            m.pool_tick(&[tick(9_000.0, 67.0), tick(7_000.0, 65.0)], 5.0);
+        }
+        let (ra, rb) = (a.into_report(), b.into_report());
+        assert_eq!(ra.e_chilled.to_bits(), rb.e_chilled.to_bits());
+        assert_eq!(ra.t_drive_mean.to_bits(), rb.t_drive_mean.to_bits());
+        assert_eq!(ra.peak_pooled_w.to_bits(), rb.peak_pooled_w.to_bits());
+        for (x, y) in ra.plant_credit_j.iter().zip(&rb.plant_credit_j) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // a never-ticked model round-trips its f64::MIN peak sentinel
+        let empty = FacilityModel::new(params(1), 1);
+        let mut w = SnapWriter::new();
+        empty.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut back = FacilityModel::new(params(1), 1);
+        back.restore_state(&mut SnapReader::new(&bytes).unwrap()).unwrap();
+        assert_eq!(back.peak_pooled_w.to_bits(), f64::MIN.to_bits());
     }
 
     #[test]

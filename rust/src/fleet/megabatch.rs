@@ -21,9 +21,10 @@
 //! byte-identical `idatacool-fleet/1` output to the 1-shard, megabatch-
 //! off reference (`tests/fleet_integration.rs` gates it).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::constants::PlantParams;
 use crate::coordinator::energy::EnergyAccount;
@@ -32,10 +33,12 @@ use crate::plant::circuits;
 use crate::plant::layout::*;
 use crate::plant::soa::{self, SoaState};
 use crate::plant::{PlantKernel, TickOutput};
+use crate::resilience::checkpoint::{SnapReader, SnapWriter};
+use crate::resilience::inject::{self, Action, Site};
 
 use super::facility::{FacilityModel, FacilityReport};
 use super::scenario::PlantSpec;
-use super::{plant_tick_of, PlantRun};
+use super::{note_quarantine, plant_tick_of, PlantRun, QuarantineEntry};
 
 /// One plant's identity plus its ready-to-run driver (the unit the
 /// lockstep engine and the sequential fallback share).
@@ -76,7 +79,9 @@ pub fn build_ctxs(bucket: Vec<PlantSpec>) -> Result<Vec<PlantCtx>> {
     let mut ctxs = Vec::with_capacity(bucket.len());
     for spec in bucket {
         let PlantSpec { index, label, seed, cfg, faults } = spec;
-        let driver = SimulationDriver::from_prebuilt(cfg, seed, faults)?;
+        let mut driver = SimulationDriver::from_prebuilt(cfg, seed, faults)?;
+        // Chaos rules with a plant= filter target the fleet index.
+        driver.chaos_plant = Some(index);
         let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
         ctxs.push(PlantCtx { index, label, seed, tick_s, driver });
     }
@@ -85,15 +90,39 @@ pub fn build_ctxs(bucket: Vec<PlantSpec>) -> Result<Vec<PlantCtx>> {
 
 /// Run a bucket the per-plant way (each plant's driver owns its full
 /// tick loop) — the megabatch-off path and the lockstep fallback.
-pub fn run_ctxs_sequential(ctxs: Vec<PlantCtx>) -> Result<Vec<PlantRun>> {
+///
+/// Each plant is its own fault domain: a panic, a run error, or a
+/// non-finite energy integral evicts that plant into the quarantine
+/// list; the rest of the bucket completes untouched.
+pub fn run_ctxs_sequential(ctxs: Vec<PlantCtx>)
+                           -> Result<(Vec<PlantRun>, Vec<QuarantineEntry>)> {
     let mut out = Vec::with_capacity(ctxs.len());
+    let mut quarantined = Vec::new();
     for ctx in ctxs {
         let PlantCtx { index, label, seed, tick_s, mut driver } = ctx;
         // sample_every = 1: the facility pass needs every tick.
-        let result = driver.run(1)?;
-        out.push(PlantRun { index, label, seed, tick_s, result });
+        match catch_unwind(AssertUnwindSafe(|| driver.run(1))) {
+            Ok(Ok(result)) => {
+                if result.energy.e_ac.is_finite()
+                    && result.energy.e_dc.is_finite()
+                {
+                    out.push(PlantRun { index, label, seed, tick_s, result });
+                } else {
+                    note_quarantine(&mut quarantined, index,
+                                    "non-finite energy integral");
+                }
+            }
+            Ok(Err(e)) => {
+                note_quarantine(&mut quarantined, index,
+                                &format!("run error: {e:#}"));
+            }
+            Err(_) => {
+                note_quarantine(&mut quarantined, index,
+                                "panic in plant run");
+            }
+        }
     }
-    Ok(out)
+    Ok((out, quarantined))
 }
 
 /// The lockstep engine: a shard's plants resident in one lane arena.
@@ -113,6 +142,13 @@ pub struct LockstepFleet {
     tick_s: f64,
     ticks_total: u64,
     ticks_done: u64,
+    /// Per-plant liveness: `false` after quarantine. Dead plants take no
+    /// further part in any phase; their lanes stay in the arena, where
+    /// elementwise ops and per-range reductions confine them
+    /// (`plant::soa::tests::poison_is_confined_to_its_range`).
+    alive: Vec<bool>,
+    /// Plants evicted so far, in eviction order.
+    quarantined: Vec<QuarantineEntry>,
     /// Wall-clock spent in the arena physics (substeps + epilogue),
     /// the lockstep analogue of `RunResult::plant_wall_s`.
     plant_wall_s: f64,
@@ -210,6 +246,8 @@ impl LockstepFleet {
             tick_s,
             ticks_total,
             ticks_done: 0,
+            alive: vec![true; n],
+            quarantined: Vec::new(),
             plant_wall_s: 0.0,
             sweep_label: std::sync::Arc::from("megabatch_sweep/shard=0"),
             ctxs,
@@ -250,10 +288,45 @@ impl LockstepFleet {
         let tick_s = self.tick_s;
         // Phase 1 (per plant, plant order): workload + control — the
         // coordinator-side work SimulationDriver::step also excludes
-        // from its plant_wall_s.
-        for (p, ctx) in self.ctxs.iter_mut().enumerate() {
-            ctx.driver.control_phase(tick_s, &self.outs[p]);
-            self.ctrl[p].copy_from_slice(ctx.driver.controls());
+        // from its plant_wall_s. Each plant's control phase is its own
+        // fault domain: a panic (organic or chaos-injected) evicts that
+        // plant only. The chaos `plant_tick` site fires here, mirroring
+        // the sequential path's hook in SimulationDriver::step.
+        for p in 0..self.ctxs.len() {
+            if !self.alive[p] {
+                continue;
+            }
+            let r = self.ranges[p];
+            let (ctxs, outs, soa) =
+                (&mut self.ctxs, &self.outs, &mut self.soa);
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                if inject::armed() {
+                    let ctx = &mut ctxs[p];
+                    if let Some(Action::PoisonNan) =
+                        inject::fire(Site::PlantTick, ctx.driver.chaos_plant)
+                    {
+                        soa.poison_state_range(r);
+                        ctx.driver
+                            .backend
+                            .native_mut()
+                            .expect("lockstep plant")
+                            .circuit_state
+                            .fill(f32::NAN);
+                    }
+                }
+                ctxs[p].driver.control_phase(tick_s, &outs[p]);
+            }));
+            match res {
+                Ok(()) => self.ctrl[p]
+                    .copy_from_slice(self.ctxs[p].driver.controls()),
+                Err(_) => self.quarantine(p, "panic in control phase"),
+            }
+        }
+        // Whole-sweep chaos site: a panic here unwinds out of tick()
+        // and the fleet driver quarantines the entire bucket (shard
+        // containment, not plant containment).
+        if inject::armed() {
+            inject::fire(Site::MegabatchSweep, None);
         }
         // Everything from here through the observe epilogue is the
         // lockstep analogue of `backend.tick`, which the sequential
@@ -264,6 +337,9 @@ impl LockstepFleet {
         let t0 = Instant::now();
         let _sweep_span = crate::obs::span_dyn(&self.sweep_label);
         for (p, ctx) in self.ctxs.iter().enumerate() {
+            if !self.alive[p] {
+                continue;
+            }
             let r = self.ranges[p];
             self.soa.load_util_range(&ctx.driver.plan.util, r);
             // Shared definition with NativePlant::tick — the bitwise
@@ -277,24 +353,42 @@ impl LockstepFleet {
         // Phase 2: K fused substeps, one contiguous sweep each. The
         // inlet forcing and the circuit step stay per plant (each plant
         // owns its circuit state), exactly as NativePlant::tick orders
-        // them.
+        // them. The sweep still covers dead plants' ranges (skipping
+        // them would change nothing for survivors and cost a ranges
+        // rebuild); their reductions are simply discarded. The numeric
+        // integrity guard promotes a freshly non-finite reduction to
+        // quarantine on the spot.
         let _substep_span = crate::obs::span("soa_substep");
         for _ in 0..self.substeps {
             for (p, ctx) in self.ctxs.iter().enumerate() {
+                if !self.alive[p] {
+                    continue;
+                }
                 let t_in = ctx.driver.backend.circuit_state()[C_T_RACK_IN];
                 self.soa.set_inlet_range(t_in, self.inv_c_w, self.ranges[p]);
             }
             soa::soa_substep_ranges(&mut self.soa, &self.pp, &self.ranges,
                                     &mut self.sums);
-            for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            for p in 0..self.ctxs.len() {
+                if !self.alive[p] {
+                    continue;
+                }
                 let (p_dc, t_out_sum) = self.sums[p];
+                if !p_dc.is_finite() || !t_out_sum.is_finite() {
+                    self.quarantine(p, "non-finite substep reduction");
+                    continue;
+                }
                 let r = self.ranges[p];
                 let t_out_raw = t_out_sum / r.n_valid as f32;
-                let np =
-                    ctx.driver.backend.native_mut().expect("lockstep plant");
-                circuits::circuit_substep(&mut np.circuit_state,
-                                          &self.ctrl[p], t_out_raw, p_dc,
-                                          r.n_valid, &self.pp);
+                let ctrl = self.ctrl[p];
+                let np = self.ctxs[p]
+                    .driver
+                    .backend
+                    .native_mut()
+                    .expect("lockstep plant");
+                circuits::circuit_substep(&mut np.circuit_state, &ctrl,
+                                          t_out_raw, p_dc, r.n_valid,
+                                          &self.pp);
             }
         }
         drop(_substep_span);
@@ -302,12 +396,26 @@ impl LockstepFleet {
         // lanes + the scalar block — still plant physics, so it stays
         // inside the plant_wall_s window.
         let obs_span = crate::obs::span("observe");
-        for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+        for p in 0..self.ctxs.len() {
+            if !self.alive[p] {
+                continue;
+            }
             let r = self.ranges[p];
             let (p_dc, throttling, core_max) = soa::soa_observe_range(
                 &mut self.soa, &self.pp, r, &mut self.outs[p].node_obs);
-            let np = ctx.driver.backend.native_mut().expect("lockstep plant");
-            np.fill_scalars(&self.ctrl[p], p_dc, throttling, core_max,
+            if !p_dc.is_finite() || !throttling.is_finite()
+                || !core_max.is_finite()
+            {
+                self.quarantine(p, "non-finite observation");
+                continue;
+            }
+            let ctrl = self.ctrl[p];
+            let np = self.ctxs[p]
+                .driver
+                .backend
+                .native_mut()
+                .expect("lockstep plant");
+            np.fill_scalars(&ctrl, p_dc, throttling, core_max,
                             &mut self.outs[p]);
         }
         drop(obs_span);
@@ -317,6 +425,9 @@ impl LockstepFleet {
         // coordinator-side work SimulationDriver::step also excludes
         // from its plant_wall_s.
         for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            if !self.alive[p] {
+                continue;
+            }
             let sample = ctx.driver.sample_phase(tick_s, &self.outs[p]);
             self.energies[p].push(&self.outs[p].scalars, tick_s);
             self.traces[p].push(sample);
@@ -324,19 +435,56 @@ impl LockstepFleet {
         self.ticks_done += 1;
     }
 
+    /// Evict plant `p` from the arena: it takes no further part in any
+    /// phase, its partial trace is dropped at run end, and its fleet
+    /// index lands in the quarantine report.
+    fn quarantine(&mut self, p: usize, reason: &str) {
+        self.alive[p] = false;
+        note_quarantine(&mut self.quarantined, self.ctxs[p].index, reason);
+    }
+
     /// Run the configured duration. With `facility` set (the shard
     /// covers the whole fleet, i.e. a 1-shard run), the shared facility
     /// loop is fed per tick from the freshly sampled traces — same
     /// inputs in the same plant order as the post-hoc replay
     /// (`fleet::run_facility`), so the report is bitwise identical.
-    pub fn run(mut self, mut facility: Option<FacilityModel>)
-               -> Result<(Vec<PlantRun>, Option<FacilityReport>)> {
+    ///
+    /// Quarantined plants are dropped from the returned runs and listed
+    /// in the third tuple element. The first quarantine also drops the
+    /// streamed facility model (its integral consumed the dead plant's
+    /// earlier ticks): the report comes back `None` and the fleet
+    /// driver replays the facility pass over the survivors post hoc —
+    /// so survivors match a fault-free run of the same spec subset.
+    pub fn run(self, facility: Option<FacilityModel>)
+               -> Result<(Vec<PlantRun>, Option<FacilityReport>,
+                          Vec<QuarantineEntry>)> {
+        self.run_with(facility, 0, |_, _| Ok(()))
+    }
+
+    /// `run`, invoking `save` every `checkpoint_every` ticks (0 = never)
+    /// with the engine and the streamed facility model — the fleet
+    /// driver's checkpoint hook. The callback runs *between* ticks, so
+    /// a snapshot taken there resumes bitwise-identically.
+    pub fn run_with(
+        mut self,
+        mut facility: Option<FacilityModel>,
+        checkpoint_every: u64,
+        mut save: impl FnMut(&mut LockstepFleet, Option<&FacilityModel>)
+                             -> Result<()>,
+    ) -> Result<(Vec<PlantRun>, Option<FacilityReport>,
+                 Vec<QuarantineEntry>)> {
         let start = Instant::now();
         let mut inputs = Vec::with_capacity(self.ctxs.len());
         // Ticks already advanced through `tick()` (e.g. by a bench
-        // harness) count toward the configured duration.
+        // harness or a checkpoint restore) count toward the configured
+        // duration.
         while self.ticks_done < self.ticks_total {
             self.tick();
+            // A quarantine invalidates the streamed facility integral;
+            // the caller recomputes it over the survivors post hoc.
+            if !self.quarantined.is_empty() {
+                facility = None;
+            }
             if let Some(model) = facility.as_mut() {
                 let _span = crate::obs::span("facility");
                 inputs.clear();
@@ -346,16 +494,27 @@ impl LockstepFleet {
                 }
                 model.pool_tick(&inputs, self.tick_s);
             }
+            if checkpoint_every > 0
+                && self.ticks_done % checkpoint_every == 0
+                && self.ticks_done < self.ticks_total
+            {
+                save(&mut self, facility.as_ref())?;
+            }
         }
         let total_wall_s = start.elapsed().as_secs_f64();
         let report = facility.map(FacilityModel::into_report);
 
-        // Hand each plant its final arena slice back: the lockstep run
-        // drove the shared arena, so the drivers' own node-major
-        // buffers still hold the warm-up fill — one transpose per plant
-        // at run end keeps any later consumer of a driver honest.
+        // Hand each surviving plant its final arena slice back: the
+        // lockstep run drove the shared arena, so the drivers' own
+        // node-major buffers still hold the warm-up fill — one
+        // transpose per plant at run end keeps any later consumer of a
+        // driver honest. Dead plants' (possibly NaN) slices stay in the
+        // arena.
         let mut node_scratch = Vec::new();
         for (p, ctx) in self.ctxs.iter_mut().enumerate() {
+            if !self.alive[p] {
+                continue;
+            }
             let r = self.ranges[p];
             node_scratch.resize(r.npad * S, 0.0);
             self.soa.materialize_range(r, &mut node_scratch);
@@ -367,12 +526,16 @@ impl LockstepFleet {
         }
 
         let LockstepFleet {
-            ctxs, traces, energies, ticks_total, plant_wall_s, ..
+            ctxs, traces, energies, ticks_total, plant_wall_s, alive,
+            quarantined, ..
         } = self;
         let mut plants = Vec::with_capacity(ctxs.len());
-        for ((ctx, trace), energy) in
-            ctxs.into_iter().zip(traces).zip(energies)
+        for (p, ((ctx, trace), energy)) in
+            ctxs.into_iter().zip(traces).zip(energies).enumerate()
         {
+            if !alive[p] {
+                continue;
+            }
             let PlantCtx { index, label, seed, tick_s, mut driver } = ctx;
             let result = RunResult {
                 trace,
@@ -389,7 +552,104 @@ impl LockstepFleet {
             };
             plants.push(PlantRun { index, label, seed, tick_s, result });
         }
-        Ok((plants, report))
+        Ok((plants, report, quarantined))
+    }
+
+    /// Serialize the arena's full cross-tick state — per plant: the
+    /// node-major thermal state, circuit state, previous tick's scalar
+    /// block, coordinator state (`SimulationDriver::save_state`), energy
+    /// integrals and the trace so far — plus the tick cursor and the
+    /// quarantine list. Field order is the `idatacool-ckpt/1` contract
+    /// (DESIGN.md §8). The fleet driver prepends a config-identity
+    /// header before handing the bytes to `checkpoint::atomic_write`.
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        w.u64(self.ticks_done);
+        w.u64(self.ticks_total);
+        w.u64(self.ctxs.len() as u64);
+        let mut node_scratch = Vec::new();
+        for p in 0..self.ctxs.len() {
+            w.bool(self.alive[p]);
+            let r = self.ranges[p];
+            node_scratch.resize(r.npad * S, 0.0);
+            self.soa.materialize_range(r, &mut node_scratch);
+            w.f32s(&node_scratch);
+            let np =
+                self.ctxs[p].driver.backend.native().expect("lockstep plant");
+            w.f32s(&np.circuit_state);
+            w.f32s(&self.outs[p].scalars);
+            self.ctxs[p].driver.save_state(w);
+            self.energies[p].save(w);
+            w.u64(self.traces[p].len() as u64);
+            for s in &self.traces[p] {
+                s.save(w);
+            }
+        }
+        w.u64(self.quarantined.len() as u64);
+        for q in &self.quarantined {
+            w.u64(q.index as u64);
+            w.str(&q.reason);
+        }
+    }
+
+    /// Restore state written by [`LockstepFleet::save_state`] onto an
+    /// engine freshly built from the same specs. `last_flow` stays
+    /// `None` on purpose: the first resumed tick re-derives the flow
+    /// and rewrites bitwise-identical `g_eff` lanes.
+    pub fn restore_state(&mut self, r: &mut SnapReader) -> Result<()> {
+        self.ticks_done = r.u64()?;
+        let total = r.u64()?;
+        if total != self.ticks_total {
+            bail!("checkpoint spans {total} ticks, run configures {}",
+                  self.ticks_total);
+        }
+        let n = r.usize()?;
+        if n != self.ctxs.len() {
+            bail!("checkpoint has {n} plants, fleet has {}",
+                  self.ctxs.len());
+        }
+        for p in 0..n {
+            self.alive[p] = r.bool()?;
+            let range = self.ranges[p];
+            let node = r.f32s()?;
+            if node.len() != range.npad * S {
+                bail!("plant {p}: checkpointed node state has {} entries, \
+                       expected {}", node.len(), range.npad * S);
+            }
+            self.soa.load_state_range(&node, range);
+            let circ = r.f32s()?;
+            {
+                let np = self.ctxs[p]
+                    .driver
+                    .backend
+                    .native_mut()
+                    .expect("lockstep plant");
+                if circ.len() != np.circuit_state.len() {
+                    bail!("plant {p}: checkpointed circuit state has {} \
+                           entries", circ.len());
+                }
+                np.circuit_state.copy_from_slice(&circ);
+            }
+            let scalars = r.f32s()?;
+            if scalars.len() != NS {
+                bail!("plant {p}: checkpointed scalar block has {} entries",
+                      scalars.len());
+            }
+            self.outs[p].scalars.copy_from_slice(&scalars);
+            self.ctxs[p].driver.restore_state(r)?;
+            self.energies[p] = EnergyAccount::load(r)?;
+            let n_samples = r.usize()?;
+            self.traces[p].clear();
+            for _ in 0..n_samples {
+                self.traces[p].push(TraceSample::load(r)?);
+            }
+        }
+        self.quarantined.clear();
+        for _ in 0..r.usize()? {
+            let index = r.usize()?;
+            let reason = r.str()?;
+            self.quarantined.push(QuarantineEntry { index, reason });
+        }
+        Ok(())
     }
 }
 
@@ -417,14 +677,19 @@ mod tests {
 
     #[test]
     fn lockstep_matches_sequential_bitwise() {
+        // Bitwise comparisons must not race a concurrently armed chaos
+        // plan from another test in this binary.
+        let _guard = inject::test_lock();
         let base = small_base();
         let ctxs = build_ctxs(specs(3, "mixed", &base)).unwrap();
         let ls = LockstepFleet::new(ctxs).ok().expect("eligible bucket");
         assert_eq!(ls.len(), 3);
-        let (a, report) = ls.run(None).unwrap();
+        let (a, report, q) = ls.run(None).unwrap();
         assert!(report.is_none());
-        let b = run_ctxs_sequential(
+        assert!(q.is_empty());
+        let (b, qb) = run_ctxs_sequential(
             build_ctxs(specs(3, "mixed", &base)).unwrap()).unwrap();
+        assert!(qb.is_empty());
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.index, y.index);
@@ -462,6 +727,7 @@ mod tests {
 
     #[test]
     fn non_soa_bucket_is_handed_back() {
+        let _guard = inject::test_lock();
         let mut base = small_base();
         base.kernel = "reference".into();
         let ctxs = build_ctxs(specs(2, "baseline", &base)).unwrap();
@@ -471,7 +737,102 @@ mod tests {
         };
         assert_eq!(back.len(), 2);
         // the handed-back contexts still run fine sequentially
-        let runs = run_ctxs_sequential(back).unwrap();
+        let (runs, q) = run_ctxs_sequential(back).unwrap();
         assert_eq!(runs.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn quarantined_plant_is_evicted_and_survivors_match() {
+        let _guard = inject::test_lock();
+        let base = small_base();
+        // Poison plant 1's lanes on tick 3; plants 0 and 2 must finish
+        // and match a chaos-free run of just those two specs bitwise.
+        inject::arm("site=plant_tick,kind=poison_nan,plant=1,tick=3", 0)
+            .unwrap();
+        let ctxs = build_ctxs(specs(3, "mixed", &base)).unwrap();
+        let ls = LockstepFleet::new(ctxs).ok().expect("eligible bucket");
+        let out = ls.run(None);
+        inject::disarm();
+        let (runs, report, q) = out.unwrap();
+        assert!(report.is_none());
+        assert_eq!(q.len(), 1, "exactly one plant quarantined: {q:?}");
+        assert_eq!(q[0].index, 1);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].index, 0);
+        assert_eq!(runs[1].index, 2);
+
+        // Fault-free reference over the surviving specs only.
+        let survivors: Vec<PlantSpec> = specs(3, "mixed", &base)
+            .into_iter()
+            .filter(|s| s.index != 1)
+            .collect();
+        let (clean, qc) =
+            run_ctxs_sequential(build_ctxs(survivors).unwrap()).unwrap();
+        assert!(qc.is_empty());
+        assert_eq!(clean.len(), 2);
+        for (x, y) in runs.iter().zip(&clean) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.result.trace.len(), y.result.trace.len());
+            for (s, t) in x.result.trace.iter().zip(&y.result.trace) {
+                assert_eq!(s.t_rack_out.to_bits(), t.t_rack_out.to_bits());
+                assert_eq!(s.p_ac.to_bits(), t.p_ac.to_bits());
+                assert_eq!(s.core_max.to_bits(), t.core_max.to_bits());
+            }
+            assert_eq!(x.result.energy.e_ac.to_bits(),
+                       y.result.energy.e_ac.to_bits());
+        }
+    }
+
+    #[test]
+    fn lockstep_checkpoint_resumes_bitwise() {
+        let _guard = inject::test_lock();
+        let base = small_base();
+        // Uninterrupted reference run.
+        let ls = LockstepFleet::new(
+            build_ctxs(specs(3, "mixed", &base)).unwrap())
+            .ok().expect("eligible bucket");
+        let (full, _, q) = ls.run(None).unwrap();
+        assert!(q.is_empty());
+
+        // Interrupted run: advance 5 ticks, snapshot, throw the engine
+        // away, restore into a fresh one, finish.
+        let mut first = LockstepFleet::new(
+            build_ctxs(specs(3, "mixed", &base)).unwrap())
+            .ok().expect("eligible bucket");
+        for _ in 0..5 {
+            first.tick();
+        }
+        let mut w = SnapWriter::new();
+        first.save_state(&mut w);
+        let bytes = w.into_bytes();
+        drop(first);
+
+        let mut resumed = LockstepFleet::new(
+            build_ctxs(specs(3, "mixed", &base)).unwrap())
+            .ok().expect("eligible bucket");
+        let mut r = SnapReader::new(&bytes).unwrap();
+        resumed.restore_state(&mut r).unwrap();
+        assert!(r.done(), "snapshot fully consumed");
+        let (cont, _, qc) = resumed.run(None).unwrap();
+        assert!(qc.is_empty());
+
+        assert_eq!(full.len(), cont.len());
+        for (x, y) in full.iter().zip(&cont) {
+            assert_eq!(x.result.trace.len(), y.result.trace.len());
+            for (s, t) in x.result.trace.iter().zip(&y.result.trace) {
+                assert_eq!(s.t_rack_out.to_bits(), t.t_rack_out.to_bits());
+                assert_eq!(s.t_rack_in.to_bits(), t.t_rack_in.to_bits());
+                assert_eq!(s.p_d.to_bits(), t.p_d.to_bits());
+                assert_eq!(s.p_ac.to_bits(), t.p_ac.to_bits());
+                assert_eq!(s.core_max.to_bits(), t.core_max.to_bits());
+                assert_eq!(s.valve.to_bits(), t.valve.to_bits());
+                assert_eq!(s.utilization.to_bits(), t.utilization.to_bits());
+            }
+            assert_eq!(x.result.energy.e_ac.to_bits(),
+                       y.result.energy.e_ac.to_bits());
+            assert_eq!(x.result.energy.e_chilled.to_bits(),
+                       y.result.energy.e_chilled.to_bits());
+        }
     }
 }

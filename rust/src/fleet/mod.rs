@@ -34,12 +34,16 @@ pub mod facility;
 pub mod megabatch;
 pub mod scenario;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::coordinator::{RunResult, SimulationDriver, TraceSample};
+use crate::resilience::checkpoint::{self, SnapReader, SnapWriter};
+use crate::resilience::inject::{self, Site};
 use crate::util::json::{Json, JsonBuilder};
 use crate::util::shard::blocks;
 use crate::variability::rng::splitmix64;
@@ -48,6 +52,42 @@ use aggregate::FleetAggregate;
 use facility::{FacilityModel, FacilityParams, FacilityReport, PlantTick};
 use megabatch::LockstepFleet;
 use scenario::{PlantSpec, Scenario};
+
+/// One evicted plant: its fleet index and why it left the run.
+///
+/// Quarantine is the fleet's fault-containment verdict — a plant that
+/// panicked, went numerically non-finite, or rode a shard that died is
+/// dropped from the run while the rest of the fleet completes
+/// (degraded success, never abort). Entries land in
+/// [`FleetAggregate::quarantined`] and are mixed into the determinism
+/// fingerprint, so a degraded document can never masquerade as a clean
+/// one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuarantineEntry {
+    pub index: usize,
+    pub reason: String,
+}
+
+/// The one funnel every containment path (lockstep eviction, sequential
+/// fallback, shard death) records evictions through — the obs counter
+/// and the report cannot drift apart.
+pub(crate) fn note_quarantine(q: &mut Vec<QuarantineEntry>, index: usize,
+                              reason: &str) {
+    if crate::obs::enabled() {
+        crate::obs::metrics::quarantined_plants().inc();
+    }
+    q.push(QuarantineEntry { index, reason: reason.to_string() });
+}
+
+/// Crash-consistency settings for a fleet run: write a snapshot to
+/// `path` every `every` ticks. Deliberately **outside** `FleetConfig` —
+/// like shard count, checkpointing is execution shape, and it must not
+/// enter result documents or server cache keys.
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    pub path: PathBuf,
+    pub every: u64,
+}
 
 /// Fleet-level run configuration.
 #[derive(Debug, Clone)]
@@ -167,10 +207,24 @@ impl FleetDriver {
     /// Run every plant (sharded across threads), then the facility pass
     /// and the fleet aggregation.
     pub fn run(&self) -> Result<FleetRun> {
+        self.run_resilient(None, None)
+    }
+
+    /// `run` with crash consistency: optionally write a snapshot every
+    /// `checkpoint.every` ticks, and/or start from a snapshot at
+    /// `resume`. A resumed run produces the same fingerprint and
+    /// byte-identical `--json` output as the uninterrupted run.
+    ///
+    /// Both options force the single-shard lockstep shape — the one
+    /// whose results every other (shard count, megabatch) combination
+    /// must match bitwise anyway, so the forcing changes nothing
+    /// observable — and require a lockstep-capable base config.
+    pub fn run_resilient(&self, ckpt: Option<&CheckpointSpec>,
+                         resume: Option<&Path>) -> Result<FleetRun> {
         let start = Instant::now();
         let specs = self.specs();
         let n_plants = specs.len();
-        let shards = self.cfg.shards.clamp(1, n_plants);
+        let mut shards = self.cfg.shards.clamp(1, n_plants);
         let params =
             FacilityParams::from_plant(&self.cfg.base.pp, self.cfg.n_plants);
         // Config-level precheck: a base that cannot lockstep (pinned
@@ -178,6 +232,15 @@ impl FleetDriver {
         // one-driver-at-a-time memory profile instead of constructing a
         // whole bucket of drivers just to be handed them back.
         let lockstep = self.cfg.megabatch && megabatch::precheck(&self.cfg.base);
+        let resilient = ckpt.is_some() || resume.is_some();
+        if resilient {
+            if !lockstep {
+                bail!("checkpoint/resume needs the lockstep execution \
+                       path: enable megabatch and use the native backend \
+                       with the SoA kernel");
+            }
+            shards = 1;
+        }
 
         // Single-shard megabatch: the whole fleet advances in tick
         // lockstep, so the shared facility loop is fed per tick instead
@@ -187,19 +250,44 @@ impl FleetDriver {
             match LockstepFleet::new(megabatch::build_ctxs(specs)?) {
                 Ok(mut ls) => {
                     ls.set_shard(0);
-                    let model = FacilityModel::new(params, n_plants);
-                    let (plants, facility) = ls.run(Some(model))?;
-                    let facility =
-                        facility.expect("streamed facility report");
-                    return Ok(assemble(plants, facility, shards, start));
+                    let mut facility =
+                        Some(FacilityModel::new(params.clone(), n_plants));
+                    if let Some(path) = resume {
+                        facility = self.load_checkpoint(path, &mut ls,
+                                                        &params)?;
+                    }
+                    let every = ckpt.map(|c| c.every).unwrap_or(0);
+                    let (plants, report, quarantined) = ls.run_with(
+                        facility,
+                        every,
+                        |ls, fac| {
+                            let spec = ckpt.expect("every > 0 needs a spec");
+                            self.write_checkpoint(&spec.path, ls, fac)
+                        },
+                    )?;
+                    // A quarantine dropped the streamed model; replay
+                    // over the survivors so they match a fault-free run
+                    // of the same spec subset.
+                    let facility = match report {
+                        Some(r) => r,
+                        None => run_facility(&plants, params),
+                    };
+                    return assemble(plants, facility, quarantined, shards,
+                                    start);
                 }
                 // Not lockstep-eligible on the deep per-plant check:
                 // fall through to the per-plant path with the
                 // already-built drivers.
                 Err(ctxs) => {
-                    let plants = megabatch::run_ctxs_sequential(ctxs)?;
+                    if resilient {
+                        bail!("checkpoint/resume: plant bucket is not \
+                               lockstep-eligible");
+                    }
+                    let (plants, quarantined) =
+                        megabatch::run_ctxs_sequential(ctxs)?;
                     let facility = run_facility(&plants, params);
-                    return Ok(assemble(plants, facility, shards, start));
+                    return assemble(plants, facility, quarantined, shards,
+                                    start);
                 }
             }
         }
@@ -210,82 +298,218 @@ impl FleetDriver {
         // results — every cross-plant reduction runs in plant-index
         // order regardless of which shard ran a plant.
         let buckets = blocks(specs, shards);
+        // Remember which plants rode which shard: a shard that dies
+        // (panic past the per-plant containment, or a setup error)
+        // quarantines its whole bucket instead of aborting the fleet.
+        let bucket_indices: Vec<Vec<usize>> = buckets
+            .iter()
+            .map(|b| b.iter().map(|s| s.index).collect())
+            .collect();
 
+        let mut quarantined: Vec<QuarantineEntry> = Vec::new();
         let mut slots: Vec<Option<PlantRun>> =
             (0..n_plants).map(|_| None).collect();
-        std::thread::scope(|scope| -> Result<()> {
+        std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(buckets.len());
             for (shard, bucket) in buckets.into_iter().enumerate() {
                 handles.push(
                     scope.spawn(move || run_bucket(bucket, lockstep, shard)),
                 );
             }
-            for h in handles {
-                let shard_runs = h
-                    .join()
-                    .map_err(|_| anyhow::anyhow!("fleet shard panicked"))??;
-                for run in shard_runs {
-                    let i = run.index;
-                    slots[i] = Some(run);
+            for (shard, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok((shard_runs, q))) => {
+                        for run in shard_runs {
+                            let i = run.index;
+                            slots[i] = Some(run);
+                        }
+                        quarantined.extend(q);
+                    }
+                    Ok(Err(e)) => {
+                        for &i in &bucket_indices[shard] {
+                            note_quarantine(&mut quarantined, i,
+                                            &format!("shard error: {e:#}"));
+                        }
+                    }
+                    Err(_) => {
+                        for &i in &bucket_indices[shard] {
+                            note_quarantine(&mut quarantined, i,
+                                            "shard panicked");
+                        }
+                    }
                 }
             }
-            Ok(())
-        })?;
-        let plants: Vec<PlantRun> = slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| {
-                s.ok_or_else(|| anyhow::anyhow!("plant {i} produced no run"))
-            })
-            .collect::<Result<_>>()?;
+        });
+        let mut plants = Vec::with_capacity(n_plants);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(run) => plants.push(run),
+                None => {
+                    if !quarantined.iter().any(|q| q.index == i) {
+                        note_quarantine(&mut quarantined, i,
+                                        "no result from shard");
+                    }
+                }
+            }
+        }
 
         // Facility pass + aggregation, both in plant-index order.
         let facility = run_facility(&plants, params);
-        Ok(assemble(plants, facility, shards, start))
+        assemble(plants, facility, quarantined, shards, start)
+    }
+
+    /// `idatacool-ckpt/1` header: the run identity a snapshot belongs
+    /// to. The resume path refuses a checkpoint whose scenario, fleet
+    /// shape, seed, or base-config fingerprint disagrees with the
+    /// current invocation — resuming under a different config would
+    /// silently produce a chimera document.
+    fn save_header(&self, w: &mut SnapWriter) {
+        w.str(self.cfg.scenario.name());
+        w.u64(self.cfg.n_plants as u64);
+        w.u64(self.cfg.fleet_seed);
+        w.u64(crate::bench::record::config_fingerprint(&self.cfg.base));
+    }
+
+    fn write_checkpoint(&self, path: &Path, ls: &LockstepFleet,
+                        facility: Option<&FacilityModel>) -> Result<()> {
+        let _span = crate::obs::span("checkpoint");
+        let mut w = SnapWriter::new();
+        self.save_header(&mut w);
+        ls.save_state(&mut w);
+        match facility {
+            Some(model) => {
+                w.bool(true);
+                model.save_state(&mut w);
+            }
+            None => w.bool(false),
+        }
+        checkpoint::atomic_write(path, &w.into_bytes())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Validate + restore a snapshot into a freshly built engine.
+    /// Returns the streamed facility model mid-integral (`None` when
+    /// the snapshot predates no facility — i.e. a quarantine had
+    /// already dropped it).
+    fn load_checkpoint(&self, path: &Path, ls: &mut LockstepFleet,
+                       params: &FacilityParams)
+                       -> Result<Option<FacilityModel>> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}",
+                                     path.display()))?;
+        let mut r = SnapReader::new(&bytes)?;
+        let scenario = r.str()?;
+        if scenario != self.cfg.scenario.name() {
+            bail!("checkpoint was taken under scenario '{scenario}', this \
+                   run uses '{}'", self.cfg.scenario.name());
+        }
+        let n = r.u64()? as usize;
+        if n != self.cfg.n_plants {
+            bail!("checkpoint covers {n} plants, this run configures {}",
+                  self.cfg.n_plants);
+        }
+        let seed = r.u64()?;
+        if seed != self.cfg.fleet_seed {
+            bail!("checkpoint fleet seed {seed:#x} != configured {:#x}",
+                  self.cfg.fleet_seed);
+        }
+        let fp = r.u64()?;
+        let want = crate::bench::record::config_fingerprint(&self.cfg.base);
+        if fp != want {
+            bail!("checkpoint base-config fingerprint {fp:#018x} != \
+                   configured {want:#018x}");
+        }
+        ls.restore_state(&mut r)?;
+        let facility = if r.bool()? {
+            let mut model =
+                FacilityModel::new(params.clone(), self.cfg.n_plants);
+            model.restore_state(&mut r)?;
+            Some(model)
+        } else {
+            None
+        };
+        if !r.done() {
+            bail!("trailing bytes after checkpoint payload");
+        }
+        Ok(facility)
     }
 }
 
 /// The one place a `FleetRun` is put together — every execution path
 /// (streamed-facility lockstep, lockstep fallback, sharded) funnels
-/// through here so the assembly cannot drift between them.
-fn assemble(plants: Vec<PlantRun>, facility: FacilityReport, shards: usize,
-            start: Instant) -> FleetRun {
-    let aggregate = FleetAggregate::build(&plants, &facility);
-    FleetRun {
+/// through here so the assembly cannot drift between them. A fleet
+/// whose every plant quarantined has no result to degrade into — that
+/// (and only that) is still an error.
+fn assemble(plants: Vec<PlantRun>, facility: FacilityReport,
+            quarantined: Vec<QuarantineEntry>, shards: usize,
+            start: Instant) -> Result<FleetRun> {
+    if plants.is_empty() {
+        let reasons: Vec<String> = quarantined
+            .iter()
+            .map(|q| format!("plant {}: {}", q.index, q.reason))
+            .collect();
+        bail!("every plant quarantined: {}", reasons.join("; "));
+    }
+    let aggregate = FleetAggregate::build(&plants, &facility, quarantined);
+    Ok(FleetRun {
         plants,
         facility,
         aggregate,
         shards,
         wall_s: start.elapsed().as_secs_f64(),
-    }
+    })
 }
 
 /// Run one shard's plants: in tick lockstep over one shared lane arena
 /// (megabatch, config-prechecked by the caller), or sequentially, each
-/// plant owning its full driver.
+/// plant owning its full driver. Either way the bucket reports its own
+/// evictions; an `Err` (or a panic past the per-plant containment)
+/// quarantines the whole bucket in the caller.
 fn run_bucket(bucket: Vec<PlantSpec>, lockstep: bool, shard: usize)
-              -> Result<Vec<PlantRun>> {
+              -> Result<(Vec<PlantRun>, Vec<QuarantineEntry>)> {
     if lockstep {
         return match LockstepFleet::new(megabatch::build_ctxs(bucket)?) {
             Ok(mut ls) => {
                 ls.set_shard(shard);
-                ls.run(None).map(|(plants, _)| plants)
+                ls.run(None).map(|(plants, _, q)| (plants, q))
             }
             Err(ctxs) => megabatch::run_ctxs_sequential(ctxs),
         };
     }
     // Megabatch off (or not lockstep-capable): one plant at a time —
-    // only one driver alive per shard at any moment.
+    // only one driver alive per shard at any moment. Each plant is its
+    // own fault domain, exactly like the sequential megabatch fallback.
     let mut out = Vec::with_capacity(bucket.len());
+    let mut quarantined = Vec::new();
     for spec in bucket {
         let PlantSpec { index, label, seed, cfg, faults } = spec;
-        let mut driver = SimulationDriver::from_prebuilt(cfg, seed, faults)?;
+        let mut driver = match SimulationDriver::from_prebuilt(cfg, seed,
+                                                               faults) {
+            Ok(d) => d,
+            Err(e) => {
+                note_quarantine(&mut quarantined, index,
+                                &format!("driver build error: {e:#}"));
+                continue;
+            }
+        };
+        driver.chaos_plant = Some(index);
         let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
         // sample_every = 1: the facility pass needs every tick.
-        let result = driver.run(1)?;
-        out.push(PlantRun { index, label, seed, tick_s, result });
+        match catch_unwind(AssertUnwindSafe(|| driver.run(1))) {
+            Ok(Ok(result)) => {
+                out.push(PlantRun { index, label, seed, tick_s, result });
+            }
+            Ok(Err(e)) => {
+                note_quarantine(&mut quarantined, index,
+                                &format!("run error: {e:#}"));
+            }
+            Err(_) => {
+                note_quarantine(&mut quarantined, index,
+                                "panic in plant run");
+            }
+        }
     }
-    Ok(out)
+    Ok((out, quarantined))
 }
 
 /// One trace sample's contribution to the facility loop — the single
@@ -302,8 +526,23 @@ pub(crate) fn plant_tick_of(s: &TraceSample) -> PlantTick {
 
 /// Replay the finished plant traces through the shared facility loop,
 /// tick-aligned and in plant-index order.
+///
+/// The replay is a pure function of finished traces, so a panic — the
+/// chaos `facility_step` site, or an organic defect — is recoverable by
+/// retrying once: chaos rules fire exactly once, and a deterministic
+/// organic panic simply repeats and propagates on the second attempt.
 pub fn run_facility(plants: &[PlantRun], params: FacilityParams)
                     -> FacilityReport {
+    match catch_unwind(AssertUnwindSafe(|| {
+        replay_facility(plants, params.clone())
+    })) {
+        Ok(report) => report,
+        Err(_) => replay_facility(plants, params),
+    }
+}
+
+fn replay_facility(plants: &[PlantRun], params: FacilityParams)
+                   -> FacilityReport {
     let _span = crate::obs::span("facility");
     let mut model = FacilityModel::new(params, plants.len());
     let n_ticks = plants
@@ -314,6 +553,9 @@ pub fn run_facility(plants: &[PlantRun], params: FacilityParams)
     let dt = plants.first().map(|p| p.tick_s).unwrap_or(0.0);
     let mut inputs = Vec::with_capacity(plants.len());
     for t in 0..n_ticks {
+        if inject::armed() {
+            inject::fire(Site::FacilityStep, None);
+        }
         inputs.clear();
         for p in plants {
             inputs.push(plant_tick_of(&p.result.trace[t]));

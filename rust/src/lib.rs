@@ -22,6 +22,9 @@
 //!  * **Obs** (`obs`): the flight recorder — crate-wide tracing spans
 //!    flushed to Chrome `trace_event` JSON, plus a Prometheus-ready
 //!    metrics registry; zero-cost when disabled (the default).
+//!  * **Resilience** (`resilience`): per-plant fault quarantine,
+//!    seeded deterministic chaos injection, and crash-consistent
+//!    `idatacool-ckpt/1` checkpoint/resume.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-figure reproductions.
@@ -35,6 +38,7 @@ pub mod fleet;
 pub mod obs;
 pub mod plant;
 pub mod report;
+pub mod resilience;
 pub mod runtime;
 pub mod server;
 pub mod stats;

@@ -74,6 +74,14 @@ common flags:
                          and write a Chrome trace_event JSON (load in
                          Perfetto / chrome://tracing); tracing never
                          changes simulation results
+  --chaos <spec>         (run|fleet|serve) arm deterministic fault
+                         injection: \"[seed=N;]site=...,kind=...[,plant=P]
+                         [,tick=T];...\" with sites plant_tick|
+                         megabatch_sweep|facility_step|server_compute and
+                         kinds panic|stall_ms|poison_nan; fired rules are
+                         reported after the run (env IDATACOOL_CHAOS and a
+                         --config [chaos] section arm the same injector;
+                         flags win over env, env wins over TOML)
 fleet flags:
   --plants <n>           number of plants in the fleet (default 4)
   --shards <k>           OS threads to shard plants over (default: cores;
@@ -86,8 +94,17 @@ fleet flags:
                          identical to the per-plant path either way)
   --json <path>          also write the machine-readable fleet summary
                          (idatacool-fleet/1: PUE/ERE aggregates, per-plant
-                         credits, determinism fingerprint — the same
-                         document POST /fleet serves)
+                         credits, quarantine report, determinism
+                         fingerprint — the same document POST /fleet
+                         serves)
+  --checkpoint <path>    write a crash-consistent idatacool-ckpt/1
+                         snapshot (atomic tmp+rename) every
+                         --checkpoint-every ticks; forces the 1-shard
+                         lockstep path
+  --checkpoint-every <n> snapshot cadence in ticks (requires --checkpoint)
+  --resume <path>        restart from a snapshot; the resumed run
+                         reproduces the uninterrupted fingerprint and
+                         --json bytes exactly
   (common flags above configure the per-plant base; a --config file's
    [fleet] section sets plants/shards/megabatch, flags win over env, env
    wins over TOML; every scenario except baseline sets the workload
@@ -103,11 +120,16 @@ serve flags:
                          0 disables batching; env override
                          IDATACOOL_SERVE_BATCH_WINDOW_MS)
   --batch-max-plants <n> most plants per batched arena sweep (default 16)
+  --deadline-ms <ms>     per-request wall-clock budget; overruns answer a
+                         504 idatacool-error/1 envelope with Retry-After
+                         (0 = unbounded, the default; the result is still
+                         cached, so an immediate retry is a hit)
   (a --config file's [serve] section sets the same knobs; flags win over
    env, env wins over TOML. Endpoints under /v1 — POST /v1/simulate
    [?stream=1], POST /v1/fleet, POST /v1/sweep, GET /v1/healthz,
    GET /v1/metrics, POST /v1/shutdown; unprefixed paths still answer but
-   carry a Deprecation header)
+   carry a Deprecation header. SIGTERM/SIGINT drain gracefully, same as
+   POST /v1/shutdown)
 figures flags:
   --fig <id|all|sweep>   4a 4b 5a 5b 6a 6b 7a 7b r1 s3 r2 manifold binning econ
   --out <dir>            write CSVs here (default: results)
@@ -147,6 +169,50 @@ fn trace_out_flush(path: &std::path::Path) -> Result<()> {
     idatacool::obs::trace::write_chrome_trace(path)?;
     println!("wrote trace {}", path.display());
     Ok(())
+}
+
+/// Arm the chaos injector from (rising precedence) the config file's
+/// `[chaos]` section, the `IDATACOOL_CHAOS` env var, and the `--chaos`
+/// flag — the same TOML < env < flag ladder every other knob uses. The
+/// env/flag spec may carry its own seed (`seed=N;plan`); the TOML
+/// section keeps seed and plan separate. Returns whether a plan was
+/// armed, so the caller knows to print the injected-event log.
+fn chaos_arm(
+    args: &Args,
+    doc: Option<&idatacool::config::toml::TomlDoc>,
+) -> Result<bool> {
+    use idatacool::resilience::inject;
+    let spec = args.get("chaos").map(str::to_string).or_else(|| {
+        std::env::var("IDATACOOL_CHAOS")
+            .ok()
+            .filter(|s| !s.trim().is_empty())
+    });
+    if let Some(spec) = spec {
+        inject::arm_spec(&spec)?;
+        return Ok(true);
+    }
+    if let Some(doc) = doc {
+        let cs = idatacool::config::ChaosSettings::from_toml(doc)?;
+        if let Some(plan) = &cs.plan {
+            inject::arm(plan, cs.seed.unwrap_or(0))?;
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Print and drain the injected-event log after a chaos-armed run.
+fn chaos_report(armed: bool) {
+    if !armed {
+        return;
+    }
+    let events = idatacool::resilience::inject::take_log();
+    if events.is_empty() {
+        println!("chaos: plan armed, no rule fired");
+    }
+    for e in events {
+        println!("chaos: fired {e}");
+    }
 }
 
 /// Read and parse `--config` once; `None` when the flag is absent.
@@ -202,11 +268,13 @@ fn build_config_with(
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = build_config(args)?;
+    let doc = load_config_doc(args)?;
+    let cfg = build_config_with(args, doc.as_ref())?;
     println!(
         "run '{}': {} nodes, backend={}, workload={:?}, {}s sim",
         cfg.name, cfg.n_nodes, cfg.backend, cfg.workload, cfg.duration_s
     );
+    let chaos = chaos_arm(args, doc.as_ref())?;
     let trace_out = trace_out_arm(args);
     let mut driver = SimulationDriver::new(cfg)?;
     let tick_s = driver.backend.tick_seconds(&driver.cfg.pp);
@@ -215,6 +283,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = &trace_out {
         trace_out_flush(path)?;
     }
+    chaos_report(chaos);
     println!("backend: {} (kernel: {})", res.backend, kernel);
     println!("{}", res.energy.summary());
     println!("workload: {}", res.workload_stats);
@@ -311,6 +380,30 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         if megabatch { "on" } else { "off" }, base.duration_s, base.seed,
     );
 
+    // Crash-consistent checkpointing: --checkpoint + --checkpoint-every
+    // name the snapshot file and cadence; --resume restarts from one.
+    // Both force the 1-shard lockstep path (fleet::run_resilient), and
+    // a resumed run reproduces the uninterrupted fingerprint and --json
+    // bytes exactly.
+    let ckpt_every = args.usize_strict("checkpoint-every", 0)?;
+    let ckpt = match (args.get("checkpoint"), ckpt_every) {
+        (Some(path), every) if every >= 1 => {
+            Some(idatacool::fleet::CheckpointSpec {
+                path: PathBuf::from(path),
+                every: every as u64,
+            })
+        }
+        (Some(_), _) => anyhow::bail!(
+            "--checkpoint needs --checkpoint-every <ticks> (>= 1)"
+        ),
+        (None, every) if every >= 1 => anyhow::bail!(
+            "--checkpoint-every needs --checkpoint <path>"
+        ),
+        _ => None,
+    };
+    let resume = args.get("resume").map(PathBuf::from);
+
+    let chaos = chaos_arm(args, doc.as_ref())?;
     let fleet_seed = base.seed;
     let trace_out = trace_out_arm(args);
     let driver = FleetDriver::new(FleetConfig {
@@ -321,9 +414,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         scenario,
         megabatch,
     })?;
-    let run = driver.run()?;
+    let run = driver.run_resilient(ckpt.as_ref(), resume.as_deref())?;
     if let Some(path) = &trace_out {
         trace_out_flush(path)?;
+    }
+    chaos_report(chaos);
+    for q in &run.aggregate.quarantined {
+        println!("quarantined plant {}: {}", q.index, q.reason);
     }
 
     for s in run.aggregate.series() {
@@ -392,7 +489,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.usize_strict("batch-window-ms", sc.batch_window_ms)?;
     sc.batch_max_plants =
         args.usize_strict("batch-max-plants", sc.batch_max_plants)?;
+    sc.deadline_ms = args.usize_strict("deadline-ms", sc.deadline_ms)?;
 
+    let chaos = chaos_arm(args, doc.as_ref())?;
     let (workers, cache_cap, queue_cap) =
         (sc.workers, sc.cache_cap, sc.queue_cap);
     let batching = if sc.batch_window_ms > 0 {
@@ -403,18 +502,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         "batching off".to_string()
     };
+    let deadline = if sc.deadline_ms > 0 {
+        format!("deadline {}ms", sc.deadline_ms)
+    } else {
+        "no deadline".to_string()
+    };
     let server = Server::bind(ServeOptions { cfg: sc, base })?;
     println!(
-        "serving http://{} — {} workers, cache {} entries, queue {}, {} \
+        "serving http://{} — {} workers, cache {} entries, queue {}, {}, {} \
          (POST /v1/simulate | /v1/fleet | /v1/sweep, GET /v1/healthz | \
-         /v1/metrics, POST /v1/shutdown to stop)",
+         /v1/metrics, POST /v1/shutdown or SIGTERM to stop)",
         server.local_addr(),
         workers,
         cache_cap,
         queue_cap,
         batching,
+        deadline,
     );
-    server.run()
+    let result = server.run();
+    chaos_report(chaos);
+    result
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

@@ -104,6 +104,10 @@ pub struct ShardedHistogram {
 
 impl ShardedHistogram {
     /// Record `x` into shard `shard % n_shards`. Lock-free.
+    ///
+    /// NaN convention (see DESIGN.md §8): a non-finite sample is *data*
+    /// arriving at a sink — it is counted (as underflow) so totals stay
+    /// honest, never silently dropped and never allowed to poison bins.
     #[inline]
     pub fn push(&self, shard: usize, x: f64) {
         let s = &self.shards[shard % self.shards.len()];
@@ -141,6 +145,8 @@ impl ShardedHistogram {
 
     fn expo_quantile(&self, h: &Histogram, q: f64) -> f64 {
         let v = h.quantile(q);
+        // NaN convention: a quantile of an empty histogram is a
+        // *derived* statistic, reported as the neutral 0 (DESIGN.md §8).
         if v.is_nan() {
             return 0.0;
         }
@@ -339,6 +345,32 @@ pub fn throttle_events() -> &'static Counter {
         global().counter(
             "idatacool_throttle_events_total",
             "Sim ticks observed with at least one throttling node",
+        )
+    })
+}
+
+/// Non-finite values caught by the numeric integrity sentinels over the
+/// per-plant kernel reductions (`plant::soa` epilogues). One increment
+/// per poisoned reduction observed, not per NaN lane entry.
+pub fn numeric_faults() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_numeric_faults_total",
+            "Non-finite per-plant kernel reductions caught by the \
+             integrity sentinels",
+        )
+    })
+}
+
+/// Plants evicted from a fleet run by the quarantine sweep (panic or
+/// non-finite state); see DESIGN.md §8.
+pub fn quarantined_plants() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_quarantined_plants_total",
+            "Plants evicted from fleet runs by the quarantine sweep",
         )
     })
 }

@@ -169,6 +169,32 @@ impl NativePlant {
         self.sync = LaneSync::NodeMajor;
     }
 
+    /// Corrupt the plant's entire dynamic state with NaN — the chaos
+    /// injector's `poison_nan` action (`resilience::inject`). Both the
+    /// node-major buffer and any resident lanes are poisoned so the
+    /// fault survives whichever copy the next tick reads, and the
+    /// circuit state is poisoned so it reaches the scalar observations
+    /// on the very next tick. The fleet quarantine sweep detects the
+    /// resulting non-finite reductions and evicts the plant.
+    pub fn poison_state(&mut self) {
+        self.node_major.fill(f32::NAN);
+        if let Some(soa) = self.soa.as_mut() {
+            let r = LaneRange {
+                offset: 0,
+                n_valid: self.st.n_nodes,
+                npad: self.st.n_padded,
+            };
+            soa.poison_state_range(r);
+            // Both copies now hold the same NaN fill.
+            self.sync = LaneSync::InSync;
+        } else {
+            self.sync = LaneSync::NodeMajor;
+        }
+        for v in self.circuit_state.iter_mut() {
+            *v = f32::NAN;
+        }
+    }
+
     /// Rebuild the kernel's derived state after an external edit to the
     /// static inputs (`st` is `pub`): the SoA lane mirrors and the
     /// flow-derived `g_eff` cache both copy from `st` and would

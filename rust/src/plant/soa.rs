@@ -244,6 +244,20 @@ impl SoaState {
             *q_i = g_i * t_in * inv_c_w;
         }
     }
+
+    /// Overwrite one plant's thermal-state lanes with NaN (the
+    /// `poison_nan` chaos fault). Every elementwise lane op touches
+    /// elements independently and every reduction is per range, so the
+    /// poison is confined to this plant's slice — the numeric sentinel
+    /// over its reductions promotes it to quarantine while the other
+    /// plants in the arena stay bitwise untouched.
+    pub fn poison_state_range(&mut self, r: LaneRange) {
+        let npad = self.npad;
+        for slot in 0..S {
+            let lane = &mut self.t[slot * npad + r.offset..][..r.npad];
+            lane.fill(f32::NAN);
+        }
+    }
 }
 
 /// One fused substep over the full lanes (single-plant path).
@@ -402,6 +416,19 @@ pub fn soa_substep_ranges(
         }
     }
     t.copy_from_slice(t_next);
+    // Numeric integrity sentinel (NaN-handling convention, DESIGN.md §8):
+    // a non-finite per-plant reduction means that plant's lanes are
+    // poisoned. Count it when observability is on; the caller
+    // (megabatch / fleet) checks the same sums unconditionally and
+    // promotes the plant to quarantine — NaN must never propagate
+    // silently into cross-plant aggregates.
+    if crate::obs::enabled() {
+        for sum in sums.iter() {
+            if !sum.0.is_finite() || !sum.1.is_finite() {
+                crate::obs::metrics::numeric_faults().inc();
+            }
+        }
+    }
 }
 
 /// Fused observation epilogue over one plant's post-substep lane slice.
@@ -496,6 +523,15 @@ pub fn soa_observe_range(
         o[O_CORE_MEAN] = tmean;
         o[O_CORE_MAX] = tmax;
         o[O_WATER_OUT] = water[i];
+    }
+    // Numeric integrity sentinel over the observe reductions — same
+    // contract as the substep epilogue (DESIGN.md §8).
+    if crate::obs::enabled()
+        && (!p_dc.is_finite()
+            || !throttling.is_finite()
+            || !core_max_all.is_finite())
+    {
+        crate::obs::metrics::numeric_faults().inc();
     }
     (p_dc, throttling, core_max_all)
 }
@@ -621,6 +657,59 @@ mod tests {
         let mut lanes = vec![0.0f32; npad * S];
         transpose_to_lanes(&node_state, &mut lanes, npad, S);
         assert_eq!(lanes, soa.t);
+    }
+
+    #[test]
+    fn poison_is_confined_to_its_range() {
+        // Two plants in one arena; poison plant 0's lanes. Plant 0's
+        // reductions go non-finite; plant 1 stays bitwise identical to
+        // a standalone run — the quarantine containment guarantee.
+        let pp = PlantParams::default();
+        let ops = Operators::build(&pp);
+        let lots = [ChipLottery::draw(13, &pp, 1),
+                    ChipLottery::draw(7, &pp, 2)];
+        let statics: Vec<PlantStatic> = lots
+            .iter()
+            .map(|l| PlantStatic::from_lottery(l, &pp, 64))
+            .collect();
+        let refs: Vec<&PlantStatic> = statics.iter().collect();
+        let (mut arena, ranges) = SoaState::new_arena(&refs, &ops, &pp);
+        let mut single = SoaState::new(&statics[1], &ops, &pp);
+        let mut rng = crate::variability::rng::Rng::new(0xBAD);
+        for (p, st) in statics.iter().enumerate() {
+            let t0: Vec<f32> = (0..st.n_padded * S)
+                .map(|_| rng.uniform_in(20.0, 90.0) as f32)
+                .collect();
+            let u0: Vec<f32> = (0..st.n_padded * NC)
+                .map(|_| rng.uniform() as f32)
+                .collect();
+            arena.load_state_range(&t0, ranges[p]);
+            arena.load_util_range(&u0, ranges[p]);
+            arena.set_flow_range(0.75, ranges[p]);
+            arena.set_inlet_range(55.0, ops.inv_c[IDX_WATER], ranges[p]);
+            if p == 1 {
+                single.load(&t0, &u0);
+                single.set_flow(0.75);
+                single.set_inlet(55.0, ops.inv_c[IDX_WATER]);
+            }
+        }
+        arena.poison_state_range(ranges[0]);
+        let mut sums = vec![(0.0f64, 0.0f32); 2];
+        for _ in 0..10 {
+            soa_substep_ranges(&mut arena, &pp, &ranges, &mut sums);
+            let (p1, t1) = soa_substep(&mut single, &pp, statics[1].n_nodes);
+            assert!(!sums[0].0.is_finite() || !sums[0].1.is_finite(),
+                    "poisoned plant's reductions must go non-finite");
+            assert_eq!(sums[1].0.to_bits(), p1.to_bits());
+            assert_eq!(sums[1].1.to_bits(), t1.to_bits());
+        }
+        let mut a = vec![0.0f32; statics[1].n_padded * S];
+        let mut b = vec![0.0f32; statics[1].n_padded * S];
+        arena.materialize_range(ranges[1], &mut a);
+        single.materialize(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

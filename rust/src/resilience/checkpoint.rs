@@ -1,0 +1,271 @@
+//! The `idatacool-ckpt/1` snapshot codec and atomic persistence.
+//!
+//! A snapshot is a flat little-endian byte stream with bit-exact floats
+//! (`f64::to_bits` / `f32::to_bits` — resume must be *bitwise*
+//! identical to an uninterrupted run, so no decimal round-trips) and
+//! length-prefixed strings/vectors. The stream opens with the
+//! [`MAGIC`] tag; readers reject anything else before touching the
+//! payload. The fleet driver owns the payload layout (DESIGN.md §8
+//! documents it field by field); this module is only the codec plus
+//! [`atomic_write`] — write to a sibling `.tmp`, fsync, rename — so a
+//! crash mid-checkpoint leaves either the previous complete snapshot or
+//! none, never a torn file.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Version tag; bump the suffix on any layout change.
+pub const MAGIC: &str = "idatacool-ckpt/1";
+
+/// Append-only snapshot encoder.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    /// Start a snapshot: the magic tag is always the first field.
+    pub fn new() -> Self {
+        let mut w = SnapWriter { buf: Vec::new() };
+        w.str(MAGIC);
+        w
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential snapshot decoder over a borrowed byte buffer.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    /// Open a snapshot; fails unless the stream starts with [`MAGIC`].
+    pub fn new(buf: &'a [u8]) -> Result<Self> {
+        let mut r = SnapReader { buf, pos: 0 };
+        let magic = r.str().context("snapshot magic")?;
+        if magic != MAGIC {
+            bail!("not an {MAGIC} snapshot (magic `{magic}`)");
+        }
+        Ok(r)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated snapshot: need {n} bytes at offset {}",
+                  self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.f64()?),
+        })
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .context("snapshot string is not UTF-8")?
+            .to_string())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    /// True when every byte has been consumed (layout sanity check).
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Crash-consistent write: the bytes land in `<path>.tmp`, are synced,
+/// then renamed over `path`. Readers only ever see a complete snapshot.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(),
+                                 path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trips_bit_exact() {
+        let mut w = SnapWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u64(u64::MAX - 3);
+        w.usize(42);
+        w.f64(f64::MIN); // peak_pooled_w's initial sentinel
+        w.f64(-0.0);
+        w.f32(f32::NAN);
+        w.opt_f64(Some(1.5e-300));
+        w.opt_f64(None);
+        w.str("mixed scenario");
+        w.f32s(&[1.0, -2.5, f32::INFINITY]);
+        w.f64s(&[0.1, 0.2]);
+        let bytes = w.into_bytes();
+
+        let mut r = SnapReader::new(&bytes).unwrap();
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize().unwrap(), 42);
+        assert_eq!(r.f64().unwrap().to_bits(), f64::MIN.to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f32().unwrap().is_nan());
+        assert_eq!(r.opt_f64().unwrap(), Some(1.5e-300));
+        assert_eq!(r.opt_f64().unwrap(), None);
+        assert_eq!(r.str().unwrap(), "mixed scenario");
+        let v = r.f32s().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[2], f32::INFINITY);
+        assert_eq!(r.f64s().unwrap(), vec![0.1, 0.2]);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn reader_rejects_bad_magic_and_truncation() {
+        let mut w = SnapWriter::new();
+        w.u64(1);
+        let mut bytes = w.into_bytes();
+        assert!(SnapReader::new(&bytes[..bytes.len() - 1])
+            .map(|mut r| r.u64().is_err())
+            .unwrap_or(true));
+        bytes[10] ^= 0xFF; // corrupt the magic text
+        assert!(SnapReader::new(&bytes).is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file() {
+        let dir = std::env::temp_dir().join("idatacool-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("t{}.ckpt", std::process::id()));
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second-longer").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second-longer");
+        assert!(!path.with_extension("tmp").exists());
+        let _ = std::fs::remove_file(&path);
+    }
+}

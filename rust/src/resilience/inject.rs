@@ -1,0 +1,383 @@
+//! Deterministic chaos injection: seeded, config-driven fault plans.
+//!
+//! A *plan* is a semicolon-separated list of rules; each rule is a
+//! comma-separated `key=value` list:
+//!
+//! ```text
+//! site=plant_tick,kind=panic,plant=1,tick=7
+//! site=megabatch_sweep,kind=stall_ms,arg=50
+//! site=plant_tick,kind=poison_nan,plant=0
+//! ```
+//!
+//!  * `site` (required) — where the fault fires; see [`Site`].
+//!  * `kind` (required) — `panic`, `stall_ms` (duration via `arg`, ms),
+//!    or `poison_nan`.
+//!  * `plant` (optional) — restrict to one plant index; omitted = any.
+//!  * `tick` (optional) — the 1-based invocation count of the
+//!    (site, plant) pair at which the rule fires. Omitted ticks are
+//!    derived from the plan seed: rule *i* fires at
+//!    `splitmix64(seed ^ (i+1)·GOLDEN) % 40 + 1`, so the same seed
+//!    always produces the same fire ticks (the determinism proptest
+//!    gates this).
+//!
+//! Each rule fires **once**. Fired events are appended to an in-memory
+//! log (`site=… plant=… tick=… kind=…` lines) that `take_log` drains —
+//! the fleet CLI prints it with the quarantine report, and the
+//! chaos-determinism proptest compares it across repeated runs.
+//!
+//! Arming is process-global. The hot-path contract is the same as
+//! `obs::enabled()`: call sites guard with `if inject::armed() { … }`,
+//! and `armed()` is a single relaxed atomic load — when no plan is
+//! armed (the default) that load is the entire cost.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::variability::rng::splitmix64;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Is a chaos plan armed? One relaxed load; inlined into every site.
+#[inline(always)]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Named injection sites. The catalog is closed on purpose: every site
+/// is a place with a containment story (DESIGN.md §8) — a panic at
+/// `PlantTick` quarantines one plant, at `MegabatchSweep` the shard's
+/// bucket, at `FacilityStep` it forces the post-hoc facility replay,
+/// and at `ServerCompute` it is absorbed by the worker's catch_unwind
+/// into a 500/504 envelope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    PlantTick = 0,
+    MegabatchSweep = 1,
+    FacilityStep = 2,
+    ServerCompute = 3,
+}
+
+impl Site {
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::PlantTick => "plant_tick",
+            Site::MegabatchSweep => "megabatch_sweep",
+            Site::FacilityStep => "facility_step",
+            Site::ServerCompute => "server_compute",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Site> {
+        match s {
+            "plant_tick" => Some(Site::PlantTick),
+            "megabatch_sweep" => Some(Site::MegabatchSweep),
+            "facility_step" => Some(Site::FacilityStep),
+            "server_compute" => Some(Site::ServerCompute),
+            _ => None,
+        }
+    }
+}
+
+/// What a matched rule does at its site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FaultKind {
+    /// `panic!` after logging — the containment layers catch it.
+    Panic,
+    /// Sleep for the given milliseconds (deadline/timeout testing).
+    StallMs(u64),
+    /// Ask the caller to poison its own state with NaN.
+    PoisonNan,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::StallMs(_) => "stall_ms",
+            FaultKind::PoisonNan => "poison_nan",
+        }
+    }
+}
+
+/// Action returned to the call site. Panics and stalls are executed
+/// inside [`fire`]; poisoning is the caller's job (only it can reach
+/// its lanes), so it comes back as a value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    PoisonNan,
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    site: Site,
+    kind: FaultKind,
+    plant: Option<usize>,
+    tick: u64,
+    fired: bool,
+}
+
+struct ChaosState {
+    rules: Vec<Rule>,
+    /// Invocation counts per (site, plant) pair; plant-less sites count
+    /// under `u64::MAX`.
+    counts: BTreeMap<(u8, u64), u64>,
+    log: Vec<String>,
+}
+
+fn state() -> &'static Mutex<Option<ChaosState>> {
+    static S: OnceLock<Mutex<Option<ChaosState>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(None))
+}
+
+fn lock_state() -> MutexGuard<'static, Option<ChaosState>> {
+    // An injected panic unwinds while the guard is held; recover the
+    // poisoned lock — the state itself is always left consistent.
+    state().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn derive_tick(seed: u64, rule_index: usize) -> u64 {
+    let mix = seed ^ (rule_index as u64 + 1)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(mix).1 % 40 + 1
+}
+
+fn parse_rule(text: &str, index: usize, seed: u64) -> Result<Rule> {
+    let mut site = None;
+    let mut kind = None;
+    let mut plant = None;
+    let mut tick = None;
+    let mut arg: Option<u64> = None;
+    for field in text.split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        let (k, v) = field
+            .split_once('=')
+            .ok_or_else(|| anyhow!("chaos rule field `{field}` is not key=value"))?;
+        match k.trim() {
+            "site" => {
+                site = Some(Site::by_name(v.trim()).ok_or_else(|| {
+                    anyhow!("unknown chaos site `{}`", v.trim())
+                })?)
+            }
+            "kind" => kind = Some(v.trim().to_string()),
+            "plant" => plant = Some(v.trim().parse::<usize>()?),
+            "tick" => tick = Some(v.trim().parse::<u64>()?),
+            "arg" => arg = Some(v.trim().parse::<u64>()?),
+            other => bail!("unknown chaos rule key `{other}`"),
+        }
+    }
+    let site = site.ok_or_else(|| anyhow!("chaos rule `{text}` has no site="))?;
+    let kind = match kind.as_deref() {
+        Some("panic") => FaultKind::Panic,
+        Some("stall_ms") => FaultKind::StallMs(arg.unwrap_or(100)),
+        Some("poison_nan") => FaultKind::PoisonNan,
+        Some(other) => bail!("unknown chaos kind `{other}`"),
+        None => bail!("chaos rule `{text}` has no kind="),
+    };
+    let tick = match tick {
+        Some(t) if t >= 1 => t,
+        Some(_) => bail!("chaos tick is 1-based"),
+        None => derive_tick(seed, index),
+    };
+    Ok(Rule { site, kind, plant, tick, fired: false })
+}
+
+/// Arm a fault plan. Replaces any armed plan; resets counters and log.
+pub fn arm(plan: &str, seed: u64) -> Result<()> {
+    let mut rules = Vec::new();
+    for (i, text) in plan.split(';').enumerate() {
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        rules.push(parse_rule(text, i, seed)?);
+    }
+    if rules.is_empty() {
+        bail!("chaos plan `{plan}` contains no rules");
+    }
+    *lock_state() = Some(ChaosState {
+        rules,
+        counts: BTreeMap::new(),
+        log: Vec::new(),
+    });
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Arm from a single spec string: an optional leading `seed=N;` segment
+/// followed by the plan (`--chaos` / `IDATACOOL_CHAOS` use this form).
+pub fn arm_spec(spec: &str) -> Result<()> {
+    let spec = spec.trim();
+    if let Some(rest) = spec.strip_prefix("seed=") {
+        let (seed_text, plan) = rest
+            .split_once(';')
+            .ok_or_else(|| anyhow!("chaos spec `seed=N` needs a ;plan"))?;
+        let seed = seed_text.trim().parse::<u64>()?;
+        return arm(plan, seed);
+    }
+    arm(spec, 0)
+}
+
+/// Disarm and drop all chaos state.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    *lock_state() = None;
+}
+
+/// Drain the injected-event log (armed state is kept).
+pub fn take_log() -> Vec<String> {
+    match lock_state().as_mut() {
+        Some(st) => std::mem::take(&mut st.log),
+        None => Vec::new(),
+    }
+}
+
+/// One site invocation. Counts the (site, plant) pair, fires any due
+/// rules (once each), logs them, executes stalls and panics inline, and
+/// returns `PoisonNan` for the caller to apply. Only reached behind an
+/// `armed()` guard, so the unarmed hot path never touches the mutex.
+pub fn fire(site: Site, plant: Option<usize>) -> Option<Action> {
+    let mut action = None;
+    let mut stall = None;
+    let mut do_panic = false;
+    {
+        let mut guard = lock_state();
+        let st = guard.as_mut()?;
+        let key = (site as u8, plant.map(|p| p as u64).unwrap_or(u64::MAX));
+        let count = st.counts.entry(key).or_insert(0);
+        *count += 1;
+        let now = *count;
+        let mut fired = Vec::new();
+        for rule in st.rules.iter_mut() {
+            if rule.fired || rule.site != site || rule.tick != now {
+                continue;
+            }
+            if let Some(rp) = rule.plant {
+                if plant != Some(rp) {
+                    continue;
+                }
+            }
+            rule.fired = true;
+            fired.push((rule.kind, rule.plant));
+            match rule.kind {
+                FaultKind::Panic => do_panic = true,
+                FaultKind::StallMs(ms) => stall = Some(ms),
+                FaultKind::PoisonNan => action = Some(Action::PoisonNan),
+            }
+        }
+        for (kind, rule_plant) in fired {
+            st.log.push(format!(
+                "site={} plant={} tick={} kind={}",
+                site.name(),
+                rule_plant
+                    .or(plant)
+                    .map(|p| p.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                now,
+                kind.name(),
+            ));
+        }
+    }
+    if let Some(ms) = stall {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+    if do_panic {
+        panic!("chaos: injected panic at site {}", site.name());
+    }
+    action
+}
+
+/// Tests that arm the process-global injector serialize on this lock so
+/// `cargo test`'s parallel threads cannot interleave plans.
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static L: Mutex<()> = Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_fire_is_none_and_cheap() {
+        let _g = test_lock();
+        disarm();
+        assert!(!armed());
+        assert_eq!(fire(Site::PlantTick, Some(0)), None);
+    }
+
+    #[test]
+    fn plan_parses_and_fires_once_at_tick() {
+        let _g = test_lock();
+        arm("site=plant_tick,kind=poison_nan,plant=2,tick=3", 0).unwrap();
+        assert!(armed());
+        for t in 1..=5u64 {
+            let a = fire(Site::PlantTick, Some(2));
+            if t == 3 {
+                assert_eq!(a, Some(Action::PoisonNan), "tick {t}");
+            } else {
+                assert_eq!(a, None, "tick {t}");
+            }
+            // other plants never match
+            assert_eq!(fire(Site::PlantTick, Some(1)), None);
+        }
+        let log = take_log();
+        assert_eq!(log,
+                   vec!["site=plant_tick plant=2 tick=3 kind=poison_nan"
+                       .to_string()]);
+        disarm();
+    }
+
+    #[test]
+    fn derived_ticks_are_seed_deterministic() {
+        let _g = test_lock();
+        let run = |seed: u64| -> Vec<String> {
+            arm("site=plant_tick,kind=poison_nan;\
+                 site=facility_step,kind=poison_nan",
+                seed)
+            .unwrap();
+            for _ in 0..64 {
+                let _ = fire(Site::PlantTick, Some(0));
+                let _ = fire(Site::FacilityStep, None);
+            }
+            let log = take_log();
+            disarm();
+            log
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a.len(), 2, "{a:?}");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn injected_panic_unwinds_and_state_survives() {
+        let _g = test_lock();
+        arm("site=megabatch_sweep,kind=panic,tick=1", 0).unwrap();
+        let r = std::panic::catch_unwind(|| fire(Site::MegabatchSweep, None));
+        assert!(r.is_err());
+        // the rule fired once; further invocations are clean
+        assert_eq!(fire(Site::MegabatchSweep, None), None);
+        assert_eq!(take_log().len(), 1);
+        disarm();
+    }
+
+    #[test]
+    fn arm_spec_accepts_seed_prefix_and_rejects_garbage() {
+        let _g = test_lock();
+        arm_spec("seed=9;site=plant_tick,kind=panic").unwrap();
+        assert!(armed());
+        disarm();
+        assert!(arm_spec("site=nowhere,kind=panic").is_err());
+        assert!(arm_spec("site=plant_tick").is_err());
+        assert!(arm_spec("").is_err());
+        assert!(!armed());
+    }
+}

@@ -1,0 +1,29 @@
+//! Resilience: fault containment, deterministic chaos injection, and
+//! crash-consistent checkpoint/resume.
+//!
+//! The paper's operational story (Sect. 4) is continuity under degraded
+//! cooling — the adsorption chiller can drop out and the plant keeps
+//! running inside its thermal envelope. This module gives the *software*
+//! stack the same discipline, in three pieces:
+//!
+//!  * **`inject`** — a seeded, config-driven chaos injector. Fault plans
+//!    name a site (plant tick, megabatch sweep, facility step, server
+//!    compute) and a kind (`panic`, `stall_ms`, `poison_nan`); the same
+//!    seed always fires at the same invocation counts. Unarmed (the
+//!    default), every site check is one relaxed atomic load — the same
+//!    zero-cost pattern as `obs::enabled()`.
+//!  * **`checkpoint`** — the versioned `idatacool-ckpt/1` snapshot codec
+//!    (length-prefixed, bit-exact floats) plus atomic tmp+rename
+//!    persistence. The fleet driver snapshots every `--checkpoint-every`
+//!    ticks and `--resume` continues bitwise-identical to an
+//!    uninterrupted run.
+//!  * **Quarantine** (lives in `fleet`): a panicking or NaN-poisoned
+//!    plant is evicted from the lane arena and recorded in
+//!    `FleetAggregate.quarantined`; the survivors complete and the fleet
+//!    exits with degraded success instead of aborting.
+//!
+//! See DESIGN.md §8 for the quarantine contract, the checkpoint format,
+//! and the chaos site catalog.
+
+pub mod checkpoint;
+pub mod inject;

@@ -169,10 +169,12 @@ impl Batcher {
         }
     }
 
-    /// Admit `job` and block until its round has run. Returns the
-    /// response plus the occupancy (total plants) of the arena chunk
-    /// that carried it — surfaced to clients as the `x-batch` header.
-    pub fn submit(&self, job: BatchJob) -> Result<(CachedResponse, usize)> {
+    /// Admit `job` and block until its round has run — at most
+    /// `deadline`, when the server has one. Returns the response plus
+    /// the occupancy (total plants) of the arena chunk that carried it
+    /// — surfaced to clients as the `x-batch` header.
+    pub fn submit(&self, job: BatchJob, deadline: Option<Duration>)
+                  -> Result<(CachedResponse, usize)> {
         let admit_span = crate::obs::span("batch_admit");
         let slot = Arc::new(Slot::new());
         let lead = {
@@ -200,7 +202,23 @@ impl Batcher {
             self.run_round(jobs);
         }
         drop(admit_span);
-        let (result, occupancy) = slot.wait();
+        // A leader's slot is already published by its own `run_round`;
+        // only a follower's wait can hit the bound. The round still
+        // publishes the real verdict to the slot — this caller just
+        // stops waiting for it.
+        let verdict = match deadline {
+            Some(d) => slot.wait_timeout(d),
+            None => Some(slot.wait()),
+        };
+        let Some((result, occupancy)) = verdict else {
+            return Ok((
+                super::error_cached(
+                    504,
+                    "deadline exceeded waiting for the batch round; retry",
+                ),
+                0,
+            ));
+        };
         match result {
             Ok(resp) => Ok((resp, occupancy)),
             Err(msg) => Err(anyhow::anyhow!(msg)),
@@ -284,20 +302,35 @@ fn sweep(
     let runs = {
         let _span = crate::obs::span("batch_sweep");
         match LockstepFleet::new(all) {
-            Ok(arena) => arena.run(None).map(|(plants, _)| plants),
+            Ok(arena) => arena.run(None).map(|(plants, _, q)| (plants, q)),
             // Mixed tick lengths / plant constants across requests:
             // hand the drivers back and run them one by one — bitwise
             // identical, just without the shared sweep.
             Err(ctxs) => megabatch::run_ctxs_sequential(ctxs),
         }
     };
-    let runs = match runs {
-        Ok(runs) => runs,
+    let (runs, quarantined) = match runs {
+        Ok(pair) => pair,
         Err(e) => {
             let msg = format!("{e:#}");
             return kinds.iter().map(|_| Err(msg.clone())).collect();
         }
     };
+    // A quarantine inside a *batched* sweep cannot be attributed to one
+    // job: plant indices are job-local (every `/simulate` lane is index
+    // 0), so the lane→job demux below relies on every admitted plant
+    // surviving. Containment here is the error envelope — each request
+    // in the chunk gets a retriable failure instead of a silently
+    // truncated document. (Solo and CLI fleet paths degrade per plant;
+    // see `fleet::run_resilient`.)
+    if !quarantined.is_empty() {
+        let msg = format!(
+            "{} plant(s) quarantined during batched sweep ({}); retry solo",
+            quarantined.len(),
+            quarantined[0].reason,
+        );
+        return kinds.iter().map(|_| Err(msg.clone())).collect();
+    }
 
     // Demux: lanes were packed in job order, so split by plant counts.
     debug_assert_eq!(runs.len(), counts.iter().sum::<usize>());
@@ -356,7 +389,11 @@ fn respond(kind: JobKind, mut runs: Vec<PlantRun>) -> Result<CachedResponse> {
                 &runs,
                 FacilityParams::from_plant(&fc.base.pp, fc.n_plants),
             );
-            let aggregate = FleetAggregate::build(&runs, &facility);
+            // The sweep guarantees a quarantine-free chunk (see above),
+            // so the aggregate's quarantined section is always empty on
+            // this path — batched bodies stay byte-equal to solo ones.
+            let aggregate = FleetAggregate::build(&runs, &facility,
+                                                  Vec::new());
             let run = FleetRun {
                 plants: runs,
                 facility,
@@ -393,6 +430,9 @@ mod tests {
 
     #[test]
     fn jobs_group_by_tick_grid_and_chunk_by_plant_budget() {
+        // Rounds sweep real fleets; keep chaos plans armed by other
+        // tests in this binary from firing mid-round.
+        let _guard = crate::resilience::inject::test_lock();
         let b = Batcher::new(Duration::from_millis(0), 2);
         // 3 one-plant jobs with a budget of 2: the round must answer
         // all of them, as one chunk of 2 and one of 1.
@@ -416,6 +456,7 @@ mod tests {
 
     #[test]
     fn oversized_job_forms_its_own_chunk() {
+        let _guard = crate::resilience::inject::test_lock();
         let b = Batcher::new(Duration::from_millis(0), 1);
         let fc = FleetConfig {
             n_plants: 3,
@@ -441,13 +482,14 @@ mod tests {
 
     #[test]
     fn submit_window_collects_concurrent_jobs() {
+        let _guard = crate::resilience::inject::test_lock();
         let b = Arc::new(Batcher::new(Duration::from_millis(150), 16));
         std::thread::scope(|s| {
             let mut joins = Vec::new();
             for seed in 1..=3u64 {
                 let b = b.clone();
                 joins.push(s.spawn(move || {
-                    b.submit(sim_job(seed)).unwrap()
+                    b.submit(sim_job(seed), None).unwrap()
                 }));
             }
             let results: Vec<(CachedResponse, usize)> =
@@ -463,9 +505,22 @@ mod tests {
     }
 
     #[test]
+    fn follower_deadline_answers_504() {
+        let b = Batcher::new(Duration::from_millis(5), 16);
+        // Pose as a stuck round leader so the submit below follows —
+        // and nobody ever publishes its slot within the budget.
+        b.round.lock().unwrap().collecting = true;
+        let (resp, n) =
+            b.submit(sim_job(1), Some(Duration::from_millis(30))).unwrap();
+        assert_eq!(resp.status, 504);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
     fn mixed_tick_grids_fall_back_per_group() {
         // 60 s and 120 s jobs must not lockstep together; both still
         // answer correctly via separate groups.
+        let _guard = crate::resilience::inject::test_lock();
         let b = Batcher::new(Duration::from_millis(0), 16);
         let mut long = base();
         long.duration_s = 120.0;

@@ -38,6 +38,28 @@ impl<V: Clone> Slot<V> {
         g.as_ref().cloned().unwrap()
     }
 
+    /// `wait` with a bound: `None` when the leader has not published
+    /// within `budget` (the follower's share of a request deadline).
+    /// The slot itself is unaffected — the leader still publishes, and
+    /// other followers still receive the value.
+    pub fn wait_timeout(&self, budget: std::time::Duration) -> Option<V> {
+        let deadline = std::time::Instant::now() + budget;
+        let mut g = self.result.lock().unwrap();
+        while g.is_none() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) =
+                self.ready.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if timeout.timed_out() && g.is_none() {
+                return None;
+            }
+        }
+        g.as_ref().cloned()
+    }
+
     pub(crate) fn publish(&self, v: V) {
         *self.result.lock().unwrap() = Some(v);
         self.ready.notify_all();
@@ -143,6 +165,30 @@ mod tests {
         for j in joins {
             assert_eq!(j.join().unwrap(), 42);
         }
+    }
+
+    #[test]
+    fn wait_timeout_bounds_the_follower() {
+        let c: Arc<Coalescer<u8>> = Arc::new(Coalescer::new());
+        let leader = match c.claim(9) {
+            Claim::Leader(s) => s,
+            _ => unreachable!(),
+        };
+        let follower = match c.claim(9) {
+            Claim::Follower(s) => s,
+            _ => unreachable!(),
+        };
+        // Leader never publishes within the budget: follower times out.
+        assert_eq!(
+            follower.wait_timeout(std::time::Duration::from_millis(10)),
+            None
+        );
+        // Late publish still lands for patient waiters.
+        c.complete(9, &leader, 5);
+        assert_eq!(
+            follower.wait_timeout(std::time::Duration::from_millis(10)),
+            Some(5)
+        );
     }
 
     #[test]

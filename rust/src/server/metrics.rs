@@ -271,6 +271,10 @@ impl Metrics {
 }
 
 /// A latency quantile back in milliseconds (0 when nothing recorded).
+///
+/// NaN convention (DESIGN.md §8): `Histogram::quantile` signals "no
+/// samples" with NaN; serialization boundaries map it to the inert
+/// in-range value (0 here) so NaN never reaches a JSON document.
 fn quantile_ms(h: &Histogram, q: f64) -> f64 {
     let lg = h.quantile(q);
     if lg.is_nan() {
@@ -280,7 +284,8 @@ fn quantile_ms(h: &Histogram, q: f64) -> f64 {
     }
 }
 
-/// A quantile of a linear histogram (0 when nothing recorded).
+/// A quantile of a linear histogram (0 when nothing recorded). Same
+/// NaN-at-the-boundary convention as [`quantile_ms`].
 fn quantile_or_zero(h: &Histogram, q: f64) -> f64 {
     let v = h.quantile(q);
     if v.is_nan() {

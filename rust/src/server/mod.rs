@@ -45,6 +45,19 @@
 //! so a K-worker server answers bitwise identically to a one-shot CLI
 //! run, and cache hits are indistinguishable from recomputation.
 //!
+//! **Deadlines** (`[serve] deadline_ms`, 0 = unbounded): every cached
+//! compute carries a wall-clock budget. Followers bound their wait on
+//! the leader (`Slot::wait_timeout`), batched jobs bound their wait on
+//! the round leader, and an over-budget answer is replaced by a 504
+//! `idatacool-error/1` envelope carrying `Retry-After` — the computed
+//! result is still cached and published, so an immediate retry is a
+//! cache hit. 503 (shed) and 504 responses always carry `Retry-After`.
+//!
+//! **Shutdown**: `POST /v1/shutdown`, `ServerHandle::stop`, SIGTERM and
+//! SIGINT all converge on the same drain path — stop accepting, close
+//! the job queue, join the worker pool (every already-dispatched
+//! connection still gets an answer).
+//!
 //! Endpoints: `POST /v1/simulate` (`?stream=1` for per-tick NDJSON),
 //! `POST /v1/fleet`, `POST /v1/sweep`, `GET /v1/healthz`,
 //! `GET /v1/metrics`, `POST /v1/shutdown` (all also reachable
@@ -70,6 +83,7 @@ use crate::coordinator::SimulationDriver;
 use crate::figures::sweep;
 use crate::fleet::{megabatch, FleetDriver};
 use crate::plant::TickOutput;
+use crate::resilience::inject::{self, Site};
 use crate::util::http::{error_envelope, Request, Response};
 use crate::util::json::JsonBuilder;
 use crate::util::lru::ShardedLru;
@@ -149,14 +163,37 @@ impl CachedResponse {
 }
 
 /// An error in `CachedResponse` form — same `idatacool-error/1`
-/// envelope every other error path emits.
-fn error_cached(status: u16, msg: &str) -> CachedResponse {
+/// envelope every other error path emits. Crate-visible so the batch
+/// scheduler can answer a deadline overrun with the same envelope.
+pub(crate) fn error_cached(status: u16, msg: &str) -> CachedResponse {
     let body = error_envelope(status, msg, None).to_string();
     CachedResponse {
         status,
         content_type: "application/json".into(),
         body: Arc::new(body.into_bytes()),
     }
+}
+
+/// Finish a `serve_cached` outcome on the wire: attach the `x-cache`
+/// header and, for back-pressure statuses (503/504), tell the client
+/// when to come back. A 504 retry is typically a cache hit — the
+/// leader's result is cached even when this client's budget ran out.
+fn answer(c: CachedResponse, cache_status: &str) -> Response {
+    let status = c.status;
+    let resp = c.to_response(cache_status);
+    if status == 503 || status == 504 {
+        resp.with_header("retry-after", "1")
+    } else {
+        resp
+    }
+}
+
+/// The 504 every deadline overrun answers with.
+fn deadline_response(cache_status: &str) -> Response {
+    answer(
+        error_cached(504, "deadline exceeded; retry (result may be cached)"),
+        cache_status,
+    )
 }
 
 /// Per-worker reusable simulation buffers: each worker thread owns one
@@ -197,6 +234,9 @@ struct Shared {
     /// The continuous-batching scheduler; `None` when
     /// `batch_window_ms = 0` (every request computes solo).
     batch: Option<Batcher>,
+    /// Per-request wall-clock budget; `None` when `deadline_ms = 0`.
+    /// Overruns answer 504 — see the module docs.
+    deadline: Option<Duration>,
     metrics: Metrics,
     shutdown: AtomicBool,
     local_addr: SocketAddr,
@@ -242,11 +282,14 @@ impl Server {
                 sc.batch_max_plants,
             )
         });
+        let deadline = (sc.deadline_ms > 0)
+            .then(|| Duration::from_millis(sc.deadline_ms as u64));
         let shared = Arc::new(Shared {
             base,
             cache: ShardedLru::new(sc.cache_cap, CACHE_SHARDS),
             inflight: Coalescer::new(),
             batch,
+            deadline,
             metrics: Metrics::new(workers),
             shutdown: AtomicBool::new(false),
             local_addr,
@@ -287,8 +330,11 @@ impl Server {
         self.listener
             .set_nonblocking(true)
             .context("set listener nonblocking")?;
+        signal::install();
         let mut parked: Vec<(Conn, Instant)> = Vec::new();
-        while !self.shared.shutdown.load(Ordering::SeqCst) {
+        while !self.shared.shutdown.load(Ordering::SeqCst)
+            && !signal::pending()
+        {
             let mut active = false;
             // 1. Drain the accept backlog.
             loop {
@@ -424,7 +470,51 @@ impl ServerHandle {
 fn shed(mut s: TcpStream) {
     let _ = s.set_nonblocking(false);
     let _ = Response::error(503, "job queue full; retry later")
+        .with_header("retry-after", "1")
         .write_to(&mut s);
+}
+
+/// SIGTERM/SIGINT → the same graceful drain as `POST /v1/shutdown`:
+/// the readiness loop observes the flag on its next pass, stops
+/// accepting, closes the job queue, and joins the worker pool.
+#[cfg(unix)]
+mod signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    // Async-signal-safe by construction: one atomic store, no
+    // allocation, no locks.
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handlers through the raw `signal(2)` symbol std
+    /// already links on unix — no new dependency. Idempotent.
+    pub(super) fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_term as usize);
+            signal(SIGTERM, on_term as usize);
+        }
+    }
+
+    pub(super) fn pending() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod signal {
+    pub(super) fn install() {}
+
+    pub(super) fn pending() -> bool {
+        false
+    }
 }
 
 /// Serve **one** request from `conn`, then either drop it or park it
@@ -716,11 +806,13 @@ fn ep_api(ep: &Endpoint, req: &Request, shared: &Arc<Shared>,
     }
 }
 
-/// The shared serving discipline: cache, coalesce, or compute.
+/// The shared serving discipline: cache, coalesce, or compute — all
+/// under the configured deadline, when there is one.
 fn serve_cached<F>(shared: &Arc<Shared>, key: u64, compute: F) -> Response
 where
     F: FnOnce() -> Result<CachedResponse>,
 {
+    let t0 = Instant::now();
     let lookup_span = crate::obs::span("cache_lookup");
     let hit = shared.cache.get(key);
     drop(lookup_span);
@@ -732,7 +824,16 @@ where
         Claim::Follower(slot) => {
             shared.metrics.coalesce();
             let _wait_span = crate::obs::span("coalesce_wait");
-            slot.wait().to_response("coalesced")
+            match shared.deadline {
+                // Bounded wait: give up on the leader at the deadline.
+                // The slot is untouched — the leader still publishes
+                // and caches, so this client's retry hits the cache.
+                Some(d) => match slot.wait_timeout(d) {
+                    Some(c) => answer(c, "coalesced"),
+                    None => deadline_response("coalesced"),
+                },
+                None => answer(slot.wait(), "coalesced"),
+            }
         }
         Claim::Leader(slot) => {
             // Double-check the cache now that we hold leadership: a
@@ -753,7 +854,13 @@ where
             );
             drop(compute_span);
             let (resp, cacheable) = match outcome {
-                Ok(Ok(c)) => (c, true),
+                // Only *successful* bodies enter the cache: an Ok carry
+                // can be a deadline 504 minted on the batch path, and
+                // error envelopes must never be replayed as hits.
+                Ok(Ok(c)) => {
+                    let ok = c.status < 400;
+                    (c, ok)
+                }
                 Ok(Err(e)) => (error_cached(500, &format!("{e:#}")), false),
                 Err(_) => (error_cached(500, "simulation panicked"), false),
             };
@@ -762,9 +869,19 @@ where
             {
                 shared.metrics.cache_evicted();
             }
-            // Must always run, or followers would wait forever.
+            // Must always run, or followers would wait forever. The
+            // real result is published even when the leader itself is
+            // over budget — followers with time left still get it.
             shared.inflight.complete(key, &slot, resp.clone());
-            resp.to_response("miss")
+            if let Some(d) = shared.deadline {
+                if resp.status < 400 && t0.elapsed() > d {
+                    // Computed, cached, published — but this client's
+                    // budget is spent; answer what the deadline
+                    // contract promises.
+                    return deadline_response("miss");
+                }
+            }
+            answer(resp, "miss")
         }
     }
 }
@@ -809,12 +926,23 @@ fn parse_query(req: &Request, allow_stream: bool) -> Result<bool, Response> {
 fn compute_api(areq: ApiRequest, shared: &Arc<Shared>,
                scratch: &mut ServeScratch,
                occupancy: &Cell<Option<usize>>) -> Result<CachedResponse> {
+    // Chaos site `server_compute`: an injected panic unwinds into
+    // `serve_cached`'s catch, which publishes a 500 envelope to every
+    // follower and leaves the cache untouched — the containment path a
+    // real simulation panic would take. (Only the panic kind is
+    // meaningful here; a poison-NaN plan is a no-op at this site.)
+    if inject::armed() {
+        let _ = inject::fire(Site::ServerCompute, None);
+    }
     match areq {
         ApiRequest::Simulate { sim, stream } => {
             if let Some(b) = &shared.batch {
                 if megabatch::precheck(&sim.cfg) {
-                    let (resp, n) = b.submit(BatchJob::sim(sim, stream)?)?;
-                    occupancy.set(Some(n));
+                    let (resp, n) = b
+                        .submit(BatchJob::sim(sim, stream)?, shared.deadline)?;
+                    if resp.status < 400 {
+                        occupancy.set(Some(n));
+                    }
                     return Ok(resp);
                 }
             }
@@ -823,8 +951,11 @@ fn compute_api(areq: ApiRequest, shared: &Arc<Shared>,
         ApiRequest::Fleet(fc) => {
             if let Some(b) = &shared.batch {
                 if fc.megabatch && megabatch::precheck(&fc.base) {
-                    let (resp, n) = b.submit(BatchJob::fleet(fc)?)?;
-                    occupancy.set(Some(n));
+                    let (resp, n) =
+                        b.submit(BatchJob::fleet(fc)?, shared.deadline)?;
+                    if resp.status < 400 {
+                        occupancy.set(Some(n));
+                    }
                     return Ok(resp);
                 }
             }

@@ -217,6 +217,7 @@ pub fn error_code(status: u16) -> &'static str {
         500 => "internal_error",
         501 => "not_implemented",
         503 => "overloaded",
+        504 => "deadline_exceeded",
         505 => "http_version_unsupported",
         _ => "error",
     }
@@ -329,6 +330,7 @@ pub fn reason(status: u16) -> &'static str {
         500 => "Internal Server Error",
         501 => "Not Implemented",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         505 => "HTTP Version Not Supported",
         _ => "Unknown",
     }

@@ -8,9 +8,20 @@ pub mod json;
 pub mod lru;
 pub mod shard;
 
-/// Clamp helper for f32 (stable API, avoids float NaN surprises: NaN -> lo).
+/// Clamp helper for f32 with pinned NaN behavior: **NaN → `lo`**.
+///
+/// This is the repo's documented NaN convention at control boundaries
+/// (DESIGN.md §8): a NaN reaching a clamp is mapped to the inert end of
+/// the range (valve closed, fan at minimum, zero power) rather than
+/// propagating — unlike `f32::clamp`, which panics debug-only on a NaN
+/// *bound* and returns NaN for a NaN *input*. Detection (as opposed to
+/// containment) is the job of the `is_finite` sentinels in the SoA
+/// epilogues, which quarantine the offending plant.
 #[inline]
 pub fn clampf(x: f32, lo: f32, hi: f32) -> f32 {
+    // Ordered comparisons are false for NaN, so a NaN `x` falls through
+    // both arms to `lo`. Do not "simplify" to `x.max(lo).min(hi)`:
+    // `f32::max` ignores a NaN argument and would return NaN for NaN x.
     if x >= hi {
         hi
     } else if x >= lo {
@@ -35,7 +46,18 @@ mod tests {
         assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
         assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
         assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+
+    /// Regression for the documented NaN → `lo` convention: every NaN
+    /// input lands on the inert end of the range, for any range, and
+    /// infinities clamp like ordinary out-of-range values.
+    #[test]
+    fn clamp_nan_maps_to_lo() {
         assert_eq!(clampf(f32::NAN, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(-f32::NAN, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(f32::NAN, -3.0, -1.0), -3.0);
+        assert_eq!(clampf(f32::INFINITY, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(f32::NEG_INFINITY, 0.0, 1.0), 0.0);
     }
 
     #[test]

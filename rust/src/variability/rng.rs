@@ -79,6 +79,20 @@ impl Rng {
         idx.sort_unstable();
         idx
     }
+
+    /// The full generator state — SplitMix64 counter plus the cached
+    /// Box-Muller half-pair. Checkpoint/resume must restore *both* to
+    /// keep the normal stream bitwise identical (a resumed run that
+    /// dropped the cached half would shift every later draw).
+    pub fn state(&self) -> (u64, Option<f64>) {
+        (self.state, self.cached_normal)
+    }
+
+    /// Restore a state captured by [`Rng::state`].
+    pub fn restore(&mut self, state: u64, cached_normal: Option<f64>) {
+        self.state = state;
+        self.cached_normal = cached_normal;
+    }
 }
 
 #[cfg(test)]

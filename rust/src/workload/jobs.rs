@@ -50,6 +50,34 @@ pub struct Job {
     pub start_s: Option<f64>,
 }
 
+impl Job {
+    /// Checkpoint encoding (field order is the `idatacool-ckpt/1`
+    /// contract; see DESIGN.md §8).
+    pub fn save(&self, w: &mut crate::resilience::checkpoint::SnapWriter) {
+        w.u64(self.id);
+        w.usize(self.class);
+        w.usize(self.nodes);
+        w.f64(self.runtime_s);
+        w.f32(self.util);
+        w.f64(self.submit_s);
+        w.opt_f64(self.start_s);
+    }
+
+    /// Decode a job written by [`Job::save`].
+    pub fn load(r: &mut crate::resilience::checkpoint::SnapReader)
+                -> anyhow::Result<Job> {
+        Ok(Job {
+            id: r.u64()?,
+            class: r.usize()?,
+            nodes: r.usize()?,
+            runtime_s: r.f64()?,
+            util: r.f32()?,
+            submit_s: r.f64()?,
+            start_s: r.opt_f64()?,
+        })
+    }
+}
+
 /// Poisson job generator over a class mix.
 #[derive(Debug)]
 pub struct JobGenerator {
@@ -116,6 +144,29 @@ impl JobGenerator {
             self.next_id += 1;
         }
         out
+    }
+
+    /// Serialize the generator's dynamic state (RNG stream, id counter,
+    /// pending arrival). The mix and rate are configuration — the resume
+    /// path reconstructs them from the same `(n_nodes, target_load)`.
+    pub fn save_state(&self, w: &mut crate::resilience::checkpoint::SnapWriter) {
+        let (state, cached) = self.rng.state();
+        w.u64(state);
+        w.opt_f64(cached);
+        w.u64(self.next_id);
+        w.f64(self.next_arrival_s);
+    }
+
+    /// Restore state written by [`JobGenerator::save_state`].
+    pub fn load_state(&mut self,
+                      r: &mut crate::resilience::checkpoint::SnapReader)
+                      -> anyhow::Result<()> {
+        let state = r.u64()?;
+        let cached = r.opt_f64()?;
+        self.rng.restore(state, cached);
+        self.next_id = r.u64()?;
+        self.next_arrival_s = r.f64()?;
+        Ok(())
     }
 
     fn pick_class(&mut self) -> usize {

@@ -46,4 +46,17 @@ pub trait WorkloadSource: Send {
     fn advance(&mut self, dt: f64, plan: &mut UtilPlan);
     /// Human-readable stats line for the run report.
     fn stats(&self) -> String;
+    /// Serialize cross-tick state into a checkpoint snapshot. Sources
+    /// whose `advance` is a pure function of construction parameters
+    /// (stress, idle) keep the default and write nothing.
+    fn save_state(&self, _w: &mut crate::resilience::checkpoint::SnapWriter) {
+    }
+    /// Restore state written by `save_state` onto a freshly constructed
+    /// source of the same configuration (the resume path rebuilds the
+    /// source from config first, then overlays the dynamic state).
+    fn load_state(&mut self,
+                  _r: &mut crate::resilience::checkpoint::SnapReader)
+                  -> anyhow::Result<()> {
+        Ok(())
+    }
 }

@@ -8,6 +8,10 @@
 
 use std::collections::VecDeque;
 
+use anyhow::{bail, Result};
+
+use crate::resilience::checkpoint::{SnapReader, SnapWriter};
+
 use super::jobs::{Job, JobGenerator};
 use super::{UtilPlan, WorkloadSource};
 
@@ -213,6 +217,73 @@ impl WorkloadSource for BatchScheduler {
             self.mean_wait_s()
         )
     }
+
+    /// The scheduler is the stateful workload: free map, queue, running
+    /// set, generator stream, clock, and counters all cross ticks.
+    fn save_state(&self, w: &mut SnapWriter) {
+        w.usize(self.n_nodes);
+        w.u64(self.free.len() as u64);
+        for &f in &self.free {
+            w.bool(f);
+        }
+        w.u64(self.queue.len() as u64);
+        for j in &self.queue {
+            j.save(w);
+        }
+        w.u64(self.running.len() as u64);
+        for r in &self.running {
+            r.job.save(w);
+            w.u64(r.nodes.len() as u64);
+            for &n in &r.nodes {
+                w.u64(n as u64);
+            }
+            w.f64(r.end_s);
+        }
+        self.gen.save_state(w);
+        w.f64(self.now_s);
+        w.u64(self.started);
+        w.u64(self.finished);
+        w.u64(self.backfilled);
+        w.f64(self.wait_time_sum);
+        w.f64(self.node_seconds);
+    }
+
+    fn load_state(&mut self, r: &mut SnapReader) -> Result<()> {
+        let n_nodes = r.usize()?;
+        if n_nodes != self.n_nodes {
+            bail!("checkpointed scheduler has {n_nodes} nodes, \
+                   config has {}", self.n_nodes);
+        }
+        let n_free = r.usize()?;
+        if n_free != self.free.len() {
+            bail!("checkpointed free map has {n_free} entries");
+        }
+        for f in self.free.iter_mut() {
+            *f = r.bool()?;
+        }
+        self.queue.clear();
+        for _ in 0..r.usize()? {
+            self.queue.push_back(Job::load(r)?);
+        }
+        self.running.clear();
+        for _ in 0..r.usize()? {
+            let job = Job::load(r)?;
+            let mut nodes = Vec::new();
+            for _ in 0..r.usize()? {
+                nodes.push(r.u64()? as usize);
+            }
+            let end_s = r.f64()?;
+            self.running.push(Running { job, nodes, end_s });
+        }
+        self.gen.load_state(r)?;
+        self.now_s = r.f64()?;
+        self.started = r.u64()?;
+        self.finished = r.u64()?;
+        self.backfilled = r.u64()?;
+        self.wait_time_sum = r.f64()?;
+        self.node_seconds = r.f64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -263,6 +334,35 @@ mod tests {
             s.advance(30.0, &mut plan);
         }
         assert!(s.backfilled > 0, "no backfill in a busy queue");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        use crate::resilience::checkpoint::{SnapReader, SnapWriter};
+        let mut a = BatchScheduler::new(64, 0.9, 11);
+        let mut plan = UtilPlan::idle(64);
+        for _ in 0..500 {
+            a.advance(30.0, &mut plan);
+        }
+        let mut w = SnapWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = BatchScheduler::new(64, 0.9, 11);
+        let mut r = SnapReader::new(&bytes).unwrap();
+        b.load_state(&mut r).unwrap();
+        assert!(r.done());
+        let mut pa = UtilPlan::idle(64);
+        let mut pb = UtilPlan::idle(64);
+        for _ in 0..500 {
+            a.advance(30.0, &mut pa);
+            b.advance(30.0, &mut pb);
+            for (x, y) in pa.util.iter().zip(&pb.util) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(a.started, b.started);
+        assert_eq!(a.finished, b.finished);
+        assert_eq!(a.wait_time_sum.to_bits(), b.wait_time_sum.to_bits());
     }
 
     #[test]

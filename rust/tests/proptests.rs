@@ -567,6 +567,10 @@ fn prop_tracing_is_invisible() {
     use idatacool::coordinator::SimulationDriver;
     use idatacool::fleet::{scenario::Scenario, FleetConfig, FleetDriver};
 
+    // Fleet/sim runs carry chaos-injection sites; hold the injector's
+    // test lock so the resilience properties below can never arm a plan
+    // while this determinism property is mid-flight.
+    let _chaos_guard = idatacool::resilience::inject::test_lock();
     let run_sim = |cfg: &SimConfig| {
         SimulationDriver::new(cfg.clone()).unwrap().run(3).unwrap()
     };
@@ -617,6 +621,119 @@ fn prop_tracing_is_invisible() {
             plain_fleet.aggregate.fingerprint(),
             traced_fleet.aggregate.fingerprint(),
             "fleet aggregate must be identical with tracing on"
+        );
+    });
+}
+
+// ------------------------------------------------------------ resilience ---
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    // Crash-consistency property: checkpoint a fleet run at a random
+    // cadence (so the kill point — the last snapshot before the end —
+    // lands at a random tick split), resume from the snapshot, and the
+    // resumed run must reproduce the uninterrupted run's aggregate
+    // fingerprint AND its --json document byte for byte.
+    use idatacool::config::SimConfig;
+    use idatacool::fleet::{
+        scenario::Scenario, CheckpointSpec, FleetConfig, FleetDriver,
+    };
+
+    // The injector is process-global; see prop_tracing_is_invisible.
+    let _chaos_guard = idatacool::resilience::inject::test_lock();
+    forall(3, |rng| {
+        let mut base = SimConfig::test_small();
+        base.duration_s = 300.0;
+        base.backend = "native".into();
+        base.seed = rng.next_u64();
+        let driver = FleetDriver::new(FleetConfig {
+            n_plants: 2,
+            shards: 1,
+            fleet_seed: base.seed,
+            scenario: Scenario::by_name("mixed").unwrap(),
+            base,
+            megabatch: true,
+        })
+        .unwrap();
+        let clean = driver.run().unwrap();
+
+        let path = std::env::temp_dir().join(format!(
+            "idatacool-ckpt-prop-{}-{:016x}.bin",
+            std::process::id(),
+            driver.cfg.fleet_seed,
+        ));
+        let every = 1 + rng.below(5) as u64;
+        let spec = CheckpointSpec { path: path.clone(), every };
+        let ckpt = driver.run_resilient(Some(&spec), None).unwrap();
+        assert_eq!(
+            clean.aggregate.fingerprint(),
+            ckpt.aggregate.fingerprint(),
+            "writing checkpoints must not change results (every {every})"
+        );
+        let resumed = driver.run_resilient(None, Some(&path)).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            clean.aggregate.fingerprint(),
+            resumed.aggregate.fingerprint(),
+            "resume diverged (every {every})"
+        );
+        assert_eq!(
+            clean.to_json(&driver.cfg),
+            resumed.to_json(&driver.cfg),
+            "resumed --json document must be byte-identical"
+        );
+    });
+}
+
+#[test]
+fn prop_chaos_injection_is_seed_deterministic() {
+    // Determinism of the chaos injector end to end: the same plan armed
+    // with the same seed against the same fleet run fires the identical
+    // injected-event log (sites, plants, ticks) and degrades the run to
+    // the identical aggregate fingerprint. Rules here omit `tick=`, so
+    // the fire ticks come from the seed-derived path.
+    use idatacool::config::SimConfig;
+    use idatacool::fleet::{scenario::Scenario, FleetConfig, FleetDriver};
+    use idatacool::resilience::inject;
+
+    let _chaos_guard = inject::test_lock();
+    forall(4, |rng| {
+        let fleet_seed = rng.next_u64();
+        let plan_seed = rng.next_u64();
+        let run = |plan_seed: u64| -> (Vec<String>, u64) {
+            inject::arm(
+                "site=plant_tick,kind=poison_nan,plant=1;\
+                 site=facility_step,kind=poison_nan",
+                plan_seed,
+            )
+            .unwrap();
+            let mut base = SimConfig::test_small();
+            base.duration_s = 300.0;
+            base.backend = "native".into();
+            base.seed = fleet_seed;
+            let driver = FleetDriver::new(FleetConfig {
+                n_plants: 3,
+                shards: 1,
+                fleet_seed,
+                scenario: Scenario::by_name("mixed").unwrap(),
+                base,
+                megabatch: true,
+            })
+            .unwrap();
+            let result = driver.run().unwrap();
+            let log = inject::take_log();
+            inject::disarm();
+            (log, result.aggregate.fingerprint())
+        };
+        let (log_a, fp_a) = run(plan_seed);
+        let (log_b, fp_b) = run(plan_seed);
+        assert_eq!(log_a, log_b, "same seed must fire identically");
+        assert_eq!(fp_a, fp_b, "same faults must degrade identically");
+        // The poison rule targets the first 40 plant ticks; a 300 s run
+        // has more, so it must actually have fired.
+        assert!(
+            log_a.iter().any(|e| e.contains("kind=poison_nan")),
+            "plan never fired: {log_a:?}"
         );
     });
 }

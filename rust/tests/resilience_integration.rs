@@ -1,0 +1,213 @@
+//! Resilience integration tests: chaos-injected faults stay contained
+//! to one plant (or one shard), the fleet degrades instead of aborting,
+//! and checkpoint/resume reproduces the uninterrupted run byte for
+//! byte.
+//!
+//! The chaos injector is process-global, so every test here serializes
+//! on `inject::test_lock()` and disarms defensively on entry. This file
+//! is its own test binary — an armed plan can never leak into the lib
+//! tests' fleet runs.
+
+use std::path::PathBuf;
+
+use idatacool::config::SimConfig;
+use idatacool::fleet::scenario::Scenario;
+use idatacool::fleet::{CheckpointSpec, FleetConfig, FleetDriver, FleetRun};
+use idatacool::resilience::inject;
+
+fn base() -> SimConfig {
+    // 13 nodes, native backend, noiseless; 300 s = 60 ticks at the 5 s
+    // tick — past every derived chaos tick (≤ 40) and any checkpoint
+    // cadence used below.
+    let mut c = SimConfig::test_small();
+    c.duration_s = 300.0;
+    c
+}
+
+fn fleet_cfg(n_plants: usize, shards: usize) -> FleetConfig {
+    let base = base();
+    FleetConfig {
+        n_plants,
+        shards,
+        fleet_seed: base.seed,
+        scenario: Scenario::by_name("mixed").unwrap(),
+        base,
+        megabatch: true,
+    }
+}
+
+fn run(cfg: &FleetConfig) -> FleetRun {
+    FleetDriver::new(cfg.clone()).unwrap().run().unwrap()
+}
+
+/// Bitwise comparison of one plant's results across two runs — the
+/// containment contract: a survivor must be indistinguishable from the
+/// same plant in a fault-free run.
+fn assert_plant_bits_eq(x: &idatacool::fleet::PlantRun,
+                        y: &idatacool::fleet::PlantRun) {
+    assert_eq!(x.index, y.index);
+    assert_eq!(x.seed, y.seed);
+    assert_eq!(x.result.trace.len(), y.result.trace.len());
+    for (s, t) in x.result.trace.iter().zip(&y.result.trace) {
+        assert_eq!(s.t_rack_out.to_bits(), t.t_rack_out.to_bits());
+        assert_eq!(s.t_rack_in.to_bits(), t.t_rack_in.to_bits());
+        assert_eq!(s.p_d.to_bits(), t.p_d.to_bits());
+        assert_eq!(s.p_ac.to_bits(), t.p_ac.to_bits());
+        assert_eq!(s.core_max.to_bits(), t.core_max.to_bits());
+        assert_eq!(s.throttling, t.throttling);
+    }
+    assert_eq!(x.result.energy.e_ac.to_bits(), y.result.energy.e_ac.to_bits());
+    assert_eq!(x.result.energy.e_drive.to_bits(),
+               y.result.energy.e_drive.to_bits());
+}
+
+#[test]
+fn injected_panic_quarantines_one_plant_and_survivors_match() {
+    let _guard = inject::test_lock();
+    inject::disarm();
+    let cfg = fleet_cfg(3, 1);
+
+    inject::arm("site=plant_tick,kind=panic,plant=1,tick=3", 0).unwrap();
+    let degraded = run(&cfg);
+    let log = inject::take_log();
+    inject::disarm();
+    assert!(log.iter().any(|e| e.contains("kind=panic")), "{log:?}");
+
+    // Exactly plant 1 evicted; the run still succeeded.
+    assert_eq!(degraded.aggregate.quarantined.len(), 1,
+               "{:?}", degraded.aggregate.quarantined);
+    assert_eq!(degraded.aggregate.quarantined[0].index, 1);
+    assert!(degraded.aggregate.quarantined[0].reason.contains("panic"),
+            "{}", degraded.aggregate.quarantined[0].reason);
+    let survivors: Vec<usize> =
+        degraded.plants.iter().map(|p| p.index).collect();
+    assert_eq!(survivors, vec![0, 2]);
+
+    // Plant sims are independent, so each survivor must match the same
+    // plant of a fault-free run bitwise.
+    let clean = run(&cfg);
+    assert!(clean.aggregate.quarantined.is_empty());
+    assert_plant_bits_eq(&degraded.plants[0], &clean.plants[0]);
+    assert_plant_bits_eq(&degraded.plants[1], &clean.plants[2]);
+
+    // The quarantine section is part of the fingerprint: a degraded
+    // document can never pass for the clean one.
+    assert_ne!(degraded.aggregate.fingerprint(),
+               clean.aggregate.fingerprint());
+}
+
+#[test]
+fn poisoned_nan_is_caught_by_the_numeric_guard() {
+    let _guard = inject::test_lock();
+    inject::disarm();
+    let cfg = fleet_cfg(3, 1);
+
+    inject::arm("site=plant_tick,kind=poison_nan,plant=2,tick=2", 0).unwrap();
+    let degraded = run(&cfg);
+    inject::disarm();
+
+    assert_eq!(degraded.aggregate.quarantined.len(), 1,
+               "{:?}", degraded.aggregate.quarantined);
+    assert_eq!(degraded.aggregate.quarantined[0].index, 2);
+    assert!(degraded.aggregate.quarantined[0].reason.contains("non-finite"),
+            "{}", degraded.aggregate.quarantined[0].reason);
+    let survivors: Vec<usize> =
+        degraded.plants.iter().map(|p| p.index).collect();
+    assert_eq!(survivors, vec![0, 1]);
+    // NaN stayed contained: every surviving sample is finite.
+    for p in &degraded.plants {
+        assert!(p.result.trace.iter().all(|s| s.t_rack_out.is_finite()
+                                          && s.p_ac.is_finite()),
+                "plant {} leaked a non-finite sample", p.index);
+    }
+}
+
+#[test]
+fn shard_panic_quarantines_the_bucket_and_the_run_degrades() {
+    let _guard = inject::test_lock();
+    inject::disarm();
+    // 4 plants over 2 shards: the megabatch_sweep site panics past the
+    // per-plant containment, so whichever shard fires the rule loses
+    // its whole contiguous bucket — and the run still exits Ok.
+    let cfg = fleet_cfg(4, 2);
+    inject::arm("site=megabatch_sweep,kind=panic,tick=2", 0).unwrap();
+    let degraded = run(&cfg);
+    inject::disarm();
+
+    let mut gone: Vec<usize> = degraded
+        .aggregate
+        .quarantined
+        .iter()
+        .map(|q| q.index)
+        .collect();
+    gone.sort_unstable();
+    // One bucket of the contiguous block split {0,1} / {2,3}.
+    assert!(gone == vec![0, 1] || gone == vec![2, 3], "{gone:?}");
+    for q in &degraded.aggregate.quarantined {
+        assert!(q.reason.contains("shard"), "{}", q.reason);
+    }
+    let survivors: Vec<usize> =
+        degraded.plants.iter().map(|p| p.index).collect();
+    let expect: Vec<usize> =
+        if gone[0] == 0 { vec![2, 3] } else { vec![0, 1] };
+    assert_eq!(survivors, expect);
+}
+
+#[test]
+fn checkpoint_then_resume_reproduces_the_document_bytewise() {
+    let _guard = inject::test_lock();
+    inject::disarm();
+    let cfg = fleet_cfg(2, 1);
+    let clean = run(&cfg);
+    let clean_json = clean.to_json(&cfg);
+
+    let path: PathBuf = std::env::temp_dir().join(format!(
+        "idatacool-ckpt-integ-{}.bin",
+        std::process::id()
+    ));
+    let spec = CheckpointSpec { path: path.clone(), every: 7 };
+    let driver = FleetDriver::new(cfg.clone()).unwrap();
+
+    // A checkpointing run is observationally identical to a plain one…
+    let ckpt_run = driver.run_resilient(Some(&spec), None).unwrap();
+    assert_eq!(ckpt_run.aggregate.fingerprint(),
+               clean.aggregate.fingerprint());
+    assert!(path.exists(), "no snapshot written");
+
+    // …and resuming from its last mid-run snapshot replays the tail to
+    // the same fingerprint and byte-identical JSON.
+    let resumed = driver.run_resilient(None, Some(&path)).unwrap();
+    assert_eq!(resumed.aggregate.fingerprint(),
+               clean.aggregate.fingerprint());
+    assert_eq!(resumed.to_json(&cfg), clean_json);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resume_refuses_a_mismatched_config() {
+    let _guard = inject::test_lock();
+    inject::disarm();
+    let cfg = fleet_cfg(2, 1);
+    let path: PathBuf = std::env::temp_dir().join(format!(
+        "idatacool-ckpt-integ-mismatch-{}.bin",
+        std::process::id()
+    ));
+    let spec = CheckpointSpec { path: path.clone(), every: 11 };
+    FleetDriver::new(cfg.clone())
+        .unwrap()
+        .run_resilient(Some(&spec), None)
+        .unwrap();
+
+    // Same snapshot, different fleet seed: a chimera document must be
+    // refused, not silently assembled.
+    let mut other = cfg.clone();
+    other.fleet_seed ^= 0xDEAD_BEEF;
+    let err = FleetDriver::new(other)
+        .unwrap()
+        .run_resilient(None, Some(&path))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("fleet seed"), "{err:#}");
+
+    let _ = std::fs::remove_file(&path);
+}
