@@ -59,6 +59,14 @@ pub const SUITES: &[SuiteEntry] = &[
         fingerprint: fleet_fingerprint,
     },
     SuiteEntry {
+        name: "optimize",
+        description: "closed-loop search: one physical candidate eval, \
+                      the fingerprint-cache hit path, and a small grid \
+                      search end to end",
+        runner: optimize,
+        fingerprint: optimize_fingerprint,
+    },
+    SuiteEntry {
         name: "serve",
         description: "sim-as-a-service: loopback request latency \
                       (healthz, cache hit) and full-simulation misses",
@@ -420,6 +428,111 @@ fn fleet(b: &mut Bench) -> Result<()> {
             sweep::run_sweep_sharded(&cfg, sps, &opts, shards).unwrap();
         });
     Ok(())
+}
+
+const OPT_PLANTS: usize = 2;
+const OPT_BUDGET: usize = 6;
+
+/// Per-candidate base of the optimize benches (shared with
+/// `optimize_fingerprint`): 13 nodes, 300 simulated seconds per
+/// candidate fleet evaluation.
+fn optimize_base() -> SimConfig {
+    let mut base = SimConfig::test_small();
+    base.duration_s = 300.0;
+    base
+}
+
+/// Closed-loop search benchmarks: the candidate-eval primitive (one
+/// small fleet run + objective scoring), the fingerprint-cache hit
+/// path that repeated points ride, and a budgeted grid search end to
+/// end (the `idatacool optimize` hot loop).
+fn optimize(b: &mut Bench) -> Result<()> {
+    use crate::economics::CostModel;
+    use crate::optimize::driver::{self, DriverKind};
+    use crate::optimize::eval::Evaluator;
+    use crate::optimize::objective::Weights;
+    use crate::optimize::space::Space;
+
+    let base = optimize_base();
+    let scenario = Scenario::by_name("mixed")?;
+    let megabatch = crate::fleet::default_megabatch()?;
+    let space = Space::default();
+    let center = space.center();
+    let weights = Weights::preset("ere")?;
+    let make = |fleet_seed: u64, budget: usize| -> Result<Evaluator> {
+        Evaluator::new(
+            base.clone(),
+            space.clone(),
+            weights,
+            CostModel::default(),
+            OPT_PLANTS,
+            scenario,
+            fleet_seed,
+            megabatch,
+            1,
+            budget,
+        )
+    };
+
+    // One physical candidate evaluation per iteration: a fresh seed
+    // makes every point a cache miss, so this prices the eval primitive
+    // (fleet run + facility pass + objective scoring).
+    let mut seed = 0u64;
+    b.run_with_units(
+        "optimize_eval/p2/n13",
+        OPT_PLANTS as f64 * base.duration_s,
+        "plant-sim-seconds",
+        &mut || {
+            seed += 1;
+            let mut ev = make(seed, 1).unwrap();
+            std::hint::black_box(ev.eval_batch(&[center]));
+        },
+    );
+
+    // The same point through a warm evaluator: fingerprint + cache
+    // lookup only — the path every repeated candidate rides.
+    let mut warm = make(0x1DA7, 1)?;
+    let _ = warm.eval_batch(&[center]);
+    b.run_with_units("optimize_cache_hit", 1.0, "evals", &mut || {
+        std::hint::black_box(warm.eval_batch(&[center]));
+    });
+
+    // A budgeted grid search end to end (fresh seed per iteration so
+    // the eval cache never carries over between iterations).
+    let mut gseed = 0x900_0000u64;
+    b.run_with_units(
+        &format!("optimize_grid/b{OPT_BUDGET}"),
+        (OPT_BUDGET * OPT_PLANTS) as f64 * base.duration_s,
+        "plant-sim-seconds",
+        &mut || {
+            gseed += 1;
+            let mut ev = make(gseed, OPT_BUDGET).unwrap();
+            let out =
+                driver::search(DriverKind::Grid, &mut ev, 4, gseed).unwrap();
+            std::hint::black_box(out);
+        },
+    );
+    Ok(())
+}
+
+fn optimize_fingerprint() -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+    }
+    // What the suite measures: the per-candidate base, the fleet shape
+    // per candidate, the search budget, and the env-resolved megabatch
+    // flag (execution shape with a real wall-time effect, like the
+    // fleet suite's).
+    let mut h = config_fingerprint(&optimize_base());
+    h = mix(h, OPT_PLANTS as u64);
+    h = mix(h, OPT_BUDGET as u64);
+    let megabatch = match crate::fleet::default_megabatch() {
+        Ok(true) => 1u64,
+        Ok(false) => 0u64,
+        Err(_) => 99u64,
+    };
+    h = mix(h, megabatch);
+    h
 }
 
 /// Base config behind the serve-suite simulations (shared with

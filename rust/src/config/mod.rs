@@ -407,6 +407,110 @@ impl FleetSettings {
     }
 }
 
+/// `[optimize]` settings for `idatacool optimize` — the TOML face of
+/// the `optimize` subsystem. Every field is optional (the subsystem's
+/// defaults apply, see `optimize::OptimizeConfig::from_settings`);
+/// precedence in the CLI is TOML < `IDATACOOL_OPT_*` env < flags.
+/// Unlike `[fleet]`, most of these are *semantic*: objective, driver,
+/// budget, plants, scenario, axes, generation size and eval duration
+/// all change the report document, so the server's canonical request
+/// carries their resolved values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptimizeSettings {
+    /// Objective preset (`optimize.objective`): `ere` | `pue` | `cost`.
+    pub objective: Option<String>,
+    /// Search driver (`optimize.driver`): `grid` | `coordinate` | `cem`.
+    pub driver: Option<String>,
+    /// Physical-evaluation budget (`optimize.budget`).
+    pub budget: Option<usize>,
+    /// Plants per candidate fleet (`optimize.plants`).
+    pub plants: Option<usize>,
+    /// Fleet scenario for candidate evaluation (`optimize.scenario`).
+    pub scenario: Option<String>,
+    /// Free axes, comma-separated (`optimize.axes`):
+    /// `setpoint|pump|chiller|share`.
+    pub axes: Option<String>,
+    /// Candidates per generation (`optimize.gen_size`).
+    pub gen_size: Option<usize>,
+    /// Simulated seconds per candidate evaluation
+    /// (`optimize.eval_duration_s`).
+    pub eval_duration_s: Option<f64>,
+    /// Re-measure the winner through the sweep instrument
+    /// (`optimize.detail`).
+    pub detail: Option<bool>,
+    /// Explicit weight overrides on top of the preset
+    /// (`optimize.w_pue` …).
+    pub w_pue: Option<f64>,
+    pub w_ere: Option<f64>,
+    pub w_throttle: Option<f64>,
+    pub w_cost: Option<f64>,
+}
+
+impl OptimizeSettings {
+    /// Parse the `[optimize]` section. Counts are strict positive
+    /// integers, `detail` a strict boolean, `eval_duration_s` a strict
+    /// positive number — a present-yet-malformed value is an error,
+    /// matching the CLI-flag discipline. Name fields are validated
+    /// downstream where the catalogs live
+    /// (`Weights::preset`, `DriverKind::by_name`, `Scenario::by_name`,
+    /// `Space::enable_axes`).
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let count_opt = |key: &str| -> anyhow::Result<Option<usize>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(_) => toml_count(doc, key, 1).map(Some),
+            }
+        };
+        let str_opt = |key: &str| -> anyhow::Result<Option<String>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(
+                    v.as_str()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("{key} must be a string")
+                        })?
+                        .to_string(),
+                )),
+            }
+        };
+        let f64_opt = |key: &str| -> anyhow::Result<Option<f64>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("{key} must be a number")
+                })?)),
+            }
+        };
+        let eval_duration_s = match f64_opt("optimize.eval_duration_s")? {
+            Some(d) if d <= 0.0 => anyhow::bail!(
+                "optimize.eval_duration_s must be positive, got {d}"
+            ),
+            other => other,
+        };
+        let detail = match doc.get("optimize.detail") {
+            None => None,
+            Some(v) => Some(v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("optimize.detail must be a boolean")
+            })?),
+        };
+        Ok(OptimizeSettings {
+            objective: str_opt("optimize.objective")?,
+            driver: str_opt("optimize.driver")?,
+            budget: count_opt("optimize.budget")?,
+            plants: count_opt("optimize.plants")?,
+            scenario: str_opt("optimize.scenario")?,
+            axes: str_opt("optimize.axes")?,
+            gen_size: count_opt("optimize.gen_size")?,
+            eval_duration_s,
+            detail,
+            w_pue: f64_opt("optimize.w_pue")?,
+            w_ere: f64_opt("optimize.w_ere")?,
+            w_throttle: f64_opt("optimize.w_throttle")?,
+            w_cost: f64_opt("optimize.w_cost")?,
+        })
+    }
+}
+
 /// A strictly-parsed positive integer TOML value.
 fn toml_count(doc: &TomlDoc, key: &str, default: usize)
               -> anyhow::Result<usize> {
@@ -582,6 +686,49 @@ mod tests {
             let doc = TomlDoc::parse(&format!("[fleet]\n{bad}\n")).unwrap();
             assert!(
                 FleetSettings::from_toml(&doc).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn optimize_section_overrides() {
+        let doc = TomlDoc::parse(
+            "[optimize]\nobjective = \"pue\"\ndriver = \"cem\"\n\
+             budget = 40\nplants = 4\nscenario = \"baseline\"\n\
+             axes = \"setpoint,pump\"\ngen_size = 6\n\
+             eval_duration_s = 600\ndetail = false\nw_throttle = 2.5\n",
+        )
+        .unwrap();
+        let os = OptimizeSettings::from_toml(&doc).unwrap();
+        assert_eq!(os.objective.as_deref(), Some("pue"));
+        assert_eq!(os.driver.as_deref(), Some("cem"));
+        assert_eq!(os.budget, Some(40));
+        assert_eq!(os.plants, Some(4));
+        assert_eq!(os.scenario.as_deref(), Some("baseline"));
+        assert_eq!(os.axes.as_deref(), Some("setpoint,pump"));
+        assert_eq!(os.gen_size, Some(6));
+        assert_eq!(os.eval_duration_s, Some(600.0));
+        assert_eq!(os.detail, Some(false));
+        assert_eq!(os.w_throttle, Some(2.5));
+        assert_eq!(os.w_pue, None);
+        // absent section leaves everything to the subsystem defaults
+        let os = OptimizeSettings::from_toml(&TomlDoc::parse("").unwrap())
+            .unwrap();
+        assert_eq!(os, OptimizeSettings::default());
+    }
+
+    #[test]
+    fn optimize_section_is_strict() {
+        for bad in ["budget = 0", "budget = 2.5", "plants = -1",
+                    "gen_size = \"six\"", "detail = \"yes\"",
+                    "detail = 1", "eval_duration_s = 0",
+                    "eval_duration_s = -5", "objective = 3",
+                    "w_ere = \"one\""] {
+            let doc =
+                TomlDoc::parse(&format!("[optimize]\n{bad}\n")).unwrap();
+            assert!(
+                OptimizeSettings::from_toml(&doc).is_err(),
                 "{bad} must be rejected"
             );
         }

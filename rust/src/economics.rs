@@ -139,6 +139,50 @@ mod tests {
     }
 
     #[test]
+    fn amortization_math_is_pinned() {
+        // Pin each term of analyze() against the closed forms the
+        // module docs promise, at an easy round-number operating point.
+        let m = CostModel::default();
+        let a = m.analyze(100, 10_000.0, 0.5, 1_000.0);
+        let hours = 24.0 * 365.0;
+        let kwh = |w: f64| w / 1000.0 * hours;
+        let p_heat = 10_000.0 * 0.5;
+        let free = kwh(p_heat / 3.5) * 0.12;
+        let reuse = kwh(1_000.0 / 3.5) * 0.12;
+        let overhead = kwh(p_heat * 0.03) * 0.12;
+        assert_eq!(a.capex_eur, 120.0 * 100.0);
+        assert!((a.free_cooling_eur_per_year - free).abs() < 1e-9);
+        assert!((a.reuse_credit_eur_per_year - reuse).abs() < 1e-9);
+        assert!((a.loop_overhead_eur_per_year - overhead).abs() < 1e-9);
+        let savings = free + reuse - overhead;
+        assert!((a.savings_eur_per_year - savings).abs() < 1e-9);
+        assert!((a.payback_years - a.capex_eur / savings).abs() < 1e-9);
+    }
+
+    #[test]
+    fn terms_scale_linearly() {
+        let m = CostModel::default();
+        let a = m.analyze(100, 10_000.0, 0.5, 1_000.0);
+        // capex linear in node count, payback with it (same savings)
+        let b = m.analyze(200, 10_000.0, 0.5, 1_000.0);
+        assert!((b.capex_eur - 2.0 * a.capex_eur).abs() < 1e-9);
+        assert!((b.payback_years - 2.0 * a.payback_years).abs() < 1e-9);
+        // free cooling and overhead linear in the cluster power
+        let c = m.analyze(100, 20_000.0, 0.5, 1_000.0);
+        assert!((c.free_cooling_eur_per_year
+                 - 2.0 * a.free_cooling_eur_per_year)
+            .abs() < 1e-9);
+        assert!((c.loop_overhead_eur_per_year
+                 - 2.0 * a.loop_overhead_eur_per_year)
+            .abs() < 1e-9);
+        // reuse credit linear in the chilled-water power
+        let d = m.analyze(100, 10_000.0, 0.5, 2_000.0);
+        assert!((d.reuse_credit_eur_per_year
+                 - 2.0 * a.reuse_credit_eur_per_year)
+            .abs() < 1e-9);
+    }
+
+    #[test]
     fn zero_savings_is_infinite_payback() {
         let m = CostModel {
             conventional_chiller_cop: 1e12,

@@ -160,12 +160,16 @@ impl SweepData {
     }
 }
 
-/// One setpoint's finished measurement — the unit of parallel work.
-struct SetpointRun {
-    point: SweepPoint,
+/// One setpoint's finished measurement — the unit of parallel work
+/// behind both the figure sweeps and the optimizer's best-point detail
+/// (`optimize::run_optimize` re-measures the winning candidate through
+/// [`evaluate_point`], so sweep figures and optimizer reports can never
+/// disagree about what one operating point looks like).
+pub struct SetpointRun {
+    pub point: SweepPoint,
     /// (six-core node index, (core_mean, node_power)) in node order.
-    node_tp: Vec<(usize, (f64, f64))>,
-    selected: Vec<usize>,
+    pub node_tp: Vec<(usize, (f64, f64))>,
+    pub selected: Vec<usize>,
 }
 
 /// Shard count for a sweep: every available core (capped at the setpoint
@@ -224,7 +228,7 @@ pub fn run_sweep_sharded(cfg: &SimConfig, setpoints: &[f64],
 
     if shards <= 1 {
         for (i, &sp) in setpoints.iter().enumerate() {
-            slots[i] = Some(measure_setpoint(cfg, sp, opts)?);
+            slots[i] = Some(evaluate_point(cfg, sp, opts)?);
         }
     } else {
         let indexed: Vec<(usize, f64)> =
@@ -237,7 +241,7 @@ pub fn run_sweep_sharded(cfg: &SimConfig, setpoints: &[f64],
                     move || -> Result<Vec<(usize, SetpointRun)>> {
                         let mut runs = Vec::with_capacity(bucket.len());
                         for (i, sp) in bucket {
-                            runs.push((i, measure_setpoint(cfg, sp, opts)?));
+                            runs.push((i, evaluate_point(cfg, sp, opts)?));
                         }
                         Ok(runs)
                     },
@@ -276,10 +280,13 @@ pub fn run_sweep_sharded(cfg: &SimConfig, setpoints: &[f64],
 
 /// Warm-start, settle and measure one setpoint. Self-contained: builds
 /// its own driver from `cfg`, so concurrent setpoints share nothing —
-/// the unit of work behind the figure sweeps and (via
-/// `run_sweep_sharded`) the server's `POST /sweep` endpoint.
-fn measure_setpoint(cfg: &SimConfig, sp: f64, opts: &SweepOptions)
-                    -> Result<SetpointRun> {
+/// the unit of work behind the figure sweeps, (via `run_sweep_sharded`)
+/// the server's `POST /sweep` endpoint, and the optimizer's best-point
+/// detail (`optimize`). The existing setpoint sweep is exactly this
+/// function mapped over a 1-D setpoint grid — which is why the
+/// optimizer's degenerate 1-D grid case reproduces it.
+pub fn evaluate_point(cfg: &SimConfig, sp: f64, opts: &SweepOptions)
+                      -> Result<SetpointRun> {
     let mut c = cfg.clone();
     c.workload = WorkloadKind::Stress;
     c.stress_background = 1.0; // full background so high T_out is reachable

@@ -63,6 +63,12 @@ pub struct FleetAggregate {
     pub fleet_pump_fail_ticks: u64,
     pub fleet_e_ac: f64,
     pub fleet_e_dc: f64,
+    /// Total trace samples across the surviving plants — the
+    /// denominator of the fleet throttle fraction in [`Self::objective`].
+    /// Derived bookkeeping: deliberately absent from the JSON document
+    /// and the fingerprint (it adds no information beyond the per-plant
+    /// traces, and the fleet document's bytes predate it).
+    pub fleet_trace_ticks: u64,
     /// Plants evicted by fault containment, in index order. A non-empty
     /// list marks the document as a degraded run: the per-plant metrics
     /// above cover the survivors only, and the entries are mixed into
@@ -76,6 +82,30 @@ fn safe_div(a: f64, b: f64) -> f64 {
         0.0
     } else {
         a / b
+    }
+}
+
+/// Weights for the scalar fleet objective ([`FleetAggregate::objective`]).
+/// Lower is better for every term (PUE and ERE are >= "ideal 1.0 minus
+/// credit" scales, throttle is a fraction), so the weighted sum is a
+/// *minimization* objective — the convention the `optimize` subsystem
+/// inherits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjectiveWeights {
+    /// Weight on the fleet-mean PUE.
+    pub pue: f64,
+    /// Weight on the fleet-mean ERE.
+    pub ere: f64,
+    /// Weight on the fleet throttle fraction (throttling ticks per
+    /// trace tick) — the penalty that bounds hot setpoints from above.
+    pub throttle: f64,
+}
+
+impl ObjectiveWeights {
+    /// Pure energy-reuse objective with a strong throttle penalty —
+    /// the default the optimizer uses to recover the paper's band.
+    pub fn ere() -> Self {
+        ObjectiveWeights { pue: 0.0, ere: 1.0, throttle: 5.0 }
     }
 }
 
@@ -152,6 +182,8 @@ impl FleetAggregate {
             });
         }
 
+        let fleet_trace_ticks =
+            plants.iter().map(|p| p.result.trace.len() as u64).sum();
         let fleet_throttle_ticks =
             per_plant.iter().map(|m| m.throttle_ticks).sum();
         let fleet_chiller_off_ticks =
@@ -159,6 +191,7 @@ impl FleetAggregate {
         let fleet_pump_fail_ticks =
             per_plant.iter().map(|m| m.pump_fail_ticks).sum();
         FleetAggregate {
+            fleet_trace_ticks,
             fleet_throttle_ticks,
             fleet_chiller_off_ticks,
             fleet_pump_fail_ticks,
@@ -310,6 +343,32 @@ impl FleetAggregate {
             .build()
     }
 
+    /// Scalar minimization objective: `w.pue * mean(PUE) + w.ere *
+    /// mean(ERE) + w.throttle * throttle_fraction`.
+    ///
+    /// NaN-free by construction: `Running::mean()` is 0.0 on an empty
+    /// accumulator (every plant quarantined) and the throttle fraction
+    /// goes through `safe_div`, so even a fully degraded aggregate
+    /// yields a finite score — a prerequisite for the optimizer's
+    /// worst-case-scoring chaos containment.
+    pub fn objective(&self, w: &ObjectiveWeights) -> f64 {
+        let throttle_frac = safe_div(
+            self.fleet_throttle_ticks as f64,
+            self.fleet_trace_ticks as f64,
+        );
+        w.pue * self.pue_stats.mean()
+            + w.ere * self.ere_stats.mean()
+            + w.throttle * throttle_frac
+    }
+
+    /// The fleet throttle fraction the objective's penalty term uses.
+    pub fn throttle_fraction(&self) -> f64 {
+        safe_div(
+            self.fleet_throttle_ticks as f64,
+            self.fleet_trace_ticks as f64,
+        )
+    }
+
     /// One-paragraph headline for the CLI.
     pub fn summary(&self) -> String {
         let degraded = if self.quarantined.is_empty() {
@@ -369,5 +428,93 @@ impl FleetAggregate {
             }
         }
         h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic aggregate (no plant runs needed — every field is
+    /// public by design).
+    fn agg(pues: &[f64], eres: &[f64], throttle_ticks: u64,
+           trace_ticks: u64) -> FleetAggregate {
+        let mut pue_stats = Running::new();
+        let mut ere_stats = Running::new();
+        for &p in pues {
+            pue_stats.push(p);
+        }
+        for &e in eres {
+            ere_stats.push(e);
+        }
+        FleetAggregate {
+            per_plant: Vec::new(),
+            pue_stats,
+            ere_stats,
+            pue_hist: Histogram::new(1.0, 1.6, 24),
+            ere_hist: Histogram::new(0.6, 1.6, 40),
+            facility_reuse_fraction: 0.0,
+            worst_throttle_plant: None,
+            worst_throttle_ticks: 0,
+            fleet_throttle_ticks: throttle_ticks,
+            fleet_chiller_off_ticks: 0,
+            fleet_pump_fail_ticks: 0,
+            fleet_e_ac: 0.0,
+            fleet_e_dc: 0.0,
+            fleet_trace_ticks: trace_ticks,
+            quarantined: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn zero_weights_zero_objective() {
+        let a = agg(&[1.2, 1.3], &[0.9, 1.0], 50, 100);
+        let w = ObjectiveWeights { pue: 0.0, ere: 0.0, throttle: 0.0 };
+        assert_eq!(a.objective(&w), 0.0);
+    }
+
+    #[test]
+    fn single_term_weights_recover_the_components() {
+        let a = agg(&[1.2, 1.4], &[0.8, 1.0], 25, 100);
+        let pue_only = ObjectiveWeights { pue: 1.0, ere: 0.0, throttle: 0.0 };
+        let ere_only = ObjectiveWeights { pue: 0.0, ere: 1.0, throttle: 0.0 };
+        let thr_only = ObjectiveWeights { pue: 0.0, ere: 0.0, throttle: 1.0 };
+        assert!((a.objective(&pue_only) - 1.3).abs() < 1e-12);
+        assert!((a.objective(&ere_only) - 0.9).abs() < 1e-12);
+        assert!((a.objective(&thr_only) - 0.25).abs() < 1e-12);
+        assert_eq!(a.throttle_fraction(), 0.25);
+    }
+
+    #[test]
+    fn throttle_dominated_weights_order_by_throttling() {
+        // The cool plant has worse (higher) ERE but never throttles; the
+        // hot plant has great ERE but throttles a quarter of the time.
+        // With a throttle-dominated weighting, cool must win (score
+        // lower) — this is the mechanism that bounds hot setpoints.
+        let cool = agg(&[1.3], &[1.1], 0, 100);
+        let hot = agg(&[1.1], &[0.8], 25, 100);
+        let w = ObjectiveWeights::ere(); // ere + 5x throttle
+        assert!(cool.objective(&w) < hot.objective(&w),
+                "cool {} !< hot {}", cool.objective(&w),
+                hot.objective(&w));
+        // and with the throttle term off, hot wins on raw ERE
+        let raw = ObjectiveWeights { pue: 0.0, ere: 1.0, throttle: 0.0 };
+        assert!(hot.objective(&raw) < cool.objective(&raw));
+    }
+
+    #[test]
+    fn objective_is_nan_free_when_everything_quarantined() {
+        // Empty stats (all plants evicted) and zero trace ticks: every
+        // term degrades to 0.0, never NaN.
+        let mut a = agg(&[], &[], 0, 0);
+        a.quarantined.push(QuarantineEntry {
+            index: 0,
+            reason: "panic in plant run".into(),
+        });
+        let w = ObjectiveWeights::ere();
+        let v = a.objective(&w);
+        assert!(v.is_finite(), "objective {v} not finite");
+        assert_eq!(v, 0.0);
+        assert_eq!(a.throttle_fraction(), 0.0);
     }
 }

@@ -25,6 +25,11 @@
 //!  * **Resilience** (`resilience`): per-plant fault quarantine,
 //!    seeded deterministic chaos injection, and crash-consistent
 //!    `idatacool-ckpt/1` checkpoint/resume.
+//!  * **Optimize** (`optimize`): closed-loop operating-point search —
+//!    typed parameter space, weighted PUE/ERE/throttle/cost objective,
+//!    deterministic drivers (grid / coordinate descent / cross-entropy)
+//!    over cached megabatch fleet evaluations; recovers the paper's
+//!    ~60–70 degC setpoint band as an output (`idatacool optimize`).
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-figure reproductions.
@@ -36,6 +41,7 @@ pub mod economics;
 pub mod figures;
 pub mod fleet;
 pub mod obs;
+pub mod optimize;
 pub mod plant;
 pub mod report;
 pub mod resilience;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run         simulate a configuration and print the run report
 //!   fleet       sharded multi-plant fleet + shared facility loop
+//!   optimize    closed-loop operating-point search over the fleet path
 //!   serve       sim-as-a-service HTTP server (v1 API, request batching)
 //!   figures     regenerate the paper's figures (CSV + ASCII)
 //!   equilibrium the Sect.-3 cold-start narrative (alias: figures --fig s3)
@@ -15,6 +16,8 @@
 //!   idatacool fleet --plants 8 --scenario heatwave --shards 4
 //!   idatacool fleet --plants 8 --scenario heatwave --json fleet.json
 //!   idatacool fleet --plants 8 --megabatch 0   # per-plant reference path
+//!   idatacool optimize --objective ere --budget 20 --seed 7 --json opt.json
+//!   idatacool optimize --driver cem --axes setpoint,pump --budget 40
 //!   idatacool serve --addr 127.0.0.1:8080 --workers 4 --batch-window-ms 2
 //!   idatacool figures --fig all --quick --out results
 //!   idatacool bench --suite hotpath --json BENCH_hotpath.json
@@ -38,6 +41,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("optimize") => cmd_optimize(&args),
         Some("serve") => cmd_serve(&args),
         Some("figures") => cmd_figures(&args),
         Some("equilibrium") => cmd_figures_with(&args, "s3"),
@@ -54,7 +58,7 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 idatacool — digital twin of the iDataCool hot-water-cooled HPC system
 
-USAGE: idatacool <run|fleet|serve|figures|equilibrium|bench|validate|info> [flags]
+USAGE: idatacool <run|fleet|optimize|serve|figures|equilibrium|bench|validate|info> [flags]
 
 common flags:
   --config <file.toml>   load a TOML config (presets: full|subset13|test_small)
@@ -77,7 +81,8 @@ common flags:
   --chaos <spec>         (run|fleet|serve) arm deterministic fault
                          injection: \"[seed=N;]site=...,kind=...[,plant=P]
                          [,tick=T];...\" with sites plant_tick|
-                         megabatch_sweep|facility_step|server_compute and
+                         megabatch_sweep|facility_step|server_compute|
+                         optimize_eval and
                          kinds panic|stall_ms|poison_nan; fired rules are
                          reported after the run (env IDATACOOL_CHAOS and a
                          --config [chaos] section arm the same injector;
@@ -109,6 +114,34 @@ fleet flags:
    [fleet] section sets plants/shards/megabatch, flags win over env, env
    wins over TOML; every scenario except baseline sets the workload
    itself, and backend \"auto\" resolves to native for fleet runs)
+optimize flags:
+  --objective <name>     ere|pue|cost weight preset (default ere; lower
+                         score is better)
+  --driver <name>        grid|coordinate|cem (default grid: exhaustive
+                         lattice + random restarts; coordinate: descent
+                         with restarts; cem: cross-entropy refits)
+  --budget <n>           physical-evaluation budget (default 24; cache
+                         hits are free; env IDATACOOL_OPT_BUDGET)
+  --plants <n>           plants per candidate fleet (default 2)
+  --scenario <name>      candidate-fleet scenario (default mixed — its
+                         stress plant is the throttle signal)
+  --axes <csv>           free axes: setpoint|pump|chiller|share
+                         (default setpoint only — the paper's 1-D sweep
+                         as a degenerate grid search)
+  --gen-size <n>         candidates per generation (default 8)
+  --eval-duration <s>    simulated seconds per candidate (default 900)
+  --detail <0|1>         re-measure the winner with the sweep instrument
+                         and attach it as best_detail (default 1)
+  --w-pue|--w-ere|--w-throttle|--w-cost <x>
+                         override individual objective weights after the
+                         preset is applied
+  --json <path>          write the idatacool-optimize/1 report (the same
+                         bytes POST /v1/optimize serves); a fixed --seed
+                         reproduces the whole trajectory bitwise
+  (a --config file's [optimize] section sets the same knobs; flags win
+   over env IDATACOOL_OPT_OBJECTIVE/IDATACOOL_OPT_DRIVER/
+   IDATACOOL_OPT_BUDGET, env wins over TOML; common flags configure the
+   candidate base plant, and backend \"auto\" resolves to native)
 serve flags:
   --addr <host:port>     bind address (default 127.0.0.1:8080; :0 picks an
                          ephemeral port)
@@ -126,8 +159,9 @@ serve flags:
                          cached, so an immediate retry is a hit)
   (a --config file's [serve] section sets the same knobs; flags win over
    env, env wins over TOML. Endpoints under /v1 — POST /v1/simulate
-   [?stream=1], POST /v1/fleet, POST /v1/sweep, GET /v1/healthz,
-   GET /v1/metrics, POST /v1/shutdown; unprefixed paths still answer but
+   [?stream=1], POST /v1/fleet, POST /v1/sweep, POST /v1/optimize,
+   GET /v1/healthz, GET /v1/metrics, POST /v1/shutdown; unprefixed paths
+   still answer but
    carry a Deprecation header. SIGTERM/SIGINT drain gracefully, same as
    POST /v1/shutdown)
 figures flags:
@@ -457,6 +491,154 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_optimize(args: &Args) -> Result<()> {
+    use idatacool::config::OptimizeSettings;
+    use idatacool::optimize::{run_optimize, OptimizeConfig};
+
+    // One read+parse of --config serves both consumers: the SimConfig
+    // base (the candidate plant) and the [optimize] section.
+    let doc = load_config_doc(args)?;
+    let mut base = build_config_with(args, doc.as_ref())?;
+    // Candidate evaluations run on the fleet path, which shards plant
+    // backends across threads; resolve "auto" the same way cmd_fleet
+    // does, but respect a pinned backend.
+    if base.backend == "auto" {
+        base.backend = "native".into();
+    }
+    let mut os = OptimizeSettings::default();
+    if let Some(doc) = &doc {
+        os = OptimizeSettings::from_toml(doc)?;
+    }
+    // Precedence: TOML [optimize] < env < flag — the same ladder every
+    // other subcommand uses. Env overrides are strict-parsed.
+    if let Some(v) = std::env::var("IDATACOOL_OPT_OBJECTIVE")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+    {
+        os.objective = Some(v);
+    }
+    if let Some(v) = std::env::var("IDATACOOL_OPT_DRIVER")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+    {
+        os.driver = Some(v);
+    }
+    if let Some(b) =
+        idatacool::util::cli::env_usize_strict("IDATACOOL_OPT_BUDGET")?
+    {
+        os.budget = Some(b);
+    }
+    if let Some(v) = args.get("objective") {
+        os.objective = Some(v.to_string());
+    }
+    if let Some(v) = args.get("driver") {
+        os.driver = Some(v.to_string());
+    }
+    if let Some(v) = args.get("scenario") {
+        os.scenario = Some(v.to_string());
+    }
+    if let Some(v) = args.get("axes") {
+        os.axes = Some(v.to_string());
+    }
+    os.budget = Some(args.usize_strict("budget", os.budget.unwrap_or(24))?);
+    os.plants = Some(args.usize_strict("plants", os.plants.unwrap_or(2))?);
+    os.gen_size =
+        Some(args.usize_strict("gen-size", os.gen_size.unwrap_or(8))?);
+    os.eval_duration_s = Some(args.f64_or(
+        "eval-duration",
+        os.eval_duration_s.unwrap_or(900.0),
+    ));
+    os.detail = Some(args.bool_strict("detail", os.detail.unwrap_or(true))?);
+    let weight_flag = |name: &str, cur: Option<f64>| -> Result<Option<f64>> {
+        match args.get(name) {
+            None => Ok(cur),
+            Some(s) => Ok(Some(s.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("--{name} expects a number, got '{s}'")
+            })?)),
+        }
+    };
+    os.w_pue = weight_flag("w-pue", os.w_pue)?;
+    os.w_ere = weight_flag("w-ere", os.w_ere)?;
+    os.w_throttle = weight_flag("w-throttle", os.w_throttle)?;
+    os.w_cost = weight_flag("w-cost", os.w_cost)?;
+
+    let c = OptimizeConfig::from_settings(base, &os)?;
+    let free: Vec<&str> = c
+        .space
+        .axes()
+        .iter()
+        .filter(|a| !a.frozen)
+        .map(|a| a.name)
+        .collect();
+    println!(
+        "optimize: objective '{}' ({} driver), axes [{}], budget {} \
+         physical evals (gen size {}), {} plants x {} nodes per \
+         candidate, scenario '{}', {:.0}s eval windows, seed {:#x}",
+        c.objective_name,
+        c.kind.name(),
+        free.join(", "),
+        c.budget,
+        c.gen_size,
+        c.n_plants,
+        c.base.n_nodes,
+        c.scenario.name(),
+        c.eval_duration_s,
+        c.seed,
+    );
+
+    let chaos = chaos_arm(args, doc.as_ref())?;
+    let trace_out = trace_out_arm(args);
+    let run = run_optimize(&c)?;
+    if let Some(path) = &trace_out {
+        trace_out_flush(path)?;
+    }
+    chaos_report(chaos);
+
+    for g in &run.gens {
+        println!(
+            "gen {:>3}: {:>3} candidates ({:>3} physical)  \
+             best {:>12.6}  mean {:>12.6}",
+            g.index, g.submitted, g.physical, g.best, g.mean,
+        );
+    }
+    let failed = run.records.iter().filter(|r| r.failed).count();
+    if failed > 0 {
+        println!("optimize: {failed} candidate evals failed and were \
+                  scored worst-case");
+    }
+    println!("{}", run.summary(&c));
+    if let Some(d) = &run.best_detail {
+        let p = &d.point;
+        println!(
+            "best point re-measured: T_out {:.1} degC, heat-in-water \
+             {:.2}, reuse {:.2}, COP {:.2}, P_ac {:.1} kW",
+            p.t_out.mean(),
+            p.hiw,
+            p.reuse,
+            p.cop,
+            p.p_ac / 1e3,
+        );
+    }
+    println!(
+        "trajectory fingerprint: {:#018x} (seed-reproducible, \
+         shard-count independent)",
+        run.fingerprint()
+    );
+    if let Some(path) = args.get("json") {
+        let path = PathBuf::from(path);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        // The same serializer backs the POST /v1/optimize response, so
+        // this file is byte-identical to the served body.
+        std::fs::write(&path, run.to_json(&c))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use idatacool::config::ServeConfig;
     use idatacool::server::{resolve_workers, ServeOptions, Server};
@@ -510,8 +692,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::bind(ServeOptions { cfg: sc, base })?;
     println!(
         "serving http://{} — {} workers, cache {} entries, queue {}, {}, {} \
-         (POST /v1/simulate | /v1/fleet | /v1/sweep, GET /v1/healthz | \
-         /v1/metrics, POST /v1/shutdown or SIGTERM to stop)",
+         (POST /v1/simulate | /v1/fleet | /v1/sweep | /v1/optimize, \
+         GET /v1/healthz | /v1/metrics, POST /v1/shutdown or SIGTERM \
+         to stop)",
         server.local_addr(),
         workers,
         cache_cap,

@@ -387,6 +387,18 @@ pub fn lane_sync_transitions() -> &'static Counter {
     })
 }
 
+/// Candidate evaluations executed by the optimize subsystem (physical
+/// fleet runs only — cache hits never reach the counter).
+pub fn optimize_evals() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_optimize_evals_total",
+            "Candidate evaluations executed by the optimize subsystem",
+        )
+    })
+}
+
 /// Writer shards for the serve-layer batch histograms below: their
 /// writers are batch-round leaders (one push per round), so a small
 /// fixed shard count is plenty — callers pass `worker % BATCH_SHARDS`.
@@ -505,5 +517,6 @@ mod tests {
         let c2 = throttle_events() as *const _;
         assert_eq!(c1, c2);
         let _ = lane_sync_transitions();
+        let _ = optimize_evals();
     }
 }

@@ -1,0 +1,370 @@
+//! Deterministic search drivers: random-restart grid, coordinate
+//! descent, and a cross-entropy method.
+//!
+//! Every driver consumes randomness only through one `variability::Rng`
+//! seeded by [`search_seed`] (the fleet's splitmix64 convention), draws
+//! in a fixed order (canonical axis order within a point, submission
+//! order within a generation), and proposes only lattice-snapped
+//! points — so a fixed seed replays the identical search trajectory
+//! bitwise, including every cache hit.
+//!
+//! Budget semantics: the budget caps *physical* evaluations (cache hits
+//! are free). Drivers stop when the budget is spent, or after three
+//! consecutive generations that neither spent budget nor improved — the
+//! degenerate case where the whole reachable lattice is already cached
+//! (e.g. the 1-D default space under a generous budget) terminates
+//! promptly instead of spinning on free lookups.
+
+use anyhow::{bail, Result};
+
+use crate::variability::rng::{splitmix64, Rng};
+
+use super::eval::{EvalOutcome, Evaluator};
+use super::objective::Score;
+use super::space::Point;
+
+/// Consecutive no-progress generations before a driver gives up.
+const STALE_LIMIT: usize = 3;
+
+/// The search-driver catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverKind {
+    /// Full (budget-truncated) lattice scan + seeded random restarts.
+    Grid = 0,
+    /// Coordinate descent with seeded restarts on stagnation.
+    Coordinate = 1,
+    /// Cross-entropy method: sample, select elites, refit.
+    Cem = 2,
+}
+
+impl DriverKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DriverKind::Grid => "grid",
+            DriverKind::Coordinate => "coordinate",
+            DriverKind::Cem => "cem",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Result<DriverKind> {
+        Ok(match s {
+            "grid" => DriverKind::Grid,
+            "coordinate" => DriverKind::Coordinate,
+            "cem" => DriverKind::Cem,
+            other => bail!(
+                "unknown optimize driver '{other}' (grid|coordinate|cem)"
+            ),
+        })
+    }
+}
+
+/// Derive the driver's RNG seed from the user seed and the driver kind
+/// — the same mix shape as `fleet::plant_seed`, so two drivers under
+/// one seed never share a stream.
+pub fn search_seed(seed: u64, kind: DriverKind) -> u64 {
+    let salt = (kind as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(seed ^ salt).1
+}
+
+/// One trajectory row: the i-th evaluation the search requested.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    /// Position in the trajectory (0-based).
+    pub eval: usize,
+    /// Generation that requested it (0-based).
+    pub gen: usize,
+    pub point: Point,
+    pub score: Score,
+    pub cached: bool,
+    pub failed: bool,
+}
+
+/// Per-generation statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct GenStat {
+    pub index: usize,
+    /// Candidates submitted (cached + physical; budget-skipped excluded).
+    pub submitted: usize,
+    /// Physical evaluations this generation spent.
+    pub physical: usize,
+    /// Best (lowest) total this generation, worst-case if empty.
+    pub best: f64,
+    /// Mean total over the generation's evaluated candidates.
+    pub mean: f64,
+}
+
+/// A finished search: the full trajectory plus the winner.
+pub struct SearchOutcome {
+    pub records: Vec<EvalRecord>,
+    pub gens: Vec<GenStat>,
+    /// Index into `records` of the best candidate (lowest total,
+    /// earliest on ties, non-failed preferred).
+    pub best: usize,
+}
+
+/// Trajectory accumulator shared by the drivers.
+struct SearchState {
+    records: Vec<EvalRecord>,
+    gens: Vec<GenStat>,
+}
+
+impl SearchState {
+    /// Submit one generation: evaluate, record the trajectory rows (in
+    /// submission order) and the generation stat. Returns the raw
+    /// outcomes aligned with `points`.
+    fn run_gen(&mut self, ev: &mut Evaluator, points: &[Point])
+               -> Vec<Option<EvalOutcome>> {
+        let _span = crate::obs::span("optimize_generation");
+        let gen = self.gens.len();
+        let before = ev.evals();
+        let outs = ev.eval_batch(points);
+        let mut best = f64::INFINITY;
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (p, o) in points.iter().zip(&outs) {
+            let Some(o) = o else { continue };
+            self.records.push(EvalRecord {
+                eval: self.records.len(),
+                gen,
+                point: *p,
+                score: o.score,
+                cached: o.cached,
+                failed: o.failed,
+            });
+            if o.score.total < best {
+                best = o.score.total;
+            }
+            sum += o.score.total;
+            n += 1;
+        }
+        self.gens.push(GenStat {
+            index: gen,
+            submitted: n,
+            physical: ev.evals() - before,
+            best: if n > 0 { best } else { super::objective::WORST_SCORE },
+            mean: if n > 0 { sum / n as f64 } else { 0.0 },
+        });
+        outs
+    }
+}
+
+/// Run the chosen driver to budget exhaustion (or stagnation) and pick
+/// the winner.
+pub fn search(kind: DriverKind, ev: &mut Evaluator, gen_size: usize,
+              seed: u64) -> Result<SearchOutcome> {
+    anyhow::ensure!(gen_size > 0, "optimize gen_size must be positive");
+    let mut rng = Rng::new(search_seed(seed, kind));
+    let mut st = SearchState { records: Vec::new(), gens: Vec::new() };
+    match kind {
+        DriverKind::Grid => grid(ev, gen_size, &mut rng, &mut st),
+        DriverKind::Coordinate => coordinate(ev, &mut rng, &mut st),
+        DriverKind::Cem => cem(ev, gen_size, &mut rng, &mut st),
+    }
+    if st.records.is_empty() {
+        bail!("optimize search produced no evaluations \
+               (budget too small?)");
+    }
+    // Winner: lowest total, earliest on exact ties; a failed
+    // (worst-case-scored) row wins only if every row failed.
+    let pick = |skip_failed: bool| -> Option<usize> {
+        let mut w: Option<(f64, usize)> = None;
+        for r in &st.records {
+            if skip_failed && r.failed {
+                continue;
+            }
+            if w.is_none() || r.score.total < w.unwrap().0 {
+                w = Some((r.score.total, r.eval));
+            }
+        }
+        w.map(|(_, i)| i)
+    };
+    let best = pick(true).or_else(|| pick(false)).unwrap();
+    Ok(SearchOutcome { records: st.records, gens: st.gens, best })
+}
+
+/// Random-restart grid: scan the lattice (seeded-shuffled and truncated
+/// when it exceeds the budget), then spend any leftover budget on
+/// uniform random restarts.
+fn grid(ev: &mut Evaluator, gen_size: usize, rng: &mut Rng,
+        st: &mut SearchState) {
+    let mut lattice = ev.space.grid();
+    if lattice.len() > ev.budget {
+        rng.shuffle(&mut lattice);
+        lattice.truncate(ev.budget);
+    }
+    for chunk in lattice.chunks(gen_size) {
+        st.run_gen(ev, chunk);
+        if ev.remaining() == 0 {
+            break;
+        }
+    }
+    let mut stale = 0;
+    while ev.remaining() > 0 && stale < STALE_LIMIT {
+        let pts: Vec<Point> =
+            (0..gen_size).map(|_| ev.space.sample(rng)).collect();
+        let before = ev.evals();
+        st.run_gen(ev, &pts);
+        if ev.evals() == before {
+            stale += 1;
+        } else {
+            stale = 0;
+        }
+    }
+}
+
+/// Coordinate descent: from the lattice center, propose +-1 step per
+/// free axis each round, move to the best improving neighbor; on
+/// stagnation, restart from a seeded random point.
+fn coordinate(ev: &mut Evaluator, rng: &mut Rng, st: &mut SearchState) {
+    let mut cur = ev.space.snap(ev.space.center());
+    let outs = st.run_gen(ev, &[cur]);
+    let mut cur_total = match outs.first().and_then(|o| o.as_ref()) {
+        Some(o) => o.score.total,
+        None => return, // budget < 1 physical eval
+    };
+    let mut stale = 0;
+    let cap = 4 * ev.budget.max(1);
+    for _ in 0..cap {
+        if ev.remaining() == 0 || stale >= STALE_LIMIT {
+            break;
+        }
+        // neighbors: +-1 lattice step per free axis, canonical order
+        let mut props: Vec<Point> = Vec::new();
+        for (i, a) in ev.space.axes().iter().enumerate() {
+            if a.frozen {
+                continue;
+            }
+            for d in [-1.0, 1.0] {
+                let mut c = cur.coords();
+                c[i] += d * a.step;
+                let p = ev.space.snap(Point::from_coords(c));
+                if p != cur && !props.contains(&p) {
+                    props.push(p);
+                }
+            }
+        }
+        let before = ev.evals();
+        let outs = st.run_gen(ev, &props);
+        let mut winner: Option<(f64, usize)> = None;
+        for (j, o) in outs.iter().enumerate() {
+            let Some(o) = o else { continue };
+            if winner.is_none() || o.score.total < winner.unwrap().0 {
+                winner = Some((o.score.total, j));
+            }
+        }
+        let progressed = ev.evals() > before;
+        match winner {
+            Some((t, j)) if t < cur_total => {
+                cur_total = t;
+                cur = props[j];
+                stale = 0;
+            }
+            _ => {
+                // stagnation: seeded restart (descend from wherever it
+                // lands, even if worse — the global winner is picked
+                // from the full trajectory at the end)
+                cur = ev.space.sample(rng);
+                let outs = st.run_gen(ev, &[cur]);
+                match outs.first().and_then(|o| o.as_ref()) {
+                    Some(o) => cur_total = o.score.total,
+                    None => break,
+                }
+                if progressed || ev.evals() > before {
+                    stale = 0;
+                } else {
+                    stale += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Cross-entropy method: sample a population around a per-axis
+/// mean/std, refit both to the elite quartile, repeat. Std is floored
+/// at half a lattice step so the distribution never collapses below
+/// the lattice resolution.
+fn cem(ev: &mut Evaluator, gen_size: usize, rng: &mut Rng,
+       st: &mut SearchState) {
+    let space = ev.space.clone();
+    let axes = space.axes();
+    let center = space.center().coords();
+    let mut mean = center;
+    let mut std = [0.0f64; 4];
+    for (i, a) in axes.iter().enumerate() {
+        std[i] = if a.frozen { 0.0 } else { (a.hi - a.lo) / 4.0 };
+    }
+    let mut stale = 0;
+    while ev.remaining() > 0 && stale < STALE_LIMIT {
+        let pop: Vec<Point> = (0..gen_size)
+            .map(|_| {
+                let mut c = [0.0f64; 4];
+                for (i, a) in axes.iter().enumerate() {
+                    c[i] = if a.frozen {
+                        a.fixed
+                    } else {
+                        mean[i] + std[i] * rng.normal()
+                    };
+                }
+                space.snap(Point::from_coords(c))
+            })
+            .collect();
+        let before = ev.evals();
+        let outs = st.run_gen(ev, &pop);
+        let mut scored: Vec<(f64, usize)> = outs
+            .iter()
+            .enumerate()
+            .filter_map(|(j, o)| o.as_ref().map(|o| (o.score.total, j)))
+            .collect();
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        if !scored.is_empty() {
+            let n_elite = ((scored.len() + 3) / 4).max(1);
+            let elites = &scored[..n_elite];
+            for (i, a) in axes.iter().enumerate() {
+                if a.frozen {
+                    continue;
+                }
+                let vals: Vec<f64> = elites
+                    .iter()
+                    .map(|&(_, j)| pop[j].coords()[i])
+                    .collect();
+                let m = vals.iter().sum::<f64>() / vals.len() as f64;
+                let var = vals.iter().map(|v| (v - m) * (v - m))
+                    .sum::<f64>() / vals.len() as f64;
+                mean[i] = m;
+                std[i] = var.sqrt().max(a.step * 0.5);
+            }
+        }
+        if ev.evals() == before {
+            stale += 1;
+        } else {
+            stale = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn driver_names_round_trip() {
+        for k in [DriverKind::Grid, DriverKind::Coordinate,
+                  DriverKind::Cem] {
+            assert_eq!(DriverKind::by_name(k.name()).unwrap(), k);
+        }
+        assert!(DriverKind::by_name("anneal").is_err());
+    }
+
+    #[test]
+    fn search_seeds_separate_drivers_and_seeds() {
+        let g = search_seed(7, DriverKind::Grid);
+        let c = search_seed(7, DriverKind::Coordinate);
+        let m = search_seed(7, DriverKind::Cem);
+        assert_ne!(g, c);
+        assert_ne!(c, m);
+        assert_ne!(g, m);
+        assert_ne!(search_seed(7, DriverKind::Grid),
+                   search_seed(8, DriverKind::Grid));
+        assert_eq!(g, search_seed(7, DriverKind::Grid));
+    }
+}

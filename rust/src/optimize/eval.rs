@@ -1,0 +1,360 @@
+//! Candidate evaluation: the megabatch fleet path behind a
+//! fingerprint-keyed cache, sharded like `run_sweep_sharded`.
+//!
+//! Each candidate realizes a `SimConfig` (`Space::apply`), runs a small
+//! fleet through `FleetDriver` (megabatch lockstep by default — the
+//! same engine the sweep and the server use) and scores the aggregate
+//! (`objective::score`). Evaluations are memoized under a key mixing
+//! the applied config's fingerprint with the raw point coordinates (the
+//! chiller-scale and facility-share axes are invisible to
+//! `config_fingerprint`, so the coordinates must enter the key
+//! directly), the fleet seed, the plant count and the scenario — a
+//! repeated candidate is free, which is what lets grid restarts and
+//! coordinate descent revisit points without spending budget.
+//!
+//! Determinism: a batch shards only its *uncached first-occurrence*
+//! jobs across OS threads (contiguous blocks, `util::shard::blocks`),
+//! every thread writes its own result slot, and the cache insertion
+//! walks jobs in submission order — bitwise identical results for any
+//! shard count, same argument as the sweep's.
+//!
+//! Containment: one candidate is one fault domain. A panicking or
+//! erroring evaluation (the `optimize_eval` chaos site, or an organic
+//! defect) is scored [`Score::worst`] and logged — the search continues
+//! (degraded, never aborted), mirroring the fleet's quarantine story.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use anyhow::{bail, Result};
+
+use crate::bench::record::config_fingerprint;
+use crate::config::SimConfig;
+use crate::economics::CostModel;
+use crate::fleet::scenario::Scenario;
+use crate::fleet::{FleetConfig, FleetDriver};
+use crate::resilience::inject::{self, Site};
+use crate::util::shard::blocks;
+
+use super::objective::{self, Score, Weights};
+use super::space::{Point, Space};
+
+/// Shard (OS thread) count for a generation's candidate evaluations:
+/// every available core, overridable via `IDATACOOL_OPT_SHARDS` with
+/// the same strict parse as the sweep's (`env_usize_strict`): garbage
+/// is an error, zero is an error, and the count clamps to the job
+/// count at batch time.
+pub fn default_opt_shards() -> Result<usize> {
+    match crate::util::cli::env_usize_strict("IDATACOOL_OPT_SHARDS")? {
+        Some(0) => anyhow::bail!(
+            "IDATACOOL_OPT_SHARDS must be at least 1 \
+             (use 1 for serial evaluation)"
+        ),
+        Some(k) => Ok(k),
+        None => Ok(std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)),
+    }
+}
+
+/// One evaluated candidate as the driver sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOutcome {
+    pub score: Score,
+    /// The evaluation panicked or errored and was scored worst-case.
+    pub failed: bool,
+    /// Served from the cache (no physical evaluation this time).
+    pub cached: bool,
+}
+
+/// The memoizing, sharded candidate evaluator.
+pub struct Evaluator {
+    /// Per-candidate base config (eval duration already applied).
+    pub base: SimConfig,
+    pub space: Space,
+    pub weights: Weights,
+    pub cost: CostModel,
+    pub n_plants: usize,
+    pub scenario: Scenario,
+    pub fleet_seed: u64,
+    pub megabatch: bool,
+    pub shards: usize,
+    /// Physical-evaluation budget (cache hits are free).
+    pub budget: usize,
+    physical_evals: usize,
+    cache_hits: usize,
+    cache: BTreeMap<u64, (Score, bool)>,
+}
+
+impl Evaluator {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(base: SimConfig, space: Space, weights: Weights,
+               cost: CostModel, n_plants: usize, scenario: Scenario,
+               fleet_seed: u64, megabatch: bool, shards: usize,
+               budget: usize) -> Result<Evaluator> {
+        anyhow::ensure!(n_plants > 0, "optimize needs at least one plant");
+        anyhow::ensure!(budget > 0, "optimize budget must be positive");
+        anyhow::ensure!(shards > 0, "optimize needs at least one shard");
+        space.validate()?;
+        Ok(Evaluator {
+            base,
+            space,
+            weights,
+            cost,
+            n_plants,
+            scenario,
+            fleet_seed,
+            megabatch,
+            shards,
+            budget,
+            physical_evals: 0,
+            cache_hits: 0,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    /// Physical evaluations spent so far.
+    pub fn evals(&self) -> usize {
+        self.physical_evals
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits
+    }
+
+    /// Physical evaluations left in the budget.
+    pub fn remaining(&self) -> usize {
+        self.budget.saturating_sub(self.physical_evals)
+    }
+
+    /// The evaluation-cache key: the applied config's fingerprint mixed
+    /// (FNV) with the raw point coordinates, the fleet seed, the plant
+    /// count and the scenario name. The coordinates must enter
+    /// explicitly — `config_fingerprint` does not cover the chiller
+    /// capacity curve, and the facility-share axis never touches the
+    /// config at all.
+    pub fn key(&self, p: &Point) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+        }
+        let cfg = self.space.apply(&self.base, p);
+        let mut h = config_fingerprint(&cfg);
+        for c in p.coords() {
+            h = mix(h, c.to_bits());
+        }
+        h = mix(h, self.fleet_seed);
+        h = mix(h, self.n_plants as u64);
+        for &b in self.scenario.name().as_bytes() {
+            h = mix(h, b as u64);
+        }
+        h
+    }
+
+    /// Evaluate a generation of candidates. Cached candidates are free;
+    /// uncached first occurrences run sharded, in submission order, up
+    /// to the remaining budget. Returns one slot per input point:
+    /// `None` means the budget ran out before that point could be
+    /// physically evaluated.
+    pub fn eval_batch(&mut self, points: &[Point])
+                      -> Vec<Option<EvalOutcome>> {
+        let keys: Vec<u64> = points.iter().map(|p| self.key(p)).collect();
+        // First-occurrence uncached jobs, budget-capped. `trigger`
+        // remembers which input slot caused the physical run so only
+        // that slot reports cached=false.
+        let mut trigger: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut jobs: Vec<(u64, Point)> = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            let k = keys[i];
+            if self.cache.contains_key(&k) || trigger.contains_key(&k) {
+                continue;
+            }
+            if jobs.len() >= self.remaining() {
+                continue;
+            }
+            trigger.insert(k, i);
+            jobs.push((k, *p));
+        }
+
+        let mut slots: Vec<Option<(Score, bool)>> = vec![None; jobs.len()];
+        if !jobs.is_empty() {
+            let shards = self.shards.clamp(1, jobs.len());
+            let this = &*self;
+            if shards <= 1 {
+                for (slot, (_, p)) in jobs.iter().enumerate() {
+                    slots[slot] = Some(this.evaluate_candidate(p));
+                }
+            } else {
+                let indexed: Vec<(usize, Point)> = jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (_, p))| (i, *p))
+                    .collect();
+                let buckets = blocks(indexed, shards);
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(buckets.len());
+                    for bucket in buckets {
+                        handles.push(scope.spawn(move || {
+                            bucket
+                                .into_iter()
+                                .map(|(i, p)| {
+                                    (i, this.evaluate_candidate(&p))
+                                })
+                                .collect::<Vec<_>>()
+                        }));
+                    }
+                    for h in handles {
+                        // evaluate_candidate contains its own panics; a
+                        // dead shard leaves its slots None -> worst.
+                        if let Ok(rs) = h.join() {
+                            for (i, r) in rs {
+                                slots[i] = Some(r);
+                            }
+                        }
+                    }
+                });
+            }
+            // Cache insertion in submission order (determinism).
+            for ((k, _), slot) in jobs.iter().zip(slots) {
+                let entry = slot.unwrap_or((Score::worst(), true));
+                self.cache.insert(*k, entry);
+                self.physical_evals += 1;
+            }
+        }
+
+        points
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let k = keys[i];
+                let (score, failed) = *self.cache.get(&k)?;
+                let cached = trigger.get(&k) != Some(&i);
+                if cached {
+                    self.cache_hits += 1;
+                }
+                Some(EvalOutcome { score, failed, cached })
+            })
+            .collect()
+    }
+
+    /// Run one candidate: apply the point, run the fleet, score it.
+    /// Self-contained and panic-proof — a failure is scored worst-case
+    /// (`failed = true`), never propagated.
+    fn evaluate_candidate(&self, p: &Point) -> (Score, bool) {
+        if crate::obs::enabled() {
+            crate::obs::metrics::optimize_evals().inc();
+        }
+        let _span = crate::obs::span("optimize_eval");
+        let cfg = self.space.apply(&self.base, p);
+        let fc = FleetConfig {
+            n_plants: self.n_plants,
+            // candidates are the parallel axis; each fleet runs serial
+            shards: 1,
+            base: cfg,
+            fleet_seed: self.fleet_seed,
+            scenario: self.scenario,
+            megabatch: self.megabatch,
+        };
+        let n_nodes = self.base.n_nodes;
+        let weights = self.weights;
+        let cost = self.cost.clone();
+        let point = *p;
+        let r = catch_unwind(AssertUnwindSafe(move || -> Result<Score> {
+            if inject::armed()
+                && inject::fire(Site::OptimizeEval, None).is_some()
+            {
+                bail!("chaos: poisoned candidate evaluation");
+            }
+            let run = FleetDriver::new(fc)?.run()?;
+            Ok(objective::score(&run, n_nodes, &point, &weights, &cost))
+        }));
+        match r {
+            Ok(Ok(score)) => (score, false),
+            Ok(Err(e)) => {
+                eprintln!(
+                    "optimize: candidate (setpoint {:.1}) failed: {e:#}; \
+                     scored worst-case",
+                    p.setpoint
+                );
+                (Score::worst(), true)
+            }
+            Err(_) => {
+                eprintln!(
+                    "optimize: candidate (setpoint {:.1}) panicked; \
+                     scored worst-case",
+                    p.setpoint
+                );
+                (Score::worst(), true)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_evaluator(budget: usize) -> Evaluator {
+        let mut base = SimConfig::test_small();
+        base.duration_s = 120.0;
+        Evaluator::new(
+            base,
+            Space::default(),
+            Weights::preset("ere").unwrap(),
+            CostModel::default(),
+            1,
+            Scenario::by_name("baseline").unwrap(),
+            0x0997,
+            true,
+            1,
+            budget,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn cache_key_separates_points_and_seeds() {
+        let ev = tiny_evaluator(4);
+        let a = Point { setpoint: 55.0, pump_scale: 1.0,
+                        chiller_scale: 1.0, facility_share: 1.0 };
+        let b = Point { setpoint: 57.0, ..a };
+        // share and chiller scale differ only in the raw coords — the
+        // key must still separate them (config_fingerprint cannot).
+        let c = Point { facility_share: 0.5, ..a };
+        let d = Point { chiller_scale: 2.0, ..a };
+        assert_eq!(ev.key(&a), ev.key(&a));
+        assert_ne!(ev.key(&a), ev.key(&b));
+        assert_ne!(ev.key(&a), ev.key(&c));
+        assert_ne!(ev.key(&a), ev.key(&d));
+        let mut ev2 = tiny_evaluator(4);
+        ev2.fleet_seed = 0x0998;
+        assert_ne!(ev.key(&a), ev2.key(&a));
+    }
+
+    #[test]
+    fn batch_caches_and_respects_budget() {
+        let mut ev = tiny_evaluator(2);
+        let a = Point { setpoint: 55.0, pump_scale: 1.0,
+                        chiller_scale: 1.0, facility_share: 1.0 };
+        let b = Point { setpoint: 57.0, ..a };
+        let c = Point { setpoint: 59.0, ..a };
+        // a twice in one batch: 1 physical + 1 in-batch hit; b: 1 more
+        // physical; c: over budget -> None.
+        let out = ev.eval_batch(&[a, a, b, c]);
+        assert_eq!(ev.evals(), 2);
+        assert!(!out[0].as_ref().unwrap().cached);
+        assert!(out[1].as_ref().unwrap().cached);
+        assert!(!out[2].as_ref().unwrap().cached);
+        assert!(out[3].is_none());
+        assert_eq!(ev.cache_hits(), 1);
+        assert_eq!(ev.remaining(), 0);
+        // repeats stay free even with the budget exhausted
+        let again = ev.eval_batch(&[a, b]);
+        assert_eq!(ev.evals(), 2);
+        assert!(again[0].as_ref().unwrap().cached);
+        assert!(again[1].as_ref().unwrap().cached);
+        assert_eq!(
+            again[0].as_ref().unwrap().score,
+            out[0].as_ref().unwrap().score
+        );
+    }
+}

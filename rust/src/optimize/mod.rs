@@ -1,0 +1,428 @@
+//! Closed-loop optimization: the twin tunes itself.
+//!
+//! The paper's headline result is an *operating-point trade-off*
+//! (Figs. 4–7): raising the coolant setpoint toward 60–70 degC
+//! maximizes adsorption-chiller reuse while throttle risk bounds it
+//! from above. This subsystem wraps the megabatch fleet evaluator in a
+//! search layer so that band comes out as an *output*:
+//!
+//!  * [`space`] — typed parameter space (setpoint, pump scale, chiller
+//!    sizing, facility share), every axis a bounded lattice;
+//!  * [`objective`] — scalar lower-is-better score (PUE/ERE/throttle
+//!    from `FleetAggregate`, payback from `economics::CostModel`);
+//!  * [`eval`] — fingerprint-cached, sharded candidate evaluation on
+//!    the fleet path (one candidate = one small fleet run);
+//!  * [`driver`] — deterministic search drivers (grid with random
+//!    restarts, coordinate descent, cross-entropy), splitmix64-seeded.
+//!
+//! Surfaces: the `idatacool optimize` CLI subcommand, the `[optimize]`
+//! TOML section, `POST /v1/optimize` on the server, and the
+//! `idatacool-optimize/1` JSON report — one serializer for all of
+//! them, byte for byte.
+//!
+//! Determinism: for a fixed (base config, space, objective, driver,
+//! seed, budget, plants, scenario), the trajectory, the per-generation
+//! stats, the winner and the report bytes are bitwise reproducible
+//! across runs, shard counts and the CLI/server boundary
+//! (`tests/optimize_integration.rs` is the gate). The report carries no
+//! wall-clock and no execution-shape fields.
+
+pub mod driver;
+pub mod eval;
+pub mod objective;
+pub mod space;
+
+use anyhow::Result;
+
+use crate::config::{OptimizeSettings, SimConfig};
+use crate::economics::CostModel;
+use crate::figures::sweep::{self, SetpointRun, SweepOptions};
+use crate::fleet::scenario::Scenario;
+use crate::util::json::{Json, JsonBuilder};
+
+use driver::{DriverKind, EvalRecord, GenStat};
+use eval::Evaluator;
+use objective::Weights;
+use space::Space;
+
+/// A fully resolved optimization run configuration (TOML/env/flag
+/// precedence already applied — see [`OptimizeConfig::from_settings`]).
+#[derive(Debug, Clone)]
+pub struct OptimizeConfig {
+    /// Base plant config candidates derive from.
+    pub base: SimConfig,
+    pub space: Space,
+    pub weights: Weights,
+    /// The preset name the weights started from (report field).
+    pub objective_name: String,
+    pub kind: DriverKind,
+    /// Search + fleet seed (one seed reproduces the whole trajectory).
+    pub seed: u64,
+    /// Physical-evaluation budget.
+    pub budget: usize,
+    /// Candidates per generation.
+    pub gen_size: usize,
+    /// Plants per candidate fleet.
+    pub n_plants: usize,
+    pub scenario: Scenario,
+    /// Simulated seconds per candidate evaluation (overrides the base
+    /// config's duration for the inner fleet runs). Semantic knob: it
+    /// changes the measured physics, so it is part of the canonical
+    /// request document — unlike shards/megabatch, which are execution
+    /// shape.
+    pub eval_duration_s: f64,
+    /// Re-measure the winner through the sweep's `evaluate_point` and
+    /// attach the result as `best_detail`.
+    pub detail: bool,
+    pub cost: CostModel,
+    /// Execution shape (never in documents or cache keys).
+    pub megabatch: bool,
+    pub shards: usize,
+}
+
+impl OptimizeConfig {
+    /// Resolve an [`OptimizeSettings`] (the `[optimize]` TOML section,
+    /// possibly env/flag-patched by the CLI) against a base config.
+    /// Defaults: `ere` objective, `grid` driver, budget 24, 2 plants,
+    /// `mixed` scenario, setpoint axis only, generation size 8, 900 s
+    /// eval windows, detail on, seed = the base config's seed.
+    pub fn from_settings(base: SimConfig, s: &OptimizeSettings)
+                         -> Result<OptimizeConfig> {
+        let objective_name =
+            s.objective.clone().unwrap_or_else(|| "ere".into());
+        let mut weights = Weights::preset(&objective_name)?;
+        if let Some(w) = s.w_pue {
+            weights.pue = w;
+        }
+        if let Some(w) = s.w_ere {
+            weights.ere = w;
+        }
+        if let Some(w) = s.w_throttle {
+            weights.throttle = w;
+        }
+        if let Some(w) = s.w_cost {
+            weights.cost = w;
+        }
+        let kind =
+            DriverKind::by_name(s.driver.as_deref().unwrap_or("grid"))?;
+        let scenario =
+            Scenario::by_name(s.scenario.as_deref().unwrap_or("mixed"))?;
+        let mut space = Space::default();
+        if let Some(axes) = &s.axes {
+            space.enable_axes(axes)?;
+        }
+        let eval_duration_s = s.eval_duration_s.unwrap_or(900.0);
+        anyhow::ensure!(
+            eval_duration_s > 0.0,
+            "optimize eval_duration_s must be positive"
+        );
+        let cfg = OptimizeConfig {
+            seed: base.seed,
+            base,
+            space,
+            weights,
+            objective_name,
+            kind,
+            budget: s.budget.unwrap_or(24),
+            gen_size: s.gen_size.unwrap_or(8),
+            n_plants: s.plants.unwrap_or(2),
+            scenario,
+            eval_duration_s,
+            detail: s.detail.unwrap_or(true),
+            cost: CostModel::default(),
+            megabatch: crate::fleet::default_megabatch()?,
+            shards: eval::default_opt_shards()?,
+        };
+        cfg.space.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// A finished optimization: trajectory, per-generation stats, winner.
+pub struct OptimizeRun {
+    pub records: Vec<EvalRecord>,
+    pub gens: Vec<GenStat>,
+    /// Index into `records` of the winner.
+    pub best: usize,
+    /// Physical evaluations spent.
+    pub evals: usize,
+    pub cache_hits: usize,
+    /// The winner re-measured through the sweep's `evaluate_point`
+    /// (when `detail` is on and the measurement succeeded).
+    pub best_detail: Option<SetpointRun>,
+}
+
+/// Run a resolved optimization end to end.
+pub fn run_optimize(c: &OptimizeConfig) -> Result<OptimizeRun> {
+    let _span = crate::obs::span("optimize");
+    let mut base = c.base.clone();
+    base.duration_s = c.eval_duration_s;
+    let mut ev = Evaluator::new(
+        base.clone(),
+        c.space.clone(),
+        c.weights,
+        c.cost.clone(),
+        c.n_plants,
+        c.scenario,
+        c.seed,
+        c.megabatch,
+        c.shards,
+        c.budget,
+    )?;
+    let outcome = driver::search(c.kind, &mut ev, c.gen_size, c.seed)?;
+    let best = outcome.records[outcome.best];
+    // Re-measure the winner with the sweep's own instrument: the same
+    // evaluate_point behind the figure sweeps, so the optimizer report
+    // and the sweep figures can never disagree about what the chosen
+    // operating point looks like. SweepOptions::quick() keeps the CLI
+    // snappy; the measurement is deterministic either way.
+    let best_detail = if c.detail {
+        let dcfg = c.space.apply(&base, &best.point);
+        match sweep::evaluate_point(&dcfg, best.point.setpoint,
+                                    &SweepOptions::quick()) {
+            Ok(run) => Some(run),
+            Err(e) => {
+                eprintln!("optimize: best-point detail measurement \
+                           failed: {e:#}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    Ok(OptimizeRun {
+        records: outcome.records,
+        gens: outcome.gens,
+        best: outcome.best,
+        evals: ev.evals(),
+        cache_hits: ev.cache_hits(),
+        best_detail,
+    })
+}
+
+/// `f64::INFINITY`-safe number: JSON has no `inf`, so non-finite
+/// paybacks serialize as `null`.
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn record_json(r: &EvalRecord) -> Json {
+    JsonBuilder::new()
+        .num("eval", r.eval as f64)
+        .num("gen", r.gen as f64)
+        .bool("cached", r.cached)
+        .bool("failed", r.failed)
+        .num("setpoint", r.point.setpoint)
+        .num("pump_scale", r.point.pump_scale)
+        .num("chiller_scale", r.point.chiller_scale)
+        .num("facility_share", r.point.facility_share)
+        .num("objective", r.score.total)
+        .num("pue", r.score.pue)
+        .num("ere", r.score.ere)
+        .num("throttle_frac", r.score.throttle_frac)
+        .set("payback_years", num_or_null(r.score.payback_years))
+        .build()
+}
+
+/// The sweep-point detail block (same field names as the sweep's
+/// `SweepData::to_json_value` points, same serializer substrate).
+fn detail_json(run: &SetpointRun) -> Json {
+    let p = &run.point;
+    JsonBuilder::new()
+        .num("setpoint", p.setpoint)
+        .num("t_out_mean", p.t_out.mean())
+        .num("t_out_std", p.t_out.std())
+        .num("t_tank_mean", p.t_tank.mean())
+        .num("sel_core_mean", p.sel_core.mean())
+        .num("sel_core_std", p.sel_core.std())
+        .num("sel_power_mean", p.sel_power.mean())
+        .num("sel_power_std", p.sel_power.std())
+        .num("hiw", p.hiw)
+        .num("hiw_err", p.hiw_err)
+        .num("pd_frac", p.pd_frac)
+        .num("cop", p.cop)
+        .num("reuse", p.reuse)
+        .num("valve_mean", p.valve_mean)
+        .num("p_ac_w", p.p_ac)
+        .build()
+}
+
+impl OptimizeRun {
+    /// The `idatacool-optimize/1` document: the resolved request, the
+    /// full trajectory, per-generation stats, the winner (plus its
+    /// sweep-grade detail when enabled) and the determinism
+    /// fingerprint. `util::json` substrate — BTreeMap-stable key order,
+    /// shortest-round-trip floats — so the CLI `--json` file and the
+    /// `POST /v1/optimize` response body are the same bytes. No
+    /// wall-clock, no execution-shape fields (shards/megabatch).
+    pub fn to_json_value(&self, cfg: &OptimizeConfig) -> Json {
+        let axes: Vec<Json> = cfg
+            .space
+            .axes()
+            .iter()
+            .map(|a| {
+                JsonBuilder::new()
+                    .str("name", a.name)
+                    .num("lo", a.lo)
+                    .num("hi", a.hi)
+                    .num("step", a.step)
+                    .bool("frozen", a.frozen)
+                    .num("fixed", a.fixed)
+                    .build()
+            })
+            .collect();
+        let gens: Vec<Json> = self
+            .gens
+            .iter()
+            .map(|g| {
+                JsonBuilder::new()
+                    .num("index", g.index as f64)
+                    .num("submitted", g.submitted as f64)
+                    .num("physical", g.physical as f64)
+                    .num("best", g.best)
+                    .num("mean", g.mean)
+                    .build()
+            })
+            .collect();
+        let trajectory: Vec<Json> =
+            self.records.iter().map(record_json).collect();
+        JsonBuilder::new()
+            .str("schema", "idatacool-optimize/1")
+            .str("objective", &cfg.objective_name)
+            .set(
+                "weights",
+                JsonBuilder::new()
+                    .num("pue", cfg.weights.pue)
+                    .num("ere", cfg.weights.ere)
+                    .num("throttle", cfg.weights.throttle)
+                    .num("cost", cfg.weights.cost)
+                    .build(),
+            )
+            .str("driver", cfg.kind.name())
+            .hex("seed", cfg.seed)
+            .num("budget", cfg.budget as f64)
+            .num("gen_size", cfg.gen_size as f64)
+            .num("evals", self.evals as f64)
+            .num("cache_hits", self.cache_hits as f64)
+            .num("n_plants", cfg.n_plants as f64)
+            .str("scenario", cfg.scenario.name())
+            .str("base_config", &cfg.base.name)
+            .num("eval_duration_s", cfg.eval_duration_s)
+            .arr("space", axes)
+            .arr("generations", gens)
+            .arr("trajectory", trajectory)
+            .set("best", record_json(&self.records[self.best]))
+            .set(
+                "best_detail",
+                self.best_detail
+                    .as_ref()
+                    .map(detail_json)
+                    .unwrap_or(Json::Null),
+            )
+            .hex("fingerprint", self.fingerprint())
+            .build()
+    }
+
+    pub fn to_json(&self, cfg: &OptimizeConfig) -> String {
+        self.to_json_value(cfg).to_string()
+    }
+
+    /// Order-sensitive bitwise fingerprint of the trajectory and the
+    /// winner — the determinism gate compares this across runs and
+    /// across the CLI/server boundary.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+        }
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for r in &self.records {
+            h = mix(h, r.gen as u64);
+            for c in r.point.coords() {
+                h = mix(h, c.to_bits());
+            }
+            h = mix(h, r.score.total.to_bits());
+            h = mix(h, r.cached as u64);
+            h = mix(h, r.failed as u64);
+        }
+        h = mix(h, self.best as u64);
+        h
+    }
+
+    /// One-line CLI headline.
+    pub fn summary(&self, cfg: &OptimizeConfig) -> String {
+        let b = &self.records[self.best];
+        format!(
+            "optimize [{} / {}]: best objective {:.6} at setpoint \
+             {:.1} degC (pump x{:.2}, chiller x{:.2}, share {:.2}) \
+             after {} evals (+{} cache hits, {} generations)",
+            cfg.objective_name,
+            cfg.kind.name(),
+            b.score.total,
+            b.point.setpoint,
+            b.point.pump_scale,
+            b.point.chiller_scale,
+            b.point.facility_share,
+            self.evals,
+            self.cache_hits,
+            self.gens.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_settings_applies_defaults() {
+        let base = SimConfig::test_small();
+        let c = OptimizeConfig::from_settings(
+            base.clone(),
+            &OptimizeSettings::default(),
+        )
+        .unwrap();
+        assert_eq!(c.objective_name, "ere");
+        assert_eq!(c.kind, DriverKind::Grid);
+        assert_eq!(c.budget, 24);
+        assert_eq!(c.n_plants, 2);
+        assert_eq!(c.scenario.name(), "mixed");
+        assert_eq!(c.eval_duration_s, 900.0);
+        assert!(c.detail);
+        assert_eq!(c.seed, base.seed);
+        // default space: only the setpoint axis is free
+        assert!(!c.space.setpoint.frozen);
+        assert!(c.space.pump.frozen);
+    }
+
+    #[test]
+    fn from_settings_resolves_presets_axes_and_overrides() {
+        let mut s = OptimizeSettings::default();
+        s.objective = Some("cost".into());
+        s.driver = Some("cem".into());
+        s.budget = Some(10);
+        s.axes = Some("setpoint,pump".into());
+        s.w_throttle = Some(2.0);
+        let c = OptimizeConfig::from_settings(SimConfig::test_small(), &s)
+            .unwrap();
+        assert_eq!(c.kind, DriverKind::Cem);
+        assert_eq!(c.weights.cost, 1.0);
+        assert_eq!(c.weights.throttle, 2.0); // explicit override wins
+        assert!(!c.space.pump.frozen);
+        assert!(c.space.chiller.frozen);
+        // garbage is rejected
+        let mut bad = OptimizeSettings::default();
+        bad.objective = Some("speed".into());
+        assert!(OptimizeConfig::from_settings(SimConfig::test_small(),
+                                              &bad)
+            .is_err());
+        let mut bad = OptimizeSettings::default();
+        bad.eval_duration_s = Some(0.0);
+        assert!(OptimizeConfig::from_settings(SimConfig::test_small(),
+                                              &bad)
+            .is_err());
+    }
+}

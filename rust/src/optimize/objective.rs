@@ -1,0 +1,166 @@
+//! Scalar objective for the closed-loop optimizer.
+//!
+//! Composes the fleet-level metrics (`FleetAggregate::objective`: PUE,
+//! ERE, throttle fraction) with the amortization economics
+//! (`economics::CostModel::analyze`) into one lower-is-better score.
+//! Presets:
+//!
+//!  * `ere`  — energy-reuse effectiveness with a strong throttle
+//!    penalty (the paper's operating-point question; default);
+//!  * `pue`  — facility efficiency with the same throttle penalty;
+//!  * `cost` — normalized payback time of the retrofit, throttle
+//!    penalized.
+//!
+//! The `facility_share` axis enters *here*, not in the physics: ERE is
+//! PUE minus the credit-per-IT-energy term, so valuing only a share `s`
+//! of the facility credit is exactly `s*ERE + (1-s)*PUE` — a
+//! reweighting, which keeps candidate evaluation (the expensive part)
+//! independent of the share axis.
+
+use anyhow::{bail, Result};
+
+use crate::economics::CostModel;
+use crate::fleet::aggregate::ObjectiveWeights;
+use crate::fleet::FleetRun;
+
+use super::space::Point;
+
+/// Cap on the payback horizon entering the cost term: paybacks beyond
+/// this (including the infinite no-savings case) saturate at 1.0.
+pub const PAYBACK_CAP_YEARS: f64 = 20.0;
+
+/// Finite worst-case score assigned to failed candidate evaluations
+/// (panic or error under chaos): JSON-safe, orders after every real
+/// score, and never NaN-poisons a generation statistic.
+pub const WORST_SCORE: f64 = 1e12;
+
+/// Objective weights: the fleet terms plus the economics term.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    pub pue: f64,
+    pub ere: f64,
+    pub throttle: f64,
+    /// Weight on the normalized payback time (capped at
+    /// [`PAYBACK_CAP_YEARS`], scaled to [0, 1]).
+    pub cost: f64,
+}
+
+impl Weights {
+    /// Resolve a named preset.
+    pub fn preset(name: &str) -> Result<Weights> {
+        Ok(match name {
+            "ere" => Weights { pue: 0.0, ere: 1.0, throttle: 5.0,
+                               cost: 0.0 },
+            "pue" => Weights { pue: 1.0, ere: 0.0, throttle: 5.0,
+                               cost: 0.0 },
+            "cost" => Weights { pue: 0.0, ere: 0.0, throttle: 5.0,
+                                cost: 1.0 },
+            other => bail!(
+                "unknown objective preset '{other}' (ere|pue|cost)"
+            ),
+        })
+    }
+}
+
+/// One scored candidate: the total plus its components (the trajectory
+/// rows carry all of them so a report reader can re-weight offline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Score {
+    /// The weighted total (lower is better).
+    pub total: f64,
+    pub pue: f64,
+    pub ere: f64,
+    pub throttle_frac: f64,
+    /// Uncapped payback estimate [years] (`f64::INFINITY` when the
+    /// operating point never amortizes).
+    pub payback_years: f64,
+}
+
+impl Score {
+    /// The sentinel a failed evaluation is scored with.
+    pub fn worst() -> Score {
+        Score {
+            total: WORST_SCORE,
+            pue: 0.0,
+            ere: 0.0,
+            throttle_frac: 0.0,
+            payback_years: f64::INFINITY,
+        }
+    }
+}
+
+/// Score a finished fleet evaluation of one candidate.
+///
+/// Deterministic: every input is a pure function of the fleet run
+/// (itself bitwise reproducible) and the reductions below iterate
+/// plants in index order with plain f64 arithmetic.
+pub fn score(run: &FleetRun, n_nodes: usize, point: &Point, w: &Weights,
+             model: &CostModel) -> Score {
+    let agg = &run.aggregate;
+    let share = point.facility_share;
+    // share-adjusted fleet terms: s*ERE + (1-s)*PUE == PUE - s*credit
+    let fleet_w = ObjectiveWeights {
+        pue: w.pue + w.ere * (1.0 - share),
+        ere: w.ere * share,
+        throttle: w.throttle,
+    };
+    let base = agg.objective(&fleet_w);
+
+    // Economics at the fleet-mean operating point (plant-index order).
+    let n_plants = run.plants.len().max(1);
+    let mut p_ac = 0.0;
+    let mut hiw = 0.0;
+    for p in &run.plants {
+        p_ac += p.result.energy.mean_p_ac();
+        hiw += p.result.energy.heat_in_water_fraction();
+    }
+    p_ac /= n_plants as f64;
+    hiw /= n_plants as f64;
+    let p_chilled = if run.facility.seconds > 1e-9 {
+        share * (run.facility.e_chilled / run.facility.seconds)
+            / n_plants as f64
+    } else {
+        0.0
+    };
+    let amort = model.analyze(n_nodes, p_ac, hiw, p_chilled);
+    let payback = amort.payback_years;
+    let cost_term = (payback.min(PAYBACK_CAP_YEARS) / PAYBACK_CAP_YEARS)
+        .min(1.0);
+
+    Score {
+        total: base + w.cost * cost_term,
+        pue: agg.pue_stats.mean(),
+        ere: agg.ere_stats.mean(),
+        throttle_frac: agg.throttle_fraction(),
+        payback_years: payback,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_garbage_is_rejected() {
+        let e = Weights::preset("ere").unwrap();
+        assert_eq!(e.ere, 1.0);
+        assert_eq!(e.cost, 0.0);
+        let p = Weights::preset("pue").unwrap();
+        assert_eq!(p.pue, 1.0);
+        let c = Weights::preset("cost").unwrap();
+        assert_eq!(c.cost, 1.0);
+        // every preset keeps the throttle penalty on
+        for w in [e, p, c] {
+            assert!(w.throttle > 0.0);
+        }
+        assert!(Weights::preset("speed").is_err());
+    }
+
+    #[test]
+    fn worst_score_is_finite_and_orders_last() {
+        let w = Score::worst();
+        assert!(w.total.is_finite());
+        assert!(w.total > 1e6);
+        assert!(w.payback_years.is_infinite());
+    }
+}

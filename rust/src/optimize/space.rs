@@ -1,0 +1,375 @@
+//! Typed parameter space for the closed-loop optimizer.
+//!
+//! Four operating knobs, each a bounded, stepped [`Axis`]:
+//!
+//!  * `setpoint` — rack-outlet setpoint [degC], the paper's Fig. 4–7
+//!    x-axis (the only axis free by default);
+//!  * `pump` — pump-curve scale applied to the base config's
+//!    `pump_speed`;
+//!  * `chiller` — adsorption-chiller sizing scale applied to the
+//!    `pc_max` capacity curve;
+//!  * `share` — facility share: the fraction of the pooled cooling
+//!    credit the objective values (objective-side only, it never
+//!    touches the plant physics).
+//!
+//! Every axis is a finite lattice (`lo + k*step`): candidate points are
+//! *snapped* to lattice values before evaluation, so two search paths
+//! that propose nearly-equal floats evaluate the identical `SimConfig`
+//! and hit the same evaluation-cache key — the property that makes the
+//! eval cache effective and the search trajectory bitwise reproducible.
+
+use anyhow::{ensure, Result};
+
+use crate::config::SimConfig;
+use crate::variability::rng::Rng;
+
+/// One candidate operating point (always lattice-snapped).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// Rack-outlet setpoint [degC].
+    pub setpoint: f64,
+    /// Scale on the base config's `pump_speed`.
+    pub pump_scale: f64,
+    /// Scale on the chiller capacity curve (`pc_max_at_57`, `pc_max_cap`).
+    pub chiller_scale: f64,
+    /// Fraction of the facility cooling credit the objective values.
+    pub facility_share: f64,
+}
+
+impl Point {
+    /// The four coordinates in canonical axis order
+    /// (setpoint, pump, chiller, share) — the order every serializer,
+    /// fingerprint and driver loop walks.
+    pub fn coords(&self) -> [f64; 4] {
+        [self.setpoint, self.pump_scale, self.chiller_scale,
+         self.facility_share]
+    }
+
+    /// Rebuild a point from canonical-order coordinates.
+    pub fn from_coords(c: [f64; 4]) -> Point {
+        Point {
+            setpoint: c[0],
+            pump_scale: c[1],
+            chiller_scale: c[2],
+            facility_share: c[3],
+        }
+    }
+}
+
+/// One bounded, stepped search axis.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: &'static str,
+    pub lo: f64,
+    pub hi: f64,
+    /// Lattice step; candidate values snap to `lo + k*step`.
+    pub step: f64,
+    /// A frozen axis contributes its `fixed` value to every candidate.
+    pub frozen: bool,
+    pub fixed: f64,
+}
+
+impl Axis {
+    fn new(name: &'static str, lo: f64, hi: f64, step: f64, frozen: bool,
+           fixed: f64) -> Axis {
+        Axis { name, lo, hi, step, frozen, fixed }
+    }
+
+    /// Number of lattice levels (`lo` and `hi` inclusive).
+    pub fn levels(&self) -> usize {
+        ((self.hi - self.lo) / self.step).round() as usize + 1
+    }
+
+    /// The k-th lattice value.
+    pub fn level(&self, k: usize) -> f64 {
+        self.lo + k as f64 * self.step
+    }
+
+    /// Snap a value to the nearest lattice level (frozen axes snap to
+    /// their fixed value). Pure f64 arithmetic on the same inputs —
+    /// bitwise deterministic.
+    pub fn snap(&self, v: f64) -> f64 {
+        if self.frozen {
+            return self.fixed;
+        }
+        let k = ((v - self.lo) / self.step).round();
+        let k = k.clamp(0.0, (self.levels() - 1) as f64);
+        self.level(k as usize)
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.step > 0.0, "axis {}: step must be positive",
+                self.name);
+        ensure!(self.lo <= self.hi, "axis {}: lo > hi", self.name);
+        ensure!(
+            (self.lo..=self.hi).contains(&self.fixed),
+            "axis {}: fixed value {} outside [{}, {}]",
+            self.name, self.fixed, self.lo, self.hi
+        );
+        Ok(())
+    }
+}
+
+/// The full parameter space: four axes in canonical order.
+#[derive(Debug, Clone)]
+pub struct Space {
+    pub setpoint: Axis,
+    pub pump: Axis,
+    pub chiller: Axis,
+    pub share: Axis,
+}
+
+impl Default for Space {
+    /// The paper's operating-point question: only the setpoint is free
+    /// (45–75 degC in 2-degree steps — the sweep's familiar grid); the
+    /// other axes sit frozen at their neutral scales until
+    /// [`Space::enable_axes`] opens them.
+    fn default() -> Self {
+        Space {
+            setpoint: Axis::new("setpoint", 45.0, 75.0, 2.0, false, 67.0),
+            pump: Axis::new("pump", 0.6, 1.4, 0.1, true, 1.0),
+            chiller: Axis::new("chiller", 0.5, 2.0, 0.25, true, 1.0),
+            share: Axis::new("share", 0.0, 1.0, 0.05, true, 1.0),
+        }
+    }
+}
+
+impl Space {
+    /// The axes in canonical order (matches [`Point::coords`]).
+    pub fn axes(&self) -> [&Axis; 4] {
+        [&self.setpoint, &self.pump, &self.chiller, &self.share]
+    }
+
+    /// Unfreeze exactly the named axes (comma-separated catalog names:
+    /// `setpoint`, `pump`, `chiller`, `share`); all others freeze at
+    /// their fixed values.
+    pub fn enable_axes(&mut self, csv: &str) -> Result<()> {
+        let mut free = [false; 4];
+        for name in csv.split(',') {
+            let name = name.trim();
+            if name.is_empty() {
+                continue;
+            }
+            let i = match name {
+                "setpoint" => 0,
+                "pump" => 1,
+                "chiller" => 2,
+                "share" => 3,
+                other => anyhow::bail!(
+                    "unknown optimize axis '{other}' \
+                     (setpoint|pump|chiller|share)"
+                ),
+            };
+            free[i] = true;
+        }
+        ensure!(free.iter().any(|&f| f),
+                "optimize axes '{csv}' enables nothing");
+        self.setpoint.frozen = !free[0];
+        self.pump.frozen = !free[1];
+        self.chiller.frozen = !free[2];
+        self.share.frozen = !free[3];
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for a in self.axes() {
+            a.validate()?;
+        }
+        ensure!(self.axes().iter().any(|a| !a.frozen),
+                "optimize space has no free axis");
+        // The setpoint axis must stay inside SimConfig's validated
+        // operating range, or every candidate would fail to build.
+        ensure!(
+            self.setpoint.lo > 25.0 && self.setpoint.hi <= 75.0,
+            "setpoint axis [{}, {}] outside the plant's operating range \
+             (25, 75]",
+            self.setpoint.lo, self.setpoint.hi
+        );
+        ensure!(
+            self.pump.lo > 0.0,
+            "pump scale axis must stay positive"
+        );
+        Ok(())
+    }
+
+    /// Snap every coordinate to its axis lattice.
+    pub fn snap(&self, p: Point) -> Point {
+        let axes = self.axes();
+        let mut c = p.coords();
+        for (i, a) in axes.iter().enumerate() {
+            c[i] = a.snap(c[i]);
+        }
+        Point::from_coords(c)
+    }
+
+    /// The lattice-snapped midpoint of every free axis (frozen axes at
+    /// their fixed values) — the coordinate-descent start.
+    pub fn center(&self) -> Point {
+        let mut c = [0.0; 4];
+        for (i, a) in self.axes().iter().enumerate() {
+            c[i] = a.snap(0.5 * (a.lo + a.hi));
+        }
+        Point::from_coords(c)
+    }
+
+    /// One uniformly random lattice point. Draws exactly one `below`
+    /// per **free** axis, in canonical axis order — the draw count is
+    /// part of the determinism contract (frozen axes consume nothing,
+    /// so the same seed with the same free-axis set replays the same
+    /// trajectory).
+    pub fn sample(&self, rng: &mut Rng) -> Point {
+        let mut c = [0.0; 4];
+        for (i, a) in self.axes().iter().enumerate() {
+            c[i] = if a.frozen {
+                a.fixed
+            } else {
+                a.level(rng.below(a.levels()))
+            };
+        }
+        Point::from_coords(c)
+    }
+
+    /// The full lattice over the free axes, in odometer order with the
+    /// setpoint axis outermost (frozen axes contribute their fixed
+    /// value). The default space reduces this to the familiar 1-D
+    /// setpoint grid — the existing sweep as a degenerate case.
+    pub fn grid(&self) -> Vec<Point> {
+        let axes = self.axes();
+        let levels: Vec<usize> = axes
+            .iter()
+            .map(|a| if a.frozen { 1 } else { a.levels() })
+            .collect();
+        let total: usize = levels.iter().product();
+        let mut out = Vec::with_capacity(total);
+        let mut idx = [0usize; 4];
+        for _ in 0..total {
+            let mut c = [0.0; 4];
+            for (i, a) in axes.iter().enumerate() {
+                c[i] = if a.frozen { a.fixed } else { a.level(idx[i]) };
+            }
+            out.push(Point::from_coords(c));
+            // odometer: last axis fastest, setpoint (index 0) outermost
+            for i in (0..4).rev() {
+                idx[i] += 1;
+                if idx[i] < levels[i] {
+                    break;
+                }
+                idx[i] = 0;
+            }
+        }
+        out
+    }
+
+    /// Realize a candidate as a runnable config on top of the base.
+    /// `facility_share` is objective-side only and deliberately absent:
+    /// it weights the cooling credit in the score, not the physics.
+    pub fn apply(&self, base: &SimConfig, p: &Point) -> SimConfig {
+        let mut c = base.clone();
+        c.t_out_setpoint = p.setpoint;
+        // warm start near the operating point, same convention as the
+        // sweep's evaluate_point
+        c.t_water_init = (p.setpoint - 3.0).max(20.0);
+        c.pump_speed = (base.pump_speed * p.pump_scale).clamp(0.05, 1.5);
+        c.pp.pc_max_at_57 *= p.chiller_scale;
+        c.pp.pc_max_cap *= p.chiller_scale;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_space_is_the_sweep_lattice() {
+        let s = Space::default();
+        s.validate().unwrap();
+        let g = s.grid();
+        // 45..=75 step 2 -> 16 setpoints, other axes frozen
+        assert_eq!(g.len(), 16);
+        assert_eq!(g[0].setpoint, 45.0);
+        assert_eq!(g[15].setpoint, 75.0);
+        for p in &g {
+            assert_eq!(p.pump_scale, 1.0);
+            assert_eq!(p.chiller_scale, 1.0);
+            assert_eq!(p.facility_share, 1.0);
+        }
+    }
+
+    #[test]
+    fn snap_lands_on_lattice_and_respects_bounds() {
+        let s = Space::default();
+        let p = s.snap(Point {
+            setpoint: 61.7,
+            pump_scale: 7.0,
+            chiller_scale: -1.0,
+            facility_share: 0.5,
+        });
+        assert_eq!(p.setpoint, 61.0);
+        // frozen axes snap to fixed regardless of input
+        assert_eq!(p.pump_scale, 1.0);
+        assert_eq!(p.chiller_scale, 1.0);
+        assert_eq!(p.facility_share, 1.0);
+        // out-of-bounds free values clamp to the boundary level
+        assert_eq!(s.setpoint.snap(1000.0), 75.0);
+        assert_eq!(s.setpoint.snap(-1000.0), 45.0);
+    }
+
+    #[test]
+    fn enable_axes_opens_and_validates() {
+        let mut s = Space::default();
+        s.enable_axes("setpoint,share").unwrap();
+        assert!(!s.setpoint.frozen && !s.share.frozen);
+        assert!(s.pump.frozen && s.chiller.frozen);
+        // grid now covers the 2-D lattice
+        assert_eq!(s.grid().len(), 16 * s.share.levels());
+        assert!(s.enable_axes("bogus").is_err());
+        assert!(s.enable_axes("").is_err());
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_in_lattice() {
+        let mut s = Space::default();
+        s.enable_axes("setpoint,pump").unwrap();
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..64 {
+            let pa = s.sample(&mut a);
+            let pb = s.sample(&mut b);
+            assert_eq!(pa, pb);
+            // snapping a sampled point is a no-op
+            assert_eq!(s.snap(pa), pa);
+        }
+    }
+
+    #[test]
+    fn apply_realizes_the_point() {
+        let base = SimConfig::test_small();
+        let s = Space::default();
+        let p = Point {
+            setpoint: 63.0,
+            pump_scale: 1.2,
+            chiller_scale: 2.0,
+            facility_share: 0.5,
+        };
+        let cfg = s.apply(&base, &p);
+        assert_eq!(cfg.t_out_setpoint, 63.0);
+        assert_eq!(cfg.t_water_init, 60.0);
+        assert!((cfg.pump_speed - base.pump_speed * 1.2).abs() < 1e-12);
+        assert_eq!(cfg.pp.pc_max_at_57, base.pp.pc_max_at_57 * 2.0);
+        assert_eq!(cfg.pp.pc_max_cap, base.pp.pc_max_cap * 2.0);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn grid_points_all_validate() {
+        let base = SimConfig::test_small();
+        let mut s = Space::default();
+        s.enable_axes("setpoint,pump,chiller,share").unwrap();
+        // spot-check the extreme corners rather than the full product
+        let g = s.grid();
+        for p in [g.first().unwrap(), g.last().unwrap()] {
+            s.apply(&base, p).validate().unwrap();
+        }
+    }
+}

@@ -50,14 +50,16 @@ pub fn armed() -> bool {
 /// is a place with a containment story (DESIGN.md §8) — a panic at
 /// `PlantTick` quarantines one plant, at `MegabatchSweep` the shard's
 /// bucket, at `FacilityStep` it forces the post-hoc facility replay,
-/// and at `ServerCompute` it is absorbed by the worker's catch_unwind
-/// into a 500/504 envelope.
+/// at `ServerCompute` it is absorbed by the worker's catch_unwind
+/// into a 500/504 envelope, and at `OptimizeEval` the candidate is
+/// scored worst-case and the search continues.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Site {
     PlantTick = 0,
     MegabatchSweep = 1,
     FacilityStep = 2,
     ServerCompute = 3,
+    OptimizeEval = 4,
 }
 
 impl Site {
@@ -67,6 +69,7 @@ impl Site {
             Site::MegabatchSweep => "megabatch_sweep",
             Site::FacilityStep => "facility_step",
             Site::ServerCompute => "server_compute",
+            Site::OptimizeEval => "optimize_eval",
         }
     }
 
@@ -76,6 +79,7 @@ impl Site {
             "megabatch_sweep" => Some(Site::MegabatchSweep),
             "facility_step" => Some(Site::FacilityStep),
             "server_compute" => Some(Site::ServerCompute),
+            "optimize_eval" => Some(Site::OptimizeEval),
             _ => None,
         }
     }
@@ -367,6 +371,16 @@ mod tests {
         assert_eq!(fire(Site::MegabatchSweep, None), None);
         assert_eq!(take_log().len(), 1);
         disarm();
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for s in [Site::PlantTick, Site::MegabatchSweep,
+                  Site::FacilityStep, Site::ServerCompute,
+                  Site::OptimizeEval] {
+            assert_eq!(Site::by_name(s.name()), Some(s));
+        }
+        assert_eq!(Site::by_name("nowhere"), None);
     }
 
     #[test]

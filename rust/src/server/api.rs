@@ -21,12 +21,13 @@
 
 use anyhow::{Context, Result};
 
-use crate::config::SimConfig;
+use crate::config::{OptimizeSettings, SimConfig};
 use crate::coordinator::energy::EnergyAccount;
 use crate::coordinator::{RunResult, TraceSample};
 use crate::figures::sweep::SweepOptions;
 use crate::fleet::scenario::Scenario;
 use crate::fleet::FleetConfig;
+use crate::optimize::OptimizeConfig;
 use crate::plant::PlantKernel;
 use crate::runtime::BackendKind;
 use crate::util::json::{Json, JsonBuilder};
@@ -55,6 +56,7 @@ pub enum EndpointKind {
     Simulate,
     Fleet,
     Sweep,
+    Optimize,
 }
 
 impl EndpointKind {
@@ -64,6 +66,7 @@ impl EndpointKind {
             EndpointKind::Simulate => "simulate",
             EndpointKind::Fleet => "fleet",
             EndpointKind::Sweep => "sweep",
+            EndpointKind::Optimize => "optimize",
         }
     }
 }
@@ -77,6 +80,7 @@ pub enum ApiRequest {
     Simulate { sim: SimRequest, stream: bool },
     Fleet(FleetConfig),
     Sweep(SweepRequest),
+    Optimize(OptimizeConfig),
 }
 
 impl ApiRequest {
@@ -95,6 +99,9 @@ impl ApiRequest {
             EndpointKind::Sweep => {
                 ApiRequest::Sweep(parse_sweep_request(body, base)?)
             }
+            EndpointKind::Optimize => {
+                ApiRequest::Optimize(parse_optimize_request(body, base)?)
+            }
         })
     }
 
@@ -103,6 +110,7 @@ impl ApiRequest {
             ApiRequest::Simulate { .. } => EndpointKind::Simulate,
             ApiRequest::Fleet(_) => EndpointKind::Fleet,
             ApiRequest::Sweep(_) => EndpointKind::Sweep,
+            ApiRequest::Optimize(_) => EndpointKind::Optimize,
         }
     }
 
@@ -114,6 +122,7 @@ impl ApiRequest {
             }
             ApiRequest::Fleet(fc) => canonical_fleet_json(fc),
             ApiRequest::Sweep(sr) => canonical_sweep_json(sr),
+            ApiRequest::Optimize(oc) => canonical_optimize_json(oc),
         }
     }
 
@@ -124,6 +133,7 @@ impl ApiRequest {
             ApiRequest::Simulate { sim, .. } => &sim.cfg,
             ApiRequest::Fleet(fc) => &fc.base,
             ApiRequest::Sweep(sr) => &sr.cfg,
+            ApiRequest::Optimize(oc) => &oc.base,
         };
         request_fingerprint(self.kind().name(), &self.canonical(), cfg)
     }
@@ -430,6 +440,65 @@ impl SweepRequest {
     }
 }
 
+/// Server-side cap on `POST /optimize` physical-evaluation budgets. One
+/// evaluation is a full (small) fleet run, so a request's compute is
+/// O(budget x plants x eval_duration); the cap keeps a single request
+/// from monopolizing the worker pool the way `MAX_REQUEST_PLANTS` keeps
+/// `/fleet` from OOMing it. The CLI stays uncapped.
+pub const MAX_REQUEST_BUDGET: usize = 64;
+
+/// Parse a `POST /optimize` body: the shared SimConfig overrides
+/// configure the candidate base plant, and the endpoint fields mirror
+/// the `[optimize]` TOML section one for one. Defaults (ere objective,
+/// grid driver, budget 24, 2 plants, mixed scenario, setpoint axis)
+/// resolve through the same `OptimizeConfig::from_settings` the CLI
+/// uses, so a body and a flag set meaning the same search produce the
+/// same resolved config — and the same response bytes.
+pub fn parse_optimize_request(body: &str, base: &SimConfig)
+                              -> Result<OptimizeConfig> {
+    let m = obj_of(body)?;
+    let mut cfg = base.clone();
+    apply_sim_overrides(
+        &m,
+        &mut cfg,
+        &[
+            "objective", "driver", "budget", "plants", "scenario", "axes",
+            "gen_size", "eval_duration_s", "detail", "w_pue", "w_ere",
+            "w_throttle", "w_cost",
+        ],
+    )?;
+    // Like fleet runs, candidate evaluation always uses the native
+    // backend path unless the request pinned one.
+    let s = OptimizeSettings {
+        objective: take_str(&m, "objective")?.map(str::to_string),
+        driver: take_str(&m, "driver")?.map(str::to_string),
+        budget: take_usize(&m, "budget")?,
+        plants: take_usize(&m, "plants")?,
+        scenario: take_str(&m, "scenario")?.map(str::to_string),
+        axes: take_str(&m, "axes")?.map(str::to_string),
+        gen_size: take_usize(&m, "gen_size")?,
+        eval_duration_s: take_f64(&m, "eval_duration_s")?,
+        detail: take_bool(&m, "detail")?,
+        w_pue: take_f64(&m, "w_pue")?,
+        w_ere: take_f64(&m, "w_ere")?,
+        w_throttle: take_f64(&m, "w_throttle")?,
+        w_cost: take_f64(&m, "w_cost")?,
+    };
+    let oc = OptimizeConfig::from_settings(cfg, &s)?;
+    anyhow::ensure!(oc.budget >= 1, "budget must be at least 1");
+    anyhow::ensure!(
+        oc.budget <= MAX_REQUEST_BUDGET,
+        "budget must be at most {MAX_REQUEST_BUDGET} per request"
+    );
+    anyhow::ensure!(oc.gen_size >= 1, "gen_size must be at least 1");
+    anyhow::ensure!(oc.n_plants >= 1, "plants must be at least 1");
+    anyhow::ensure!(
+        oc.n_plants <= MAX_REQUEST_PLANTS,
+        "plants must be at most {MAX_REQUEST_PLANTS} per request"
+    );
+    Ok(oc)
+}
+
 /// Every SimConfig knob that affects a run, as a canonical builder the
 /// per-endpoint canonical documents extend.
 fn sim_config_builder(cfg: &SimConfig) -> JsonBuilder {
@@ -488,6 +557,46 @@ pub fn canonical_sweep_json(req: &SweepRequest) -> Json {
             "setpoints",
             req.setpoints.iter().map(|&s| Json::Num(s)).collect(),
         )
+        .build()
+}
+
+/// Canonical `/optimize` request document: the *resolved* search — the
+/// full space (bounds, steps, frozen axes), effective weights, driver,
+/// budget and scenario — not the raw body, so a body naming the
+/// defaults explicitly shares a cache entry with the empty body.
+/// `shards` and megabatch stay out: candidates evaluate on the fleet
+/// determinism contract, so the trajectory (and the response bytes) are
+/// identical across execution shapes.
+pub fn canonical_optimize_json(c: &OptimizeConfig) -> Json {
+    let axes: Vec<Json> = c
+        .space
+        .axes()
+        .iter()
+        .map(|a| {
+            JsonBuilder::new()
+                .num("fixed", a.fixed)
+                .bool("frozen", a.frozen)
+                .num("hi", a.hi)
+                .num("lo", a.lo)
+                .str("name", a.name)
+                .num("step", a.step)
+                .build()
+        })
+        .collect();
+    sim_config_builder(&c.base)
+        .num("budget", c.budget as f64)
+        .bool("detail", c.detail)
+        .str("driver", c.kind.name())
+        .num("eval_duration_s", c.eval_duration_s)
+        .num("gen_size", c.gen_size as f64)
+        .str("objective", &c.objective_name)
+        .num("plants", c.n_plants as f64)
+        .str("scenario", c.scenario.name())
+        .arr("space", axes)
+        .num("w_cost", c.weights.cost)
+        .num("w_ere", c.weights.ere)
+        .num("w_pue", c.weights.pue)
+        .num("w_throttle", c.weights.throttle)
         .build()
 }
 
@@ -719,19 +828,26 @@ mod tests {
             "simulate", &canonical_sim_json(&r.cfg, 1, false), &r.cfg);
         assert_eq!(typed.fingerprint(), explicit);
         assert_eq!(typed.kind(), EndpointKind::Simulate);
-        // Fleet and sweep parse through the same entry point.
+        // Fleet, sweep and optimize parse through the same entry point.
         let fleet = ApiRequest::parse(EndpointKind::Fleet, "", false, &b)
             .unwrap();
         let sweep = ApiRequest::parse(EndpointKind::Sweep, "", false, &b)
             .unwrap();
+        let opt = ApiRequest::parse(EndpointKind::Optimize, "", false, &b)
+            .unwrap();
         assert_eq!(fleet.kind(), EndpointKind::Fleet);
         assert_eq!(sweep.kind(), EndpointKind::Sweep);
+        assert_eq!(opt.kind(), EndpointKind::Optimize);
         assert_ne!(fleet.fingerprint(), sweep.fingerprint());
+        assert_ne!(fleet.fingerprint(), opt.fingerprint());
         // Strictness is shared: the unknown-field error reaches every
         // kind through the one parser.
-        for kind in
-            [EndpointKind::Simulate, EndpointKind::Fleet, EndpointKind::Sweep]
-        {
+        for kind in [
+            EndpointKind::Simulate,
+            EndpointKind::Fleet,
+            EndpointKind::Sweep,
+            EndpointKind::Optimize,
+        ] {
             let err = format!(
                 "{:#}",
                 ApiRequest::parse(kind, r#"{"bogus_field": 1}"#, false, &b)
@@ -814,6 +930,94 @@ mod tests {
         let kc = request_fingerprint(
             "fleet", &canonical_fleet_json(&c), &c.base);
         assert_ne!(ka, kc);
+    }
+
+    #[test]
+    fn optimize_request_defaults_resolve_like_the_cli() {
+        let oc = parse_optimize_request("", &base()).unwrap();
+        assert_eq!(oc.objective_name, "ere");
+        assert_eq!(oc.kind.name(), "grid");
+        assert_eq!(oc.budget, 24);
+        assert_eq!(oc.n_plants, 2);
+        assert_eq!(oc.scenario.name(), "mixed");
+        assert_eq!(oc.seed, base().seed, "search seed is the base seed");
+        // only the setpoint axis is free by default
+        assert!(!oc.space.setpoint.frozen);
+        assert!(oc.space.pump.frozen);
+        let oc = parse_optimize_request(
+            r#"{"objective": "cost", "driver": "cem", "budget": 10,
+                "axes": "setpoint,pump", "w_throttle": 2.0,
+                "eval_duration_s": 300, "detail": false, "seed": 7}"#,
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(oc.kind.name(), "cem");
+        assert_eq!(oc.weights.cost, 1.0);
+        assert_eq!(oc.weights.throttle, 2.0);
+        assert!(!oc.space.pump.frozen);
+        assert!(!oc.detail);
+        assert_eq!(oc.seed, 7);
+    }
+
+    #[test]
+    fn optimize_request_caps_and_rejects() {
+        let b = base();
+        assert!(parse_optimize_request(r#"{"budget": 0}"#, &b).is_err());
+        assert!(parse_optimize_request(
+            &format!("{{\"budget\": {}}}", MAX_REQUEST_BUDGET + 1),
+            &b
+        )
+        .is_err());
+        assert!(parse_optimize_request(
+            &format!("{{\"budget\": {MAX_REQUEST_BUDGET}}}"),
+            &b
+        )
+        .is_ok());
+        assert!(parse_optimize_request(r#"{"plants": 0}"#, &b).is_err());
+        assert!(parse_optimize_request(r#"{"gen_size": 0}"#, &b).is_err());
+        assert!(
+            parse_optimize_request(r#"{"objective": "speed"}"#, &b).is_err()
+        );
+        assert!(
+            parse_optimize_request(r#"{"driver": "anneal"}"#, &b).is_err()
+        );
+        assert!(parse_optimize_request(r#"{"axes": "turbo"}"#, &b).is_err());
+        assert!(parse_optimize_request(
+            r#"{"eval_duration_s": 0}"#, &b).is_err());
+        let err = parse_optimize_request(r#"{"budgett": 5}"#, &b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown field 'budgett'"), "{err}");
+    }
+
+    #[test]
+    fn optimize_fingerprint_is_resolution_canonical() {
+        let b = base();
+        // A body naming the defaults explicitly shares the empty body's
+        // cache entry: the canonical document is the *resolved* search.
+        let empty = parse_optimize_request("", &b).unwrap();
+        let explicit = parse_optimize_request(
+            r#"{"objective": "ere", "driver": "grid", "budget": 24,
+                "plants": 2, "scenario": "mixed"}"#,
+            &b,
+        )
+        .unwrap();
+        let ke = request_fingerprint(
+            "optimize", &canonical_optimize_json(&empty), &empty.base);
+        let kx = request_fingerprint(
+            "optimize", &canonical_optimize_json(&explicit), &explicit.base);
+        assert_eq!(ke, kx);
+        // Real knobs separate keys: budget, weights, axes.
+        for body in [
+            r#"{"budget": 12}"#,
+            r#"{"w_throttle": 9.0}"#,
+            r#"{"axes": "setpoint,pump"}"#,
+        ] {
+            let other = parse_optimize_request(body, &b).unwrap();
+            let ko = request_fingerprint(
+                "optimize", &canonical_optimize_json(&other), &other.base);
+            assert_ne!(ke, ko, "{body} must change the cache key");
+        }
     }
 
     #[test]

@@ -18,8 +18,10 @@ use crate::stats::histogram::Histogram;
 use crate::util::json::{Json, JsonBuilder};
 
 /// Endpoint labels, in the order the counters are kept.
-pub const ENDPOINTS: &[&str] =
-    &["simulate", "fleet", "sweep", "healthz", "metrics", "shutdown", "other"];
+pub const ENDPOINTS: &[&str] = &[
+    "simulate", "fleet", "sweep", "optimize", "healthz", "metrics",
+    "shutdown", "other",
+];
 
 /// Map a request path to its counter index (`other` catches the rest).
 /// The match returns the index directly — no catalog scan per request.
@@ -34,10 +36,11 @@ pub fn endpoint_index(path: &str) -> usize {
         "/simulate" => 0,
         "/fleet" => 1,
         "/sweep" => 2,
-        "/healthz" => 3,
-        "/metrics" => 4,
-        "/shutdown" => 5,
-        _ => 6,
+        "/optimize" => 3,
+        "/healthz" => 4,
+        "/metrics" => 5,
+        "/shutdown" => 6,
+        _ => 7,
     }
 }
 
@@ -321,6 +324,8 @@ mod tests {
         assert_eq!(ENDPOINTS[endpoint_index("/simulate")], "simulate");
         assert_eq!(ENDPOINTS[endpoint_index("/fleet")], "fleet");
         assert_eq!(ENDPOINTS[endpoint_index("/sweep")], "sweep");
+        assert_eq!(ENDPOINTS[endpoint_index("/optimize")], "optimize");
+        assert_eq!(ENDPOINTS[endpoint_index("/v1/optimize")], "optimize");
         assert_eq!(ENDPOINTS[endpoint_index("/healthz")], "healthz");
         assert_eq!(ENDPOINTS[endpoint_index("/metrics")], "metrics");
         assert_eq!(ENDPOINTS[endpoint_index("/shutdown")], "shutdown");

@@ -59,9 +59,11 @@
 //! connection still gets an answer).
 //!
 //! Endpoints: `POST /v1/simulate` (`?stream=1` for per-tick NDJSON),
-//! `POST /v1/fleet`, `POST /v1/sweep`, `GET /v1/healthz`,
-//! `GET /v1/metrics`, `POST /v1/shutdown` (all also reachable
-//! unprefixed, deprecated).
+//! `POST /v1/fleet`, `POST /v1/sweep`, `POST /v1/optimize` (the
+//! closed-loop search; body mirrors the `[optimize]` TOML section,
+//! response is the exact `idatacool optimize --json` document),
+//! `GET /v1/healthz`, `GET /v1/metrics`, `POST /v1/shutdown` (all also
+//! reachable unprefixed, deprecated).
 
 pub mod api;
 pub mod batch;
@@ -656,6 +658,14 @@ const ENDPOINTS: &[Endpoint] = &[
         cached: true,
         handler: ep_api,
     },
+    Endpoint {
+        method: "POST",
+        path: "/optimize",
+        api: Some(EndpointKind::Optimize),
+        allow_stream: false,
+        cached: true,
+        handler: ep_api,
+    },
 ];
 
 /// Split the API version off a request path. Unprefixed paths still
@@ -962,7 +972,20 @@ fn compute_api(areq: ApiRequest, shared: &Arc<Shared>,
             compute_fleet(fc)
         }
         ApiRequest::Sweep(sr) => compute_sweep(sr),
+        ApiRequest::Optimize(oc) => compute_optimize(oc),
     }
+}
+
+fn compute_optimize(oc: crate::optimize::OptimizeConfig)
+                    -> Result<CachedResponse> {
+    let run = crate::optimize::run_optimize(&oc)?;
+    let _ser_span = crate::obs::span("serialize");
+    Ok(CachedResponse {
+        status: 200,
+        content_type: "application/json".into(),
+        // Exactly the `idatacool optimize --json` document.
+        body: Arc::new(run.to_json(&oc).into_bytes()),
+    })
 }
 
 fn compute_simulate(sim: api::SimRequest, stream: bool,

@@ -508,6 +508,59 @@ fn prop_json_display_reparses() {
     });
 }
 
+// -------------------------------------------------------------- economics ---
+
+#[test]
+fn prop_cost_model_monotone_in_energy_price() {
+    // Raising the electricity price can only raise the yearly savings
+    // (free cooling and reuse credit scale with it faster than the loop
+    // overhead can eat them whenever savings are positive at all) and
+    // can only shorten — never lengthen — the payback.
+    use idatacool::economics::CostModel;
+    forall(40, |rng| {
+        let n_nodes = 1 + rng.below(500);
+        let p_ac = rng.uniform_in(5_000.0, 200_000.0);
+        let hiw = rng.uniform_in(0.1, 0.95);
+        let p_chilled = rng.uniform_in(0.0, 0.2 * p_ac);
+        let base = CostModel {
+            eur_per_kwh: rng.uniform_in(0.02, 0.5),
+            loop_overhead_frac: rng.uniform_in(0.0, 0.1),
+            value_chilled_water: rng.uniform() < 0.5,
+            ..Default::default()
+        };
+        let pricier = CostModel {
+            eur_per_kwh: base.eur_per_kwh * rng.uniform_in(1.0, 4.0),
+            ..base.clone()
+        };
+        let a = base.analyze(n_nodes, p_ac, hiw, p_chilled);
+        let b = pricier.analyze(n_nodes, p_ac, hiw, p_chilled);
+        assert!(
+            b.savings_eur_per_year >= a.savings_eur_per_year - 1e-9,
+            "savings fell when the price rose: {} -> {}",
+            a.savings_eur_per_year, b.savings_eur_per_year
+        );
+        // payback = capex / savings, capex price-independent
+        assert!(
+            b.payback_years <= a.payback_years + 1e-9
+                || (a.payback_years.is_infinite()
+                    && b.payback_years.is_infinite()),
+            "payback rose with the price: {} -> {}",
+            a.payback_years, b.payback_years
+        );
+        // every term is linear in the price: doubling it doubles savings
+        let doubled = CostModel {
+            eur_per_kwh: base.eur_per_kwh * 2.0,
+            ..base.clone()
+        };
+        let d = doubled.analyze(n_nodes, p_ac, hiw, p_chilled);
+        assert!(
+            (d.savings_eur_per_year - 2.0 * a.savings_eur_per_year).abs()
+                <= 1e-9 * a.savings_eur_per_year.abs().max(1.0),
+            "savings not linear in price"
+        );
+    });
+}
+
 // -------------------------------------------------------------------- pid ---
 
 #[test]

@@ -154,6 +154,55 @@ fn shard_panic_quarantines_the_bucket_and_the_run_degrades() {
 }
 
 #[test]
+fn optimize_eval_chaos_scores_worst_case_and_search_continues() {
+    use idatacool::economics::CostModel;
+    use idatacool::optimize::driver::{self, DriverKind};
+    use idatacool::optimize::eval::Evaluator;
+    use idatacool::optimize::objective::{Weights, WORST_SCORE};
+    use idatacool::optimize::space::Space;
+
+    let _guard = inject::test_lock();
+    inject::disarm();
+    // Serial evaluation (shards = 1) so "the 2nd physical evaluation"
+    // is a deterministic site invocation; budget 6 < the 16-point
+    // lattice, so the grid driver stops exactly at budget exhaustion.
+    let mut ev = Evaluator::new(
+        base(),
+        Space::default(),
+        Weights::preset("ere").unwrap(),
+        CostModel::default(),
+        1,
+        Scenario::by_name("baseline").unwrap(),
+        0x0B5E,
+        true,
+        1,
+        6,
+    )
+    .unwrap();
+
+    inject::arm("site=optimize_eval,kind=panic,tick=2", 0).unwrap();
+    let out = driver::search(DriverKind::Grid, &mut ev, 3, 0x0B5E).unwrap();
+    let log = inject::take_log();
+    inject::disarm();
+    assert!(log.iter().any(|e| e.contains("site=optimize_eval")), "{log:?}");
+
+    // One candidate is one fault domain: the poisoned evaluation is
+    // scored worst-case and recorded as failed — the search never
+    // aborts.
+    assert_eq!(ev.evals(), 6);
+    let failed: Vec<_> =
+        out.records.iter().filter(|r| r.failed).collect();
+    assert_eq!(failed.len(), 1, "exactly one poisoned candidate");
+    assert_eq!(failed[0].score.total, WORST_SCORE);
+    assert!(!failed[0].cached, "the poisoned row was a physical eval");
+
+    // The winner is a healthy candidate from the surviving trajectory.
+    let best = &out.records[out.best];
+    assert!(!best.failed);
+    assert!(best.score.total < WORST_SCORE);
+}
+
+#[test]
 fn checkpoint_then_resume_reproduces_the_document_bytewise() {
     let _guard = inject::test_lock();
     inject::disarm();

@@ -232,6 +232,67 @@ fn sweep_endpoint_measures_setpoints() {
 }
 
 #[test]
+fn optimize_response_matches_cli_document_and_caches() {
+    let (h, addr) = boot(2);
+    // Small but real search: 4 physical evals of 1-plant baseline
+    // fleets over 120 s eval windows.
+    let body = r#"{"budget": 4, "gen_size": 2, "plants": 1,
+        "scenario": "baseline", "eval_duration_s": 120,
+        "detail": false, "seed": 9}"#;
+    let served = post(&addr, "/v1/optimize", body);
+    assert_eq!(served.status, 200, "{:?}", served.body_str());
+    assert_eq!(served.header("x-cache"), Some("miss"));
+
+    // The CLI path: parse the same request against the same base, run
+    // the optimizer directly, serialize with the --json serializer.
+    let oc = api::parse_optimize_request(body, &base()).unwrap();
+    let run = idatacool::optimize::run_optimize(&oc).unwrap();
+    assert_eq!(
+        served.body_str().unwrap(),
+        run.to_json(&oc),
+        "served /optimize body must be bitwise identical to the CLI \
+         document"
+    );
+
+    let j = Json::parse(served.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(),
+               Some("idatacool-optimize/1"));
+    assert_eq!(j.get("objective").unwrap().as_str(), Some("ere"));
+    assert_eq!(j.get("driver").unwrap().as_str(), Some("grid"));
+    assert_eq!(j.get("evals").unwrap().as_f64(), Some(4.0));
+    assert!(j.get("fingerprint").unwrap().as_str().unwrap()
+        .starts_with("0x"));
+    let best = j.get("best").unwrap();
+    assert!(best.get("setpoint").unwrap().as_f64().is_some());
+
+    // Repeat: served from the LRU, still bitwise.
+    let again = post(&addr, "/v1/optimize", body);
+    assert_eq!(again.header("x-cache"), Some("hit"));
+    assert_eq!(again.body, served.body);
+
+    // The cache key is resolution-canonical: spelling out the defaults
+    // the first body left implicit lands on the same entry.
+    let explicit = post(
+        &addr,
+        "/v1/optimize",
+        r#"{"seed": 9, "budget": 4, "detail": false, "driver": "grid",
+            "eval_duration_s": 120.0, "gen_size": 2, "objective": "ere",
+            "plants": 1, "scenario": "baseline"}"#,
+    );
+    assert_eq!(explicit.header("x-cache"), Some("hit"));
+    assert_eq!(explicit.body, served.body);
+
+    // Server-side caps answer with the error envelope.
+    let r = post(&addr, "/v1/optimize", r#"{"budget": 100}"#);
+    assert_eq!(r.status, 400);
+    assert_envelope(&r, "bad_request");
+    let r = post(&addr, "/v1/optimize", r#"{"budgett": 4}"#);
+    assert_eq!(r.status, 400);
+    assert_envelope(&r, "bad_request");
+    h.stop().unwrap();
+}
+
+#[test]
 fn concurrent_identical_requests_coalesce_to_one_run() {
     let (h, addr) = boot(4);
     let body = r#"{"duration_s": 60, "seed": 77}"#;

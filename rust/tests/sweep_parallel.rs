@@ -100,6 +100,34 @@ fn default_sweep_entrypoint_matches_serial() {
 }
 
 #[test]
+fn evaluate_point_composes_to_the_serial_sweep() {
+    // The sweep is exactly `evaluate_point` mapped over a setpoint grid
+    // — the public per-point entrypoint the optimizer's best-point
+    // detail also calls. Composing it by hand must reproduce the serial
+    // sweep bitwise, or the optimizer report and the sweep figures
+    // could disagree about the same operating point.
+    use std::collections::BTreeMap;
+    let sps = [50.0, 68.0];
+    let serial = sweep::run_sweep_serial(&cfg(), &sps, &tiny()).unwrap();
+
+    let mut points = Vec::new();
+    let mut node_series: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut selected = Vec::new();
+    for &sp in &sps {
+        let run = sweep::evaluate_point(&cfg(), sp, &tiny()).unwrap();
+        if selected.is_empty() {
+            selected = run.selected;
+        }
+        for (node, tp) in run.node_tp {
+            node_series.entry(node).or_default().push(tp);
+        }
+        points.push(run.point);
+    }
+    let composed = SweepData { points, node_series, selected };
+    assert_sweeps_bitwise_equal(&serial, &composed);
+}
+
+#[test]
 fn oversharded_sweep_is_clamped_and_identical() {
     let sps = [60.0];
     let serial = sweep::run_sweep_serial(&cfg(), &sps, &tiny()).unwrap();
