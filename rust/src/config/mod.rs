@@ -272,6 +272,21 @@ pub struct ServeConfig {
     /// as long as the compute takes) — zero is the off switch, not a
     /// degenerate value, same convention as `batch_window_ms`.
     pub deadline_ms: usize,
+    /// Most keep-alive connections the readiness loop holds open at
+    /// once (`serve.max_parked`); arrivals beyond it are shed with a
+    /// 503 envelope. Strict count: zero is rejected (a server that can
+    /// park nothing cannot serve).
+    pub max_parked: usize,
+    /// Token-bucket refill rate for cost-aware admission control
+    /// (`serve.rate_limit`), in request-cost units per second (nominal
+    /// ticks × plants — see `server::admit`); the burst capacity is
+    /// 4 s of refill. `0` disables the rate limiter (off switch).
+    pub rate_limit: usize,
+    /// Worker respawns the supervisor may perform over the server's
+    /// lifetime (`serve.restart_budget`) — the fuse against a crash
+    /// loop. `0` disables respawning (a dead worker stays dark and the
+    /// health document says so); zero is the off switch.
+    pub restart_budget: usize,
 }
 
 impl Default for ServeConfig {
@@ -287,6 +302,9 @@ impl Default for ServeConfig {
             batch_window_ms: 2,
             batch_max_plants: 16,
             deadline_ms: 0,
+            max_parked: 1024,
+            rate_limit: 0,
+            restart_budget: 16,
         }
     }
 }
@@ -294,8 +312,9 @@ impl Default for ServeConfig {
 impl ServeConfig {
     /// Apply `[serve]` overrides from a TOML doc. Counts are strict:
     /// a present-yet-non-integer (or zero) value is an error, matching
-    /// the CLI-flag discipline. `batch_window_ms` alone admits zero —
-    /// zero is its off switch, not a degenerate value.
+    /// the CLI-flag discipline. `batch_window_ms`, `deadline_ms`,
+    /// `rate_limit` and `restart_budget` admit zero — zero is their
+    /// off switch, not a degenerate value.
     pub fn apply_toml(mut self, doc: &TomlDoc) -> anyhow::Result<Self> {
         self.addr = doc.str_or("serve.addr", &self.addr).to_string();
         self.workers = toml_count(doc, "serve.workers", self.workers)?;
@@ -310,6 +329,12 @@ impl ServeConfig {
         )?;
         self.deadline_ms =
             toml_count0(doc, "serve.deadline_ms", self.deadline_ms)?;
+        self.max_parked =
+            toml_count(doc, "serve.max_parked", self.max_parked)?;
+        self.rate_limit =
+            toml_count0(doc, "serve.rate_limit", self.rate_limit)?;
+        self.restart_budget =
+            toml_count0(doc, "serve.restart_budget", self.restart_budget)?;
         Ok(self)
     }
 }
@@ -606,7 +631,8 @@ mod tests {
         let doc = TomlDoc::parse(
             "[serve]\naddr = \"0.0.0.0:9000\"\nworkers = 3\n\
              cache_cap = 16\nqueue_cap = 12\n\
-             batch_window_ms = 5\nbatch_max_plants = 32\n",
+             batch_window_ms = 5\nbatch_max_plants = 32\n\
+             max_parked = 256\nrate_limit = 500\nrestart_budget = 4\n",
         )
         .unwrap();
         let sc = ServeConfig::default().apply_toml(&doc).unwrap();
@@ -616,6 +642,9 @@ mod tests {
         assert_eq!(sc.queue_cap, 12);
         assert_eq!(sc.batch_window_ms, 5);
         assert_eq!(sc.batch_max_plants, 32);
+        assert_eq!(sc.max_parked, 256);
+        assert_eq!(sc.rate_limit, 500);
+        assert_eq!(sc.restart_budget, 4);
         // zero is the batching off switch, not an error
         let doc =
             TomlDoc::parse("[serve]\nbatch_window_ms = 0\n").unwrap();
@@ -629,11 +658,25 @@ mod tests {
         assert_eq!(sc.batch_window_ms, 2);
         assert_eq!(sc.batch_max_plants, 16);
         assert_eq!(sc.deadline_ms, 0);
+        assert_eq!(sc.max_parked, 1024);
+        assert_eq!(sc.rate_limit, 0);
+        assert_eq!(sc.restart_budget, 16);
         // deadline: zero = off, positive = budget, garbage rejected
         let doc = TomlDoc::parse("[serve]\ndeadline_ms = 250\n").unwrap();
         let sc = ServeConfig::default().apply_toml(&doc).unwrap();
         assert_eq!(sc.deadline_ms, 250);
         let doc = TomlDoc::parse("[serve]\ndeadline_ms = -5\n").unwrap();
+        assert!(ServeConfig::default().apply_toml(&doc).is_err());
+        // rate_limit and restart_budget: zero is the off switch
+        let doc = TomlDoc::parse(
+            "[serve]\nrate_limit = 0\nrestart_budget = 0\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::default().apply_toml(&doc).unwrap();
+        assert_eq!(sc.rate_limit, 0);
+        assert_eq!(sc.restart_budget, 0);
+        // max_parked is strict: zero is rejected, not an off switch
+        let doc = TomlDoc::parse("[serve]\nmax_parked = 0\n").unwrap();
         assert!(ServeConfig::default().apply_toml(&doc).is_err());
     }
 
@@ -739,7 +782,9 @@ mod tests {
         for bad in ["workers = 0", "workers = 2.5", "workers = \"four\"",
                     "cache_cap = 0", "queue_cap = -1",
                     "batch_max_plants = 0", "batch_window_ms = -1",
-                    "batch_window_ms = 1.5"] {
+                    "batch_window_ms = 1.5", "max_parked = 0",
+                    "max_parked = -3", "rate_limit = 1.5",
+                    "restart_budget = \"many\""] {
             let doc = TomlDoc::parse(&format!("[serve]\n{bad}\n")).unwrap();
             assert!(
                 ServeConfig::default().apply_toml(&doc).is_err(),

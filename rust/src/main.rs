@@ -82,7 +82,7 @@ common flags:
                          injection: \"[seed=N;]site=...,kind=...[,plant=P]
                          [,tick=T];...\" with sites plant_tick|
                          megabatch_sweep|facility_step|server_compute|
-                         optimize_eval and
+                         optimize_eval|worker_tick and
                          kinds panic|stall_ms|poison_nan; fired rules are
                          reported after the run (env IDATACOOL_CHAOS and a
                          --config [chaos] section arm the same injector;
@@ -157,6 +157,17 @@ serve flags:
                          504 idatacool-error/1 envelope with Retry-After
                          (0 = unbounded, the default; the result is still
                          cached, so an immediate retry is a hit)
+  --max-parked <n>       most keep-alive connections parked between
+                         requests (default 1024, must be >= 1; overflow
+                         answers 503; env IDATACOOL_SERVE_MAX_PARKED)
+  --rate-limit <n>       cost-aware admission budget in cost units/s
+                         (cost ~ simulated ticks x plants; burst = 4s of
+                         refill; 0 = unlimited, the default; over-budget
+                         requests answer 429 with a computed Retry-After;
+                         env IDATACOOL_SERVE_RATE_LIMIT)
+  --restart-budget <n>   supervised-worker respawns before the pool stops
+                         healing (default 16; 0 disables respawning; env
+                         IDATACOOL_SERVE_RESTART_BUDGET)
   (a --config file's [serve] section sets the same knobs; flags win over
    env, env wins over TOML. Endpoints under /v1 — POST /v1/simulate
    [?stream=1], POST /v1/fleet, POST /v1/sweep, POST /v1/optimize,
@@ -663,6 +674,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )? {
         sc.batch_window_ms = ms;
     }
+    if let Some(n) = idatacool::util::cli::env_usize_strict(
+        "IDATACOOL_SERVE_MAX_PARKED",
+    )? {
+        sc.max_parked = n;
+    }
+    if let Some(n) = idatacool::util::cli::env_usize_strict(
+        "IDATACOOL_SERVE_RATE_LIMIT",
+    )? {
+        sc.rate_limit = n;
+    }
+    if let Some(n) = idatacool::util::cli::env_usize_strict(
+        "IDATACOOL_SERVE_RESTART_BUDGET",
+    )? {
+        sc.restart_budget = n;
+    }
     sc.workers = resolve_workers(args.usize_strict("workers", sc.workers)?)?;
     sc.addr = args.str_or("addr", &sc.addr).to_string();
     sc.cache_cap = args.usize_strict("cache-cap", sc.cache_cap)?;
@@ -672,6 +698,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sc.batch_max_plants =
         args.usize_strict("batch-max-plants", sc.batch_max_plants)?;
     sc.deadline_ms = args.usize_strict("deadline-ms", sc.deadline_ms)?;
+    sc.max_parked = args.usize_strict("max-parked", sc.max_parked)?;
+    sc.rate_limit = args.usize_strict("rate-limit", sc.rate_limit)?;
+    sc.restart_budget =
+        args.usize_strict("restart-budget", sc.restart_budget)?;
 
     let chaos = chaos_arm(args, doc.as_ref())?;
     let (workers, cache_cap, queue_cap) =

@@ -375,6 +375,30 @@ pub fn quarantined_plants() -> &'static Counter {
     })
 }
 
+/// Serve workers respawned by the supervisor after a panic or a
+/// condemned stall (bounded by the restart budget); see DESIGN.md §10.
+pub fn worker_restarts() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_worker_restarts_total",
+            "Serve workers respawned by the supervisor",
+        )
+    })
+}
+
+/// Queued requests answered 504 without compute because the client
+/// deadline expired while the job was parked in the queue.
+pub fn deadline_drops() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| {
+        global().counter(
+            "idatacool_deadline_drops_total",
+            "Queued requests dropped 504 after their deadline expired",
+        )
+    })
+}
+
 /// Lane-state synchronizations in the SoA plant backend: node-major
 /// loads into lanes plus lane-major materializations back out.
 pub fn lane_sync_transitions() -> &'static Counter {

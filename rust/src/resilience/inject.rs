@@ -51,8 +51,12 @@ pub fn armed() -> bool {
 /// `PlantTick` quarantines one plant, at `MegabatchSweep` the shard's
 /// bucket, at `FacilityStep` it forces the post-hoc facility replay,
 /// at `ServerCompute` it is absorbed by the worker's catch_unwind
-/// into a 500/504 envelope, and at `OptimizeEval` the candidate is
-/// scored worst-case and the search continues.
+/// into a 500/504 envelope, at `OptimizeEval` the candidate is
+/// scored worst-case and the search continues, and at `WorkerTick`
+/// (the supervised serve-worker loop, once per popped job; the `plant`
+/// selector addresses the worker slot) a panic kills the worker — the
+/// supervisor answers the victim and respawns — while a stall trips
+/// the monitor's watchdog (DESIGN.md §10).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Site {
     PlantTick = 0,
@@ -60,6 +64,7 @@ pub enum Site {
     FacilityStep = 2,
     ServerCompute = 3,
     OptimizeEval = 4,
+    WorkerTick = 5,
 }
 
 impl Site {
@@ -70,6 +75,7 @@ impl Site {
             Site::FacilityStep => "facility_step",
             Site::ServerCompute => "server_compute",
             Site::OptimizeEval => "optimize_eval",
+            Site::WorkerTick => "worker_tick",
         }
     }
 
@@ -80,6 +86,7 @@ impl Site {
             "facility_step" => Some(Site::FacilityStep),
             "server_compute" => Some(Site::ServerCompute),
             "optimize_eval" => Some(Site::OptimizeEval),
+            "worker_tick" => Some(Site::WorkerTick),
             _ => None,
         }
     }
@@ -377,7 +384,7 @@ mod tests {
     fn site_names_round_trip() {
         for s in [Site::PlantTick, Site::MegabatchSweep,
                   Site::FacilityStep, Site::ServerCompute,
-                  Site::OptimizeEval] {
+                  Site::OptimizeEval, Site::WorkerTick] {
             assert_eq!(Site::by_name(s.name()), Some(s));
         }
         assert_eq!(Site::by_name("nowhere"), None);

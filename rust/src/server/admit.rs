@@ -1,0 +1,553 @@
+//! Cost-aware admission control for the serve path (DESIGN.md §10).
+//!
+//! Three cooperating mechanisms, all execution-shape only — none of
+//! them ever reaches a response body or a cache key:
+//!
+//! 1. A **token bucket** rate limiter denominated in the same cost
+//!    units as [`super::api::ApiRequest::cost_estimate`] (nominal
+//!    ticks × plants). `[serve] rate_limit` sets the refill rate in
+//!    cost units per second; the burst capacity is four seconds of
+//!    refill. `0` (the default) disables the bucket entirely.
+//!
+//! 2. A **degradation ladder** — healthy → degraded → saturated —
+//!    derived from live signals (queue depth, live worker count,
+//!    breaker state). Saturated sheds everything with 503; degraded
+//!    sheds expensive requests with 429 so cheap traffic keeps
+//!    flowing. "Cheapest-first" means the refusal itself is cheap:
+//!    the 429/503 verdict is computed from the already-parsed request
+//!    before any simulation work starts.
+//!
+//! 3. A per-endpoint-class **circuit breaker** (rolling outcome
+//!    window, open → half-open probe → close) so a poisoned endpoint
+//!    fails fast instead of burning workers.
+//!
+//! Every refusal carries the standard `idatacool-error/1` envelope and
+//! a *computed* `Retry-After` (see [`retry_after_secs`]).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::api::EndpointKind;
+
+/// Requests costlier than this (in nominal tick × plant units) are
+/// shed with 429 while the ladder reports `Degraded`. At the 5 s
+/// nominal tick this admits e.g. a 4-plant fleet over ~21 minutes but
+/// refuses wide sweeps until the server recovers.
+pub const DEGRADED_COST_CAP: f64 = 1024.0;
+
+/// Token-bucket burst capacity, in seconds of refill.
+pub const BUCKET_BURST_S: f64 = 4.0;
+
+/// Rolling outcome window per breaker class.
+pub const BREAKER_WINDOW: usize = 16;
+
+/// Failures inside the window that trip the breaker open.
+pub const BREAKER_OPEN_FAILS: usize = 5;
+
+/// How long an open breaker fails fast before allowing one probe.
+pub const BREAKER_OPEN_FOR: Duration = Duration::from_secs(1);
+
+/// Upper clamp for computed `Retry-After` values, seconds.
+pub const RETRY_AFTER_MAX_S: u64 = 30;
+
+/// Pure refill/consume model of the token bucket. Kept free of clocks
+/// and locks so the property test in `tests/proptests.rs` can drive it
+/// through arbitrary advance/consume interleavings.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    cap: f64,
+    rate: f64,
+    tokens: f64,
+}
+
+impl Bucket {
+    /// A full bucket holding `cap` tokens, refilling at `rate` per
+    /// second. Both must be positive and finite.
+    pub fn new(cap: f64, rate: f64) -> Bucket {
+        assert!(cap > 0.0 && cap.is_finite(), "bucket cap must be positive");
+        assert!(rate > 0.0 && rate.is_finite(), "bucket rate must be positive");
+        Bucket { cap, rate, tokens: cap }
+    }
+
+    /// Advance time by `dt_s` seconds, refilling up to the cap.
+    pub fn advance(&mut self, dt_s: f64) {
+        let dt = dt_s.max(0.0);
+        self.tokens = (self.tokens + dt * self.rate).min(self.cap);
+    }
+
+    /// Take `cost` tokens if available; `false` leaves the bucket
+    /// untouched.
+    pub fn try_consume(&mut self, cost: f64) -> bool {
+        let cost = cost.max(0.0);
+        if cost <= self.tokens {
+            self.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Seconds until `cost` tokens will be available at the current
+    /// refill rate (0 when available now). Costs above the burst cap
+    /// are clamped to the cap: the caller gets the soonest time the
+    /// bucket could possibly grant, not infinity.
+    pub fn eta_s(&self, cost: f64) -> f64 {
+        let need = cost.clamp(0.0, self.cap) - self.tokens;
+        (need / self.rate).max(0.0)
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+
+    pub fn cap(&self) -> f64 {
+        self.cap
+    }
+}
+
+/// Clock-coupled wrapper: one mutex holds the model plus the instant
+/// it was last advanced, so concurrent workers see a consistent
+/// refill.
+pub struct TokenBucket {
+    inner: Mutex<(Bucket, Instant)>,
+}
+
+impl TokenBucket {
+    /// `rate` cost units per second, burst of [`BUCKET_BURST_S`]
+    /// seconds.
+    pub fn new(rate: f64) -> TokenBucket {
+        TokenBucket {
+            inner: Mutex::new((Bucket::new(rate * BUCKET_BURST_S, rate), Instant::now())),
+        }
+    }
+
+    /// Try to admit a request of `cost`; `Err` carries the seconds
+    /// until the bucket could grant it.
+    pub fn try_take(&self, cost: f64) -> Result<(), f64> {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let dt = now.duration_since(g.1).as_secs_f64();
+        g.0.advance(dt);
+        g.1 = now;
+        if g.0.try_consume(cost) {
+            Ok(())
+        } else {
+            Err(g.0.eta_s(cost))
+        }
+    }
+}
+
+/// Circuit-breaker state, surfaced verbatim in the health document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+struct BreakerInner {
+    /// Rolling outcome window, `true` = failure (5xx, incl. 504).
+    window: VecDeque<bool>,
+    state: BreakerState,
+    opened_at: Option<Instant>,
+    /// A half-open probe is in flight; further admits fail fast until
+    /// its outcome is recorded.
+    probing: bool,
+}
+
+/// One breaker per endpoint class. `admit` gates entry, `record`
+/// feeds the rolling window with the request's outcome.
+pub struct Breaker {
+    inner: Mutex<BreakerInner>,
+    open_for: Duration,
+}
+
+impl Breaker {
+    pub fn new(open_for: Duration) -> Breaker {
+        Breaker {
+            inner: Mutex::new(BreakerInner {
+                window: VecDeque::with_capacity(BREAKER_WINDOW),
+                state: BreakerState::Closed,
+                opened_at: None,
+                probing: false,
+            }),
+            open_for,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// Gate a request. `Err(secs)` means fail fast, with the seconds
+    /// until the next half-open probe slot. An `Ok` while half-open
+    /// marks this caller as the probe.
+    pub fn admit(&self) -> Result<(), f64> {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => Ok(()),
+            BreakerState::Open => {
+                let elapsed = g.opened_at.map(|t| t.elapsed()).unwrap_or(self.open_for);
+                if elapsed >= self.open_for {
+                    g.state = BreakerState::HalfOpen;
+                    g.probing = true;
+                    Ok(())
+                } else {
+                    Err((self.open_for - elapsed).as_secs_f64())
+                }
+            }
+            BreakerState::HalfOpen => {
+                if g.probing {
+                    Err(self.open_for.as_secs_f64())
+                } else {
+                    g.probing = true;
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Record an admitted request's outcome (`failure` = status ≥ 500).
+    pub fn record(&self, failure: bool) {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::HalfOpen => {
+                g.probing = false;
+                g.window.clear();
+                if failure {
+                    g.state = BreakerState::Open;
+                    g.opened_at = Some(Instant::now());
+                } else {
+                    g.state = BreakerState::Closed;
+                    g.opened_at = None;
+                }
+            }
+            BreakerState::Closed => {
+                if g.window.len() == BREAKER_WINDOW {
+                    g.window.pop_front();
+                }
+                g.window.push_back(failure);
+                let fails = g.window.iter().filter(|&&f| f).count();
+                if fails >= BREAKER_OPEN_FAILS {
+                    g.state = BreakerState::Open;
+                    g.opened_at = Some(Instant::now());
+                    g.window.clear();
+                }
+            }
+            // Stragglers admitted before the trip: their outcome is
+            // stale, the open timer already owns the decision.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Seconds left before an open breaker allows a probe (0 when not
+    /// open).
+    pub fn open_remaining_s(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        match (g.state, g.opened_at) {
+            (BreakerState::Open, Some(t)) => {
+                (self.open_for.as_secs_f64() - t.elapsed().as_secs_f64()).max(0.0)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// The degradation ladder. Ordering matters: `Saturated` wins over
+/// `Degraded` wins over `Healthy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    Saturated,
+}
+
+impl Health {
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Saturated => "saturated",
+        }
+    }
+}
+
+/// Derive the ladder state from live signals: a full queue or a dead
+/// pool is saturated; a half-full queue, a shrunken pool, or breaker
+/// trouble (any class open or half-open) is degraded.
+pub fn ladder(queue_len: usize, queue_cap: usize, live_workers: usize,
+              configured_workers: usize, breaker_trouble: bool) -> Health {
+    if live_workers == 0 || queue_len >= queue_cap {
+        Health::Saturated
+    } else if breaker_trouble
+        || live_workers < configured_workers
+        || queue_len * 2 >= queue_cap
+    {
+        Health::Degraded
+    } else {
+        Health::Healthy
+    }
+}
+
+/// Compute `Retry-After` from what the server actually knows: the
+/// queue backlog per live worker plus any breaker open-time, clamped
+/// to `[1, RETRY_AFTER_MAX_S]` seconds. Headers only — never bodies.
+pub fn retry_after_secs(queue_len: usize, workers: usize,
+                        breaker_remaining_s: f64) -> u64 {
+    let backlog = 1 + (queue_len / workers.max(1)) as u64;
+    backlog
+        .max(breaker_remaining_s.ceil() as u64)
+        .clamp(1, RETRY_AFTER_MAX_S)
+}
+
+/// An admission verdict: either proceed to compute, or shed now with
+/// this status / message / retry hint.
+pub enum Verdict {
+    Admit,
+    Shed {
+        status: u16,
+        retry_after_s: u64,
+        msg: String,
+    },
+}
+
+/// The server's admission state: one optional token bucket plus one
+/// breaker per compute endpoint class.
+pub struct Admission {
+    bucket: Option<TokenBucket>,
+    breakers: [Breaker; 4],
+}
+
+fn class_index(kind: EndpointKind) -> usize {
+    match kind {
+        EndpointKind::Simulate => 0,
+        EndpointKind::Fleet => 1,
+        EndpointKind::Sweep => 2,
+        EndpointKind::Optimize => 3,
+    }
+}
+
+pub const CLASS_NAMES: [&str; 4] = ["simulate", "fleet", "sweep", "optimize"];
+
+impl Admission {
+    /// `rate_limit` in cost units per second; 0 disables the bucket.
+    pub fn new(rate_limit: usize) -> Admission {
+        Admission {
+            bucket: (rate_limit > 0).then(|| TokenBucket::new(rate_limit as f64)),
+            breakers: std::array::from_fn(|_| Breaker::new(BREAKER_OPEN_FOR)),
+        }
+    }
+
+    pub fn breaker(&self, kind: EndpointKind) -> &Breaker {
+        &self.breakers[class_index(kind)]
+    }
+
+    /// Breaker states by class, for the health document.
+    pub fn breaker_states(&self) -> [(&'static str, BreakerState); 4] {
+        std::array::from_fn(|i| (CLASS_NAMES[i], self.breakers[i].state()))
+    }
+
+    /// Any class open or half-open — feeds the ladder.
+    pub fn breaker_trouble(&self) -> bool {
+        self.breakers.iter().any(|b| b.state() != BreakerState::Closed)
+    }
+
+    /// Largest remaining open-time across classes — feeds Retry-After.
+    pub fn max_open_remaining_s(&self) -> f64 {
+        self.breakers
+            .iter()
+            .map(|b| b.open_remaining_s())
+            .fold(0.0, f64::max)
+    }
+
+    /// The ladder + bucket decision for one parsed request of `cost`.
+    /// The breaker gate is separate (`breaker(kind).admit()`) because
+    /// its outcome must be recorded per class after compute.
+    pub fn check(&self, health: Health, cost: f64, queue_len: usize,
+                 workers: usize) -> Verdict {
+        match health {
+            Health::Saturated => Verdict::Shed {
+                status: 503,
+                retry_after_s: retry_after_secs(queue_len, workers,
+                                                self.max_open_remaining_s()),
+                msg: "server saturated (queue full or no live workers)"
+                    .to_string(),
+            },
+            Health::Degraded if cost > DEGRADED_COST_CAP => Verdict::Shed {
+                status: 429,
+                retry_after_s: retry_after_secs(queue_len, workers,
+                                                self.max_open_remaining_s()),
+                msg: format!(
+                    "server degraded; request cost {cost:.0} exceeds the \
+                     degraded admission cap {DEGRADED_COST_CAP:.0}"
+                ),
+            },
+            _ => match &self.bucket {
+                Some(b) => match b.try_take(cost) {
+                    Ok(()) => Verdict::Admit,
+                    Err(eta_s) => Verdict::Shed {
+                        status: 429,
+                        retry_after_s: (eta_s.ceil() as u64)
+                            .clamp(1, RETRY_AFTER_MAX_S),
+                        msg: format!(
+                            "rate limit exceeded for request cost {cost:.0}"
+                        ),
+                    },
+                },
+                None => Verdict::Admit,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_refills_to_cap_and_consumes_exactly() {
+        let mut b = Bucket::new(100.0, 10.0);
+        assert!(b.try_consume(100.0));
+        assert!(!b.try_consume(0.5));
+        b.advance(5.0);
+        assert!((b.tokens() - 50.0).abs() < 1e-9);
+        b.advance(100.0);
+        assert!((b.tokens() - 100.0).abs() < 1e-9, "refill clamps at cap");
+        // eta: need 30 more than the 100 available → 0; drain first.
+        assert!(b.try_consume(70.0));
+        assert!((b.eta_s(50.0) - 2.0).abs() < 1e-9);
+        assert_eq!(b.eta_s(10.0), 0.0);
+    }
+
+    #[test]
+    fn bucket_eta_clamps_oversized_costs_to_the_cap() {
+        let mut b = Bucket::new(40.0, 10.0);
+        assert!(b.try_consume(40.0));
+        // A cost above the cap can never be granted outright; the eta
+        // answers "when is the bucket as full as it can get".
+        assert!((b.eta_s(1e9) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breaker_opens_after_window_failures_then_probe_closes() {
+        let b = Breaker::new(Duration::from_millis(10));
+        assert_eq!(b.state(), BreakerState::Closed);
+        for _ in 0..BREAKER_OPEN_FAILS {
+            assert!(b.admit().is_ok());
+            b.record(true);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        let err = b.admit().unwrap_err();
+        assert!(err > 0.0 && err <= 0.010 + 1e-3, "remaining {err}");
+
+        std::thread::sleep(Duration::from_millis(20));
+        // First caller after the open window becomes the probe…
+        assert!(b.admit().is_ok());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // …and everyone else still fails fast until it reports.
+        assert!(b.admit().is_err());
+        b.record(false);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit().is_ok());
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens() {
+        let b = Breaker::new(Duration::from_millis(5));
+        for _ in 0..BREAKER_OPEN_FAILS {
+            b.admit().unwrap();
+            b.record(true);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.admit().is_ok(), "probe slot");
+        b.record(true);
+        assert_eq!(b.state(), BreakerState::Open, "failed probe re-opens");
+        assert!(b.admit().is_err(), "open again fails fast");
+        // A fresh open window + successful probe recovers fully.
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.admit().is_ok());
+        b.record(false);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_mixed_outcomes_below_threshold_stay_closed() {
+        let b = Breaker::new(Duration::from_millis(5));
+        for i in 0..3 * BREAKER_WINDOW {
+            b.admit().unwrap();
+            // 1 failure per 4 outcomes: never ≥ BREAKER_OPEN_FAILS in
+            // any 16-outcome window.
+            b.record(i % 4 == 0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn ladder_orders_saturated_over_degraded_over_healthy() {
+        use Health::*;
+        assert_eq!(ladder(0, 8, 4, 4, false), Healthy);
+        assert_eq!(ladder(4, 8, 4, 4, false), Degraded, "half-full queue");
+        assert_eq!(ladder(0, 8, 3, 4, false), Degraded, "shrunken pool");
+        assert_eq!(ladder(0, 8, 4, 4, true), Degraded, "breaker trouble");
+        assert_eq!(ladder(8, 8, 4, 4, false), Saturated, "full queue");
+        assert_eq!(ladder(0, 8, 0, 4, false), Saturated, "dead pool");
+    }
+
+    #[test]
+    fn retry_after_scales_with_backlog_and_clamps() {
+        assert_eq!(retry_after_secs(0, 4, 0.0), 1);
+        assert_eq!(retry_after_secs(8, 4, 0.0), 3);
+        assert_eq!(retry_after_secs(8, 0, 0.0), 9, "worker floor of 1");
+        assert_eq!(retry_after_secs(0, 4, 2.3), 3, "breaker remaining wins");
+        assert_eq!(retry_after_secs(10_000, 1, 0.0), RETRY_AFTER_MAX_S);
+    }
+
+    #[test]
+    fn admission_sheds_by_ladder_state() {
+        let a = Admission::new(0);
+        match a.check(Health::Saturated, 1.0, 8, 2) {
+            Verdict::Shed { status, retry_after_s, .. } => {
+                assert_eq!(status, 503);
+                assert!(retry_after_s >= 1);
+            }
+            Verdict::Admit => panic!("saturated must shed"),
+        }
+        match a.check(Health::Degraded, DEGRADED_COST_CAP + 1.0, 0, 2) {
+            Verdict::Shed { status, .. } => assert_eq!(status, 429),
+            Verdict::Admit => panic!("expensive request must shed degraded"),
+        }
+        assert!(matches!(a.check(Health::Degraded, 10.0, 0, 2),
+                         Verdict::Admit),
+                "cheap request flows while degraded");
+        assert!(matches!(a.check(Health::Healthy, 1e9, 0, 2),
+                         Verdict::Admit),
+                "no bucket → no rate shed");
+    }
+
+    #[test]
+    fn admission_bucket_rejects_with_computed_eta() {
+        let a = Admission::new(10); // cap 40, refill 10/s
+        assert!(matches!(a.check(Health::Healthy, 40.0, 0, 2),
+                         Verdict::Admit));
+        match a.check(Health::Healthy, 40.0, 0, 2) {
+            Verdict::Shed { status, retry_after_s, .. } => {
+                assert_eq!(status, 429);
+                assert!((1..=4).contains(&retry_after_s),
+                        "eta ≈ 4 s, got {retry_after_s}");
+            }
+            Verdict::Admit => panic!("drained bucket must 429"),
+        }
+    }
+}

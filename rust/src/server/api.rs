@@ -137,6 +137,32 @@ impl ApiRequest {
         };
         request_fingerprint(self.kind().name(), &self.canonical(), cfg)
     }
+
+    /// Admission-control cost estimate in **nominal tick × plant**
+    /// units (`server::admit`). The true tick count depends on the
+    /// resolved backend's substep split, which would require building
+    /// a driver just to price the request — admission only needs a
+    /// consistent relative scale, so this prices every request at the
+    /// paper's 5 s control tick: `ceil(duration / 5 s) × plants`
+    /// (× setpoints for sweeps, × budget evaluations for optimize).
+    pub fn cost_estimate(&self) -> f64 {
+        const NOMINAL_TICK_S: f64 = 5.0;
+        let ticks =
+            |dur_s: f64| (dur_s / NOMINAL_TICK_S).ceil().max(1.0);
+        match self {
+            ApiRequest::Simulate { sim, .. } => ticks(sim.cfg.duration_s),
+            ApiRequest::Fleet(fc) => {
+                ticks(fc.base.duration_s) * fc.n_plants as f64
+            }
+            ApiRequest::Sweep(sr) => {
+                ticks(sr.cfg.duration_s) * sr.setpoints.len().max(1) as f64
+            }
+            ApiRequest::Optimize(oc) => {
+                ticks(oc.eval_duration_s)
+                    * (oc.budget * oc.n_plants).max(1) as f64
+            }
+        }
+    }
 }
 
 /// SimConfig fields a request may override.
@@ -729,6 +755,41 @@ mod tests {
         let mut c = SimConfig::test_small();
         c.duration_s = 60.0;
         c
+    }
+
+    #[test]
+    fn cost_estimate_scales_with_ticks_and_plants() {
+        let b = base(); // 60 s → 12 nominal ticks
+        let sim = ApiRequest::parse(EndpointKind::Simulate, "", false, &b)
+            .unwrap();
+        assert_eq!(sim.cost_estimate(), 12.0);
+        let fleet = ApiRequest::parse(
+            EndpointKind::Fleet, r#"{"plants": 3}"#, false, &b)
+            .unwrap();
+        assert_eq!(fleet.cost_estimate(), 36.0);
+        let sweep = ApiRequest::parse(
+            EndpointKind::Sweep, r#"{"setpoints": [30, 45, 60, 70]}"#,
+            false, &b)
+            .unwrap();
+        assert_eq!(sweep.cost_estimate(), 48.0);
+        // Optimize prices the per-candidate window times the budget.
+        let opt = ApiRequest::parse(
+            EndpointKind::Optimize,
+            r#"{"budget": 4, "eval_duration_s": 60}"#, false, &b)
+            .unwrap();
+        match &opt {
+            ApiRequest::Optimize(oc) => assert!(oc.n_plants >= 1),
+            _ => unreachable!(),
+        }
+        assert!(opt.cost_estimate() >= 48.0);
+        // Degenerate durations still cost at least one tick.
+        let mut tiny = b.clone();
+        tiny.duration_s = 0.5;
+        let r = parse_sim_request("", &tiny).unwrap();
+        assert_eq!(
+            ApiRequest::Simulate { sim: r, stream: false }.cost_estimate(),
+            1.0
+        );
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub struct Metrics {
     coalesced: Arc<Counter>,
     cache_evictions: Arc<Counter>,
     shed: Arc<Counter>,
+    rate_limited: Arc<Counter>,
     queue_high_water: Arc<Gauge>,
     /// log10(latency [ms]) over [-3, 5): 1 us .. 100 s, 160 bins,
     /// one shard per worker.
@@ -95,7 +96,12 @@ impl Metrics {
         );
         let shed = r.counter(
             "idatacool_shed_total",
-            "Connections shed with 503 (job queue full)",
+            "Requests shed with 503 (queue full, saturated, or breaker \
+             open)",
+        );
+        let rate_limited = r.counter(
+            "idatacool_rate_limited_total",
+            "Requests shed with 429 by cost-aware admission control",
         );
         let queue_high_water = r.gauge(
             "idatacool_queue_depth_high_water",
@@ -117,6 +123,8 @@ impl Metrics {
         let _ = crate::obs::metrics::lane_sync_transitions();
         let _ = crate::obs::metrics::batch_occupancy();
         let _ = crate::obs::metrics::batch_window_wait_ms();
+        let _ = crate::obs::metrics::worker_restarts();
+        let _ = crate::obs::metrics::deadline_drops();
         Metrics {
             registry: r,
             requests,
@@ -129,6 +137,7 @@ impl Metrics {
             coalesced,
             cache_evictions,
             shed,
+            rate_limited,
             queue_high_water,
             latency_log_ms,
         }
@@ -166,6 +175,18 @@ impl Metrics {
 
     pub fn shed(&self) {
         self.shed.inc();
+    }
+
+    pub fn rate_limited(&self) {
+        self.rate_limited.inc();
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.get()
+    }
+
+    pub fn rate_limited_count(&self) -> u64 {
+        self.rate_limited.get()
     }
 
     /// Refresh the queue-depth high-water gauge (called at scrape).
@@ -224,6 +245,15 @@ impl Metrics {
                 "queue",
                 JsonBuilder::new()
                     .num("shed", self.shed.get() as f64)
+                    .num("rate_limited", self.rate_limited.get() as f64)
+                    .num(
+                        "deadline_drops",
+                        crate::obs::metrics::deadline_drops().get() as f64,
+                    )
+                    .num(
+                        "worker_restarts",
+                        crate::obs::metrics::worker_restarts().get() as f64,
+                    )
                     .num(
                         "depth_high_water",
                         self.queue_high_water.get() as f64,
@@ -349,6 +379,7 @@ mod tests {
         m.coalesce();
         m.cache_evicted();
         m.shed();
+        m.rate_limited();
         m.set_queue_high_water(5);
         let j = m.to_json_value(3, 64, 4, 1.5);
         assert_eq!(j.get("requests_total").unwrap().as_f64(), Some(3.0));
@@ -364,6 +395,11 @@ mod tests {
         assert_eq!(c.get("capacity").unwrap().as_f64(), Some(64.0));
         let q = j.get("queue").unwrap();
         assert_eq!(q.get("shed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(q.get("rate_limited").unwrap().as_f64(), Some(1.0));
+        // Deadline drops and worker restarts are process-global (other
+        // tests may have bumped them) — only presence is asserted.
+        assert!(q.get("deadline_drops").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(q.get("worker_restarts").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(q.get("depth_high_water").unwrap().as_f64(), Some(5.0));
         let lat = j.get("latency_ms").unwrap();
         assert_eq!(lat.get("count").unwrap().as_f64(), Some(3.0));
@@ -410,6 +446,9 @@ mod tests {
             "idatacool_coalesced_total",
             "idatacool_cache_evictions_total",
             "idatacool_shed_total",
+            "idatacool_rate_limited_total",
+            "idatacool_worker_restarts_total",
+            "idatacool_deadline_drops_total",
             "idatacool_queue_depth_high_water",
             "idatacool_request_latency_ms",
             "idatacool_cache_entries",

@@ -53,6 +53,18 @@
 //! result is still cached and published, so an immediate retry is a
 //! cache hit. 503 (shed) and 504 responses always carry `Retry-After`.
 //!
+//! **Self-healing** (DESIGN.md §10): workers run under a supervised
+//! pool (`supervise`) — panics answer the victim and respawn the slot
+//! within `[serve] restart_budget`, a stall watchdog condemns workers
+//! stuck past 4 × the deadline — and every typed request passes
+//! cost-aware admission control (`admit`): a token bucket (`[serve]
+//! rate_limit`), a healthy → degraded → saturated ladder, and a
+//! per-endpoint-class circuit breaker. Sheds answer 429/503
+//! `idatacool-error/1` envelopes with a *computed* `Retry-After`;
+//! `GET /v1/healthz` reports the whole picture as an
+//! `idatacool-health/1` document. None of it touches response bodies
+//! or cache keys — supervision is execution shape.
+//!
 //! **Shutdown**: `POST /v1/shutdown`, `ServerHandle::stop`, SIGTERM and
 //! SIGINT all converge on the same drain path — stop accepting, close
 //! the job queue, join the worker pool (every already-dispatched
@@ -65,11 +77,13 @@
 //! `GET /v1/healthz`, `GET /v1/metrics`, `POST /v1/shutdown` (all also
 //! reachable unprefixed, deprecated).
 
+pub mod admit;
 pub mod api;
 pub mod batch;
 pub mod coalesce;
 pub mod metrics;
 pub mod pool;
+pub mod supervise;
 
 use std::cell::Cell;
 use std::io::{BufReader, Read};
@@ -90,11 +104,13 @@ use crate::util::http::{error_envelope, Request, Response};
 use crate::util::json::JsonBuilder;
 use crate::util::lru::ShardedLru;
 
+use admit::{Admission, Health, Verdict};
 use api::{ApiRequest, EndpointKind};
 use batch::{BatchJob, Batcher};
 use coalesce::{Claim, Coalescer};
 use metrics::Metrics;
-use pool::{JobQueue, WorkerPool};
+use pool::JobQueue;
+use supervise::PoolState;
 
 /// Upper clamp on the worker-thread count.
 pub const MAX_WORKERS: usize = 256;
@@ -102,9 +118,11 @@ pub const MAX_WORKERS: usize = 256;
 /// Lock shards for the response cache.
 const CACHE_SHARDS: usize = 8;
 
-/// Most connections the readiness loop will hold open at once; beyond
-/// this, new arrivals are shed with a 503.
-const MAX_PARKED: usize = 1024;
+/// A worker busy past this many request deadlines is condemned as
+/// stalled: long enough that the in-band 504 paths (follower timeout,
+/// leader post-hoc check) have all had their chance, short enough that
+/// a wedged compute cannot hold a slot hostage.
+const STALL_DEADLINES: u32 = 4;
 
 /// An idle (no bytes readable) connection is dropped after this long.
 /// Clients mid-request get the worker-side 30 s read timeout instead —
@@ -177,24 +195,29 @@ pub(crate) fn error_cached(status: u16, msg: &str) -> CachedResponse {
 }
 
 /// Finish a `serve_cached` outcome on the wire: attach the `x-cache`
-/// header and, for back-pressure statuses (503/504), tell the client
-/// when to come back. A 504 retry is typically a cache hit — the
-/// leader's result is cached even when this client's budget ran out.
-fn answer(c: CachedResponse, cache_status: &str) -> Response {
+/// header and, for back-pressure statuses (429/503/504), tell the
+/// client when to come back — computed from the live queue backlog and
+/// breaker open-time, not a constant. A 504 retry is typically a cache
+/// hit — the leader's result is cached even when this client's budget
+/// ran out.
+fn answer(c: CachedResponse, cache_status: &str, shared: &Shared)
+          -> Response {
     let status = c.status;
     let resp = c.to_response(cache_status);
-    if status == 503 || status == 504 {
-        resp.with_header("retry-after", "1")
+    if status == 429 || status == 503 || status == 504 {
+        resp.with_header("retry-after",
+                         &shared.retry_after_secs().to_string())
     } else {
         resp
     }
 }
 
 /// The 504 every deadline overrun answers with.
-fn deadline_response(cache_status: &str) -> Response {
+fn deadline_response(cache_status: &str, shared: &Shared) -> Response {
     answer(
         error_cached(504, "deadline exceeded; retry (result may be cached)"),
         cache_status,
+        shared,
     )
 }
 
@@ -226,6 +249,11 @@ impl Default for ServeScratch {
 pub struct Conn {
     stream: TcpStream,
     leftover: Vec<u8>,
+    /// When the readiness loop pushed this connection into the job
+    /// queue — the deadline-aware drop compares it at pop, so a
+    /// request that waited out its whole budget in the queue is
+    /// answered 504 without entering compute.
+    enqueued: Instant,
 }
 
 /// State shared between the readiness loop and every worker.
@@ -250,6 +278,37 @@ struct Shared {
     queue: Arc<JobQueue<Conn>>,
     /// Keep-alive connections workers hand back for further polling.
     parked: Mutex<Vec<Conn>>,
+    /// Most connections the readiness loop holds open at once
+    /// (`[serve] max_parked`); beyond this, arrivals are shed 503.
+    max_parked: usize,
+    /// Supervision state (live workers, restarts, stalls) — created at
+    /// bind so the health endpoint can read it, driven by `run`.
+    pool: Arc<PoolState>,
+    /// Admission control: token bucket, degradation ladder, breakers.
+    admission: Admission,
+}
+
+impl Shared {
+    /// The degradation ladder, derived from live signals on every
+    /// admission decision and health scrape.
+    fn health(&self) -> Health {
+        admit::ladder(
+            self.queue.len(),
+            self.queue.cap(),
+            self.pool.live_workers(),
+            self.workers,
+            self.admission.breaker_trouble(),
+        )
+    }
+
+    /// The computed `Retry-After` every back-pressure response carries.
+    fn retry_after_secs(&self) -> u64 {
+        admit::retry_after_secs(
+            self.queue.len(),
+            self.workers,
+            self.admission.max_open_remaining_s(),
+        )
+    }
 }
 
 /// The bound-but-not-yet-running server.
@@ -268,6 +327,7 @@ impl Server {
             sc.batch_max_plants >= 1,
             "batch-max-plants must be at least 1"
         );
+        anyhow::ensure!(sc.max_parked >= 1, "max-parked must be at least 1");
         let mut base = opts.base;
         // "auto" resolves to the artifact-independent native backend
         // (mirrors fleet runs); requests may still pin "hlo".
@@ -286,6 +346,10 @@ impl Server {
         });
         let deadline = (sc.deadline_ms > 0)
             .then(|| Duration::from_millis(sc.deadline_ms as u64));
+        // The stall watchdog only makes sense relative to a request
+        // budget: no deadline, no watchdog.
+        let stall = deadline.map(|d| d * STALL_DEADLINES);
+        let pool = PoolState::new(workers, sc.restart_budget as u64, stall);
         let shared = Arc::new(Shared {
             base,
             cache: ShardedLru::new(sc.cache_cap, CACHE_SHARDS),
@@ -300,6 +364,9 @@ impl Server {
             started: Instant::now(),
             queue: Arc::new(JobQueue::new(sc.queue_cap)),
             parked: Mutex::new(Vec::new()),
+            max_parked: sc.max_parked,
+            pool,
+            admission: Admission::new(sc.rate_limit),
         });
         Ok(Server { listener, shared })
     }
@@ -322,10 +389,9 @@ impl Server {
         let queue = self.shared.queue.clone();
         let pool = {
             let shared = self.shared.clone();
-            WorkerPool::spawn_with(
-                self.shared.workers,
+            supervise::spawn(
+                self.shared.pool.clone(),
                 queue.clone(),
-                ServeScratch::new,
                 move |conn, scratch| handle_connection(conn, &shared, scratch),
             )
         };
@@ -343,13 +409,19 @@ impl Server {
                 match self.listener.accept() {
                     Ok((s, _)) => {
                         active = true;
-                        if parked.len() >= MAX_PARKED {
+                        if parked.len() >= self.shared.max_parked {
                             self.shared.metrics.shed();
-                            shed(s);
+                            shed(s, &self.shared,
+                                 "connection limit (max_parked) reached; \
+                                  retry later");
                             continue;
                         }
                         let _ = s.set_nonblocking(true);
-                        let conn = Conn { stream: s, leftover: Vec::new() };
+                        let conn = Conn {
+                            stream: s,
+                            leftover: Vec::new(),
+                            enqueued: Instant::now(),
+                        };
                         parked.push((conn, Instant::now()));
                     }
                     Err(e)
@@ -379,12 +451,14 @@ impl Server {
                 match state {
                     ConnState::Ready => {
                         active = true;
-                        let (conn, _) = parked.swap_remove(i);
+                        let (mut conn, _) = parked.swap_remove(i);
                         // Workers read/write blocking (with timeouts).
                         let _ = conn.stream.set_nonblocking(false);
+                        conn.enqueued = Instant::now();
                         if let Err(conn) = queue.push(conn) {
                             self.shared.metrics.shed();
-                            shed(conn.stream);
+                            shed(conn.stream, &self.shared,
+                                 "job queue full; retry later");
                         }
                     }
                     ConnState::Closed => {
@@ -468,11 +542,13 @@ impl ServerHandle {
     }
 }
 
-/// Reject a connection when the job queue or the parked set is full.
-fn shed(mut s: TcpStream) {
+/// Reject a connection when the job queue or the parked set is full —
+/// the standard envelope plus the same computed `Retry-After` every
+/// other back-pressure path derives.
+fn shed(mut s: TcpStream, shared: &Shared, msg: &str) {
     let _ = s.set_nonblocking(false);
-    let _ = Response::error(503, "job queue full; retry later")
-        .with_header("retry-after", "1")
+    let _ = Response::error(503, msg)
+        .with_header("retry-after", &shared.retry_after_secs().to_string())
         .write_to(&mut s);
 }
 
@@ -525,6 +601,23 @@ mod signal {
 /// `Conn::leftover` and are replayed ahead of the socket next time.
 fn handle_connection(mut conn: Conn, shared: &Arc<Shared>,
                      scratch: &mut ServeScratch) {
+    // Deadline-aware queue drop: a request that already waited out its
+    // whole budget parked in the job queue is answered 504 right here
+    // — before parsing, before compute — so a saturated server spends
+    // worker time on requests that can still make their deadline.
+    if let Some(d) = shared.deadline {
+        if conn.enqueued.elapsed() > d {
+            crate::obs::metrics::deadline_drops().inc();
+            let _ = Response::error(
+                504,
+                "deadline expired while queued; retry later",
+            )
+            .with_header("retry-after",
+                         &shared.retry_after_secs().to_string())
+            .write_to(&mut &conn.stream);
+            return;
+        }
+    }
     let _ = conn.stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = conn.stream.set_nodelay(true);
     let _req_span = crate::obs::span("request");
@@ -585,7 +678,7 @@ fn handle_connection(mut conn: Conn, shared: &Arc<Shared>,
     leftover.extend_from_slice(&cursor.get_ref()[pos..]);
     conn.leftover = leftover;
     let mut parked = shared.parked.lock().unwrap();
-    if parked.len() < MAX_PARKED {
+    if parked.len() < shared.max_parked {
         parked.push(conn);
     }
 }
@@ -699,15 +792,53 @@ fn route(req: &Request, shared: &Arc<Shared>, scratch: &mut ServeScratch)
     }
 }
 
+/// `GET /v1/healthz`: the `idatacool-health/1` document — ladder
+/// state, live worker count, breaker states, shed counts. Always HTTP
+/// 200 (a probe can reach a saturated server; the *state* field is the
+/// gate), and never cached — this is the one endpoint whose body is
+/// live operational state, not a pure function of the request.
 fn ep_healthz(_: &Endpoint, _: &Request, shared: &Arc<Shared>,
               _: &mut ServeScratch) -> Response {
+    let mut breakers = JsonBuilder::new();
+    for (name, state) in shared.admission.breaker_states() {
+        breakers = breakers.str(name, state.name());
+    }
     Response::json(
         200,
         &JsonBuilder::new()
-            .str("status", "ok")
+            .str("schema", "idatacool-health/1")
+            .str("state", shared.health().name())
+            .set(
+                "workers",
+                JsonBuilder::new()
+                    .num("configured", shared.workers as f64)
+                    .num("live", shared.pool.live_workers() as f64)
+                    .num("restarts", shared.pool.restarts() as f64)
+                    .num("restart_budget_left",
+                         shared.pool.budget_left() as f64)
+                    .build(),
+            )
+            .set("breakers", breakers.build())
+            .set(
+                "queue",
+                JsonBuilder::new()
+                    .num("depth", shared.queue.len() as f64)
+                    .num("capacity", shared.queue.cap() as f64)
+                    .build(),
+            )
+            .set(
+                "shed",
+                JsonBuilder::new()
+                    .num("overload", shared.metrics.shed_count() as f64)
+                    .num("rate_limited",
+                         shared.metrics.rate_limited_count() as f64)
+                    .num("deadline_drops",
+                         crate::obs::metrics::deadline_drops().get() as f64)
+                    .num("stalls", shared.pool.stalls() as f64)
+                    .build(),
+            )
             .num("in_flight", shared.inflight.in_flight() as f64)
             .num("uptime_s", shared.started.elapsed().as_secs_f64())
-            .num("workers", shared.workers as f64)
             .build(),
     )
 }
@@ -798,6 +929,35 @@ fn ep_api(ep: &Endpoint, req: &Request, shared: &Arc<Shared>,
         Ok(a) => a,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
+    // Cost-aware admission: the ladder + token bucket price the parsed
+    // request before any compute. Shedding here is the cheapest
+    // possible refusal — envelope out, worker freed.
+    let cost = areq.cost_estimate();
+    match shared.admission.check(shared.health(), cost,
+                                 shared.queue.len(), shared.workers) {
+        Verdict::Admit => {}
+        Verdict::Shed { status, retry_after_s, msg } => {
+            if status == 429 {
+                shared.metrics.rate_limited();
+            } else {
+                shared.metrics.shed();
+            }
+            return Response::error(status, &msg)
+                .with_header("retry-after", &retry_after_s.to_string());
+        }
+    }
+    // Per-endpoint-class circuit breaker: a class that keeps failing
+    // fails fast until its half-open probe proves recovery.
+    if let Err(remaining_s) = shared.admission.breaker(kind).admit() {
+        shared.metrics.shed();
+        let retry = (remaining_s.ceil() as u64)
+            .clamp(1, admit::RETRY_AFTER_MAX_S);
+        return Response::error(
+            503,
+            &format!("circuit open for {}; failing fast", req.path),
+        )
+        .with_header("retry-after", &retry.to_string());
+    }
     let key = areq.fingerprint();
     let occupancy: Cell<Option<usize>> = Cell::new(None);
     let resp = if ep.cached {
@@ -810,6 +970,9 @@ fn ep_api(ep: &Endpoint, req: &Request, shared: &Arc<Shared>,
             Err(e) => Response::error(500, &format!("{e:#}")),
         }
     };
+    // Feed the breaker the admitted request's outcome (5xx = failure;
+    // a 504 is a timeout in breaker terms).
+    shared.admission.breaker(kind).record(resp.status >= 500);
     match occupancy.get() {
         Some(n) => resp.with_header("x-batch", &n.to_string()),
         None => resp,
@@ -839,10 +1002,10 @@ where
                 // The slot is untouched — the leader still publishes
                 // and caches, so this client's retry hits the cache.
                 Some(d) => match slot.wait_timeout(d) {
-                    Some(c) => answer(c, "coalesced"),
-                    None => deadline_response("coalesced"),
+                    Some(c) => answer(c, "coalesced", shared),
+                    None => deadline_response("coalesced", shared),
                 },
-                None => answer(slot.wait(), "coalesced"),
+                None => answer(slot.wait(), "coalesced", shared),
             }
         }
         Claim::Leader(slot) => {
@@ -888,10 +1051,10 @@ where
                     // Computed, cached, published — but this client's
                     // budget is spent; answer what the deadline
                     // contract promises.
-                    return deadline_response("miss");
+                    return deadline_response("miss", shared);
                 }
             }
-            answer(resp, "miss")
+            answer(resp, "miss", shared)
         }
     }
 }
@@ -1079,9 +1242,13 @@ mod tests {
         o.cfg.addr = "127.0.0.1:0".into();
         o.cfg.queue_cap = 0;
         assert!(Server::bind(o).is_err());
-        let mut o = ServeOptions::new(base);
+        let mut o = ServeOptions::new(base.clone());
         o.cfg.addr = "127.0.0.1:0".into();
         o.cfg.batch_max_plants = 0;
+        assert!(Server::bind(o).is_err());
+        let mut o = ServeOptions::new(base);
+        o.cfg.addr = "127.0.0.1:0".into();
+        o.cfg.max_parked = 0;
         assert!(Server::bind(o).is_err());
     }
 

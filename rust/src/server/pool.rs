@@ -86,6 +86,13 @@ impl<T> JobQueue<T> {
         }
     }
 
+    /// Whether `close` has been called. The supervisor's monitor checks
+    /// this so a worker that exits during drain is not "dead" — it is
+    /// done — and must not be respawned against a closing queue.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
     /// Close the queue: no further pushes succeed; poppers drain what is
     /// left, then observe `None`.
     pub fn close(&self) {
@@ -203,7 +210,9 @@ mod tests {
     fn closed_queue_rejects_pushes_but_drains() {
         let q: JobQueue<u32> = JobQueue::new(4);
         q.push(7).unwrap();
+        assert!(!q.is_closed());
         q.close();
+        assert!(q.is_closed());
         assert_eq!(q.push(8), Err(8));
         assert_eq!(q.pop(), Some(7));
         assert_eq!(q.pop(), None);

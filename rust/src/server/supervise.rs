@@ -1,0 +1,495 @@
+//! Supervised worker pool for the serve path (DESIGN.md §10).
+//!
+//! `pool::WorkerPool` runs the handler bare: a panic kills the thread
+//! and silently shrinks the pool forever, and a stalled compute holds
+//! its victim's connection open until the 30 s socket timeout. This
+//! module wraps the same queue-draining loop in a supervision
+//! contract:
+//!
+//!  * every job runs under `catch_unwind`; a panic answers the victim
+//!    500 on a dup'd write half, then the thread dies *visibly* — a
+//!    monitor thread respawns the slot (bounded by `[serve]
+//!    restart_budget`, counted in `idatacool_worker_restarts_total`);
+//!  * each worker stamps a relaxed `AtomicU64` heartbeat per job; the
+//!    monitor condemns a busy worker whose heartbeat age exceeds the
+//!    stall threshold (4 × the request deadline), answers the victim
+//!    504 with a computed `Retry-After`, and hands the slot to a fresh
+//!    thread — the stuck one discovers its stale generation on wake
+//!    and exits without touching the slot;
+//!  * the chaos site `worker_tick` fires once per popped job (the
+//!    `plant` selector addresses the worker slot), so tests drive both
+//!    paths deterministically: `kind=panic` exercises die-and-respawn,
+//!    `kind=stall_ms` exercises the watchdog.
+//!
+//! Supervision is pure execution shape: it decides *which thread*
+//! answers and *when to give up*, never *what bytes* an admitted
+//! request gets — response bodies stay bitwise identical to solo CLI
+//! runs.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::resilience::inject::{self, Site};
+use crate::util::http::Response;
+
+use super::admit;
+use super::pool::JobQueue;
+use super::{Conn, ServeScratch};
+
+/// Monitor cadence: how often heartbeats and liveness are checked.
+/// Small enough that a watchdog 504 lands promptly; large enough to
+/// stay invisible in profiles.
+const MONITOR_POLL: Duration = Duration::from_millis(20);
+
+type Handler = Arc<dyn Fn(Conn, &mut ServeScratch) + Send + Sync>;
+
+/// One worker slot's supervision state. The thread occupying a slot
+/// changes over time; the `generation` counter says which thread owns
+/// it — a condemned or replaced thread sees a newer generation and
+/// must not touch the slot again.
+struct Slot {
+    /// Last heartbeat, in ms since pool construction (relaxed stamp).
+    heartbeat_ms: AtomicU64,
+    /// A job is being served (stamped with the heartbeat at pop).
+    busy: AtomicBool,
+    /// The slot has a thread draining the queue.
+    live: AtomicBool,
+    /// Which spawn owns the slot; bumped on condemn and respawn.
+    generation: AtomicU64,
+    /// Dup'd write half of the connection being served, so the monitor
+    /// (stall) or the unwinding worker (panic) can answer the victim.
+    victim: Mutex<Option<(u64, TcpStream)>>,
+}
+
+/// Shared supervision state: slots plus the restart budget. Created by
+/// `Server::bind` (the health endpoint reads it) and driven by
+/// [`spawn`].
+pub struct PoolState {
+    slots: Vec<Slot>,
+    started: Instant,
+    /// Remaining respawns — the fuse against a crash loop.
+    budget: AtomicU64,
+    restarts: AtomicU64,
+    stalls: AtomicU64,
+    /// Heartbeat age past which a busy worker is condemned; `None`
+    /// disables the watchdog (no deadline configured).
+    stall: Option<Duration>,
+    shutdown: AtomicBool,
+}
+
+impl PoolState {
+    pub fn new(workers: usize, restart_budget: u64,
+               stall: Option<Duration>) -> Arc<PoolState> {
+        let slots = (0..workers)
+            .map(|_| Slot {
+                heartbeat_ms: AtomicU64::new(0),
+                busy: AtomicBool::new(false),
+                live: AtomicBool::new(false),
+                generation: AtomicU64::new(0),
+                victim: Mutex::new(None),
+            })
+            .collect();
+        Arc::new(PoolState {
+            slots,
+            started: Instant::now(),
+            budget: AtomicU64::new(restart_budget),
+            restarts: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            stall,
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Atomically take one respawn from the budget; `false` = spent.
+    fn take_budget(&self) -> bool {
+        self.budget
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+                b.checked_sub(1)
+            })
+            .is_ok()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently occupied by a draining thread.
+    pub fn live_workers(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.live.load(Ordering::Relaxed))
+            .count()
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    pub fn budget_left(&self) -> u64 {
+        self.budget.load(Ordering::Relaxed)
+    }
+}
+
+/// The running pool: worker threads, their monitor, and the state they
+/// share with the server.
+pub struct SupervisedPool {
+    state: Arc<PoolState>,
+    handles: Arc<Mutex<Vec<(usize, u64, JoinHandle<()>)>>>,
+    monitor: JoinHandle<()>,
+}
+
+/// Spawn the configured worker count plus the monitor thread. The
+/// handler serves one popped connection (it is `handle_connection` in
+/// production).
+pub fn spawn<F>(state: Arc<PoolState>, queue: Arc<JobQueue<Conn>>,
+                handler: F) -> SupervisedPool
+where
+    F: Fn(Conn, &mut ServeScratch) + Send + Sync + 'static,
+{
+    let handler: Handler = Arc::new(handler);
+    let handles = Arc::new(Mutex::new(Vec::new()));
+    {
+        let mut hs = handles.lock().unwrap();
+        for w in 0..state.workers() {
+            let gen = state.slots[w].generation.load(Ordering::Relaxed);
+            state.slots[w].live.store(true, Ordering::Relaxed);
+            state.slots[w].heartbeat_ms.store(state.now_ms(),
+                                              Ordering::Relaxed);
+            hs.push((w, gen,
+                     spawn_worker(state.clone(), queue.clone(),
+                                  handler.clone(), w, gen)));
+        }
+    }
+    let monitor = {
+        let state = state.clone();
+        let handles = handles.clone();
+        std::thread::Builder::new()
+            .name("serve-monitor".into())
+            .spawn(move || monitor_loop(&state, &queue, &handler, &handles))
+            .expect("spawn serve monitor")
+    };
+    SupervisedPool { state, handles, monitor }
+}
+
+impl SupervisedPool {
+    /// Drain shutdown: close the queue first, then call this. Joins
+    /// the monitor and every current-generation worker; condemned
+    /// stale threads are left to finish detached (joining a thread
+    /// that is still stuck in the stalled compute would block
+    /// shutdown — process exit reaps it).
+    pub fn join(self) {
+        self.state.shutdown.store(true, Ordering::Relaxed);
+        let _ = self.monitor.join();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for (w, gen, h) in handles {
+            if self.state.slots[w].generation.load(Ordering::Relaxed) == gen {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn spawn_worker(state: Arc<PoolState>, queue: Arc<JobQueue<Conn>>,
+                handler: Handler, w: usize, gen: u64) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("serve-worker-{w}.{gen}"))
+        .spawn(move || worker_loop(&state, &queue, &handler, w, gen))
+        .expect("spawn serve worker")
+}
+
+/// Clears `live` when the thread exits for any reason — unless a newer
+/// generation already owns the slot (then its liveness is not ours to
+/// report).
+struct LiveGuard<'a> {
+    slot: &'a Slot,
+    gen: u64,
+}
+
+impl Drop for LiveGuard<'_> {
+    fn drop(&mut self) {
+        if self.slot.generation.load(Ordering::Relaxed) == self.gen {
+            self.slot.live.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Take the victim connection out of the slot if it still belongs to
+/// `gen`; anything newer is left for its owner.
+fn take_victim(slot: &Slot, gen: u64) -> Option<TcpStream> {
+    let mut v = slot.victim.lock().unwrap();
+    match v.take() {
+        Some((g, s)) if g == gen => Some(s),
+        other => {
+            *v = other;
+            None
+        }
+    }
+}
+
+fn worker_loop(state: &PoolState, queue: &JobQueue<Conn>, handler: &Handler,
+               w: usize, gen: u64) {
+    let slot = &state.slots[w];
+    let _live = LiveGuard { slot, gen };
+    let mut scratch = ServeScratch::new(w);
+    loop {
+        if state.shutdown.load(Ordering::Relaxed)
+            || slot.generation.load(Ordering::Relaxed) != gen
+        {
+            return;
+        }
+        let Some(conn) = queue.pop() else { return };
+        slot.heartbeat_ms.store(state.now_ms(), Ordering::Relaxed);
+        slot.busy.store(true, Ordering::Relaxed);
+        if let Ok(dup) = conn.stream.try_clone() {
+            *slot.victim.lock().unwrap() = Some((gen, dup));
+        }
+        let panicked = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                // Chaos site: fires once per popped job, before the
+                // handler, addressed by worker slot.
+                if inject::armed() {
+                    let _ = inject::fire(Site::WorkerTick, Some(w));
+                }
+                // An injected stall long enough for the watchdog to
+                // condemn this generation means the victim was already
+                // answered 504 — don't compute for a client that is
+                // gone.
+                if slot.generation.load(Ordering::Relaxed) != gen {
+                    return;
+                }
+                handler(conn, &mut scratch);
+            }),
+        )
+        .is_err();
+        let victim = take_victim(slot, gen);
+        if slot.generation.load(Ordering::Relaxed) == gen {
+            slot.busy.store(false, Ordering::Relaxed);
+            slot.heartbeat_ms.store(state.now_ms(), Ordering::Relaxed);
+        }
+        if panicked {
+            // An unwind that reaches here escaped the handler's own
+            // catch (e.g. the chaos site above), so no response was
+            // written yet: answer the victim on the dup'd write half,
+            // then die — the monitor respawns the slot.
+            if let Some(mut s) = victim {
+                let _ = Response::error(
+                    500,
+                    "worker panicked before answering; worker is being \
+                     replaced",
+                )
+                .write_to(&mut s);
+            }
+            return;
+        }
+    }
+}
+
+fn monitor_loop(state: &Arc<PoolState>, queue: &Arc<JobQueue<Conn>>,
+                handler: &Handler,
+                handles: &Arc<Mutex<Vec<(usize, u64, JoinHandle<()>)>>>) {
+    while !state.shutdown.load(Ordering::Relaxed) {
+        std::thread::sleep(MONITOR_POLL);
+        if state.shutdown.load(Ordering::Relaxed) || queue.is_closed() {
+            return;
+        }
+        let now = state.now_ms();
+        for w in 0..state.slots.len() {
+            let slot = &state.slots[w];
+            let gen = slot.generation.load(Ordering::Relaxed);
+            // Stall watchdog: a busy worker whose heartbeat age passed
+            // the threshold is condemned — its victim gets the 504 now
+            // instead of at stall end, and the slot gets a fresh
+            // thread. The stuck thread exits on wake (stale
+            // generation); if its compute does finish, the result is
+            // still cached and published before it notices.
+            if let Some(stall) = state.stall {
+                if slot.live.load(Ordering::Relaxed)
+                    && slot.busy.load(Ordering::Relaxed)
+                {
+                    let hb = slot.heartbeat_ms.load(Ordering::Relaxed);
+                    if now.saturating_sub(hb) > stall.as_millis() as u64 {
+                        condemn(state, queue, w, gen);
+                        respawn(state, queue, handler, handles, w);
+                        continue;
+                    }
+                }
+            }
+            // Panic exit: the LiveGuard cleared `live` under a current
+            // generation — a death, not a replacement in progress.
+            if !slot.live.load(Ordering::Relaxed) {
+                respawn(state, queue, handler, handles, w);
+            }
+        }
+    }
+}
+
+/// Answer the condemned worker's victim 504 and take the slot away
+/// from the stuck thread by bumping its generation.
+fn condemn(state: &PoolState, queue: &JobQueue<Conn>, w: usize, gen: u64) {
+    let slot = &state.slots[w];
+    if let Some(mut s) = take_victim(slot, gen) {
+        let retry =
+            admit::retry_after_secs(queue.len(), state.workers(), 0.0);
+        let _ = Response::error(
+            504,
+            "deadline exceeded: compute stalled; worker is being \
+             replaced (result may be cached)",
+        )
+        .with_header("retry-after", &retry.to_string())
+        .write_to(&mut s);
+    }
+    state.stalls.fetch_add(1, Ordering::Relaxed);
+    slot.generation.fetch_add(1, Ordering::Relaxed);
+    slot.live.store(false, Ordering::Relaxed);
+    slot.busy.store(false, Ordering::Relaxed);
+    slot.heartbeat_ms.store(state.now_ms(), Ordering::Relaxed);
+}
+
+/// Give a dark slot a fresh thread, budget permitting. A spent budget
+/// leaves the slot dark — the degradation ladder reports the shrunken
+/// pool instead of masking a crash loop.
+fn respawn(state: &Arc<PoolState>, queue: &Arc<JobQueue<Conn>>,
+           handler: &Handler,
+           handles: &Arc<Mutex<Vec<(usize, u64, JoinHandle<()>)>>>,
+           w: usize) {
+    if state.shutdown.load(Ordering::Relaxed) || queue.is_closed() {
+        return;
+    }
+    if !state.take_budget() {
+        return;
+    }
+    let slot = &state.slots[w];
+    let gen = slot.generation.fetch_add(1, Ordering::Relaxed) + 1;
+    slot.live.store(true, Ordering::Relaxed);
+    slot.busy.store(false, Ordering::Relaxed);
+    slot.heartbeat_ms.store(state.now_ms(), Ordering::Relaxed);
+    state.restarts.fetch_add(1, Ordering::Relaxed);
+    crate::obs::metrics::worker_restarts().inc();
+    let h = spawn_worker(state.clone(), queue.clone(), handler.clone(),
+                         w, gen);
+    handles.lock().unwrap().push((w, gen, h));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn restart_budget_is_a_fuse() {
+        let state = PoolState::new(2, 3, None);
+        assert_eq!(state.budget_left(), 3);
+        assert!(state.take_budget());
+        assert!(state.take_budget());
+        assert!(state.take_budget());
+        assert!(!state.take_budget(), "budget must not underflow");
+        assert_eq!(state.budget_left(), 0);
+    }
+
+    #[test]
+    fn live_accounting_counts_occupied_slots() {
+        let state = PoolState::new(3, 0, None);
+        assert_eq!(state.workers(), 3);
+        assert_eq!(state.live_workers(), 0);
+        state.slots[0].live.store(true, Ordering::Relaxed);
+        state.slots[2].live.store(true, Ordering::Relaxed);
+        assert_eq!(state.live_workers(), 2);
+    }
+
+    /// A connected (client, server-side Conn) pair on loopback.
+    fn conn_pair(listener: &TcpListener) -> (TcpStream, Conn) {
+        let client =
+            TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (s, _) = listener.accept().unwrap();
+        (client, Conn { stream: s, leftover: Vec::new(),
+                        enqueued: Instant::now() })
+    }
+
+    fn wait_until(what: &str, mut done: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !done() {
+            assert!(t0.elapsed() < Duration::from_secs(10),
+                    "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn panic_kills_worker_and_monitor_respawns_within_budget() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let state = PoolState::new(1, 4, None);
+        let queue = Arc::new(JobQueue::new(8));
+        let served = Arc::new(AtomicUsize::new(0));
+        let pool = spawn(state.clone(), queue.clone(), {
+            let served = served.clone();
+            move |_conn, _scratch| {
+                if served.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("first job dies");
+                }
+            }
+        });
+        assert_eq!(state.live_workers(), 1);
+
+        let (mut client, conn) = conn_pair(&listener);
+        assert!(queue.push(conn).is_ok());
+        wait_until("respawn", || state.restarts() >= 1);
+        // The panicking worker answered its victim before dying.
+        let mut buf = String::new();
+        client
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        client.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 500"), "{buf}");
+
+        // The replacement drains the queue again.
+        let (_client2, conn2) = conn_pair(&listener);
+        assert!(queue.push(conn2).is_ok());
+        wait_until("second job", || served.load(Ordering::SeqCst) >= 2);
+        assert_eq!(state.live_workers(), 1);
+        assert_eq!(state.restarts(), 1);
+
+        queue.close();
+        pool.join();
+    }
+
+    #[test]
+    fn stalled_worker_is_condemned_and_victim_answered_504() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let state =
+            PoolState::new(1, 4, Some(Duration::from_millis(50)));
+        let queue = Arc::new(JobQueue::new(8));
+        let pool = spawn(state.clone(), queue.clone(), |_conn, _scratch| {
+            std::thread::sleep(Duration::from_millis(400));
+        });
+
+        let (mut client, conn) = conn_pair(&listener);
+        assert!(queue.push(conn).is_ok());
+        let mut buf = String::new();
+        client
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        client.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 504"), "{buf}");
+        assert!(buf.contains("retry-after:"), "computed hint: {buf}");
+        assert!(buf.contains("\"idatacool-error/1\""), "{buf}");
+        assert!(state.stalls() >= 1);
+        wait_until("replacement live", || state.live_workers() == 1
+            && state.restarts() >= 1);
+
+        queue.close();
+        pool.join();
+    }
+}

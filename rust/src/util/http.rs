@@ -213,6 +213,7 @@ pub fn error_code(status: u16) -> &'static str {
         404 => "not_found",
         405 => "method_not_allowed",
         413 => "payload_too_large",
+        429 => "rate_limited",
         431 => "headers_too_large",
         500 => "internal_error",
         501 => "not_implemented",
@@ -326,6 +327,7 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",

@@ -791,6 +791,63 @@ fn prop_chaos_injection_is_seed_deterministic() {
     });
 }
 
+// -------------------------------------------------------------- admission ---
+
+#[test]
+fn prop_token_bucket_never_oversubscribes() {
+    // The admission token bucket against its physical invariant: over
+    // any interleaving of refills and consume attempts, the total cost
+    // granted can never exceed the initial burst plus rate × elapsed
+    // time, and the token level always stays inside [0, cap]. A
+    // violation would mean the rate limiter can be talked into
+    // admitting more work than the configured budget.
+    use idatacool::server::admit::Bucket;
+
+    forall(60, |rng| {
+        let rate = rng.uniform_in(0.5, 200.0);
+        let cap = rate * rng.uniform_in(1.0, 8.0);
+        let mut b = Bucket::new(cap, rate);
+        let mut elapsed = 0.0f64;
+        let mut granted = 0.0f64;
+        for _ in 0..400 {
+            if rng.uniform() < 0.5 {
+                let dt = rng.uniform_in(0.0, 2.0);
+                b.advance(dt);
+                elapsed += dt;
+            } else {
+                // Mix plausible costs with adversarial ones (negative,
+                // oversized, non-round).
+                let cost = match rng.below(4) {
+                    0 => rng.uniform_in(0.0, cap * 1.5),
+                    1 => rng.uniform_in(-10.0, 0.0),
+                    2 => cap * rng.uniform_in(0.9, 1.1),
+                    _ => rng.uniform_in(0.0, rate),
+                };
+                if b.try_consume(cost) {
+                    granted += cost.max(0.0);
+                }
+                // eta is a promise, never negative, and zero exactly
+                // when the cost is currently grantable
+                let c = rng.uniform_in(0.0, cap);
+                let eta = b.eta_s(c);
+                assert!(eta >= 0.0, "negative eta {eta}");
+                if c <= b.tokens() {
+                    assert_eq!(eta, 0.0, "grantable cost must have eta 0");
+                }
+            }
+            assert!(
+                b.tokens() >= 0.0 && b.tokens() <= cap + 1e-9,
+                "tokens {} outside [0, {cap}]", b.tokens()
+            );
+            assert!(
+                granted <= cap + rate * elapsed + 1e-6 * granted.max(1.0),
+                "oversubscribed: granted {granted} > burst {cap} + \
+                 {rate}/s × {elapsed}s"
+            );
+        }
+    });
+}
+
 // ----------------------------------------------------------------- lru ---
 
 #[test]

@@ -234,6 +234,113 @@ fn checkpoint_then_resume_reproduces_the_document_bytewise() {
 }
 
 #[test]
+fn serve_storm_supervisor_recovers_and_cache_stays_bitwise() {
+    // The self-healing acceptance gate (DESIGN.md §10), in-process: a
+    // one-worker server is stormed through the `worker_tick` chaos site
+    // — one injected panic, then one injected stall long past the
+    // watchdog threshold. The supervisor must answer both victims
+    // (500 / 504 + Retry-After), respawn the slot twice within budget,
+    // and a post-storm repeat of the pre-storm request must be an
+    // `x-cache: hit` with a byte-identical body — supervision is
+    // execution shape only, never bytes.
+    use idatacool::server::{ServeOptions, Server};
+    use idatacool::util::http::http_roundtrip;
+    use idatacool::util::json::Json;
+
+    let _guard = inject::test_lock();
+    inject::disarm();
+
+    let mut opts = ServeOptions::new(base());
+    opts.cfg.addr = "127.0.0.1:0".into();
+    opts.cfg.workers = 1;
+    opts.cfg.cache_cap = 16;
+    opts.cfg.queue_cap = 8;
+    opts.cfg.batch_window_ms = 0;
+    // 200 ms deadline → the stall watchdog condemns at 4 × 200 ms;
+    // the injected 3000 ms stall sails far past it.
+    opts.cfg.deadline_ms = 200;
+    let server = Server::bind(opts).expect("bind ephemeral port");
+    let handle = server.spawn();
+    let addr = handle.addr.to_string();
+    let post = |body: &str| {
+        http_roundtrip(&addr, "POST", "/v1/simulate",
+                       Some(body.as_bytes()))
+            .expect("POST /v1/simulate")
+    };
+
+    // Each roundtrip is one connection-close exchange = exactly one
+    // popped job = one `worker_tick` invocation on slot 0, so the
+    // tick numbers below address requests deterministically.
+    inject::arm(
+        "site=worker_tick,kind=panic,plant=0,tick=2;\
+         site=worker_tick,kind=stall_ms,arg=3000,plant=0,tick=3",
+        0,
+    )
+    .unwrap();
+
+    // Tick 1, pre-storm: computes and caches the reference bytes.
+    let body = r#"{"duration_s": 60, "seed": 41}"#;
+    let reference = post(body);
+    assert_eq!(reference.status, 200, "{:?}", reference.body_str());
+    assert_eq!(reference.header("x-cache"), Some("miss"));
+
+    // Tick 2: the worker panics mid-pop; the dying thread answers its
+    // victim 500 on the dup'd write half, the monitor respawns.
+    let killed = post(r#"{"duration_s": 60, "seed": 42}"#);
+    assert_eq!(killed.status, 500, "{:?}", killed.body_str());
+    let j = Json::parse(killed.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(),
+               Some("idatacool-error/1"));
+    assert!(j.get("error").unwrap().get("message").unwrap().as_str()
+        .unwrap().contains("replaced"));
+
+    // Tick 3: the replacement stalls 3000 ms; the watchdog condemns it
+    // at ~800 ms and answers the victim 504 with a computed hint.
+    let stalled = post(r#"{"duration_s": 60, "seed": 43}"#);
+    assert_eq!(stalled.status, 504, "{:?}", stalled.body_str());
+    let retry: u64 = stalled
+        .header("retry-after")
+        .expect("watchdog 504 must carry retry-after")
+        .parse()
+        .expect("retry-after must be numeric");
+    assert!(retry >= 1);
+    let j = Json::parse(stalled.body_str().unwrap()).unwrap();
+    assert!(j.get("error").unwrap().get("message").unwrap().as_str()
+        .unwrap().contains("deadline exceeded"));
+
+    let log = inject::take_log();
+    inject::disarm();
+    assert!(log.iter().any(|e| e.contains("site=worker_tick")
+                           && e.contains("kind=panic")), "{log:?}");
+    assert!(log.iter().any(|e| e.contains("site=worker_tick")
+                           && e.contains("kind=stall_ms")), "{log:?}");
+
+    // Tick 4, post-storm: the twice-respawned pool serves the repeat
+    // from the LRU — byte-identical to the pre-storm response.
+    let repeat = post(body);
+    assert_eq!(repeat.status, 200, "{:?}", repeat.body_str());
+    assert_eq!(repeat.header("x-cache"), Some("hit"));
+    assert_eq!(repeat.body, reference.body,
+               "post-storm repeat must be bitwise identical");
+
+    // The health document shows the healed pool and the storm's toll.
+    let health = http_roundtrip(&addr, "GET", "/v1/healthz", None)
+        .expect("GET /v1/healthz");
+    assert_eq!(health.status, 200);
+    let j = Json::parse(health.body_str().unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(),
+               Some("idatacool-health/1"));
+    let w = j.get("workers").unwrap();
+    assert_eq!(w.get("live").unwrap().as_f64(), Some(1.0));
+    assert_eq!(w.get("restarts").unwrap().as_f64(), Some(2.0),
+               "one panic + one condemned stall");
+    assert!(j.get("shed").unwrap().get("stalls").unwrap().as_f64()
+        .unwrap() >= 1.0);
+
+    handle.stop().unwrap();
+}
+
+#[test]
 fn resume_refuses_a_mismatched_config() {
     let _guard = inject::test_lock();
     inject::disarm();

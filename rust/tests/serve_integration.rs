@@ -74,7 +74,27 @@ fn healthz_and_metrics_respond() {
     let r = get(&addr, "/healthz");
     assert_eq!(r.status, 200);
     let j = Json::parse(r.body_str().unwrap()).unwrap();
-    assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+    // The idatacool-health/1 document: ladder state plus the live
+    // supervision / admission signals it was derived from.
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("idatacool-health/1"));
+    assert_eq!(j.get("state").unwrap().as_str(), Some("healthy"));
+    let w = j.get("workers").unwrap();
+    assert_eq!(w.get("configured").unwrap().as_f64(), Some(2.0));
+    assert_eq!(w.get("live").unwrap().as_f64(), Some(2.0));
+    assert_eq!(w.get("restarts").unwrap().as_f64(), Some(0.0));
+    assert!(w.get("restart_budget_left").unwrap().as_f64().unwrap() >= 0.0);
+    let b = j.get("breakers").unwrap();
+    for class in ["simulate", "fleet", "sweep", "optimize"] {
+        assert_eq!(b.get(class).unwrap().as_str(), Some("closed"));
+    }
+    let q = j.get("queue").unwrap();
+    assert!(q.get("depth").unwrap().as_f64().is_some());
+    assert_eq!(q.get("capacity").unwrap().as_f64(), Some(32.0));
+    let s = j.get("shed").unwrap();
+    for k in ["overload", "rate_limited", "deadline_drops", "stalls"] {
+        assert!(s.get(k).unwrap().as_f64().is_some(), "shed.{k} missing");
+    }
+    assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
 
     let r = get(&addr, "/metrics");
     assert_eq!(r.status, 200);
